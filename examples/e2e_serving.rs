@@ -1,0 +1,121 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run): boots the
+//! TCP server on the distilled tiny model, fires a batch of concurrent
+//! client requests across the synthetic task domains, and reports
+//! latency/throughput — proving all layers compose: rust coordinator →
+//! PJRT artifacts (JAX+Pallas) → AWGF flash file → swapping pipeline.
+//!
+//! ```sh
+//! cargo run --release --example e2e_serving
+//! ```
+
+use std::time::Instant;
+
+use activeflow::cache::CachePolicy;
+use activeflow::device;
+use activeflow::engine::{EngineOptions, PreloadTrigger, SwapMode};
+use activeflow::flash::ClockMode;
+use activeflow::server::{client_roundtrip, serve, ServerConfig};
+use activeflow::tokenizer;
+use activeflow::util::json::{num, obj, s, Value};
+use activeflow::util::Stats;
+
+const ADDR: &str = "127.0.0.1:7171";
+const N_CLIENTS: usize = 2;
+const REQS_PER_CLIENT: usize = 3;
+const TOKENS_PER_REQ: usize = 16;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ServerConfig {
+        addr: ADDR.into(),
+        artifact_dir: "artifacts".into(),
+        opts: EngineOptions {
+            sparsity: 0.6,
+            group_size: 4,
+            swap_mode: SwapMode::Preload,
+            cache_bytes: 1024 * 1024,
+            cache_policy: CachePolicy::Contextual,
+            device: &device::PIXEL6,
+            clock: ClockMode::Timed,
+            bw_scale: 1.0,
+        trigger: PreloadTrigger::FirstLayer,
+        },
+    };
+    let server = std::thread::spawn(move || serve(cfg));
+
+    // wait for the engine to come up
+    let ping = obj(vec![("prompt", s("warmup ")), ("n_tokens", num(2.0))]);
+    for _ in 0..120 {
+        if client_roundtrip(ADDR, &ping).is_ok() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    println!(
+        "[e2e] server up; firing {N_CLIENTS}x{REQS_PER_CLIENT} requests x \
+         {TOKENS_PER_REQ} tokens"
+    );
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..N_CLIENTS {
+        handles.push(std::thread::spawn(move || -> Vec<(f64, f64, String)> {
+            let domains = tokenizer::DOMAIN_NAMES;
+            let mut out = Vec::new();
+            for r in 0..REQS_PER_CLIENT {
+                let dom = domains[(c + r) % domains.len()];
+                let prompt =
+                    tokenizer::gen_text((c * 100 + r) as u64, 1, Some(dom));
+                let req = obj(vec![
+                    ("prompt", s(&prompt)),
+                    ("n_tokens", num(TOKENS_PER_REQ as f64)),
+                    ("temp", num(0.0)),
+                ]);
+                let resp = client_roundtrip(ADDR, &req).expect("roundtrip");
+                let get = |k: &str| {
+                    resp.get(k).and_then(Value::as_f64).unwrap_or(f64::NAN)
+                };
+                out.push((
+                    get("queue_ms") + get("decode_ms"),
+                    get("toks_per_sec"),
+                    resp.get("text")
+                        .and_then(Value::as_str)
+                        .unwrap_or("")
+                        .chars()
+                        .take(40)
+                        .collect(),
+                ));
+            }
+            out
+        }));
+    }
+    let mut lat = Vec::new();
+    let mut tps = Vec::new();
+    for h in handles {
+        for (l, t, text) in h.join().unwrap() {
+            println!("[e2e]   {l:8.1} ms e2e | {t:6.2} tok/s | \"{text}…\"");
+            lat.push(l);
+            tps.push(t);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total_reqs = N_CLIENTS * REQS_PER_CLIENT;
+    let ls = Stats::from(&lat);
+    println!(
+        "\n[e2e] {total_reqs} requests in {wall:.1}s ({:.2} req/s, {:.1} \
+         tok/s aggregate)",
+        total_reqs as f64 / wall,
+        (total_reqs * TOKENS_PER_REQ) as f64 / wall
+    );
+    println!(
+        "[e2e] e2e latency ms: p50 {:.0} p90 {:.0} p99 {:.0} (mean {:.0}, \
+         queueing included)",
+        ls.p50, ls.p90, ls.p99, ls.mean
+    );
+
+    let stats =
+        client_roundtrip(ADDR, &obj(vec![("cmd", s("stats"))])).unwrap();
+    println!("[e2e] server stats: {}", stats.to_string());
+    let _ = client_roundtrip(ADDR, &obj(vec![("cmd", s("shutdown"))]));
+    let _ = server.join();
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: load the tiny model and decode with active-weight swapping.
+//!
+//! ```sh
+//! make artifacts          # once: train + distill + AOT-lower (python)
+//! cargo run --release --example quickstart
+//! ```
+
+use activeflow::cache::CachePolicy;
+use activeflow::device;
+use activeflow::engine::{EngineOptions, PreloadTrigger, SwapEngine, SwapMode};
+use activeflow::flash::ClockMode;
+use activeflow::tokenizer;
+use activeflow::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let opts = EngineOptions {
+        sparsity: 0.6,                      // skip 60% of weight channels
+        group_size: 4,                      // cross-layer preload group (N)
+        swap_mode: SwapMode::Preload,       // the ActiveFlow pipeline
+        cache_bytes: 256 * 1024,            // contextual hot-weight cache
+        cache_policy: CachePolicy::Contextual,
+        device: &device::PIXEL6,            // simulated UFS 3.1 phone
+        clock: ClockMode::Timed,            // flash reads really take time
+        bw_scale: 1.0,
+        trigger: PreloadTrigger::FirstLayer,
+    };
+    let mut engine = SwapEngine::open("artifacts".as_ref(), opts)?;
+    println!(
+        "model '{}' at sparsity level {} on {}",
+        engine.model().name,
+        engine.sparsity_tag(),
+        engine.opts.device.label
+    );
+
+    let prompt = tokenizer::encode("the sparse model swaps active weights. ");
+    let out = engine.generate(&prompt, 64, 0.0)?;
+    println!("\nprompt> {}", tokenizer::decode(&prompt));
+    println!("model>  {}", tokenizer::decode(&out));
+
+    let mem = engine.memory_report();
+    println!(
+        "\n{:.2} tok/s | DRAM {} vs full weights on flash {} | cache hit \
+         {:.0}% | preload precision {:.0}%",
+        engine.metrics.tokens_per_sec(),
+        human_bytes(mem.dram_total()),
+        human_bytes(mem.flash_file_bytes),
+        engine.cache_hit_rate() * 100.0,
+        engine.metrics.preload_precision() * 100.0,
+    );
+    Ok(())
+}

@@ -1,0 +1,230 @@
+"""Offline analyses reproducing the paper's motivation figures:
+
+  Fig 2 — upper-bound contextual sparsity during decoding (|W|·|x| scoring)
+  Fig 3 — ReLU-style zero sparsity vs Top-K magnitude sparsity
+  Fig 4 — cross-layer activation cosine similarity / top-k precision
+          (per layer pair, the detailed view; the rust engine reports the
+          aggregated runtime view)
+
+Run: ``cd python && python -m compile.analysis <upper-bound|sparsity-kinds|
+similarity> [--out ../artifacts]``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .configs import TINY
+from . import model as M
+from .kernels import ref
+
+
+def _load(out_dir):
+    from .aot import load_params
+
+    params, src = load_params(TINY, out_dir)
+    return params, src
+
+
+# ---------------------------------------------------------------- Fig 2
+
+
+def upper_bound(out_dir, n_tokens=48, step=0.02):
+    """Per decoded token: the minimal fraction of weights (ranked by
+    S_ij = |W_ij|·|x_j|, applied row-wise as in our channel granularity)
+    that still reproduces the dense argmax token."""
+    params, _ = _load(out_dir)
+    cfg = TINY
+    toks = corpus.eval_corpus()[: n_tokens + 1]
+
+    fractions = []
+    for pos in range(1, n_tokens):
+        prefix = jnp.asarray(toks[:pos], jnp.int32)[None]
+        dense_logits = M.dense_forward(params, cfg, prefix)[0, -1]
+        want = int(jnp.argmax(dense_logits))
+        # bisect over the sparsity grid (coarse scan, matches the paper's
+        # incremental 1% removal in spirit at channel granularity)
+        found = 1.0
+        for keep in np.arange(step, 1.0 + 1e-9, step):
+            sp = 1.0 - float(keep)
+            logits = M.sparse_forward(params, cfg, prefix, sp)[0, -1]
+            if int(jnp.argmax(logits)) == want:
+                found = float(keep)
+                break
+        fractions.append(found)
+        if pos % 10 == 0:
+            print(f"[fig2] token {pos}: active fraction {found:.2f}")
+    out = {"fractions": fractions, "step": step}
+    path = os.path.join(out_dir, "upper_bound.json")
+    with open(path, "w") as f:
+        json.dump(out, f)
+    arr = np.asarray(fractions)
+    print(f"[fig2] mean {arr.mean():.3f} max {arr.max():.3f} -> {path}")
+    return out
+
+
+# ---------------------------------------------------------------- Fig 3
+
+
+def sparsity_kinds(out_dir):
+    """ReLU-style natural zeros vs Top-K magnitude sparsity of the FFN
+    intermediate activation (SwiGLU models have almost no exact zeros —
+    the paper's motivation for Top-K)."""
+    params, _ = _load(out_dir)
+    cfg = TINY
+    toks = jnp.asarray(corpus.eval_corpus()[:129], jnp.int32)[None]
+
+    # capture the FFN intermediate of a middle layer
+    x = params["embed"][toks]
+    angles = M.rope_freqs(cfg, jnp.arange(x.shape[1]))
+    acts = None
+    for li, lp in enumerate(params["layers"]):
+        h = ref.rmsnorm_ref(x, lp["g_attn"], cfg.norm_eps)
+        B, T, _ = h.shape
+        q = (h @ lp["wq"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        q, k = M.apply_rope(q, angles), M.apply_rope(k, angles)
+        attn = M._attention(cfg, q, k, v)
+        x = x + attn @ lp["wo"]
+        h = ref.rmsnorm_ref(x, lp["g_mlp"], cfg.norm_eps)
+        inter = ref.silu_ref(h @ lp["wg"]) * (h @ lp["wu"])
+        if li == cfg.n_layers // 2:
+            acts = inter
+        x = x + inter @ lp["wd"]
+
+    a = np.asarray(acts).reshape(-1)
+    exact_zero = float((a == 0.0).mean())
+    near_zero = float((np.abs(a) < 1e-3 * np.abs(a).max()).mean())
+    out = {
+        "exact_zero_frac": exact_zero,
+        "near_zero_frac": near_zero,
+        "abs_quantiles": {
+            str(q): float(np.quantile(np.abs(a), q))
+            for q in (0.5, 0.8, 0.9, 0.99)
+        },
+    }
+    path = os.path.join(out_dir, "sparsity_kinds.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[fig3] exact zeros: {exact_zero:.4%} (ReLU would be ~90%+); "
+          f"|a| below 0.1% of max: {near_zero:.2%}")
+    print(f"[fig3] -> Top-K magnitude selection is required for SwiGLU "
+          f"models, as the paper argues ({path})")
+    return out
+
+
+# ---------------------------------------------------------------- Fig 4
+
+
+def similarity(out_dir, n_tokens=96, sp=0.5):
+    """Per-layer-pair cosine similarity + top-k precision of the attention
+    input activation (the paper's Fig 4a, computed offline)."""
+    params, _ = _load(out_dir)
+    cfg = TINY
+    toks = jnp.asarray(corpus.eval_corpus()[: n_tokens + 1], jnp.int32)[None]
+    k = cfg.k_active(sp, cfg.d_model)
+
+    # collect per-layer attention inputs for every position
+    x = params["embed"][toks]
+    angles = M.rope_freqs(cfg, jnp.arange(x.shape[1]))
+    per_layer = []
+    for lp in params["layers"]:
+        h = ref.rmsnorm_ref(x, lp["g_attn"], cfg.norm_eps)
+        per_layer.append(np.asarray(h[0]))
+        B, T, _ = h.shape
+        q = (h @ lp["wq"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+        kk = (h @ lp["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        q, kk = M.apply_rope(q, angles), M.apply_rope(kk, angles)
+        attn = M._attention(cfg, q, kk, v)
+        x = x + attn @ lp["wo"]
+        h2 = ref.rmsnorm_ref(x, lp["g_mlp"], cfg.norm_eps)
+        x = x + (ref.silu_ref(h2 @ lp["wg"]) * (h2 @ lp["wu"])) @ lp["wd"]
+
+    rows = []
+    for li in range(cfg.n_layers - 1):
+        a, b = per_layer[li], per_layer[li + 1]
+        cos = float(np.mean(np.sum(a * b, -1)
+                            / (np.linalg.norm(a, axis=-1)
+                               * np.linalg.norm(b, axis=-1) + 1e-9)))
+        prec = []
+        for t in range(a.shape[0]):
+            ia = set(np.argsort(-np.abs(a[t]))[:k].tolist())
+            ib = set(np.argsort(-np.abs(b[t]))[:k].tolist())
+            prec.append(len(ia & ib) / k)
+        rows.append({"layer_pair": f"{li}->{li+1}", "cosine": cos,
+                     "topk_precision": float(np.mean(prec))})
+        print(f"[fig4] {li}->{li+1}: cos {cos:.3f} "
+              f"precision {np.mean(prec):.3f}")
+    path = os.path.join(out_dir, "similarity.json")
+    with open(path, "w") as f:
+        json.dump({"rows": rows, "k": k}, f, indent=1)
+    print(f"[fig4] -> {path}")
+    return rows
+
+
+# ------------------------------------------------- pruned baseline (Fig 1)
+
+
+def pruned_baseline(out_dir, n_windows=24):
+    """Static magnitude pruning (RIA/CFSP-like stand-in): prune each weight
+    matrix's smallest-|W| entries at ratio sp, measure ppl. Adds the
+    'pruned' column consumed by `activeflow bench pareto`."""
+    from .configs import SPARSITY_GRID
+    from .aot import load_params
+
+    params, _ = load_params(TINY, out_dir)
+    toks = corpus.eval_corpus()[: 128 * n_windows + 1]
+
+    path = os.path.join(out_dir, "distill_eval.json")
+    with open(path) as f:
+        eval_data = json.load(f)
+
+    for row in eval_data["rows"]:
+        sp = row["sp"]
+        if sp == 0.0:
+            row["pruned"] = row["baseline"]
+            continue
+        pruned = jax.tree.map(lambda x: x, params)
+        layers = []
+        for lp in params["layers"]:
+            nl = dict(lp)
+            for op in ("wq", "wk", "wv", "wo", "wg", "wu", "wd"):
+                w = np.asarray(lp[op])
+                t = np.quantile(np.abs(w), sp)
+                nl[op] = jnp.asarray(np.where(np.abs(w) >= t, w, 0.0))
+            layers.append(nl)
+        pruned = {**params, "layers": layers}
+        row["pruned"] = M.perplexity(pruned, TINY, toks)
+        print(f"[pruned] sp={sp}: ppl {row['pruned']:.3f} "
+              f"(topk baseline {row['baseline']:.3f})")
+    with open(path, "w") as f:
+        json.dump(eval_data, f, indent=1)
+    print(f"[pruned] updated {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("what", choices=["upper-bound", "sparsity-kinds",
+                                     "similarity", "pruned", "all"])
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--tokens", type=int, default=48)
+    args = ap.parse_args()
+    if args.what in ("upper-bound", "all"):
+        upper_bound(args.out, n_tokens=args.tokens)
+    if args.what in ("sparsity-kinds", "all"):
+        sparsity_kinds(args.out)
+    if args.what in ("similarity", "all"):
+        similarity(args.out)
+    if args.what in ("pruned", "all"):
+        pruned_baseline(args.out)
+
+
+if __name__ == "__main__":
+    main()

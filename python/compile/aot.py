@@ -1,0 +1,196 @@
+"""AOT lowering: every decode-step function → HLO *text* artifact, plus the
+AWGF weight file, the runtime manifest, and golden test vectors.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust ``xla`` crate) rejects; the text parser reassigns
+ids. See /opt/xla-example/README.md.
+
+Outputs under --out (default ../artifacts):
+    model.awgf            reordered + quantized weights (export.py)
+    model_config.json     model geometry + artifact manifest + layout mirror
+    goldens.json          prompt/logits/greedy-continuation test vectors
+    <name>.hlo.txt        one per artifact (see `artifact_specs`)
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, export
+from .configs import TINY, SPARSITY_GRID, ModelConfig
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sp_tag(sp) -> str:
+    return "dense" if sp is None else f"sp{int(round(sp * 100)):02d}"
+
+
+def artifact_specs(cfg: ModelConfig):
+    """(name, fn, arg ShapeDtypeStructs, n_outputs) for every artifact."""
+    S = lambda *shape: jax.ShapeDtypeStruct(shape, F32)
+    d, qd, dkv, dff, V = (cfg.d_model, cfg.q_dim, cfg.d_kv, cfg.d_ff,
+                          cfg.vocab_size)
+    specs = []
+    for sp in [None] + SPARSITY_GRID:
+        ka = cfg.k_active(sp, d) if sp else d
+        ko = cfg.k_active(sp, qd) if sp else qd
+        kf = cfg.k_active(sp, dff) if sp else dff
+        t = sp_tag(sp)
+        specs += [
+            (f"qkv_{t}", M.qkv_step,
+             [S(1, ka), S(ka, qd), S(ka, dkv), S(ka, dkv)], 3),
+            (f"o_{t}", M.proj_step, [S(1, ko), S(ko, d)], 1),
+            (f"gu_{t}", M.gu_step, [S(1, ka), S(ka, dff), S(ka, dff)], 1),
+            (f"down_{t}", M.proj_step, [S(1, kf), S(kf, d)], 1),
+        ]
+    specs += [
+        ("attn_core", functools.partial(M.attn_core_step, cfg),
+         [S(1, qd), S(1, dkv), S(1, dkv), S(cfg.max_seq, dkv),
+          S(cfg.max_seq, dkv), jax.ShapeDtypeStruct((), I32)], 3),
+        ("logits", M.logits_step, [S(1, d), S(d, V)], 1),
+        ("dense_layer", functools.partial(M.dense_layer_step, cfg),
+         [S(1, d), S(d, qd), S(d, dkv), S(d, dkv), S(qd, d), S(d, dff),
+          S(d, dff), S(dff, d), S(d,), S(d,), S(cfg.max_seq, dkv),
+          S(cfg.max_seq, dkv), jax.ShapeDtypeStruct((), I32)], 3),
+    ]
+    return specs
+
+
+def load_params(cfg: ModelConfig, out_dir: str):
+    """Prefer the distilled checkpoint, then the dense one, else random init."""
+    for name in ("ckpt_distilled.npz", "ckpt_dense.npz"):
+        p = os.path.join(out_dir, name)
+        if os.path.exists(p):
+            print(f"[aot] loading {p}")
+            return unflatten_ckpt(np.load(p), cfg), name
+    print("[aot] no checkpoint found; using random init")
+    return M.init_params(cfg, jax.random.PRNGKey(0)), "random"
+
+
+def flatten_ckpt(params):
+    flat = {"embed": params["embed"], "g_final": params["g_final"],
+            "lm_head": params["lm_head"]}
+    for li, lp in enumerate(params["layers"]):
+        for k, v in lp.items():
+            flat[f"layers.{li}.{k}"] = v
+    return {k: np.asarray(v) for k, v in flat.items()}
+
+
+def unflatten_ckpt(flat, cfg: ModelConfig):
+    layers = []
+    for li in range(cfg.n_layers):
+        layers.append({
+            k: jnp.asarray(flat[f"layers.{li}.{k}"])
+            for k in ("wq", "wk", "wv", "wo", "wg", "wu", "wd",
+                      "g_attn", "g_mlp")
+        })
+    return {
+        "embed": jnp.asarray(flat["embed"]),
+        "layers": layers,
+        "g_final": jnp.asarray(flat["g_final"]),
+        "lm_head": jnp.asarray(flat["lm_head"]),
+    }
+
+
+def make_goldens(qparams, cfg: ModelConfig):
+    """Golden vectors computed with the *quantize-dequantized* weights — the
+    exact f32 values the rust engine sees."""
+    prompt = corpus.encode("the sparse model swaps active weights. ")
+    out = {"prompt": prompt}
+    for sp, key in [(0.6, "sp60"), (None, "dense")]:
+        logits, gen = M.sparse_decode_reference(qparams, cfg, sp, prompt,
+                                                n_gen=12)
+        out[key] = {
+            "logits_last_prompt": np.asarray(
+                logits[len(prompt) - 1]).tolist(),
+            "greedy": gen,
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quant", default="q4_0",
+                    choices=["f32", "q8_0", "q4_0"])
+    ap.add_argument("--group-size", type=int, default=4)
+    ap.add_argument("--skip-goldens", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    cfg = TINY
+
+    params, ckpt_src = load_params(cfg, args.out)
+
+    # ---- weights: AWGF file + quantized view for goldens
+    hdr = export.write_awgf(os.path.join(args.out, "model.awgf"), params,
+                            cfg, quant=args.quant,
+                            group_size=args.group_size)
+    qparams = export.quantized_params(params, cfg, args.quant)
+    print(f"[aot] wrote model.awgf (quant={args.quant}, "
+          f"N={args.group_size}, ckpt={ckpt_src})")
+
+    # ---- HLO artifacts
+    manifest = {}
+    for name, fn, specs, n_out in artifact_specs(cfg):
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": fname,
+            "inputs": [[list(s.shape), str(s.dtype)] for s in specs],
+            "n_outputs": n_out,
+        }
+        print(f"[aot] lowered {name} ({len(text)} chars)")
+
+    # ---- sparsity level table (what rust needs to pick k per op)
+    levels = []
+    for sp in SPARSITY_GRID:
+        levels.append({
+            "sp": sp,
+            "tag": sp_tag(sp),
+            "k_attn": cfg.k_active(sp, cfg.d_model),
+            "k_o": cfg.k_active(sp, cfg.q_dim),
+            "k_ff": cfg.k_active(sp, cfg.d_ff),
+        })
+
+    config = {
+        "model": cfg.to_dict(),
+        "quant": args.quant,
+        "group_size": args.group_size,
+        "ckpt": ckpt_src,
+        "sparsity_levels": levels,
+        "artifacts": manifest,
+        "weights_file": "model.awgf",
+    }
+    with open(os.path.join(args.out, "model_config.json"), "w") as f:
+        json.dump(config, f, indent=1)
+
+    if not args.skip_goldens:
+        goldens = make_goldens(qparams, cfg)
+        with open(os.path.join(args.out, "goldens.json"), "w") as f:
+            json.dump(goldens, f)
+        print(f"[aot] goldens: sp60 greedy={goldens['sp60']['greedy'][:8]}...")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Model + system configuration shared across the python compile path.
+
+The rust side reads the JSON emitted by `aot.py` (`artifacts/model_config.json`);
+keep field names in sync with `rust/src/config/`.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List
+
+
+# Sparsity grid used everywhere (paper Fig 14: 0.5..0.8; Fig 18 adds 0.9).
+# sp = fraction of weight channels *skipped* per op.
+SPARSITY_GRID: List[float] = [0.5, 0.6, 0.7, 0.8, 0.9]
+
+
+@dataclass
+class ModelConfig:
+    """Geometry of the byte-level transformer (Llama-family architecture:
+    RMSNorm, RoPE, GQA attention, SwiGLU FFN, untied LM head)."""
+
+    name: str = "tiny"
+    vocab_size: int = 256
+    d_model: int = 128
+    n_layers: int = 8
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    d_ff: int = 384
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def k_active(self, sp: float, dim: int) -> int:
+        """Number of active channels of an input dimension `dim` at sparsity sp."""
+        k = int(round(dim * (1.0 - sp)))
+        return max(1, min(dim, k))
+
+    def param_count(self) -> int:
+        d, dff = self.d_model, self.d_ff
+        per_layer = (
+            d * self.q_dim          # wq
+            + d * self.d_kv * 2     # wk, wv
+            + self.q_dim * d        # wo
+            + d * dff * 2           # wg, wu
+            + dff * d               # wd
+            + 2 * d                 # norms
+        )
+        return (
+            self.vocab_size * d      # embed
+            + self.n_layers * per_layer
+            + d                      # final norm
+            + d * self.vocab_size    # lm head
+        )
+
+    def to_dict(self):
+        dd = asdict(self)
+        dd["d_kv"] = self.d_kv
+        dd["q_dim"] = self.q_dim
+        dd["param_count"] = self.param_count()
+        return dd
+
+
+TINY = ModelConfig()
+
+# A deeper/wider variant exercised by shape tests only (not trained).
+SMALL = ModelConfig(
+    name="small", d_model=256, n_layers=12, n_heads=8, n_kv_heads=4,
+    head_dim=32, d_ff=768,
+)
+
+
+@dataclass
+class TrainConfig:
+    seq_len: int = 128
+    batch_size: int = 8
+    steps: int = 400
+    lr: float = 3e-3
+    warmup: int = 40
+    weight_decay: float = 0.01
+    seed: int = 0
+    eval_every: int = 100
+    eval_batches: int = 4
+
+
+@dataclass
+class DistillConfig:
+    """Sparsity-aware self-distillation (paper §5)."""
+
+    seq_len: int = 128
+    batch_size: int = 8
+    steps: int = 150
+    lr: float = 8e-6 * 100   # paper uses 8e-6 on a 7B model; scaled for tiny
+    seed: int = 1
+    # distill at a single high sparsity; evaluate across the grid
+    # ("one-distill-all-scale", paper §5.2)
+    distill_sp: float = 0.8
+    # gamma in Eq. 13 as a function of sparsity: high sparsity -> CE-heavy
+    def gamma(self, sp: float) -> float:
+        # gamma -> 1 (KLD) at low sparsity, -> 0 (CE) at high sparsity.
+        return float(max(0.0, min(1.0, 1.6 - 1.6 * sp)))

@@ -1,0 +1,127 @@
+"""Embedded multi-domain tiny corpus + byte tokenizer.
+
+Substitute for WikiText-2 / BoolQ / alpaca-c4 (see DESIGN.md §1): the cache
+experiments (Fig 6 / Fig 17) only need *distribution shift across contexts and
+tasks*, which distinct synthetic domains provide. The generator is
+deterministic so python and rust produce identical streams.
+"""
+
+from typing import List, Tuple
+
+# ---------------------------------------------------------------- tokenizer
+
+VOCAB_SIZE = 256  # raw bytes
+
+
+def encode(text: str) -> List[int]:
+    return list(text.encode("utf-8", errors="replace"))
+
+
+def decode(tokens) -> str:
+    return bytes(int(t) % 256 for t in tokens).decode("utf-8", errors="replace")
+
+
+# ---------------------------------------------------------------- generator
+# Deterministic xorshift64* PRNG — mirrored exactly in rust/src/util/rng.rs.
+
+
+class Xorshift:
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.s = (seed ^ 0x9E3779B97F4A7C15) & self.MASK or 0x2545F4914F6CDD1D
+
+    def next_u64(self) -> int:
+        s = self.s
+        s ^= (s << 13) & self.MASK
+        s ^= s >> 7
+        s ^= (s << 17) & self.MASK
+        self.s = s
+        return (s * 0x2545F4914F6CDD1D) & self.MASK
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def choice(self, xs):
+        return xs[self.below(len(xs))]
+
+
+_DOMAINS = {
+    # "task" domains with distinct vocabulary/structure -> distinct hot weights
+    "wiki": (
+        ["the", "a", "an", "this", "that"],
+        ["system", "language", "model", "device", "memory", "history",
+         "city", "river", "theory", "century", "network", "protocol"],
+        ["is", "was", "describes", "contains", "supports", "denotes"],
+        ["large", "small", "early", "modern", "common", "formal"],
+    ),
+    "code": (
+        ["fn", "let", "pub", "use", "impl", "return"],
+        ["buffer", "index", "cache", "layer", "weight", "channel",
+         "tensor", "queue", "thread", "handle"],
+        ["loads", "stores", "maps", "returns", "computes", "updates"],
+        ["mutable", "static", "atomic", "sparse", "dense", "packed"],
+    ),
+    "qa": (
+        ["does", "is", "can", "will", "should"],
+        ["question", "answer", "passage", "statement", "claim", "fact"],
+        ["imply", "confirm", "support", "contradict", "mention"],
+        ["true", "false", "yes", "no", "maybe"],
+    ),
+    "chat": (
+        ["please", "could", "thanks", "okay", "sure"],
+        ["assistant", "user", "message", "request", "reply", "summary"],
+        ["write", "explain", "translate", "summarize", "list"],
+        ["helpful", "short", "detailed", "polite", "clear"],
+    ),
+}
+
+DOMAIN_NAMES = list(_DOMAINS.keys())
+
+
+def gen_sentence(rng: Xorshift, domain: str) -> str:
+    det, nouns, verbs, adjs = _DOMAINS[domain]
+    words = [
+        rng.choice(det), rng.choice(adjs), rng.choice(nouns),
+        rng.choice(verbs), rng.choice(det), rng.choice(adjs),
+        rng.choice(nouns),
+    ]
+    if rng.below(3) == 0:
+        words += ["and", rng.choice(nouns)]
+    return " ".join(words) + ". "
+
+
+def gen_text(seed: int, n_sentences: int, domain: str = None) -> str:
+    rng = Xorshift(seed)
+    out = []
+    for _ in range(n_sentences):
+        d = domain if domain is not None else DOMAIN_NAMES[rng.below(len(DOMAIN_NAMES))]
+        out.append(gen_sentence(rng, d))
+    return "".join(out)
+
+
+def train_corpus(seed: int = 42, n_sentences: int = 12000) -> List[int]:
+    return encode(gen_text(seed, n_sentences))
+
+
+def eval_corpus(seed: int = 1337, n_sentences: int = 800) -> List[int]:
+    return encode(gen_text(seed, n_sentences))
+
+
+def task_corpus(domain: str, seed: int = 7, n_sentences: int = 400) -> List[int]:
+    """Single-domain stream — the 'downstream task' stand-ins for Fig 17b."""
+    return encode(gen_text(seed, n_sentences, domain))
+
+
+def batches(tokens: List[int], seq_len: int, batch_size: int, seed: int):
+    """Yield (inputs, targets) int32 arrays forever (random crops)."""
+    import numpy as np
+
+    toks = np.asarray(tokens, dtype=np.int32)
+    rng = Xorshift(seed)
+    n = len(toks) - seq_len - 1
+    while True:
+        idx = [rng.below(n) for _ in range(batch_size)]
+        x = np.stack([toks[i : i + seq_len] for i in idx])
+        y = np.stack([toks[i + 1 : i + seq_len + 1] for i in idx])
+        yield x, y

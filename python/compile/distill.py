@@ -1,0 +1,133 @@
+"""Top-K sparsity-aware self-distillation (paper §5).
+
+Teacher = the dense checkpoint; student = the same weights pushed through the
+Top-K masked forward with **straight-through-estimated** mask gradients
+(Eq 10-11) and the **γ-combined KLD+CE loss** (Eq 12-13):
+
+    L_SD = γ · D_KL(P_T || P_S) + (1-γ) · CE(y_T, y_S)
+
+γ depends on the sparsity level (high sparsity → CE-heavy, see
+DistillConfig.gamma). Distillation happens once at a high sparsity level and
+the result is evaluated across the whole grid ("one-distill-all-scale",
+§5.2) — the Fig 18 table comes out of ``--eval``.
+
+Run: ``cd python && python -m compile.distill [--steps N] [--eval]``
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .configs import TINY, SPARSITY_GRID, DistillConfig
+from . import model as M
+from .train import adamw_init, adamw_update
+
+
+def kld(p_logits, q_logits):
+    """D_KL(P || Q) per Eq 12, averaged over batch/time."""
+    logp = jax.nn.log_softmax(p_logits, axis=-1)
+    logq = jax.nn.log_softmax(q_logits, axis=-1)
+    return jnp.mean(jnp.sum(jnp.exp(logp) * (logp - logq), axis=-1))
+
+
+def sd_loss(teacher_logits, student_logits, gamma):
+    """Eq 13: γ·KLD(teacher||student) + (1-γ)·CE(teacher labels, student)."""
+    y_t = jnp.argmax(teacher_logits, axis=-1)
+    ce = M.xent_loss(student_logits, y_t)
+    return gamma * kld(teacher_logits, student_logits) + (1 - gamma) * ce
+
+
+def distill(model_cfg=TINY, dcfg: DistillConfig = None,
+            out_dir="../artifacts", log=print):
+    dcfg = dcfg or DistillConfig()
+    from .aot import flatten_ckpt, unflatten_ckpt
+
+    teacher = unflatten_ckpt(
+        np.load(os.path.join(out_dir, "ckpt_dense.npz")), model_cfg)
+    student = jax.tree.map(jnp.copy, teacher)
+    opt = adamw_init(student)
+    data = corpus.batches(corpus.train_corpus(seed=4242),
+                          dcfg.seq_len, dcfg.batch_size, seed=dcfg.seed)
+    sp = dcfg.distill_sp
+    gamma = dcfg.gamma(sp)
+
+    @jax.jit
+    def step_fn(student, opt, x):
+        t_logits = M.dense_forward(teacher, model_cfg, x)
+
+        def loss_fn(s):
+            s_logits = M.sparse_forward(s, model_cfg, x, sp)
+            return sd_loss(t_logits, s_logits, gamma)
+
+        loss, grads = jax.value_and_grad(loss_fn)(student)
+        student, opt = adamw_update(student, grads, opt, dcfg.lr, wd=0.0)
+        return student, opt, loss
+
+    t0 = time.time()
+    for step in range(dcfg.steps):
+        x, _ = next(data)
+        student, opt, loss = step_fn(student, opt, jnp.asarray(x))
+        if step % 20 == 0 or step == dcfg.steps - 1:
+            log(f"[distill] step {step:4d} sd-loss {float(loss):.4f} "
+                f"(sp={sp}, gamma={gamma:.2f}, {time.time()-t0:.0f}s)")
+
+    path = os.path.join(out_dir, "ckpt_distilled.npz")
+    np.savez(path, **flatten_ckpt(student))
+    log(f"[distill] wrote {path}")
+    return student
+
+
+def evaluate(model_cfg=TINY, out_dir="../artifacts", log=print,
+             n_windows=24):
+    """Fig 18: perplexity of baseline (top-k on dense ckpt) vs distilled,
+    across the sparsity grid. Writes artifacts/distill_eval.json."""
+    from .aot import unflatten_ckpt
+
+    dense = unflatten_ckpt(
+        np.load(os.path.join(out_dir, "ckpt_dense.npz")), model_cfg)
+    dist_path = os.path.join(out_dir, "ckpt_distilled.npz")
+    distilled = (unflatten_ckpt(np.load(dist_path), model_cfg)
+                 if os.path.exists(dist_path) else None)
+    toks = corpus.eval_corpus()[: 128 * n_windows + 1]
+
+    rows = []
+    ppl_dense = M.perplexity(dense, model_cfg, toks)
+    rows.append({"sp": 0.0, "baseline": ppl_dense,
+                 "distilled": ppl_dense})
+    log(f"[eval] dense ppl = {ppl_dense:.3f}")
+    for sp in SPARSITY_GRID:
+        base = M.perplexity(dense, model_cfg, toks, sp=sp)
+        dist = (M.perplexity(distilled, model_cfg, toks, sp=sp)
+                if distilled is not None else float("nan"))
+        rows.append({"sp": sp, "baseline": base, "distilled": dist})
+        log(f"[eval] sp={sp:.1f}  baseline ppl={base:8.3f}  "
+            f"distilled ppl={dist:8.3f}")
+    out = {"rows": rows, "n_eval_tokens": len(toks)}
+    with open(os.path.join(out_dir, "distill_eval.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=DistillConfig.steps)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--eval", action="store_true",
+                    help="evaluate ppl across the sparsity grid (Fig 18)")
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+    dcfg = DistillConfig(steps=args.steps)
+    if not args.skip_train:
+        distill(TINY, dcfg, args.out)
+    if args.eval:
+        evaluate(TINY, args.out)
+
+
+if __name__ == "__main__":
+    main()

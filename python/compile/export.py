@@ -1,0 +1,248 @@
+"""AWGF ("Active-Weight GGUF") writer: the cross-layer-group reordered weight
+file (paper §3 Fig 9) + block quantization (Q8_0 / Q4_0, paper §6).
+
+Format (mirrored by rust/src/layout/):
+
+    magic   b"AWGF"
+    version u32 LE (=1)
+    hdr_len u32 LE
+    header  JSON (hdr_len bytes): model config, quant kind, group_size N,
+            dense-tensor index, sparse-op index (see below)
+    pad     zero bytes to the next 4096 boundary
+    payload
+
+Sparse ops (wq wk wv wo wg wu wd) are stored **channel-major within each
+layer group**: for group g covering layers [l0..l0+N), the rows are laid out
+
+    for c in 0..d_in:  for l in l0..l0+N:  row(l, c)     # one "chunk" per c
+
+so one contiguous read of ``N * row_bytes`` fetches channel c for the whole
+group — exactly the large-I/O preload unit of Fig 9. Dense always-resident
+tensors (embed, norms, lm_head) are raw little-endian f32.
+
+Quantized rows (blocks of 32 along d_out):
+    q8_0: per block f32 scale + 32  i8 (value = q * scale)
+    q4_0: per block f32 scale + 16  u8 (two nibbles; value = (n - 8) * scale)
+"""
+
+import json
+import struct
+
+import numpy as np
+
+from .configs import ModelConfig
+
+SPARSE_OPS = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+ALIGN = 4096
+QBLOCK = 32
+
+
+# ------------------------------------------------------------ quantization
+
+
+def q8_0_row_bytes(dout: int) -> int:
+    assert dout % QBLOCK == 0
+    return (dout // QBLOCK) * (4 + QBLOCK)
+
+
+def q4_0_row_bytes(dout: int) -> int:
+    assert dout % QBLOCK == 0
+    return (dout // QBLOCK) * (4 + QBLOCK // 2)
+
+
+def row_bytes(quant: str, dout: int) -> int:
+    if quant == "f32":
+        return 4 * dout
+    if quant == "q8_0":
+        return q8_0_row_bytes(dout)
+    if quant == "q4_0":
+        return q4_0_row_bytes(dout)
+    raise ValueError(quant)
+
+
+def quantize_row(row: np.ndarray, quant: str) -> bytes:
+    """Quantize one f32 row; returns packed bytes."""
+    row = np.asarray(row, dtype=np.float32)
+    if quant == "f32":
+        return row.tobytes()
+    out = bytearray()
+    for b in range(0, len(row), QBLOCK):
+        blk = row[b : b + QBLOCK]
+        amax = float(np.max(np.abs(blk)))
+        if quant == "q8_0":
+            scale = amax / 127.0 if amax > 0 else 1.0
+            q = np.clip(np.round(blk / scale), -127, 127).astype(np.int8)
+            out += struct.pack("<f", scale) + q.tobytes()
+        else:  # q4_0
+            scale = amax / 7.0 if amax > 0 else 1.0
+            q = np.clip(np.round(blk / scale), -7, 7).astype(np.int8) + 8
+            packed = (q[0::2] & 0xF) | ((q[1::2] & 0xF) << 4)
+            out += struct.pack("<f", scale) + packed.astype(np.uint8).tobytes()
+    return bytes(out)
+
+
+def dequantize_row(data: bytes, dout: int, quant: str) -> np.ndarray:
+    """Inverse of quantize_row (bit-exact with rust layout::quant)."""
+    if quant == "f32":
+        return np.frombuffer(data, dtype="<f4", count=dout).copy()
+    out = np.empty(dout, dtype=np.float32)
+    off = 0
+    for b in range(0, dout, QBLOCK):
+        (scale,) = struct.unpack_from("<f", data, off)
+        off += 4
+        if quant == "q8_0":
+            q = np.frombuffer(data, dtype=np.int8, count=QBLOCK, offset=off)
+            off += QBLOCK
+            out[b : b + QBLOCK] = q.astype(np.float32) * scale
+        else:
+            p = np.frombuffer(data, dtype=np.uint8, count=QBLOCK // 2, offset=off)
+            off += QBLOCK // 2
+            lo = (p & 0xF).astype(np.int32) - 8
+            hi = (p >> 4).astype(np.int32) - 8
+            blk = np.empty(QBLOCK, dtype=np.float32)
+            blk[0::2] = lo
+            blk[1::2] = hi
+            out[b : b + QBLOCK] = blk * scale
+    return out
+
+
+def quantize_matrix(w: np.ndarray, quant: str) -> np.ndarray:
+    """Round-trip a [din,dout] matrix through quantization; returns the f32
+    values the runtime will actually see."""
+    if quant == "f32":
+        return np.asarray(w, np.float32)
+    dout = w.shape[1]
+    return np.stack([
+        dequantize_row(quantize_row(r, quant), dout, quant) for r in w
+    ])
+
+
+# ------------------------------------------------------------- AWGF writer
+
+
+def op_shapes(cfg: ModelConfig):
+    return {
+        "wq": (cfg.d_model, cfg.q_dim),
+        "wk": (cfg.d_model, cfg.d_kv),
+        "wv": (cfg.d_model, cfg.d_kv),
+        "wo": (cfg.q_dim, cfg.d_model),
+        "wg": (cfg.d_model, cfg.d_ff),
+        "wu": (cfg.d_model, cfg.d_ff),
+        "wd": (cfg.d_ff, cfg.d_model),
+    }
+
+
+def write_awgf(path: str, params, cfg: ModelConfig, quant: str = "q4_0",
+               group_size: int = 4):
+    """Write params to `path` in AWGF layout. Returns the header dict."""
+    np_params = _to_numpy(params)
+    shapes = op_shapes(cfg)
+    n_groups = (cfg.n_layers + group_size - 1) // group_size
+
+    # ---- plan offsets
+    payload = bytearray()
+    dense_index = {}
+
+    def put_dense(name, arr):
+        arr = np.ascontiguousarray(arr, dtype="<f4")
+        dense_index[name] = {
+            "offset": len(payload), "len": arr.nbytes,
+            "shape": list(arr.shape),
+        }
+        payload.extend(arr.tobytes())
+
+    put_dense("embed", np_params["embed"])
+    put_dense("g_final", np_params["g_final"])
+    put_dense("lm_head", np_params["lm_head"])
+    for li in range(cfg.n_layers):
+        put_dense(f"g_attn.{li}", np_params["layers"][li]["g_attn"])
+        put_dense(f"g_mlp.{li}", np_params["layers"][li]["g_mlp"])
+
+    ops_index = {}
+    for op in SPARSE_OPS:
+        din, dout = shapes[op]
+        rb = row_bytes(quant, dout)
+        groups = []
+        for g in range(n_groups):
+            l0 = g * group_size
+            layers = list(range(l0, min(l0 + group_size, cfg.n_layers)))
+            # channel-major within the group
+            off = len(payload)
+            for c in range(din):
+                for l in layers:
+                    w = np_params["layers"][l][op]
+                    payload.extend(quantize_row(w[c], quant))
+            groups.append({"layers": layers, "offset": off})
+        ops_index[op] = {
+            "d_in": din, "d_out": dout, "row_bytes": rb, "groups": groups,
+        }
+
+    header = {
+        "model": cfg.to_dict(),
+        "quant": quant,
+        "group_size": group_size,
+        "dense": dense_index,
+        "ops": ops_index,
+    }
+    hdr = json.dumps(header).encode()
+    pre = b"AWGF" + struct.pack("<II", 1, len(hdr)) + hdr
+    pad = (-len(pre)) % ALIGN
+    with open(path, "wb") as f:
+        f.write(pre + b"\x00" * pad + bytes(payload))
+    return header
+
+
+def quantized_params(params, cfg: ModelConfig, quant: str):
+    """The param pytree after a quantize→dequantize round trip — i.e. the f32
+    weights the rust engine computes with. Golden vectors use these."""
+    np_params = _to_numpy(params)
+    out = {
+        "embed": np_params["embed"],
+        "g_final": np_params["g_final"],
+        "lm_head": np_params["lm_head"],
+        "layers": [],
+    }
+    for lp in np_params["layers"]:
+        out["layers"].append({
+            **{op: quantize_matrix(lp[op], quant) for op in SPARSE_OPS},
+            "g_attn": lp["g_attn"],
+            "g_mlp": lp["g_mlp"],
+        })
+    return out
+
+
+def _to_numpy(tree):
+    if isinstance(tree, dict):
+        return {k: _to_numpy(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_to_numpy(v) for v in tree]
+    return np.asarray(tree, dtype=np.float32)
+
+
+# ------------------------------------------------------------- AWGF reader
+# (python-side reader used by tests; the production reader is rust layout/)
+
+
+def read_awgf(path: str):
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == b"AWGF"
+    version, hdr_len = struct.unpack_from("<II", data, 4)
+    assert version == 1
+    header = json.loads(data[12 : 12 + hdr_len])
+    payload_off = (12 + hdr_len + ALIGN - 1) // ALIGN * ALIGN
+    return header, data[payload_off:]
+
+
+def read_channel(header, payload, op: str, layer: int, channel: int) -> np.ndarray:
+    """Fetch + dequantize one weight row (the runtime's unit of transfer)."""
+    info = header["ops"][op]
+    quant = header["quant"]
+    rb = info["row_bytes"]
+    for grp in info["groups"]:
+        if layer in grp["layers"]:
+            n = len(grp["layers"])
+            j = grp["layers"].index(layer)
+            off = grp["offset"] + (channel * n + j) * rb
+            return dequantize_row(payload[off : off + rb], info["d_out"], quant)
+    raise KeyError((op, layer))

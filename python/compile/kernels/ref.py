@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the sparse-op
+semantics shared by python/model.py and rust/src/engine.
+
+Sparse op semantics (DESIGN.md §3, TEAL-exact): for an input activation
+``a in R^d`` and active set ``I = topk(|a|, k)``,  ``y = a[I] @ W[I, :]``.
+Row (input-channel) sparsity only; output dims stay dense.
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+def rmsnorm_ref(x, g, eps=1e-5):
+    """RMSNorm over the last axis. Mirrored in rust engine::ops."""
+    ms = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def silu_ref(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def topk_indices_ref(a, k):
+    """Indices of the k largest |a| entries, **sorted ascending** (the rust
+    engine emits ascending index sets so packed-weight gathers are sequential
+    in flash order)."""
+    _, idx = jax.lax.top_k(jnp.abs(a), k)
+    return jnp.sort(idx)
+
+
+def topk_mask_ref(a, k):
+    """0/1 mask keeping the k largest-|a| entries."""
+    idx = topk_indices_ref(a, k)
+    return jnp.zeros_like(a).at[idx].set(1.0)
+
+
+def threshold_mask_ref(a, t):
+    """TEAL-style calibrated-threshold mask: keep |a| >= t."""
+    return (jnp.abs(a) >= t).astype(a.dtype)
+
+
+def sparse_matmul_ref(xs, w):
+    """Packed sparse matmul oracle: xs [1,k] (gathered activation),
+    w [k,dout] (packed weight rows) -> [1,dout]."""
+    return xs @ w
+
+
+def sparse_linear_ref(a, w, k):
+    """Full sparse linear: a [d], w [d,dout] -> [dout] using top-k rows."""
+    idx = topk_indices_ref(a, k)
+    return a[idx][None, :] @ w[idx, :]
+
+
+def masked_linear_ref(a, w, k):
+    """Equivalent masked formulation (used by distillation): (a*mask) @ w."""
+    return (a * topk_mask_ref(a, k))[None, :] @ w
+
+
+def gu_ref(xs, wg, wu):
+    """SwiGLU gate+up on packed rows: silu(xs@wg) * (xs@wu)."""
+    return silu_ref(xs @ wg) * (xs @ wu)

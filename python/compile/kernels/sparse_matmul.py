@@ -1,0 +1,81 @@
+"""L1 Pallas kernels: packed sparse matmul and fused SwiGLU gate/up.
+
+These are the compute hot-spots of ActiveFlow's sparse decode path
+(`y = a[I] @ W[I,:]`). The channel gather happens *outside* the contraction
+(in the rust engine / in model.py) so the kernel body is a dense
+[1,k] x [k,TILE_D] tile — on a real TPU this keeps the MXU systolic array
+fed with dense tiles exactly like the paper keeps NEON kernels dense over
+packed channels (DESIGN.md §2 Hardware adaptation).
+
+VMEM schedule: the grid walks output tiles of width TILE_D; per step the
+kernel holds xs [1,k] (k<=d_ff*4B = 1.5 KB for tiny, <=56 KB for llama-sim),
+a W tile [k, TILE_D] and the output tile — comfortably double-bufferable in
+a 16 MB VMEM at TILE_D=128..512.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated analytically (DESIGN.md §8).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-tile width. 128 matches both the MXU lane width and the smallest
+# dout in the tiny config; shapes that don't divide are padded by pallas.
+TILE_D = 128
+
+
+def _matmul_kernel(xs_ref, w_ref, o_ref):
+    o_ref[...] = xs_ref[...] @ w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sparse_matmul(xs, w):
+    """xs [1,k] @ w [k,dout] -> [1,dout] via a Pallas grid over dout tiles."""
+    k = xs.shape[-1]
+    dout = w.shape[-1]
+    tile = min(TILE_D, dout)
+    grid = (pl.cdiv(dout, tile),)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, tile), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, dout), xs.dtype),
+        interpret=True,
+    )(xs, w)
+
+
+def _gu_kernel(xs_ref, wg_ref, wu_ref, o_ref):
+    g = xs_ref[...] @ wg_ref[...]
+    u = xs_ref[...] @ wu_ref[...]
+    o_ref[...] = g * jax.nn.sigmoid(g) * u
+
+
+def gu_matmul(xs, wg, wu):
+    """Fused SwiGLU gate/up: silu(xs@wg) * (xs@wu) -> [1,d_ff].
+
+    Fusing keeps the intermediate g/u tiles in VMEM (never round-tripped to
+    HBM), halving the activation traffic of the FFN front half.
+    """
+    k = xs.shape[-1]
+    dff = wg.shape[-1]
+    tile = min(TILE_D, dff)
+    grid = (pl.cdiv(dff, tile),)
+    return pl.pallas_call(
+        _gu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, tile), lambda j: (0, j)),
+            pl.BlockSpec((k, tile), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, dff), xs.dtype),
+        interpret=True,
+    )(xs, wg, wu)

@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: threshold-based activation masking (the paper's "T"
+pipeline stage / §6 'kernel for generating active channel indices').
+
+The runtime selects channels by exact top-k (rust engine); training and
+analysis use the calibrated-threshold formulation below, which is what the
+paper's on-device kernel implements ("maintains activation thresholds
+corresponding to different LLM sparsity levels").
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mask_kernel(x_ref, t_ref, o_ref):
+    x = x_ref[...]
+    t = t_ref[0]
+    o_ref[...] = jnp.where(jnp.abs(x) >= t, x, jnp.zeros_like(x))
+
+
+def threshold_sparsify(x, t):
+    """Zero every element of x with |x| < t. x: [1,d], t: scalar array [1]."""
+    d = x.shape[-1]
+    return pl.pallas_call(
+        _mask_kernel,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda: (0, 0)),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, jnp.asarray(t, dtype=x.dtype).reshape(1))
+
+
+def calibrate_threshold(samples, sp):
+    """Per-tensor threshold achieving expected sparsity `sp` over a batch of
+    activation samples [n, d]: the sp-quantile of |a|."""
+    return jnp.quantile(jnp.abs(samples), sp)

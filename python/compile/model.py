@@ -1,0 +1,326 @@
+"""L2: the transformer model (Llama-family: RMSNorm + RoPE + GQA + SwiGLU).
+
+Three faces of the same model, all sharing one param pytree:
+
+  * ``dense_forward``   — batched full-sequence forward for training.
+  * ``sparse_forward``  — masked Top-K formulation with STE gradients, used by
+                          self-distillation (paper §5).
+  * ``*_step`` fns      — the per-op decode-step functions that ``aot.py``
+                          lowers to HLO artifacts. Their op split mirrors the
+                          rust engine exactly (DESIGN.md §5): rust owns
+                          rmsnorm / top-k / gather / residual adds; HLO owns
+                          the matmuls (Pallas kernels) and the attention core.
+
+Weight convention: every linear is stored ``[d_in, d_out]`` so that a *row*
+is one input channel — the paper's ~4 KB flash transfer unit.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.sparse_matmul import sparse_matmul, gu_matmul
+
+# ------------------------------------------------------------------ params
+
+
+def init_params(cfg: ModelConfig, key):
+    """Xavier-ish init of the full param pytree."""
+    def dense(key, din, dout):
+        scale = (2.0 / (din + dout)) ** 0.5
+        return jax.random.normal(key, (din, dout), jnp.float32) * scale
+
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for li in range(cfg.n_layers):
+        ks = jax.random.split(keys[li], 7)
+        layers.append({
+            "wq": dense(ks[0], cfg.d_model, cfg.q_dim),
+            "wk": dense(ks[1], cfg.d_model, cfg.d_kv),
+            "wv": dense(ks[2], cfg.d_model, cfg.d_kv),
+            "wo": dense(ks[3], cfg.q_dim, cfg.d_model),
+            "wg": dense(ks[4], cfg.d_model, cfg.d_ff),
+            "wu": dense(ks[5], cfg.d_model, cfg.d_ff),
+            "wd": dense(ks[6], cfg.d_ff, cfg.d_model),
+            "g_attn": jnp.ones((cfg.d_model,), jnp.float32),
+            "g_mlp": jnp.ones((cfg.d_model,), jnp.float32),
+        })
+    return {
+        "embed": jax.random.normal(keys[-3], (cfg.vocab_size, cfg.d_model)) * 0.02,
+        "layers": layers,
+        "g_final": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense(keys[-2], cfg.d_model, cfg.vocab_size),
+    }
+
+
+# -------------------------------------------------------------------- RoPE
+
+
+def rope_freqs(cfg: ModelConfig, positions):
+    """[T, head_dim/2] angles for the given positions."""
+    half = cfg.head_dim // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[:, None] * inv[None, :]
+
+
+def apply_rope(x, angles):
+    """x: [..., T, n_heads, head_dim]; angles: [T, head_dim/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    # broadcast angles across leading batch axes
+    while cos.ndim < x1.ndim:
+        cos, sin = cos[None], sin[None]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# --------------------------------------------------------- dense forward
+
+
+def _attention(cfg, q, k, v, causal_from=0):
+    """q: [B,T,nh,hd], k/v: [B,S,nkv,hd] -> [B,T,nh*hd]. Causal over S."""
+    B, T = q.shape[0], q.shape[1]
+    S = k.shape[1]
+    rep = cfg.n_heads // cfg.n_kv_heads
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    att = jnp.einsum("bthd,bshd->bhts", q, k) / (cfg.head_dim ** 0.5)
+    # position t (global pos = causal_from + t) may attend to s <= global pos
+    tpos = causal_from + jnp.arange(T)[:, None]
+    spos = jnp.arange(S)[None, :]
+    mask = spos <= tpos
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", att, v)
+    return out.reshape(B, T, cfg.q_dim)
+
+
+def dense_forward(params, cfg: ModelConfig, tokens):
+    """tokens [B,T] int32 -> logits [B,T,vocab]."""
+    x = params["embed"][tokens]
+    B, T, _ = x.shape
+    angles = rope_freqs(cfg, jnp.arange(T))
+    for lp in params["layers"]:
+        h = ref.rmsnorm_ref(x, lp["g_attn"], cfg.norm_eps)
+        q = (h @ lp["wq"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        q, k = apply_rope(q, angles), apply_rope(k, angles)
+        attn = _attention(cfg, q, k, v)
+        x = x + attn @ lp["wo"]
+        h = ref.rmsnorm_ref(x, lp["g_mlp"], cfg.norm_eps)
+        x = x + (ref.silu_ref(h @ lp["wg"]) * (h @ lp["wu"])) @ lp["wd"]
+    x = ref.rmsnorm_ref(x, params["g_final"], cfg.norm_eps)
+    return x @ params["lm_head"]
+
+
+# ------------------------------------------------- sparse forward (distill)
+
+
+@jax.custom_vjp
+def ste_mask(a, mask):
+    """Straight-through-estimated masking (paper §5.1 Eq 10-11): forward
+    applies the 0/1 mask, backward passes gradients as identity."""
+    return a * mask
+
+
+def _ste_fwd(a, mask):
+    return a * mask, None
+
+
+def _ste_bwd(_res, g):
+    return g, None
+
+
+ste_mask.defvjp(_ste_fwd, _ste_bwd)
+
+
+def topk_mask_batched(a, k):
+    """0/1 mask of the k largest-|a| entries along the last axis (any rank).
+
+    The input is de-tangented up front: the mask is a selection decision and
+    must never carry gradient (STE supplies the identity path instead) — and
+    differentiating through sort trips a gather JVP incompatibility in this
+    jaxlib build anyway.
+    """
+    a = jax.lax.stop_gradient(a)
+    kth = -jnp.sort(-jnp.abs(a), axis=-1)[..., k - 1 : k]
+    return (jnp.abs(a) >= kth).astype(a.dtype)
+
+
+def _sparse_lin(a, w, k):
+    mask = jax.lax.stop_gradient(topk_mask_batched(a, k))
+    return ste_mask(a, mask) @ w
+
+
+def sparse_forward(params, cfg: ModelConfig, tokens, sp: float):
+    """Masked Top-K forward with STE — the distillation student. Numerically
+    equivalent (same token stream) to the rust engine's gather formulation."""
+    ka = cfg.k_active(sp, cfg.d_model)
+    ko = cfg.k_active(sp, cfg.q_dim)
+    kf = cfg.k_active(sp, cfg.d_ff)
+    x = params["embed"][tokens]
+    B, T, _ = x.shape
+    angles = rope_freqs(cfg, jnp.arange(T))
+    for lp in params["layers"]:
+        h = ref.rmsnorm_ref(x, lp["g_attn"], cfg.norm_eps)
+        hm = ste_mask(h, jax.lax.stop_gradient(topk_mask_batched(h, ka)))
+        q = (hm @ lp["wq"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+        k = (hm @ lp["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = (hm @ lp["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        q, k = apply_rope(q, angles), apply_rope(k, angles)
+        attn = _attention(cfg, q, k, v)
+        x = x + _sparse_lin(attn, lp["wo"], ko)
+        h = ref.rmsnorm_ref(x, lp["g_mlp"], cfg.norm_eps)
+        hm = ste_mask(h, jax.lax.stop_gradient(topk_mask_batched(h, ka)))
+        ff = ref.silu_ref(hm @ lp["wg"]) * (hm @ lp["wu"])
+        x = x + _sparse_lin(ff, lp["wd"], kf)
+    x = ref.rmsnorm_ref(x, params["g_final"], cfg.norm_eps)
+    return x @ params["lm_head"]
+
+
+# --------------------------------------------------- decode-step functions
+# These are what aot.py lowers. Shapes are static per (cfg, sparsity level).
+
+
+def qkv_step(xs, wq, wk, wv):
+    """xs [1,k] (normed+gathered), packed rows -> (q [1,q_dim], k/v [1,d_kv]).
+    Hot path: L1 Pallas sparse matmuls."""
+    return (
+        sparse_matmul(xs, wq),
+        sparse_matmul(xs, wk),
+        sparse_matmul(xs, wv),
+    )
+
+
+def attn_core_step(cfg: ModelConfig, q, k_new, v_new, kv_k, kv_v, pos):
+    """Single-token attention with a static-shape KV cache.
+
+    q [1,q_dim], k_new/v_new [1,d_kv], kv_k/kv_v [max_seq,d_kv], pos scalar
+    i32 -> (attn_out [1,q_dim], kv_k', kv_v'). RoPE applied to q and k_new at
+    `pos`; causal mask is `iota <= pos`.
+    """
+    S = cfg.max_seq
+    angles = rope_freqs(cfg, pos[None].astype(jnp.float32))  # [1, hd/2]
+    qh = apply_rope(q.reshape(1, cfg.n_heads, cfg.head_dim), angles)
+    kh = apply_rope(k_new.reshape(1, cfg.n_kv_heads, cfg.head_dim), angles)
+    kv_k = jax.lax.dynamic_update_slice(kv_k, kh.reshape(1, cfg.d_kv), (pos, 0))
+    kv_v = jax.lax.dynamic_update_slice(kv_v, v_new, (pos, 0))
+
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(kv_k.reshape(S, cfg.n_kv_heads, cfg.head_dim), rep, axis=1)
+    vv = jnp.repeat(kv_v.reshape(S, cfg.n_kv_heads, cfg.head_dim), rep, axis=1)
+    att = jnp.einsum("thd,shd->hts", qh, kk) / (cfg.head_dim ** 0.5)
+    mask = jnp.arange(S)[None, None, :] <= pos
+    att = jax.nn.softmax(jnp.where(mask, att, -1e30), axis=-1)
+    out = jnp.einsum("hts,shd->thd", att, vv).reshape(1, cfg.q_dim)
+    return out, kv_k, kv_v
+
+
+def proj_step(xs, w):
+    """Generic packed projection (o_proj / down_proj): xs [1,k] @ w [k,dout]."""
+    return sparse_matmul(xs, w)
+
+
+def gu_step(xs, wg, wu):
+    """Fused SwiGLU gate/up on packed rows -> [1,d_ff]."""
+    return gu_matmul(xs, wg, wu)
+
+
+def logits_step(xn, lm_head):
+    """Final projection: xn [1,d] (already final-normed in rust) @ [d,vocab]."""
+    return sparse_matmul(xn, lm_head)
+
+
+def dense_layer_step(cfg: ModelConfig, x, wq, wk, wv, wo, wg, wu, wd,
+                     g_attn, g_mlp, kv_k, kv_v, pos):
+    """Whole dense decode layer (baseline engine artifact): x [1,d] ->
+    (x' [1,d], kv_k', kv_v')."""
+    h = ref.rmsnorm_ref(x, g_attn, cfg.norm_eps)
+    attn, kv_k, kv_v = attn_core_step(
+        cfg, h @ wq, h @ wk, h @ wv, kv_k, kv_v, pos)
+    x = x + attn @ wo
+    h = ref.rmsnorm_ref(x, g_mlp, cfg.norm_eps)
+    x = x + (ref.silu_ref(h @ wg) * (h @ wu)) @ wd
+    return x, kv_k, kv_v
+
+
+# ------------------------------------------- python mirror of rust decode
+# Used for golden-vector generation and integration tests. Exact top-k with
+# ascending index sets, f32, identical op order to rust/src/engine.
+
+
+def sparse_decode_reference(params, cfg: ModelConfig, sp: float, tokens,
+                            n_gen: int = 0):
+    """Teacher-forced sparse decode over `tokens` (+ optional greedy
+    generation). Returns (all_logits [T+n_gen-?, vocab], generated tokens).
+    ``sp=None`` runs the dense path through the same op split."""
+    ka = cfg.k_active(sp, cfg.d_model) if sp else cfg.d_model
+    ko = cfg.k_active(sp, cfg.q_dim) if sp else cfg.q_dim
+    kf = cfg.k_active(sp, cfg.d_ff) if sp else cfg.d_ff
+    S = cfg.max_seq
+    L = cfg.n_layers
+    kv_k = [jnp.zeros((S, cfg.d_kv)) for _ in range(L)]
+    kv_v = [jnp.zeros((S, cfg.d_kv)) for _ in range(L)]
+
+    logits_all, generated = [], []
+    toks = list(tokens)
+    # teacher-forced: logits at every prompt position; generation: logits at
+    # positions T-1 .. T+n_gen-2 drive the n_gen greedy tokens.
+    total_steps = len(tokens) + n_gen - (1 if n_gen > 0 else 0)
+    for pos in range(total_steps):
+        t = toks[pos]
+        x = params["embed"][t][None, :]
+        for li, lp in enumerate(params["layers"]):
+            h = ref.rmsnorm_ref(x, lp["g_attn"], cfg.norm_eps)
+            idx = ref.topk_indices_ref(h[0], ka)
+            xs = h[0][idx][None, :]
+            q, kn, vn = qkv_step(xs, lp["wq"][idx], lp["wk"][idx], lp["wv"][idx])
+            attn, kv_k[li], kv_v[li] = attn_core_step(
+                cfg, q, kn, vn, kv_k[li], kv_v[li], jnp.int32(pos))
+            jdx = ref.topk_indices_ref(attn[0], ko)
+            x = x + proj_step(attn[0][jdx][None, :], lp["wo"][jdx])
+            h = ref.rmsnorm_ref(x, lp["g_mlp"], cfg.norm_eps)
+            kdx = ref.topk_indices_ref(h[0], ka)
+            ff = gu_step(h[0][kdx][None, :], lp["wg"][kdx], lp["wu"][kdx])
+            ldx = ref.topk_indices_ref(ff[0], kf)
+            x = x + proj_step(ff[0][ldx][None, :], lp["wd"][ldx])
+        xn = ref.rmsnorm_ref(x, params["g_final"], cfg.norm_eps)
+        logits = logits_step(xn, params["lm_head"])[0]
+        logits_all.append(logits)
+        if pos + 1 >= len(toks) and len(generated) < n_gen:
+            nxt = int(jnp.argmax(logits))
+            toks.append(nxt)
+            generated.append(nxt)
+    return jnp.stack(logits_all), generated
+
+
+# ------------------------------------------------------------------- loss
+
+
+def xent_loss(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, targets[..., None], axis=-1))
+
+
+def perplexity(params, cfg, tokens, sp=None, seq_len=128):
+    """Mean perplexity over non-overlapping windows of `tokens`."""
+    import numpy as np
+
+    toks = np.asarray(tokens, dtype=np.int32)
+    n = (len(toks) - 1) // seq_len
+    total, count = 0.0, 0
+    for i in range(n):
+        x = toks[i * seq_len : (i + 1) * seq_len][None]
+        y = toks[i * seq_len + 1 : (i + 1) * seq_len + 1][None]
+        if sp is None:
+            logits = dense_forward(params, cfg, x)
+        else:
+            logits = sparse_forward(params, cfg, x, sp)
+        total += float(xent_loss(logits, y)) * seq_len
+        count += seq_len
+    return float(jnp.exp(total / count))

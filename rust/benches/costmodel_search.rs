@@ -1,0 +1,39 @@
+//! Micro-bench: the §4.1 elastic parameter search — runs on every memory-
+//! pressure event in the serving path, so it must be cheap.
+
+mod support;
+
+use activeflow::costmodel::{self, Geometry};
+use activeflow::device::{ALL, PIXEL6};
+use support::Bench;
+
+fn main() {
+    let b = Bench::new("costmodel_search");
+    let grid = [0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95];
+    let geo = Geometry::llama7b_q4();
+
+    let mut budget = 1u64 << 30;
+    b.run("search_llama7b", 100, 100_000, || {
+        budget = 1 << 30 | (budget.wrapping_mul(6364136223846793005) % (2 << 30));
+        let _ = costmodel::search(&PIXEL6, &geo, budget, 0.85, 1.0, &grid);
+    });
+
+    let mixtral = Geometry::mixtral8x7b_q4();
+    b.run("search_all_devices_mixtral", 100, 30_000, || {
+        for dev in ALL {
+            let _ =
+                costmodel::search(dev, &mixtral, 2_900 << 20, 0.85, 1.0, &grid);
+        }
+    });
+
+    b.run("evaluate_single_point", 100, 200_000, || {
+        let p = costmodel::PipelineParams {
+            sp: 0.7,
+            n_group: 4,
+            cache_bytes: 256 << 20,
+            hit_rate: 0.7,
+            similarity: 0.85,
+        };
+        let _ = costmodel::evaluate(&PIXEL6, &geo, &p, 1.0);
+    });
+}

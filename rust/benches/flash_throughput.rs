@@ -1,0 +1,45 @@
+//! Micro-bench: flash simulator read path (pread + dequant accounting) by
+//! chunk size, per device profile. Paper Fig 7's engine-level counterpart.
+
+mod support;
+
+use activeflow::device;
+use activeflow::flash::{ClockMode, FlashDevice};
+use support::Bench;
+
+fn main() {
+    let Some(dir) = support::artifacts_dir() else { return };
+    let path = dir.join("model.awgf");
+    let b = Bench::new("flash_throughput");
+    for dev in device::ALL {
+        let flash =
+            FlashDevice::open(&path, dev, ClockMode::Modeled, 1.0).unwrap();
+        for chunk in [4usize << 10, 64 << 10, 512 << 10] {
+            let mut buf = vec![0u8; chunk.min(1 << 20)];
+            let mut off = 0u64;
+            b.run(
+                &format!("{}/read_{}k", dev.name, chunk >> 10),
+                10,
+                200,
+                || {
+                    flash.read_into(off % (1 << 18), &mut buf).unwrap();
+                    off += 4096;
+                },
+            );
+        }
+    }
+    // modeled throughput table (the actual Fig 7 series)
+    for dev in device::ALL {
+        let flash =
+            FlashDevice::open(&path, dev, ClockMode::Modeled, 1.0).unwrap();
+        for chunk in [4usize << 10, 64 << 10, 1 << 20] {
+            let bw = flash.measure_throughput(chunk, 2 << 20).unwrap();
+            println!(
+                "modeled {} chunk={:>6}K -> {:>8.1} MB/s",
+                dev.name,
+                chunk >> 10,
+                bw / 1e6
+            );
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Meso-bench: decode-token latency with and without the swapping pipeline
+//! (serial on-demand vs cross-layer preload), the engine-level view of
+//! paper Fig 15/16b.
+
+mod support;
+
+use activeflow::baselines;
+use activeflow::cache::CachePolicy;
+use activeflow::device::PIXEL6;
+use activeflow::engine::{EngineOptions, PreloadTrigger, SwapEngine, SwapMode};
+use activeflow::flash::ClockMode;
+use activeflow::tokenizer;
+use support::Bench;
+
+fn main() {
+    let Some(dir) = support::artifacts_dir() else { return };
+    let b = Bench::new("pipeline_overlap");
+    let prompt = tokenizer::encode("the sparse model swaps active weights. ");
+
+    let configs: Vec<(&str, EngineOptions)> = vec![
+        (
+            "serial_ondemand",
+            baselines::serial_options(0.6, &PIXEL6, ClockMode::Modeled, 1.0),
+        ),
+        (
+            "preload_n1",
+            EngineOptions {
+                sparsity: 0.6,
+                group_size: 1,
+                swap_mode: SwapMode::Preload,
+                cache_bytes: 0,
+                cache_policy: CachePolicy::Contextual,
+                device: &PIXEL6,
+                clock: ClockMode::Modeled,
+                bw_scale: 1.0,
+        trigger: PreloadTrigger::FirstLayer,
+            },
+        ),
+        (
+            "preload_n4_cache",
+            EngineOptions {
+                sparsity: 0.6,
+                group_size: 4,
+                swap_mode: SwapMode::Preload,
+                cache_bytes: 512 * 1024,
+                cache_policy: CachePolicy::Contextual,
+                device: &PIXEL6,
+                clock: ClockMode::Modeled,
+                bw_scale: 1.0,
+        trigger: PreloadTrigger::FirstLayer,
+            },
+        ),
+    ];
+    for (label, opts) in configs {
+        let mut eng = SwapEngine::open(&dir, opts).unwrap();
+        eng.forced_logits(&prompt).unwrap(); // warm KV + cache
+        let mut tok = 0usize;
+        b.run(label, 2, 30, || {
+            if eng.kv_pos() + 1 >= eng.model().max_seq {
+                eng.reset_sequence();
+            }
+            eng.decode_token(prompt[tok % prompt.len()]).unwrap();
+            tok += 1;
+        });
+    }
+}

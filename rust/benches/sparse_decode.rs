@@ -1,0 +1,58 @@
+//! End-to-end decode-token latency across the sparsity grid (modeled
+//! flash — isolates the compute+bookkeeping path; paper Fig 14a's
+//! engine-side counterpart) plus the dense baseline.
+
+mod support;
+
+use activeflow::baselines::DenseInMemory;
+use activeflow::cache::CachePolicy;
+use activeflow::device::PIXEL6;
+use activeflow::engine::{EngineOptions, PreloadTrigger, SwapEngine, SwapMode};
+use activeflow::flash::ClockMode;
+use activeflow::tokenizer;
+use support::Bench;
+
+fn main() {
+    let Some(dir) = support::artifacts_dir() else { return };
+    let b = Bench::new("sparse_decode");
+    let prompt = tokenizer::encode("the sparse model swaps active weights. ");
+
+    for sp in [0.5, 0.6, 0.8, 0.9] {
+        let mut eng = SwapEngine::open(
+            &dir,
+            EngineOptions {
+                sparsity: sp,
+                group_size: 4,
+                swap_mode: SwapMode::Preload,
+                cache_bytes: 256 * 1024,
+                cache_policy: CachePolicy::Contextual,
+                device: &PIXEL6,
+                clock: ClockMode::Modeled,
+                bw_scale: 1.0,
+        trigger: PreloadTrigger::FirstLayer,
+            },
+        )
+        .unwrap();
+        eng.forced_logits(&prompt).unwrap();
+        let mut t = 0usize;
+        b.run(&format!("decode_token_sp{:02}", (sp * 100.0) as u32), 2, 25,
+              || {
+            if eng.kv_pos() + 1 >= eng.model().max_seq {
+                eng.reset_sequence();
+            }
+            eng.decode_token(prompt[t % prompt.len()]).unwrap();
+            t += 1;
+        });
+    }
+
+    let mut dense = DenseInMemory::open(&dir).unwrap();
+    dense.forced_logits(&prompt).unwrap();
+    let mut t = 0usize;
+    b.run("decode_token_dense_in_memory", 2, 25, || {
+        if t % 64 == 63 {
+            dense.reset_sequence();
+        }
+        dense.decode_token(prompt[t % prompt.len()]).unwrap();
+        t += 1;
+    });
+}

@@ -1,0 +1,51 @@
+//! Criterion-lite: warmup + timed iterations + percentile report. (The
+//! offline vendor set has no criterion; harness=false benches use this.)
+
+use std::time::Instant;
+
+pub struct Bench {
+    name: &'static str,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Bench {
+        println!("\n== bench: {name} ==");
+        Bench { name }
+    }
+
+    /// Run `f` `iters` times after `warmup` runs; print mean/p50/p90.
+    pub fn run<F: FnMut()>(&self, label: &str, warmup: usize, iters: usize,
+                           mut f: F) {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        println!(
+            "{:<40} {:>10.2} us/iter (p50 {:>9.2}, p90 {:>9.2}, n={})",
+            format!("{}::{label}", self.name),
+            mean,
+            pct(0.5),
+            pct(0.9),
+            iters
+        );
+    }
+}
+
+/// Artifacts present? (benches self-skip without them)
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("model_config.json").exists() {
+        Some(dir)
+    } else {
+        println!("[skip] artifacts not built — run `make artifacts`");
+        None
+    }
+}

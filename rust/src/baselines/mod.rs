@@ -1,0 +1,309 @@
+//! Comparison systems (paper §7.1 baselines), all running on the same PJRT
+//! substrate so speed/memory comparisons are apples-to-apples:
+//!
+//! * [`DenseInMemory`] — llama.cpp-like: every weight resident in DRAM,
+//!   dense compute via the fused `dense_layer` artifact. The memory
+//!   ceiling ActiveFlow exists to break.
+//! * `teal_options` — TEAL-like contextual sparsity: Top-K on-demand loads
+//!   *after* each activation is known; no prediction, no cross-layer I/O.
+//! * `llm_in_flash_options` — LLM-in-a-flash/Ripple-like: co-active
+//!   channels clustered within a **single layer** (group_size = 1), load
+//!   overlapped with compute.
+//! * `activeflow_options` — the full system (cross-layer group N,
+//!   contextual cache).
+//! * `serial_options` — Fig 15's "serial computation and memory reads"
+//!   ablation floor (on-demand, no cache).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::CachePolicy;
+use crate::config::ArtifactConfig;
+use crate::device::DeviceProfile;
+use crate::engine::{EngineOptions, PreloadTrigger, SwapMode};
+use crate::flash::ClockMode;
+use crate::layout::{quant, AwgfFile, OpKind, SPARSE_OPS};
+use crate::metrics::DecodeMetrics;
+use crate::model::{self, DenseTensors, KvState};
+use crate::runtime::{lit_f32, lit_i32_scalar, lit_to_f32, Runtime};
+
+// ------------------------------------------------ named option presets
+
+pub fn activeflow_options(
+    sp: f64,
+    group_size: usize,
+    cache_bytes: u64,
+    device: &'static DeviceProfile,
+    clock: ClockMode,
+    bw_scale: f64,
+) -> EngineOptions {
+    EngineOptions {
+        sparsity: sp,
+        group_size,
+        swap_mode: SwapMode::Preload,
+        cache_bytes,
+        cache_policy: CachePolicy::Contextual,
+        device,
+        clock,
+        bw_scale,
+        trigger: PreloadTrigger::FirstLayer,
+    }
+}
+
+/// TEAL-like: identify-after-activation, no preloading.
+pub fn teal_options(
+    sp: f64,
+    cache_bytes: u64,
+    device: &'static DeviceProfile,
+    clock: ClockMode,
+    bw_scale: f64,
+) -> EngineOptions {
+    EngineOptions {
+        sparsity: sp,
+        group_size: 1,
+        swap_mode: SwapMode::OnDemand,
+        cache_bytes,
+        cache_policy: CachePolicy::Contextual,
+        device,
+        clock,
+        bw_scale,
+        trigger: PreloadTrigger::FirstLayer,
+    }
+}
+
+/// LLM-in-a-flash-like: within-layer clustering = cross-layer machinery
+/// with N=1.
+pub fn llm_in_flash_options(
+    sp: f64,
+    cache_bytes: u64,
+    device: &'static DeviceProfile,
+    clock: ClockMode,
+    bw_scale: f64,
+) -> EngineOptions {
+    EngineOptions {
+        sparsity: sp,
+        group_size: 1,
+        swap_mode: SwapMode::Preload,
+        cache_bytes,
+        cache_policy: CachePolicy::Contextual,
+        device,
+        clock,
+        bw_scale,
+        trigger: PreloadTrigger::FirstLayer,
+    }
+}
+
+/// Fig 15 ablation floor: strictly serial compute + loads, no cache.
+pub fn serial_options(
+    sp: f64,
+    device: &'static DeviceProfile,
+    clock: ClockMode,
+    bw_scale: f64,
+) -> EngineOptions {
+    EngineOptions {
+        sparsity: sp,
+        group_size: 1,
+        swap_mode: SwapMode::OnDemand,
+        cache_bytes: 0,
+        cache_policy: CachePolicy::Contextual,
+        device,
+        clock,
+        bw_scale,
+        trigger: PreloadTrigger::FirstLayer,
+    }
+}
+
+// --------------------------------------------------- dense in-memory
+
+/// llama.cpp-like baseline: the whole (dequantized) model lives in DRAM;
+/// decode runs the fused `dense_layer` artifact per layer.
+pub struct DenseInMemory {
+    pub cfg: ArtifactConfig,
+    rt: Runtime,
+    dense: DenseTensors,
+    /// Per layer, per op: full [d_in, d_out] matrices.
+    weights: Vec<Vec<Vec<f32>>>,
+    kv: KvState,
+    pub metrics: DecodeMetrics,
+    pub load_seconds: f64,
+    logits: Vec<f32>,
+    tmp: Vec<f32>,
+}
+
+impl DenseInMemory {
+    pub fn open(artifact_dir: &Path) -> Result<DenseInMemory> {
+        let cfg = ArtifactConfig::load(artifact_dir)?;
+        let awgf = AwgfFile::open(&cfg.weights_file)?;
+        let dense = DenseTensors::load(&awgf)?;
+        let t0 = Instant::now();
+
+        // Bulk-load every sparse op dequantized (startup, not per-token).
+        let file = std::fs::File::open(awgf.path())?;
+        use std::os::unix::fs::FileExt;
+        let mut weights = Vec::with_capacity(awgf.model.n_layers);
+        for l in 0..awgf.model.n_layers {
+            let mut per_op = Vec::with_capacity(SPARSE_OPS.len());
+            for op in SPARSE_OPS {
+                let info = awgf.op(op);
+                let mut w = vec![0f32; info.d_in * info.d_out];
+                let mut buf = vec![0u8; info.row_bytes];
+                for c in 0..info.d_in {
+                    let (off, len) = awgf.row_span(op, l, c);
+                    buf.resize(len, 0);
+                    file.read_exact_at(&mut buf, off)?;
+                    quant::dequantize_row(
+                        &buf,
+                        awgf.quant,
+                        &mut w[c * info.d_out..(c + 1) * info.d_out],
+                    );
+                }
+                per_op.push(w);
+            }
+            weights.push(per_op);
+        }
+        let load_seconds = t0.elapsed().as_secs_f64();
+
+        let mut rt = Runtime::new(artifact_dir)?;
+        rt.load("dense_layer")?;
+        rt.load("logits")?;
+        let kv = KvState::new(&awgf.model);
+        Ok(DenseInMemory {
+            logits: vec![0.0; cfg.model.vocab_size],
+            tmp: Vec::new(),
+            cfg,
+            rt,
+            dense,
+            weights,
+            kv,
+            metrics: DecodeMetrics::default(),
+            load_seconds,
+        })
+    }
+
+    pub fn reset_sequence(&mut self) {
+        self.kv.reset();
+    }
+
+    fn op(&self, l: usize, op: OpKind) -> &[f32] {
+        &self.weights[l][op.index()]
+    }
+
+    pub fn decode_token(&mut self, token: u32) -> Result<&[f32]> {
+        let m = self.cfg.model.clone();
+        let pos = self.kv.pos;
+        if pos >= m.max_seq {
+            return Err(anyhow!("sequence exceeds max_seq"));
+        }
+        let t0 = Instant::now();
+        let busy0 = self.rt.total_busy();
+        let mut x = self.dense.embedding(&m, token).to_vec();
+        let (d, qd, dkv, dff, s) = (
+            m.d_model as i64,
+            m.q_dim() as i64,
+            m.d_kv() as i64,
+            m.d_ff as i64,
+            m.max_seq as i64,
+        );
+        for l in 0..m.n_layers {
+            let kvl = &self.kv.layers[l];
+            let out = self.rt.exec(
+                "dense_layer",
+                &[
+                    lit_f32(&x, &[1, d])?,
+                    lit_f32(self.op(l, OpKind::Wq), &[d, qd])?,
+                    lit_f32(self.op(l, OpKind::Wk), &[d, dkv])?,
+                    lit_f32(self.op(l, OpKind::Wv), &[d, dkv])?,
+                    lit_f32(self.op(l, OpKind::Wo), &[qd, d])?,
+                    lit_f32(self.op(l, OpKind::Wg), &[d, dff])?,
+                    lit_f32(self.op(l, OpKind::Wu), &[d, dff])?,
+                    lit_f32(self.op(l, OpKind::Wd), &[dff, d])?,
+                    lit_f32(&self.dense.g_attn[l], &[d])?,
+                    lit_f32(&self.dense.g_mlp[l], &[d])?,
+                    lit_f32(&kvl.k, &[s, dkv])?,
+                    lit_f32(&kvl.v, &[s, dkv])?,
+                    lit_i32_scalar(pos as i32),
+                ],
+            )?;
+            lit_to_f32(&out[0], &mut self.tmp)?;
+            x.copy_from_slice(&self.tmp);
+            lit_to_f32(&out[1], &mut self.kv.layers[l].k)?;
+            lit_to_f32(&out[2], &mut self.kv.layers[l].v)?;
+            // DRAM traffic: the full layer's weights are streamed to the ALU
+            self.metrics.dram_bytes += self.weights[l]
+                .iter()
+                .map(|w| (w.len() * 4) as u64)
+                .sum::<u64>();
+        }
+        self.tmp.resize(m.d_model, 0.0);
+        let mut xn = std::mem::take(&mut self.tmp);
+        model::rmsnorm(&x, &self.dense.g_final, m.norm_eps, &mut xn);
+        let lg = self.rt.exec(
+            "logits",
+            &[
+                lit_f32(&xn, &[1, d])?,
+                lit_f32(&self.dense.lm_head, &[d, m.vocab_size as i64])?,
+            ],
+        )?;
+        self.tmp = xn;
+        lit_to_f32(&lg[0], &mut self.logits)?;
+        self.kv.pos += 1;
+        self.metrics.tokens += 1;
+        self.metrics.wall += t0.elapsed();
+        self.metrics.compute_busy += self.rt.total_busy() - busy0;
+        Ok(&self.logits)
+    }
+
+    pub fn forced_logits(&mut self, tokens: &[u32]) -> Result<Vec<Vec<f32>>> {
+        self.reset_sequence();
+        tokens
+            .iter()
+            .map(|&t| Ok(self.decode_token(t)?.to_vec()))
+            .collect()
+    }
+
+    pub fn generate(&mut self, prompt: &[u32], n_gen: usize) -> Result<Vec<u32>> {
+        self.reset_sequence();
+        let mut last = *prompt.first().ok_or_else(|| anyhow!("empty"))?;
+        for (i, &t) in prompt.iter().enumerate() {
+            last = t;
+            if i + 1 < prompt.len() {
+                self.decode_token(t)?;
+            }
+        }
+        let mut out = Vec::with_capacity(n_gen);
+        for _ in 0..n_gen {
+            let logits = self.decode_token(last)?;
+            let next = model::argmax(logits) as u32;
+            out.push(next);
+            last = next;
+        }
+        Ok(out)
+    }
+
+    /// Resident weight bytes (the llama.cpp memory cost in Fig 14).
+    pub fn weight_bytes(&self) -> u64 {
+        self.weights
+            .iter()
+            .flat_map(|per| per.iter().map(|w| (w.len() * 4) as u64))
+            .sum::<u64>()
+            + self.dense.bytes()
+    }
+
+    pub fn perplexity(&mut self, tokens: &[u32]) -> Result<f64> {
+        let max_seq = self.cfg.model.max_seq;
+        let mut nll = 0.0;
+        let mut count = 0usize;
+        self.reset_sequence();
+        for w in tokens.windows(2) {
+            if self.kv.pos >= max_seq {
+                self.reset_sequence();
+            }
+            let logits = self.decode_token(w[0])?;
+            nll -= model::log_prob(logits, w[1] as usize);
+            count += 1;
+        }
+        Ok((nll / count as f64).exp())
+    }
+}

@@ -1,0 +1,51 @@
+//! Paper-figure bench harnesses (`activeflow bench <name>`). Each prints
+//! the rows/series of the corresponding paper table or figure — see the
+//! per-experiment index in DESIGN.md §4.
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+mod figures;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match which {
+        "flash" => figures::fig7_flash_throughput(args),
+        "similarity" => figures::fig4_similarity(args),
+        "hot-weights" => figures::fig6_hot_weights(args),
+        "pareto" => figures::fig1_pareto(args),
+        "e2e" => figures::fig14_e2e(args),
+        "ablation" => figures::fig15_ablation(args),
+        "preload-tradeoff" => figures::fig16a_preload_tradeoff(args),
+        "layer-group" => figures::fig16b_layer_group(args),
+        "cache-policy" => figures::fig17_cache_policy(args),
+        "energy" => figures::fig19_energy(args),
+        "moe-sim" => figures::moe_sim(args),
+        "upper-bound" => figures::fig2_upper_bound(args),
+        "all" => {
+            for name in [
+                "flash", "similarity", "hot-weights", "upper-bound",
+                "pareto", "e2e", "ablation", "preload-tradeoff",
+                "layer-group", "cache-policy", "energy", "moe-sim",
+            ] {
+                println!("\n================ bench {name} ================");
+                let mut sub = args.clone();
+                sub.positional = vec![name.to_string()];
+                dispatch(&sub)?;
+            }
+            Ok(())
+        }
+        "help" | _ => {
+            bail!(
+                "bench what? flash|similarity|hot-weights|upper-bound|pareto|\
+                 e2e|ablation|preload-tradeoff|layer-group|cache-policy|\
+                 energy|moe-sim|all"
+            )
+        }
+    }
+}

@@ -1,0 +1,437 @@
+//! Dynamic contextual weight cache (paper §4.2, Fig 12).
+//!
+//! Per-tensor LFU: every (layer, op) tensor keeps independent frequency
+//! counters per channel; a newly activated channel replaces the least-used
+//! cached channel only if its count is higher ("If a newly activated channel
+//! has a higher count than the least-used channel in the cache, we evict the
+//! least-used channel"). Counters reset at sequence start — that is what
+//! makes the policy *context-level* rather than task-level (Fig 6/17).
+//!
+//! The task-level baseline pre-fills each tensor with the statically hottest
+//! channels of a calibration corpus and never evicts.
+
+use std::collections::BTreeMap;
+
+use crate::layout::TensorId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Dynamic LFU with per-sequence counter reset (the paper's policy).
+    Contextual,
+    /// Static residency from task-level hot-weight statistics (baseline).
+    TaskStatic,
+}
+
+/// Cache for one weight tensor's channels (rows already dequantized to f32).
+pub struct TensorCache {
+    pub d_in: usize,
+    pub row_len: usize,
+    pub capacity: usize,
+    policy: CachePolicy,
+    counts: Vec<u32>,
+    /// channel -> slot + 1 (0 = not cached)
+    slot_of: Vec<u32>,
+    /// slot -> channel
+    chan_of: Vec<u32>,
+    used_slots: usize,
+    store: Vec<f32>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl TensorCache {
+    pub fn new(d_in: usize, row_len: usize, capacity: usize,
+               policy: CachePolicy) -> TensorCache {
+        let capacity = capacity.min(d_in);
+        TensorCache {
+            d_in,
+            row_len,
+            capacity,
+            policy,
+            counts: vec![0; d_in],
+            slot_of: vec![0; d_in],
+            chan_of: vec![u32::MAX; capacity],
+            used_slots: 0,
+            store: vec![0f32; capacity * row_len],
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn contains(&self, channel: usize) -> bool {
+        self.slot_of[channel] != 0
+    }
+
+    /// Count one use of `channel` and look it up. Hit/miss accounting
+    /// happens here (N_hit / (N_hit + N_miss), paper §7.1).
+    pub fn lookup(&mut self, channel: usize) -> Option<&[f32]> {
+        self.counts[channel] = self.counts[channel].saturating_add(1);
+        match self.slot_of[channel] {
+            0 => {
+                self.misses += 1;
+                None
+            }
+            s => {
+                self.hits += 1;
+                let slot = (s - 1) as usize;
+                Some(&self.store[slot * self.row_len..(slot + 1) * self.row_len])
+            }
+        }
+    }
+
+    /// Peek without accounting (used by the preloader to skip cached
+    /// channels when building load lists).
+    pub fn peek(&self, channel: usize) -> Option<&[f32]> {
+        match self.slot_of[channel] {
+            0 => None,
+            s => {
+                let slot = (s - 1) as usize;
+                Some(&self.store[slot * self.row_len..(slot + 1) * self.row_len])
+            }
+        }
+    }
+
+    /// Offer a freshly loaded row to the cache. Returns true if admitted.
+    pub fn insert(&mut self, channel: usize, row: &[f32]) -> bool {
+        debug_assert_eq!(row.len(), self.row_len);
+        if self.capacity == 0 || self.contains(channel) {
+            return self.contains(channel);
+        }
+        if self.policy == CachePolicy::TaskStatic {
+            // static residency: only fill while warm-up slots remain
+            if self.used_slots >= self.capacity {
+                return false;
+            }
+            let slot = self.used_slots;
+            self.used_slots += 1;
+            self.place(channel, slot, row);
+            return true;
+        }
+        if self.used_slots < self.capacity {
+            let slot = self.used_slots;
+            self.used_slots += 1;
+            self.place(channel, slot, row);
+            return true;
+        }
+        // full: evict the least-frequently-used cached channel if the new
+        // channel's count is at least as high. (The paper states "higher
+        // count", but its own Fig 12 example evicts on a tie — ties favor
+        // the newly activated channel, i.e. recency.)
+        let (victim_slot, victim_chan, victim_count) = self.min_count_slot();
+        if self.counts[channel] >= victim_count {
+            self.slot_of[victim_chan] = 0;
+            self.place(channel, victim_slot, row);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn place(&mut self, channel: usize, slot: usize, row: &[f32]) {
+        self.slot_of[channel] = (slot + 1) as u32;
+        self.chan_of[slot] = channel as u32;
+        self.store[slot * self.row_len..(slot + 1) * self.row_len]
+            .copy_from_slice(row);
+    }
+
+    fn min_count_slot(&self) -> (usize, usize, u32) {
+        let mut best = (0usize, 0usize, u32::MAX);
+        for slot in 0..self.used_slots {
+            let chan = self.chan_of[slot] as usize;
+            let c = self.counts[chan];
+            if c < best.2 {
+                best = (slot, chan, c);
+            }
+        }
+        best
+    }
+
+    /// Sequence boundary: context-level counters restart (cached contents
+    /// stay — only the recency signal resets).
+    pub fn reset_context(&mut self) {
+        if self.policy == CachePolicy::Contextual {
+            self.counts.fill(0);
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn resident_channels(&self) -> usize {
+        self.used_slots
+    }
+
+    /// Selection count of a channel (doubles as the Fig 6 hot-weight
+    /// frequency statistic).
+    pub fn count_of(&self, channel: usize) -> u32 {
+        self.counts[channel]
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.capacity * self.row_len * 4) as u64
+    }
+}
+
+/// The full model weight cache: one [`TensorCache`] per (layer, op), with a
+/// byte budget split proportionally to tensor size so every tensor caches
+/// the same *fraction* of its channels ("balanced cache size across all
+/// weights", §4.2).
+pub struct WeightCache {
+    pub tensors: BTreeMap<TensorId, TensorCache>,
+    pub policy: CachePolicy,
+    pub budget_bytes: u64,
+}
+
+impl WeightCache {
+    /// `tensor_dims`: (id, d_in, d_out_f32_len) for every cached tensor.
+    pub fn new(
+        tensor_dims: &[(TensorId, usize, usize)],
+        budget_bytes: u64,
+        policy: CachePolicy,
+    ) -> WeightCache {
+        let total: u64 = tensor_dims
+            .iter()
+            .map(|(_, din, dlen)| (din * dlen * 4) as u64)
+            .sum();
+        let frac = if total == 0 {
+            0.0
+        } else {
+            (budget_bytes as f64 / total as f64).min(1.0)
+        };
+        let tensors = tensor_dims
+            .iter()
+            .map(|&(id, din, dlen)| {
+                let cap = (din as f64 * frac).floor() as usize;
+                (id, TensorCache::new(din, dlen, cap, policy))
+            })
+            .collect();
+        WeightCache {
+            tensors,
+            policy,
+            budget_bytes,
+        }
+    }
+
+    pub fn tensor_mut(&mut self, id: TensorId) -> &mut TensorCache {
+        self.tensors.get_mut(&id).expect("unknown tensor id")
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &TensorCache {
+        &self.tensors[&id]
+    }
+
+    pub fn reset_context(&mut self) {
+        for t in self.tensors.values_mut() {
+            t.reset_context();
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        for t in self.tensors.values_mut() {
+            t.reset_stats();
+        }
+    }
+
+    /// Aggregate hit rate across all tensors.
+    pub fn hit_rate(&self) -> f64 {
+        let (mut h, mut m) = (0u64, 0u64);
+        for t in self.tensors.values() {
+            h += t.hits;
+            m += t.misses;
+        }
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// Actual allocated bytes (≤ budget).
+    pub fn bytes(&self) -> u64 {
+        self.tensors.values().map(|t| t.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::OpKind;
+    use crate::util::prop::{check, GenExt};
+
+    fn tc(cap: usize) -> TensorCache {
+        TensorCache::new(8, 4, cap, CachePolicy::Contextual)
+    }
+
+    fn row(v: f32) -> Vec<f32> {
+        vec![v; 4]
+    }
+
+    #[test]
+    fn paper_fig12_walkthrough() {
+        // 8 channels, capacity 4; channel 0 pre-cached.
+        let mut c = tc(4);
+        c.insert(0, &row(0.0));
+        c.counts.fill(0);
+
+        // token 1 activates {0,1,4,6}: 0 hits, 1/4/6 miss then load+insert.
+        let mut hits = 0;
+        for ch in [0usize, 1, 4, 6] {
+            if c.lookup(ch).is_some() {
+                hits += 1;
+            } else {
+                c.insert(ch, &row(ch as f32));
+            }
+        }
+        assert_eq!(hits, 1); // 25% hit ratio, as in the paper's example
+
+        // token 2 activates {0,4,6,7}: 0/4/6 hit, 7 misses; 1 has the lowest
+        // count and gets evicted for 7.
+        let mut hits = 0;
+        for ch in [0usize, 4, 6, 7] {
+            if c.lookup(ch).is_some() {
+                hits += 1;
+            } else {
+                assert!(c.insert(ch, &row(ch as f32)), "7 should evict 1");
+            }
+        }
+        assert_eq!(hits, 3); // 75%
+        assert!(!c.contains(1));
+        assert!(c.contains(7));
+    }
+
+    #[test]
+    fn lookup_returns_inserted_row() {
+        let mut c = tc(2);
+        c.lookup(3); // count++
+        c.insert(3, &row(9.0));
+        assert_eq!(c.lookup(3).unwrap(), &[9.0, 9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn insert_respects_lfu_rule() {
+        let mut c = tc(1);
+        c.lookup(0);
+        c.lookup(0); // count(0) = 2
+        c.insert(0, &row(0.0));
+        c.lookup(1); // count(1) = 1 < 2 -> no eviction
+        assert!(!c.insert(1, &row(1.0)));
+        assert!(c.contains(0));
+        c.lookup(1);
+        c.lookup(1); // count(1) = 3 > 2 -> evicts
+        assert!(c.insert(1, &row(1.0)));
+        assert!(!c.contains(0));
+    }
+
+    #[test]
+    fn capacity_never_exceeded_property() {
+        check("cache-capacity", |g| {
+            let d = g.usize_in(4, 64);
+            let cap = g.usize_in(0, d);
+            let mut c =
+                TensorCache::new(d, 2, cap, CachePolicy::Contextual);
+            for _ in 0..500 {
+                let ch = g.usize_in(0, d - 1);
+                if c.lookup(ch).is_none() {
+                    c.insert(ch, &[ch as f32, 0.0]);
+                }
+                if c.resident_channels() > cap {
+                    return Err("capacity exceeded".into());
+                }
+            }
+            // accounting consistency
+            if c.hits + c.misses != 500 {
+                return Err("hit+miss != lookups".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cached_row_contents_stay_correct_property() {
+        check("cache-contents", |g| {
+            let d = g.usize_in(4, 32);
+            let cap = g.usize_in(1, d);
+            let mut c =
+                TensorCache::new(d, 2, cap, CachePolicy::Contextual);
+            for _ in 0..300 {
+                let ch = g.usize_in(0, d - 1);
+                match c.lookup(ch) {
+                    Some(r) => {
+                        if r != [ch as f32, (ch * 2) as f32] {
+                            return Err(format!("channel {ch} corrupt: {r:?}"));
+                        }
+                    }
+                    None => {
+                        c.insert(ch, &[ch as f32, (ch * 2) as f32]);
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn task_static_never_evicts() {
+        let mut c = TensorCache::new(8, 2, 2, CachePolicy::TaskStatic);
+        c.insert(0, &[0.0, 0.0]);
+        c.insert(1, &[1.0, 1.0]);
+        for ch in 2..8 {
+            c.lookup(ch);
+            c.lookup(ch);
+            c.lookup(ch);
+            assert!(!c.insert(ch, &[9.0, 9.0]));
+        }
+        assert!(c.contains(0) && c.contains(1));
+    }
+
+    #[test]
+    fn context_reset_zeroes_counts_keeps_contents() {
+        let mut c = tc(2);
+        c.lookup(5);
+        c.insert(5, &row(5.0));
+        c.reset_context();
+        assert_eq!(c.counts[5], 0);
+        assert!(c.contains(5));
+    }
+
+    #[test]
+    fn weight_cache_budget_split() {
+        let dims = vec![
+            (TensorId::new(0, OpKind::Wq), 128usize, 128usize),
+            (TensorId::new(0, OpKind::Wg), 128, 384),
+        ];
+        let total_bytes: u64 = dims
+            .iter()
+            .map(|(_, a, b)| (a * b * 4) as u64)
+            .sum();
+        let wc = WeightCache::new(&dims, total_bytes / 2, CachePolicy::Contextual);
+        // both tensors cache ~half their channels
+        for (id, din, _) in &dims {
+            let cap = wc.tensor(*id).capacity;
+            assert!(
+                (cap as f64 - *din as f64 / 2.0).abs() <= 1.0,
+                "cap {cap} not ~{}",
+                din / 2
+            );
+        }
+        assert!(wc.bytes() <= total_bytes / 2 + 16);
+    }
+
+    #[test]
+    fn weight_cache_budget_exceeding_size_caps_at_full() {
+        let dims = vec![(TensorId::new(0, OpKind::Wq), 16usize, 4usize)];
+        let wc = WeightCache::new(&dims, u64::MAX, CachePolicy::Contextual);
+        assert_eq!(wc.tensor(dims[0].0).capacity, 16);
+    }
+}

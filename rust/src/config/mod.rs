@@ -1,0 +1,234 @@
+//! Configuration: model geometry (read from `artifacts/model_config.json`,
+//! written by the python AOT path) and runtime knobs.
+//!
+//! Field names mirror `python/compile/configs.py` — keep in sync.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Transformer geometry (mirror of python `ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn d_kv(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Active channels of an input dim at sparsity `sp` (mirror of python).
+    pub fn k_active(&self, sp: f64, dim: usize) -> usize {
+        let k = (dim as f64 * (1.0 - sp)).round() as usize;
+        k.clamp(1, dim)
+    }
+
+    pub fn from_json(v: &Value) -> Result<ModelConfig> {
+        let g = |k: &str| -> Result<usize> {
+            Ok(v.req(k)?.as_usize().ok_or_else(|| anyhow!("{k} not int"))?)
+        };
+        Ok(ModelConfig {
+            name: v
+                .get("name")
+                .and_then(Value::as_str)
+                .unwrap_or("model")
+                .to_string(),
+            vocab_size: g("vocab_size")?,
+            d_model: g("d_model")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            n_kv_heads: g("n_kv_heads")?,
+            head_dim: g("head_dim")?,
+            d_ff: g("d_ff")?,
+            max_seq: g("max_seq")?,
+            rope_theta: v.req("rope_theta")?.as_f64().unwrap_or(10000.0) as f32,
+            norm_eps: v.req("norm_eps")?.as_f64().unwrap_or(1e-5) as f32,
+        })
+    }
+
+    /// The tiny config used across unit tests (matches python TINY).
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            vocab_size: 256,
+            d_model: 128,
+            n_layers: 8,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 32,
+            d_ff: 384,
+            max_seq: 256,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+}
+
+/// One entry of the sparsity-level table emitted by aot.py.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparsityLevel {
+    pub sp: f64,
+    pub k_attn: usize,
+    pub k_o: usize,
+    pub k_ff: usize,
+}
+
+/// Parsed `artifacts/model_config.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactConfig {
+    pub model: ModelConfig,
+    pub quant: String,
+    pub group_size: usize,
+    pub sparsity_levels: Vec<SparsityLevel>,
+    pub weights_file: PathBuf,
+    pub artifact_dir: PathBuf,
+}
+
+impl ArtifactConfig {
+    pub fn load(dir: &Path) -> Result<ArtifactConfig> {
+        let path = dir.join("model_config.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).context("parsing model_config.json")?;
+        let model = ModelConfig::from_json(v.req("model")?)?;
+        let mut levels = Vec::new();
+        for lv in v
+            .req("sparsity_levels")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("sparsity_levels not array"))?
+        {
+            levels.push(SparsityLevel {
+                sp: lv.req("sp")?.as_f64().unwrap(),
+                k_attn: lv.req("k_attn")?.as_usize().unwrap(),
+                k_o: lv.req("k_o")?.as_usize().unwrap(),
+                k_ff: lv.req("k_ff")?.as_usize().unwrap(),
+            });
+        }
+        Ok(ArtifactConfig {
+            model,
+            quant: v
+                .req("quant")?
+                .as_str()
+                .ok_or_else(|| anyhow!("quant"))?
+                .to_string(),
+            group_size: v.req("group_size")?.as_usize().unwrap_or(4),
+            sparsity_levels: levels,
+            weights_file: dir.join(
+                v.req("weights_file")?.as_str().unwrap_or("model.awgf"),
+            ),
+            artifact_dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Nearest configured sparsity level (levels are coarse by design; the
+    /// elastic controller snaps to the closest compiled artifact set).
+    pub fn nearest_level(&self, sp: f64) -> Option<&SparsityLevel> {
+        self.sparsity_levels.iter().min_by(|a, b| {
+            (a.sp - sp)
+                .abs()
+                .partial_cmp(&(b.sp - sp).abs())
+                .unwrap()
+        })
+    }
+}
+
+/// Runtime knobs for the swapping engine (paper Table 1 parameters).
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    /// Contextual sparsity (fraction of channels *skipped*). 0 = dense.
+    pub sparsity: f64,
+    /// Layers per cross-layer preload group (paper N).
+    pub group_size: usize,
+    /// Weight-cache budget in bytes (paper M_cache).
+    pub cache_bytes: u64,
+    /// Total DRAM budget in bytes (paper M_max); used by the searcher.
+    pub mem_budget: u64,
+    /// Device profile name (see [`crate::device`]).
+    pub device: String,
+    /// `true` → flash reads really sleep (wall-clock overlap measurements);
+    /// `false` → virtual-clock accounting only (fast sweeps).
+    pub timed_flash: bool,
+    /// Scale flash bandwidth to emulate larger models on the tiny geometry
+    /// (e.g. 0.02 ≈ Llama-7B-sized layers per DESIGN.md §1).
+    pub bw_scale: f64,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            sparsity: 0.6,
+            group_size: 4,
+            cache_bytes: 256 * 1024,
+            mem_budget: u64::MAX,
+            device: "pixel6".into(),
+            timed_flash: true,
+            bw_scale: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_dims() {
+        let c = ModelConfig::tiny();
+        assert_eq!(c.d_kv(), 64);
+        assert_eq!(c.q_dim(), 128);
+        assert_eq!(c.k_active(0.5, 128), 64);
+        assert_eq!(c.k_active(0.9, 128), 13);
+        assert_eq!(c.k_active(0.999, 128), 1); // clamped at 1
+    }
+
+    #[test]
+    fn model_from_json() {
+        let j = r#"{"name":"t","vocab_size":256,"d_model":128,"n_layers":8,
+            "n_heads":4,"n_kv_heads":2,"head_dim":32,"d_ff":384,
+            "max_seq":256,"rope_theta":10000.0,"norm_eps":1e-5}"#;
+        let v = json::parse(j).unwrap();
+        let c = ModelConfig::from_json(&v).unwrap();
+        assert_eq!(c, ModelConfig::tiny().clone_with_name("t"));
+    }
+
+    impl ModelConfig {
+        fn clone_with_name(&self, n: &str) -> ModelConfig {
+            let mut c = self.clone();
+            c.name = n.into();
+            c
+        }
+    }
+
+    #[test]
+    fn nearest_level_snaps() {
+        let mk = |sp| SparsityLevel { sp, k_attn: 1, k_o: 1, k_ff: 1 };
+        let ac = ArtifactConfig {
+            model: ModelConfig::tiny(),
+            quant: "q4_0".into(),
+            group_size: 4,
+            sparsity_levels: vec![mk(0.5), mk(0.7), mk(0.9)],
+            weights_file: "/tmp/x".into(),
+            artifact_dir: "/tmp".into(),
+        };
+        assert_eq!(ac.nearest_level(0.55).unwrap().sp, 0.5);
+        assert_eq!(ac.nearest_level(0.65).unwrap().sp, 0.7);
+        assert_eq!(ac.nearest_level(1.0).unwrap().sp, 0.9);
+    }
+}

@@ -1,0 +1,165 @@
+//! Device profiles (paper Table 2): memory bandwidth, flash throughput
+//! curve, compute rate, and power rails for the three evaluation phones.
+//!
+//! The flash curve follows the classic fixed-latency + streaming-bandwidth
+//! model: a read of `c` bytes costs `t = lat + c / max_bw`, so effective
+//! throughput `c/t` rises with chunk size and saturates at `max_bw` —
+//! reproducing the shape of paper Fig 7 (MB/s at 4 KB chunks, GB/s above
+//! ~1 MB chunks).
+
+/// Power rail model for [`crate::metrics::EnergyModel`] (paper Fig 19).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerRails {
+    /// Idle platform power (W).
+    pub idle_w: f64,
+    /// Incremental power while CPU computes (W).
+    pub compute_w: f64,
+    /// Incremental power while flash streams (W).
+    pub flash_w: f64,
+    /// Incremental power while DRAM streams at full bandwidth (W).
+    pub dram_w: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Human label from the paper (Device 1/2/3).
+    pub label: &'static str,
+    /// DRAM bandwidth (bytes/s) available to the decode kernels.
+    pub mem_bw: f64,
+    /// Flash saturated bandwidth (bytes/s) — "MaxBW" in Table 2.
+    pub flash_max_bw: f64,
+    /// Per-I/O fixed latency (s) — controls the Fig 7 knee.
+    pub flash_latency: f64,
+    /// Sustained compute rate (FLOP/s) of the big cores.
+    pub compute_flops: f64,
+    /// *Effective* decode bandwidth (bytes of weights the CPU decode loop
+    /// actually consumes per second — llama.cpp-class Q4 matvec, well below
+    /// the DRAM peak). Calibrated against the paper's §7.2 Mixtral numbers;
+    /// this is what the cost model's T_comp uses.
+    pub decode_bw: f64,
+    /// Total DRAM size in bytes (Table 2).
+    pub dram_bytes: u64,
+    pub power: PowerRails,
+}
+
+impl DeviceProfile {
+    /// Modeled duration of a single flash read of `len` bytes.
+    pub fn flash_read_seconds(&self, len: u64) -> f64 {
+        self.flash_latency + len as f64 / self.flash_max_bw
+    }
+
+    /// Effective flash throughput (bytes/s) at a given chunk size — the
+    /// quantity plotted in paper Fig 7.
+    pub fn flash_throughput(&self, chunk: u64) -> f64 {
+        chunk as f64 / self.flash_read_seconds(chunk)
+    }
+
+    /// Small-chunk bandwidth BW^small_flash at the weight-channel size
+    /// (cost-model Table 1).
+    pub fn bw_small(&self, channel_bytes: u64) -> f64 {
+        self.flash_throughput(channel_bytes)
+    }
+
+    /// Large-chunk bandwidth BW^large_flash at the preload chunk size.
+    pub fn bw_large(&self, chunk_bytes: u64) -> f64 {
+        self.flash_throughput(chunk_bytes)
+    }
+}
+
+/// Device 1: OnePlus 12 — X4+A720+A520, 16 GB, UFS 4.0 (5.8 GB/s).
+pub const ONEPLUS12: DeviceProfile = DeviceProfile {
+    name: "oneplus12",
+    label: "Device 1 (OnePlus 12, UFS 4.0)",
+    mem_bw: 60.0e9,
+    flash_max_bw: 5.8e9,
+    flash_latency: 45e-6,
+    compute_flops: 80.0e9,
+    decode_bw: 5.7e9,
+    dram_bytes: 16 * (1 << 30),
+    power: PowerRails { idle_w: 0.9, compute_w: 2.6, flash_w: 1.1, dram_w: 0.9 },
+};
+
+/// Device 2: Pixel 6 — X1+A76+A55, 8 GB, UFS 3.1 (4.2 GB/s).
+pub const PIXEL6: DeviceProfile = DeviceProfile {
+    name: "pixel6",
+    label: "Device 2 (Pixel 6, UFS 3.1)",
+    mem_bw: 34.0e9,
+    flash_max_bw: 4.2e9,
+    flash_latency: 70e-6,
+    compute_flops: 35.0e9,
+    decode_bw: 4.5e9,
+    dram_bytes: 8 * (1 << 30),
+    power: PowerRails { idle_w: 0.8, compute_w: 2.2, flash_w: 1.0, dram_w: 0.8 },
+};
+
+/// Device 3: Infinix ZERO 30 — A76+A55, 8 GB, UFS 2.2 (3.6 GB/s).
+pub const INFINIX_ZERO30: DeviceProfile = DeviceProfile {
+    name: "infinix",
+    label: "Device 3 (Infinix ZERO 30, UFS 2.2)",
+    mem_bw: 17.0e9,
+    flash_max_bw: 3.6e9,
+    flash_latency: 120e-6,
+    compute_flops: 18.0e9,
+    decode_bw: 2.0e9,
+    dram_bytes: 8 * (1 << 30),
+    power: PowerRails { idle_w: 0.7, compute_w: 1.8, flash_w: 0.9, dram_w: 0.7 },
+};
+
+pub const ALL: [&DeviceProfile; 3] = [&ONEPLUS12, &PIXEL6, &INFINIX_ZERO30];
+
+pub fn by_name(name: &str) -> Option<&'static DeviceProfile> {
+    ALL.iter().copied().find(|d| d.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("pixel6").unwrap().name, "pixel6");
+        assert!(by_name("iphone99").is_none());
+    }
+
+    #[test]
+    fn throughput_monotone_in_chunk_size() {
+        for d in ALL {
+            let mut last = 0.0;
+            for chunk in [4u64 << 10, 64 << 10, 256 << 10, 1 << 20, 4 << 20] {
+                let bw = d.flash_throughput(chunk);
+                assert!(bw > last, "{}: bw not monotone", d.name);
+                last = bw;
+            }
+        }
+    }
+
+    #[test]
+    fn throughput_saturates_near_max() {
+        for d in ALL {
+            let bw = d.flash_throughput(64 << 20);
+            assert!(bw > 0.9 * d.flash_max_bw);
+            assert!(bw < d.flash_max_bw);
+        }
+    }
+
+    #[test]
+    fn small_chunks_are_mbps_not_gbps() {
+        // Paper Fig 7: naive 4 KB channel reads collapse to MB/s.
+        for d in ALL {
+            let bw = d.flash_throughput(4 << 10);
+            assert!(bw < 0.1e9, "{}: 4KB bw should be <100MB/s", d.name);
+        }
+    }
+
+    #[test]
+    fn device_ordering_matches_table2() {
+        // UFS 4.0 > 3.1 > 2.2 at every chunk size.
+        for chunk in [4u64 << 10, 1 << 20] {
+            let a = ONEPLUS12.flash_throughput(chunk);
+            let b = PIXEL6.flash_throughput(chunk);
+            let c = INFINIX_ZERO30.flash_throughput(chunk);
+            assert!(a > b && b > c);
+        }
+    }
+}

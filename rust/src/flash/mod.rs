@@ -1,0 +1,309 @@
+//! Flash device simulator (DESIGN.md §1 substitution for UFS storage).
+//!
+//! Real bytes move: reads hit an actual weights file via `pread`. Timing is
+//! simulated from the device profile's chunk-size-dependent bandwidth curve
+//! (paper Fig 7), in one of two clock modes:
+//!
+//! * **Timed** — each read sleeps out the remainder of its modeled duration,
+//!   so wall-clock pipeline measurements (compute/load overlap, Fig 15/16)
+//!   are faithful: an I/O "in flight" costs no CPU, exactly like io_uring
+//!   waiting on UFS.
+//! * **Modeled** — no sleeping; modeled nanoseconds accumulate on a virtual
+//!   clock (fast parameter sweeps, cost-model validation).
+//!
+//! The async queue mirrors the paper's io_uring usage: `submit` is cheap,
+//! completions are reaped with `wait_all`, and in-flight reads overlap each
+//! other up to the queue depth.
+
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::device::DeviceProfile;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockMode {
+    Timed,
+    Modeled,
+}
+
+/// Read statistics (drives the Fig 7 bench and the energy model).
+#[derive(Debug, Default)]
+pub struct FlashStats {
+    pub reads: AtomicU64,
+    pub bytes: AtomicU64,
+    /// Modeled busy nanoseconds of the flash device.
+    pub busy_ns: AtomicU64,
+    /// Histogram of chunk sizes: [<16K, <64K, <256K, <1M, >=1M].
+    pub size_hist: [AtomicU64; 5],
+}
+
+impl FlashStats {
+    fn record(&self, len: u64, ns: u64) {
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(len, Ordering::Relaxed);
+        self.busy_ns.fetch_add(ns, Ordering::Relaxed);
+        let bucket = match len {
+            l if l < 16 << 10 => 0,
+            l if l < 64 << 10 => 1,
+            l if l < 256 << 10 => 2,
+            l if l < 1 << 20 => 3,
+            _ => 4,
+        };
+        self.size_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.reads.load(Ordering::Relaxed),
+            self.bytes.load(Ordering::Relaxed),
+            self.busy_ns.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The simulated flash device, shareable across threads.
+pub struct FlashDevice {
+    file: File,
+    pub profile: &'static DeviceProfile,
+    pub mode: ClockMode,
+    /// Bandwidth scale (<1 emulates proportionally larger models).
+    pub bw_scale: f64,
+    pub stats: FlashStats,
+    /// Serializes the (single) flash channel in Timed mode — concurrent
+    /// submitters queue behind each other like a real UFS device.
+    channel: Mutex<()>,
+}
+
+impl FlashDevice {
+    pub fn open(
+        path: &Path,
+        profile: &'static DeviceProfile,
+        mode: ClockMode,
+        bw_scale: f64,
+    ) -> Result<Arc<FlashDevice>> {
+        let file = File::open(path)
+            .with_context(|| format!("opening flash file {}", path.display()))?;
+        Ok(Arc::new(FlashDevice {
+            file,
+            profile,
+            mode,
+            bw_scale,
+            stats: FlashStats::default(),
+            channel: Mutex::new(()),
+        }))
+    }
+
+    /// Modeled duration of one read of `len` bytes.
+    pub fn model_read_ns(&self, len: u64) -> u64 {
+        let s = self.profile.flash_latency
+            + len as f64 / (self.profile.flash_max_bw * self.bw_scale);
+        (s * 1e9) as u64
+    }
+
+    /// Synchronous read with timing applied. Returns the bytes.
+    pub fn read(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; len];
+        self.read_into(offset, &mut buf)?;
+        Ok(buf)
+    }
+
+    /// Read into a caller-provided buffer (hot path: no allocation).
+    pub fn read_into(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let model_ns = self.model_read_ns(buf.len() as u64);
+        match self.mode {
+            ClockMode::Timed => {
+                let _chan = self.channel.lock().unwrap();
+                let t0 = Instant::now();
+                self.file
+                    .read_exact_at(buf, offset)
+                    .context("flash pread")?;
+                let real = t0.elapsed().as_nanos() as u64;
+                if model_ns > real {
+                    std::thread::sleep(Duration::from_nanos(model_ns - real));
+                }
+            }
+            ClockMode::Modeled => {
+                self.file
+                    .read_exact_at(buf, offset)
+                    .context("flash pread")?;
+            }
+        }
+        self.stats.record(buf.len() as u64, model_ns);
+        Ok(())
+    }
+
+    /// Batched read (io_uring-like): submit all, device streams them
+    /// back-to-back paying one fixed latency per chunk. Returns buffers in
+    /// submission order.
+    pub fn read_batch(&self, reqs: &[(u64, usize)]) -> Result<Vec<Vec<u8>>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        for &(off, len) in reqs {
+            out.push(self.read(off, len)?);
+        }
+        Ok(out)
+    }
+
+    /// Effective throughput at a chunk size, measured through the simulator
+    /// (validates against `DeviceProfile::flash_throughput`). Chunks larger
+    /// than the backing file wrap: the pread covers what exists, the timing
+    /// models the full chunk.
+    pub fn measure_throughput(&self, chunk: usize, total: usize) -> Result<f64> {
+        let file_len = self.file.metadata()?.len() as usize;
+        let n = (total / chunk).max(1);
+        let t0 = Instant::now();
+        let mut modeled_ns = 0u64;
+        let read_len = chunk.min(file_len);
+        let mut buf = vec![0u8; read_len];
+        for i in 0..n {
+            let off = ((i * read_len) % (file_len - read_len + 1)) as u64;
+            self.read_into(off, &mut buf)?;
+            modeled_ns += self.model_read_ns(chunk as u64);
+        }
+        let secs = match self.mode {
+            ClockMode::Timed => t0.elapsed().as_secs_f64(),
+            ClockMode::Modeled => modeled_ns as f64 / 1e9,
+        };
+        Ok((n * chunk) as f64 / secs)
+    }
+}
+
+/// An async read queue over a FlashDevice: submit from one thread, reap
+/// completions in order. Mirrors the io_uring submit/wait structure of the
+/// paper's loader thread (§6 Flash loading).
+pub struct ReadQueue {
+    dev: Arc<FlashDevice>,
+    pending: Vec<(u64, usize)>,
+}
+
+impl ReadQueue {
+    pub fn new(dev: Arc<FlashDevice>) -> ReadQueue {
+        ReadQueue {
+            dev,
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn submit(&mut self, offset: u64, len: usize) {
+        self.pending.push((offset, len));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Complete all pending reads (in order), returning their buffers.
+    pub fn wait_all(&mut self) -> Result<Vec<Vec<u8>>> {
+        let reqs = std::mem::take(&mut self.pending);
+        self.dev.read_batch(&reqs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::PIXEL6;
+    use std::io::Write;
+
+    fn temp_flash(len: usize, mode: ClockMode) -> (Arc<FlashDevice>, std::path::PathBuf) {
+        let path = std::env::temp_dir().join(format!(
+            "awf_flash_test_{}_{}",
+            std::process::id(),
+            len
+        ));
+        let mut f = File::create(&path).unwrap();
+        let data: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+        f.write_all(&data).unwrap();
+        (
+            FlashDevice::open(&path, &PIXEL6, mode, 1.0).unwrap(),
+            path,
+        )
+    }
+
+    #[test]
+    fn read_returns_file_bytes() {
+        let (dev, path) = temp_flash(4096, ClockMode::Modeled);
+        let got = dev.read(100, 32).unwrap();
+        let want: Vec<u8> = (100..132).map(|i| (i % 251) as u8).collect();
+        assert_eq!(got, want);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn modeled_time_matches_profile() {
+        let (dev, path) = temp_flash(1 << 20, ClockMode::Modeled);
+        let ns = dev.model_read_ns(1 << 20);
+        let want = PIXEL6.flash_read_seconds(1 << 20) * 1e9;
+        assert!((ns as f64 - want).abs() / want < 1e-5);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn timed_read_sleeps_at_least_model_time() {
+        let (dev, path) = temp_flash(256 << 10, ClockMode::Timed);
+        let t0 = Instant::now();
+        dev.read(0, 256 << 10).unwrap();
+        let elapsed = t0.elapsed().as_nanos() as u64;
+        let model = dev.model_read_ns(256 << 10);
+        assert!(
+            elapsed >= model,
+            "elapsed {elapsed} < modeled {model}"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bw_scale_slows_reads() {
+        let (dev, path) = temp_flash(4096, ClockMode::Modeled);
+        let base = dev.model_read_ns(1 << 20);
+        let slow = FlashDevice::open(&path, &PIXEL6, ClockMode::Modeled, 0.1)
+            .unwrap();
+        assert!(slow.model_read_ns(1 << 20) > 5 * base);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let (dev, path) = temp_flash(64 << 10, ClockMode::Modeled);
+        dev.read(0, 4 << 10).unwrap();
+        dev.read(0, 32 << 10).unwrap();
+        let (reads, bytes, busy) = dev.stats.snapshot();
+        assert_eq!(reads, 2);
+        assert_eq!(bytes, (4 << 10) + (32 << 10));
+        assert!(busy > 0);
+        assert_eq!(dev.stats.size_hist[0].load(Ordering::Relaxed), 1);
+        assert_eq!(dev.stats.size_hist[1].load(Ordering::Relaxed), 1);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn queue_roundtrip_in_order() {
+        let (dev, path) = temp_flash(8192, ClockMode::Modeled);
+        let mut q = ReadQueue::new(dev.clone());
+        q.submit(0, 8);
+        q.submit(1000, 8);
+        assert_eq!(q.pending(), 2);
+        let bufs = q.wait_all().unwrap();
+        assert_eq!(q.pending(), 0);
+        assert_eq!(bufs[0], (0..8).map(|i| (i % 251) as u8).collect::<Vec<_>>());
+        assert_eq!(
+            bufs[1],
+            (1000..1008).map(|i| (i % 251) as u8).collect::<Vec<_>>()
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn throughput_rises_with_chunk_size() {
+        let (dev, path) = temp_flash(1 << 20, ClockMode::Modeled);
+        let small = dev.measure_throughput(4 << 10, 1 << 20).unwrap();
+        let large = dev.measure_throughput(1 << 20, 4 << 20).unwrap();
+        assert!(large > 5.0 * small);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,311 @@
+//! AWGF file reader: header parsing + offset arithmetic for the
+//! cross-layer-group channel-major layout (spec in python/compile/export.py).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json;
+
+use super::quant::{row_bytes, Quant};
+
+pub const ALIGN: u64 = 4096;
+
+/// The seven flash-resident sparse ops, in canonical order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpKind {
+    Wq,
+    Wk,
+    Wv,
+    Wo,
+    Wg,
+    Wu,
+    Wd,
+}
+
+pub const SPARSE_OPS: [OpKind; 7] = [
+    OpKind::Wq,
+    OpKind::Wk,
+    OpKind::Wv,
+    OpKind::Wo,
+    OpKind::Wg,
+    OpKind::Wu,
+    OpKind::Wd,
+];
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Wq => "wq",
+            OpKind::Wk => "wk",
+            OpKind::Wv => "wv",
+            OpKind::Wo => "wo",
+            OpKind::Wg => "wg",
+            OpKind::Wu => "wu",
+            OpKind::Wd => "wd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<OpKind> {
+        SPARSE_OPS
+            .iter()
+            .copied()
+            .find(|o| o.name() == s)
+            .ok_or_else(|| anyhow!("unknown op '{s}'"))
+    }
+
+    pub fn index(&self) -> usize {
+        SPARSE_OPS.iter().position(|o| o == self).unwrap()
+    }
+}
+
+/// (layer, op) — the unit of per-tensor cache bookkeeping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TensorId {
+    pub layer: u16,
+    pub op: OpKind,
+}
+
+impl TensorId {
+    pub fn new(layer: usize, op: OpKind) -> TensorId {
+        TensorId {
+            layer: layer as u16,
+            op,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GroupInfo {
+    pub layers: Vec<usize>,
+    /// Payload-relative byte offset of this group's channel-major block.
+    pub offset: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct OpInfo {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub row_bytes: usize,
+    pub groups: Vec<GroupInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DenseInfo {
+    pub offset: u64,
+    pub len: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Parsed AWGF header + offsets. Data itself stays in the file (flash).
+pub struct AwgfFile {
+    pub model: ModelConfig,
+    pub quant: Quant,
+    pub group_size: usize,
+    pub payload_base: u64,
+    pub ops: BTreeMap<OpKind, OpInfo>,
+    pub dense: BTreeMap<String, DenseInfo>,
+    path: std::path::PathBuf,
+}
+
+impl AwgfFile {
+    pub fn open(path: &Path) -> Result<AwgfFile> {
+        let mut f = File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut pre = [0u8; 12];
+        f.read_exact(&mut pre)?;
+        if &pre[..4] != b"AWGF" {
+            bail!("{}: bad magic", path.display());
+        }
+        let version = u32::from_le_bytes(pre[4..8].try_into().unwrap());
+        if version != 1 {
+            bail!("unsupported AWGF version {version}");
+        }
+        let hdr_len = u32::from_le_bytes(pre[8..12].try_into().unwrap()) as usize;
+        let mut hdr = vec![0u8; hdr_len];
+        f.read_exact(&mut hdr)?;
+        let v = json::parse(std::str::from_utf8(&hdr)?)
+            .context("parsing AWGF header json")?;
+
+        let model = ModelConfig::from_json(v.req("model")?)?;
+        let quant = Quant::parse(
+            v.req("quant")?.as_str().ok_or_else(|| anyhow!("quant"))?,
+        )?;
+        let group_size = v.req("group_size")?.as_usize().unwrap_or(4);
+
+        let mut ops = BTreeMap::new();
+        for (name, info) in v
+            .req("ops")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("ops not object"))?
+        {
+            let op = OpKind::parse(name)?;
+            let d_in = info.req("d_in")?.as_usize().unwrap();
+            let d_out = info.req("d_out")?.as_usize().unwrap();
+            let rb = info.req("row_bytes")?.as_usize().unwrap();
+            if rb != row_bytes(quant, d_out) {
+                bail!("{name}: row_bytes mismatch ({rb})");
+            }
+            let mut groups = Vec::new();
+            for g in info.req("groups")?.as_arr().unwrap() {
+                groups.push(GroupInfo {
+                    layers: g
+                        .req("layers")?
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|l| l.as_usize().unwrap())
+                        .collect(),
+                    offset: g.req("offset")?.as_f64().unwrap() as u64,
+                });
+            }
+            ops.insert(
+                op,
+                OpInfo {
+                    d_in,
+                    d_out,
+                    row_bytes: rb,
+                    groups,
+                },
+            );
+        }
+
+        let mut dense = BTreeMap::new();
+        for (name, info) in v.req("dense")?.as_obj().unwrap() {
+            dense.insert(
+                name.clone(),
+                DenseInfo {
+                    offset: info.req("offset")?.as_f64().unwrap() as u64,
+                    len: info.req("len")?.as_usize().unwrap(),
+                    shape: info
+                        .req("shape")?
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|s| s.as_usize().unwrap())
+                        .collect(),
+                },
+            );
+        }
+
+        let payload_base = (12 + hdr_len as u64).div_ceil(ALIGN) * ALIGN;
+        Ok(AwgfFile {
+            model,
+            quant,
+            group_size,
+            payload_base,
+            ops,
+            dense,
+            path: path.to_path_buf(),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn op(&self, op: OpKind) -> &OpInfo {
+        &self.ops[&op]
+    }
+
+    /// Group index containing `layer` for this op.
+    pub fn group_of(&self, op: OpKind, layer: usize) -> usize {
+        self.ops[&op]
+            .groups
+            .iter()
+            .position(|g| g.layers.contains(&layer))
+            .expect("layer out of range")
+    }
+
+    /// Absolute file span of one **cross-layer chunk**: channel `c` of every
+    /// layer in group `g` — the paper's large-I/O preload unit (Fig 9).
+    pub fn chunk_span(&self, op: OpKind, group: usize, channel: usize) -> (u64, usize) {
+        let info = &self.ops[&op];
+        let grp = &info.groups[group];
+        let n = grp.layers.len();
+        let off = self.payload_base
+            + grp.offset
+            + (channel * n) as u64 * info.row_bytes as u64;
+        (off, n * info.row_bytes)
+    }
+
+    /// Absolute file span of a single weight row (layer, channel) — the
+    /// small on-demand unit.
+    pub fn row_span(&self, op: OpKind, layer: usize, channel: usize) -> (u64, usize) {
+        let info = &self.ops[&op];
+        let g = self.group_of(op, layer);
+        let grp = &info.groups[g];
+        let j = grp.layers.iter().position(|&l| l == layer).unwrap();
+        let n = grp.layers.len();
+        let off = self.payload_base
+            + grp.offset
+            + ((channel * n + j) * info.row_bytes) as u64;
+        (off, info.row_bytes)
+    }
+
+    /// Offset of layer `j`'s row inside a chunk returned by `chunk_span`.
+    pub fn row_in_chunk(&self, op: OpKind, group: usize, layer: usize) -> usize {
+        let grp = &self.ops[&op].groups[group];
+        let j = grp.layers.iter().position(|&l| l == layer).unwrap();
+        j * self.ops[&op].row_bytes
+    }
+
+    /// Read a dense (always-resident) tensor as f32 — done once at startup,
+    /// not via the flash simulator.
+    pub fn read_dense(&self, name: &str) -> Result<(Vec<f32>, Vec<usize>)> {
+        use std::os::unix::fs::FileExt;
+        let info = self
+            .dense
+            .get(name)
+            .ok_or_else(|| anyhow!("dense tensor '{name}' not found"))?;
+        let f = File::open(&self.path)?;
+        let mut buf = vec![0u8; info.len];
+        f.read_exact_at(&mut buf, self.payload_base + info.offset)?;
+        let vals = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok((vals, info.shape.clone()))
+    }
+
+    /// Total quantized bytes of one layer's sparse weights (cost-model S_l).
+    pub fn layer_bytes(&self) -> u64 {
+        self.ops
+            .values()
+            .map(|o| (o.d_in * o.row_bytes) as u64)
+            .sum()
+    }
+
+    /// Total sparse-weight payload (cost-model S_m, excludes dense tensors).
+    pub fn sparse_bytes(&self) -> u64 {
+        self.layer_bytes() * self.model.n_layers as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opkind_roundtrip() {
+        for op in SPARSE_OPS {
+            assert_eq!(OpKind::parse(op.name()).unwrap(), op);
+        }
+        assert!(OpKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn tensor_id_ordering() {
+        let a = TensorId::new(0, OpKind::Wq);
+        let b = TensorId::new(0, OpKind::Wd);
+        let c = TensorId::new(1, OpKind::Wq);
+        assert!(a < b && b < c);
+    }
+
+    // Full file-level tests live in rust/tests/awgf_roundtrip.rs, which
+    // reads the python-written artifacts/model.awgf.
+}

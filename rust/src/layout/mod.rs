@@ -1,0 +1,10 @@
+//! AWGF weight-file layout (paper §3 Fig 9): cross-layer-group,
+//! channel-major reordering of every sparse-op weight, plus block
+//! quantization. Mirror of `python/compile/export.py` — the format spec
+//! lives there.
+
+pub mod awgf;
+pub mod quant;
+
+pub use awgf::{AwgfFile, OpKind, TensorId, SPARSE_OPS};
+pub use quant::{dequantize_row, row_bytes, Quant};

@@ -1,0 +1,200 @@
+//! Block quantization codecs (paper §6 "4-bit quantization using Q4_0").
+//!
+//! Bit-exact mirror of `python/compile/export.py`: blocks of 32 values along
+//! the output dim; q8_0 = f32 scale + 32×i8, q4_0 = f32 scale + 16 packed
+//! nibbles (value = (nibble − 8) · scale).
+
+use anyhow::{bail, Result};
+
+pub const QBLOCK: usize = 32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Quant {
+    F32,
+    Q8_0,
+    Q4_0,
+}
+
+impl Quant {
+    pub fn parse(s: &str) -> Result<Quant> {
+        Ok(match s {
+            "f32" => Quant::F32,
+            "q8_0" => Quant::Q8_0,
+            "q4_0" => Quant::Q4_0,
+            other => bail!("unknown quant kind '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Quant::F32 => "f32",
+            Quant::Q8_0 => "q8_0",
+            Quant::Q4_0 => "q4_0",
+        }
+    }
+}
+
+/// Bytes per quantized row of `dout` values.
+pub fn row_bytes(quant: Quant, dout: usize) -> usize {
+    match quant {
+        Quant::F32 => 4 * dout,
+        Quant::Q8_0 => {
+            assert_eq!(dout % QBLOCK, 0);
+            (dout / QBLOCK) * (4 + QBLOCK)
+        }
+        Quant::Q4_0 => {
+            assert_eq!(dout % QBLOCK, 0);
+            (dout / QBLOCK) * (4 + QBLOCK / 2)
+        }
+    }
+}
+
+/// Dequantize one packed row into `out` (len == dout). Hot path: no
+/// allocation, used by both the cache fill and the packed-weight gather.
+pub fn dequantize_row(data: &[u8], quant: Quant, out: &mut [f32]) {
+    let dout = out.len();
+    match quant {
+        Quant::F32 => {
+            debug_assert_eq!(data.len(), 4 * dout);
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = f32::from_le_bytes(data[4 * i..4 * i + 4].try_into().unwrap());
+            }
+        }
+        Quant::Q8_0 => {
+            let mut off = 0;
+            for b in (0..dout).step_by(QBLOCK) {
+                let scale =
+                    f32::from_le_bytes(data[off..off + 4].try_into().unwrap());
+                off += 4;
+                for j in 0..QBLOCK {
+                    out[b + j] = data[off + j] as i8 as f32 * scale;
+                }
+                off += QBLOCK;
+            }
+        }
+        Quant::Q4_0 => {
+            let mut off = 0;
+            for b in (0..dout).step_by(QBLOCK) {
+                let scale =
+                    f32::from_le_bytes(data[off..off + 4].try_into().unwrap());
+                off += 4;
+                for j in 0..QBLOCK / 2 {
+                    let p = data[off + j];
+                    out[b + 2 * j] = ((p & 0xF) as i32 - 8) as f32 * scale;
+                    out[b + 2 * j + 1] = ((p >> 4) as i32 - 8) as f32 * scale;
+                }
+                off += QBLOCK / 2;
+            }
+        }
+    }
+}
+
+/// Quantize one f32 row (mirror of python `quantize_row`; used by tests and
+/// the `relayout` tool).
+pub fn quantize_row(row: &[f32], quant: Quant) -> Vec<u8> {
+    match quant {
+        Quant::F32 => row.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        Quant::Q8_0 => {
+            let mut out = Vec::with_capacity(row_bytes(quant, row.len()));
+            for blk in row.chunks(QBLOCK) {
+                let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
+                let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+                out.extend_from_slice(&scale.to_le_bytes());
+                for &v in blk {
+                    out.push((v / scale).round().clamp(-127.0, 127.0) as i8 as u8);
+                }
+            }
+            out
+        }
+        Quant::Q4_0 => {
+            let mut out = Vec::with_capacity(row_bytes(quant, row.len()));
+            for blk in row.chunks(QBLOCK) {
+                let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
+                let scale = if amax > 0.0 { amax / 7.0 } else { 1.0 };
+                out.extend_from_slice(&scale.to_le_bytes());
+                for pair in blk.chunks(2) {
+                    let q = |v: f32| {
+                        ((v / scale).round().clamp(-7.0, 7.0) as i32 + 8) as u8
+                    };
+                    out.push((q(pair[0]) & 0xF) | ((q(pair[1]) & 0xF) << 4));
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, GenExt};
+
+    #[test]
+    fn row_bytes_match_python() {
+        assert_eq!(row_bytes(Quant::F32, 128), 512);
+        assert_eq!(row_bytes(Quant::Q8_0, 128), 4 * 36);
+        assert_eq!(row_bytes(Quant::Q4_0, 128), 4 * 20);
+    }
+
+    #[test]
+    fn roundtrip_error_bounds() {
+        check("quant-roundtrip", |g| {
+            let dout = 32 * g.usize_in(1, 8);
+            let row = g.vec_f32(dout, -3.0, 3.0);
+            for (quant, denom) in
+                [(Quant::Q8_0, 127.0f32), (Quant::Q4_0, 7.0f32)]
+            {
+                let packed = quantize_row(&row, quant);
+                assert_eq!(packed.len(), row_bytes(quant, dout));
+                let mut back = vec![0f32; dout];
+                dequantize_row(&packed, quant, &mut back);
+                for (b, (orig, got)) in
+                    row.chunks(QBLOCK).zip(back.chunks(QBLOCK)).enumerate()
+                {
+                    let amax = orig.iter().fold(0f32, |m, v| m.max(v.abs()));
+                    let tol = amax / denom / 2.0 + 1e-6;
+                    for (o, g2) in orig.iter().zip(got) {
+                        if (o - g2).abs() > tol {
+                            return Err(format!(
+                                "block {b}: |{o} - {g2}| > {tol} ({quant:?})"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let row: Vec<f32> = (0..64).map(|i| i as f32 * 0.37 - 5.0).collect();
+        let packed = quantize_row(&row, Quant::F32);
+        let mut back = vec![0f32; 64];
+        dequantize_row(&packed, Quant::F32, &mut back);
+        assert_eq!(row, back);
+    }
+
+    #[test]
+    fn zero_block_stays_zero() {
+        let row = vec![0f32; 32];
+        for q in [Quant::Q8_0, Quant::Q4_0] {
+            let mut back = vec![1f32; 32];
+            dequantize_row(&quantize_row(&row, q), q, &mut back);
+            assert_eq!(back, row);
+        }
+    }
+
+    #[test]
+    fn matches_python_quantizer_golden() {
+        // python: quantize_row(linspace(-2,2,32), "q4_0") — pin a few bytes.
+        let row: Vec<f32> =
+            (0..32).map(|i| -2.0 + 4.0 * i as f32 / 31.0).collect();
+        let packed = quantize_row(&row, Quant::Q4_0);
+        // scale = 2/7
+        let scale = f32::from_le_bytes(packed[..4].try_into().unwrap());
+        assert!((scale - 2.0 / 7.0).abs() < 1e-6);
+        // first pair: q(-2)=1, q(-1.871)=1 -> byte 0x11
+        assert_eq!(packed[4], 0x11);
+    }
+}

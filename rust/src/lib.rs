@@ -1,0 +1,32 @@
+//! # ActiveFlow
+//!
+//! Reproduction of *"Scaling Up On-Device LLMs via Active-Weight Swapping
+//! Between DRAM and Flash"* — an adaptive-DRAM LLM inference engine that
+//! keeps the full model in (simulated) flash and swaps only the Top-K
+//! *active weights* into DRAM, overlapping flash I/O with compute.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): swapping pipeline, cross-layer preloader, contextual
+//!   weight cache, flash device simulator, cost model, serving front-end.
+//! * L2/L1 (python, build-time only): JAX model + Pallas kernels, lowered
+//!   once to the HLO artifacts that [`runtime`] loads via PJRT.
+
+pub mod util;
+
+pub mod config;
+pub mod device;
+pub mod flash;
+pub mod layout;
+pub mod sparsity;
+pub mod cache;
+pub mod preload;
+pub mod pipeline;
+pub mod costmodel;
+pub mod runtime;
+pub mod model;
+pub mod engine;
+pub mod baselines;
+pub mod bench;
+pub mod server;
+pub mod metrics;
+pub mod tokenizer;

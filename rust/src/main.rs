@@ -1,0 +1,319 @@
+//! ActiveFlow CLI — the L3 leader binary.
+//!
+//! ```text
+//! activeflow generate --prompt "..." --n 32 --sp 0.6 --group 4
+//! activeflow eval     --sp 0.6 --windows 4
+//! activeflow serve    --addr 127.0.0.1:7071 --sp 0.6
+//! activeflow search   --device pixel6 --budget-mb 1500 --geometry llama7b
+//! activeflow inspect  devices|artifacts|weights
+//! activeflow bench    <pareto|e2e|ablation|flash|preload-tradeoff|
+//!                      layer-group|cache-policy|hot-weights|similarity|
+//!                      energy|moe-sim>
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use activeflow::baselines::{self, DenseInMemory};
+use activeflow::bench;
+use activeflow::cache::CachePolicy;
+use activeflow::config::RuntimeConfig;
+use activeflow::costmodel;
+use activeflow::device;
+use activeflow::engine::{EngineOptions, PreloadTrigger, SwapEngine, SwapMode};
+use activeflow::flash::ClockMode;
+use activeflow::layout::AwgfFile;
+use activeflow::metrics;
+use activeflow::server::{serve, ServerConfig};
+use activeflow::tokenizer;
+use activeflow::util::cli::Args;
+use activeflow::util::human_bytes;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+pub fn artifact_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.opt_or("artifacts", "artifacts"))
+}
+
+pub fn engine_options(args: &Args) -> Result<EngineOptions> {
+    let sp = args.opt_f64("sp", 0.6)?;
+    let device = device::by_name(&args.opt_or("device", "pixel6"))
+        .ok_or_else(|| anyhow!("unknown device (oneplus12|pixel6|infinix)"))?;
+    let clock = match args.opt_or("mode", "timed").as_str() {
+        "timed" => ClockMode::Timed,
+        "modeled" => ClockMode::Modeled,
+        m => bail!("unknown clock mode '{m}'"),
+    };
+    let swap_mode = match args.opt_or("swap", "preload").as_str() {
+        "preload" => SwapMode::Preload,
+        "ondemand" => SwapMode::OnDemand,
+        m => bail!("unknown swap mode '{m}'"),
+    };
+    let policy = match args.opt_or("cache-policy", "context").as_str() {
+        "context" => CachePolicy::Contextual,
+        "task" => CachePolicy::TaskStatic,
+        p => bail!("unknown cache policy '{p}'"),
+    };
+    Ok(EngineOptions {
+        sparsity: sp,
+        group_size: args.opt_usize("group", 4)?,
+        swap_mode,
+        cache_bytes: (args.opt_usize("cache-kb", 256)? as u64) * 1024,
+        cache_policy: policy,
+        device,
+        clock,
+        bw_scale: args.opt_f64("bw-scale", 1.0)?,
+        trigger: match args.opt_or("trigger", "first").as_str() {
+            "first" => PreloadTrigger::FirstLayer,
+            "last" => PreloadTrigger::LastLayer,
+            t => bail!("unknown preload trigger '{t}' (first|last)"),
+        },
+    })
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("generate") => cmd_generate(args),
+        Some("eval") => cmd_eval(args),
+        Some("serve") => cmd_serve(args),
+        Some("search") => cmd_search(args),
+        Some("inspect") => cmd_inspect(args),
+        Some("bench") => bench::dispatch(args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand '{o}'\n");
+            }
+            eprintln!(
+                "usage: activeflow <generate|eval|serve|search|inspect|bench> \
+                 [--artifacts DIR] [--sp F] [--group N] [--cache-kb N] \
+                 [--device D] [--mode timed|modeled] [--swap preload|ondemand]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let opts = engine_options(args)?;
+    let device = opts.device;
+    let dense_baseline = args.has_flag("dense-baseline");
+    let prompt = args.opt_or("prompt", "the sparse model swaps active weights. ");
+    let n = args.opt_usize("n", 48)?;
+    let temp = args.opt_f64("temp", 0.0)? as f32;
+    let toks = tokenizer::encode(&prompt);
+
+    if dense_baseline {
+        let mut eng = DenseInMemory::open(&artifact_dir(args))?;
+        let out = eng.generate(&toks, n)?;
+        println!("{}", tokenizer::decode(&out));
+        println!(
+            "--- dense-in-memory: {:.2} tok/s, weights resident {}",
+            eng.metrics.tokens_per_sec(),
+            human_bytes(eng.weight_bytes())
+        );
+        return Ok(());
+    }
+
+    let mut eng = SwapEngine::open(&artifact_dir(args), opts)?;
+    let out = eng.generate(&toks, n, temp)?;
+    println!("{}", tokenizer::decode(&out));
+    let mem = eng.memory_report();
+    let e = metrics::energy(device, &eng.metrics);
+    println!(
+        "--- activeflow[{}]: {:.2} tok/s | dram {} (dense {} kv {} cache {} \
+         preload {}) | cache-hit {:.1}% preload-precision {:.1}% | {:.2} W, \
+         {:.3} J/tok",
+        eng.sparsity_tag(),
+        eng.metrics.tokens_per_sec(),
+        human_bytes(mem.dram_total()),
+        human_bytes(mem.dense_bytes),
+        human_bytes(mem.kv_bytes),
+        human_bytes(mem.cache_bytes),
+        human_bytes(mem.preload_peak_bytes),
+        eng.cache_hit_rate() * 100.0,
+        eng.metrics.preload_precision() * 100.0,
+        e.avg_power_w,
+        e.energy_per_token_j,
+    );
+    if args.has_flag("profile") {
+        println!("--- per-artifact profile (L2/L1 compute inside PJRT):");
+        let mut rows = eng.runtime_profile();
+        rows.sort_by_key(|(_, _, busy)| std::cmp::Reverse(*busy));
+        for (name, calls, busy) in rows {
+            println!(
+                "    {:<14} {:>6} calls {:>10.2?} total {:>8.1} us/call",
+                name,
+                calls,
+                busy,
+                busy.as_secs_f64() * 1e6 / calls.max(1) as f64
+            );
+        }
+        let st = eng.loader_stats();
+        println!(
+            "    loader: {} chunks, {} read, {:?} flash-busy, {} channels \
+             ({} skipped cached)",
+            st.chunks_read,
+            human_bytes(st.bytes_read),
+            st.busy,
+            st.channels_loaded,
+            st.channels_skipped_cached
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let opts = engine_options(args)?;
+    let windows = args.opt_usize("windows", 2)?;
+    let toks = tokenizer::eval_corpus();
+    let take = (128 * windows + 1).min(toks.len());
+    let mut eng = SwapEngine::open(&artifact_dir(args), opts)?;
+    let ppl = eng.perplexity(&toks[..take])?;
+    println!(
+        "perplexity[{}] over {} tokens: {:.4} ({:.2} tok/s, hit-rate {:.1}%)",
+        eng.sparsity_tag(),
+        take - 1,
+        ppl,
+        eng.metrics.tokens_per_sec(),
+        eng.cache_hit_rate() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = engine_options(args)?;
+    let cfg = ServerConfig {
+        addr: args.opt_or("addr", "127.0.0.1:7071"),
+        artifact_dir: artifact_dir(args),
+        opts,
+    };
+    let served = serve(cfg)?;
+    println!("[server] shut down after {served} requests");
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let device = device::by_name(&args.opt_or("device", "pixel6"))
+        .ok_or_else(|| anyhow!("unknown device"))?;
+    let geo = match args.opt_or("geometry", "awgf").as_str() {
+        "llama7b" => costmodel::Geometry::llama7b_q4(),
+        "llama8b" => costmodel::Geometry::llama8b_q4(),
+        "mixtral" => costmodel::Geometry::mixtral8x7b_q4(),
+        "awgf" => {
+            let cfg =
+                activeflow::config::ArtifactConfig::load(&artifact_dir(args))?;
+            costmodel::Geometry::from_awgf(&AwgfFile::open(&cfg.weights_file)?)
+        }
+        g => bail!("unknown geometry '{g}'"),
+    };
+    let budget = (args.opt_usize("budget-mb", 2048)? as u64) << 20;
+    let si = args.opt_f64("similarity", 0.85)?;
+    let grid = [0.5, 0.6, 0.7, 0.8, 0.9];
+    println!(
+        "search: device={} budget={} S_m={} S_l={}",
+        device.name,
+        human_bytes(budget),
+        human_bytes(geo.model_bytes),
+        human_bytes(geo.layer_bytes)
+    );
+    match costmodel::search(device, &geo, budget, si, 1.0, &grid) {
+        None => println!("  -> budget below minimum servable configuration"),
+        Some(r) => {
+            println!(
+                "  -> sp={:.2} N={} cache={} | pred mem={} decode={:.1} ms \
+                 ({:.2} tok/s)",
+                r.params.sp,
+                r.params.n_group,
+                human_bytes(r.params.cache_bytes),
+                human_bytes(r.cost.mem_bytes),
+                r.cost.t_decode * 1e3,
+                1.0 / r.cost.t_decode
+            );
+            println!(
+                "     breakdown: T_load={:.2}ms T_overlap={:.2}ms \
+                 T_comp={:.2}ms (per-group onload={:.2}ms preload={:.2}ms)",
+                r.cost.t_load * 1e3,
+                r.cost.t_overlap_total * 1e3,
+                r.cost.t_comp_group * 1e3,
+                r.cost.t_onload_group * 1e3,
+                r.cost.t_preload_group * 1e3
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("devices") => {
+            println!("{:<12} {:<38} {:>9} {:>10} {:>10}", "name", "label",
+                     "DRAM", "flash max", "mem BW");
+            for d in device::ALL {
+                println!(
+                    "{:<12} {:<38} {:>9} {:>8}/s {:>8}/s",
+                    d.name,
+                    d.label,
+                    human_bytes(d.dram_bytes),
+                    human_bytes(d.flash_max_bw as u64),
+                    human_bytes(d.mem_bw as u64)
+                );
+            }
+        }
+        Some("artifacts") => {
+            let cfg =
+                activeflow::config::ArtifactConfig::load(&artifact_dir(args))?;
+            println!("model: {} (d={}, quant {})", cfg.model.name,
+                     cfg.model.d_model, cfg.quant);
+            println!("levels:");
+            for lv in &cfg.sparsity_levels {
+                println!("  sp={:.1} k_attn={} k_o={} k_ff={}", lv.sp,
+                         lv.k_attn, lv.k_o, lv.k_ff);
+            }
+        }
+        Some("weights") => {
+            let cfg =
+                activeflow::config::ArtifactConfig::load(&artifact_dir(args))?;
+            let awgf = AwgfFile::open(&cfg.weights_file)?;
+            println!(
+                "AWGF {} | quant {} | group N={} | S_l={} S_m={}",
+                cfg.weights_file.display(),
+                awgf.quant.name(),
+                awgf.group_size,
+                human_bytes(awgf.layer_bytes()),
+                human_bytes(awgf.sparse_bytes())
+            );
+            for (op, info) in &awgf.ops {
+                println!(
+                    "  {:<3} [{} x {}] row={}B groups={}",
+                    op.name(),
+                    info.d_in,
+                    info.d_out,
+                    info.row_bytes,
+                    info.groups.len()
+                );
+            }
+        }
+        _ => bail!("inspect what? (devices|artifacts|weights)"),
+    }
+    Ok(())
+}
+
+// keep baseline presets referenced (exercised by examples/benches too)
+#[allow(unused)]
+fn _baseline_presets() {
+    let _ = baselines::teal_options(
+        0.6,
+        0,
+        &device::PIXEL6,
+        ClockMode::Modeled,
+        1.0,
+    );
+    let _ = RuntimeConfig::default();
+}

@@ -1,0 +1,167 @@
+//! Metrics: decode counters, latency tracking, and the activity-based
+//! energy model that substitutes for the paper's on-device power rails
+//! (Fig 19 — see DESIGN.md §1).
+
+use std::time::Duration;
+
+use crate::device::DeviceProfile;
+
+/// Per-decode aggregate counters, filled by the engine.
+#[derive(Debug, Default, Clone)]
+pub struct DecodeMetrics {
+    pub tokens: u64,
+    pub wall: Duration,
+    /// Modeled/actual time the CPU spent computing.
+    pub compute_busy: Duration,
+    /// Modeled time the flash channel was busy.
+    pub flash_busy: Duration,
+    /// Bytes loaded from flash (on-demand + preload).
+    pub flash_bytes: u64,
+    /// Bytes served from the weight cache.
+    pub cache_bytes: u64,
+    /// DRAM traffic of the compute kernels (≈ active weight bytes touched).
+    pub dram_bytes: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Channels correctly preloaded / total needed (preload precision).
+    pub preload_hits: u64,
+    pub preload_total: u64,
+}
+
+impl DecodeMetrics {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.tokens as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        let t = self.cache_hits + self.cache_misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / t as f64
+        }
+    }
+
+    pub fn preload_precision(&self) -> f64 {
+        if self.preload_total == 0 {
+            0.0
+        } else {
+            self.preload_hits as f64 / self.preload_total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &DecodeMetrics) {
+        self.tokens += other.tokens;
+        self.wall += other.wall;
+        self.compute_busy += other.compute_busy;
+        self.flash_busy += other.flash_busy;
+        self.flash_bytes += other.flash_bytes;
+        self.cache_bytes += other.cache_bytes;
+        self.dram_bytes += other.dram_bytes;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.preload_hits += other.preload_hits;
+        self.preload_total += other.preload_total;
+    }
+}
+
+/// Activity-based energy model (paper §7.4 substitution): integrate the
+/// device's power rails over the busy fractions of a decode.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyReport {
+    /// Average power over the decode (W).
+    pub avg_power_w: f64,
+    /// Energy per token (J/token).
+    pub energy_per_token_j: f64,
+    pub compute_fraction: f64,
+    pub flash_fraction: f64,
+}
+
+pub fn energy(dev: &DeviceProfile, m: &DecodeMetrics) -> EnergyReport {
+    let wall = m.wall.as_secs_f64().max(1e-9);
+    let fc = (m.compute_busy.as_secs_f64() / wall).min(1.0);
+    let ff = (m.flash_busy.as_secs_f64() / wall).min(1.0);
+    // DRAM rail scales with achieved bandwidth fraction.
+    let fd = (m.dram_bytes as f64 / wall / dev.mem_bw).min(1.0);
+    let p = dev.power;
+    let avg = p.idle_w + fc * p.compute_w + ff * p.flash_w + fd * p.dram_w;
+    EnergyReport {
+        avg_power_w: avg,
+        energy_per_token_j: if m.tokens == 0 {
+            0.0
+        } else {
+            avg * wall / m.tokens as f64
+        },
+        compute_fraction: fc,
+        flash_fraction: ff,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::PIXEL6;
+
+    fn m(tokens: u64, wall_ms: u64, comp_ms: u64, flash_ms: u64) -> DecodeMetrics {
+        DecodeMetrics {
+            tokens,
+            wall: Duration::from_millis(wall_ms),
+            compute_busy: Duration::from_millis(comp_ms),
+            flash_busy: Duration::from_millis(flash_ms),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tokens_per_sec() {
+        assert_eq!(m(10, 1000, 0, 0).tokens_per_sec(), 10.0);
+    }
+
+    #[test]
+    fn idle_decode_draws_idle_power() {
+        let r = energy(&PIXEL6, &m(1, 1000, 0, 0));
+        assert!((r.avg_power_w - PIXEL6.power.idle_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn busy_decode_draws_more() {
+        let idle = energy(&PIXEL6, &m(1, 1000, 0, 0));
+        let busy = energy(&PIXEL6, &m(1, 1000, 1000, 1000));
+        assert!(busy.avg_power_w > idle.avg_power_w + 2.0);
+    }
+
+    #[test]
+    fn overlap_reduces_power_vs_serial() {
+        // Same work, overlapped (shorter wall) vs serial: the paper's Fig 19
+        // point is average power drops ~27% because compute waits less.
+        let serial = m(1, 2000, 1000, 1000);
+        let overlap = m(1, 1100, 1000, 1000);
+        let es = energy(&PIXEL6, &serial);
+        let eo = energy(&PIXEL6, &overlap);
+        // overlapped run has higher avg power but lower energy/token
+        assert!(eo.energy_per_token_j < es.energy_per_token_j);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = m(5, 100, 50, 20);
+        a.merge(&m(5, 100, 50, 20));
+        assert_eq!(a.tokens, 10);
+        assert_eq!(a.wall, Duration::from_millis(200));
+    }
+
+    #[test]
+    fn hit_rate_and_precision() {
+        let mut d = DecodeMetrics::default();
+        d.cache_hits = 3;
+        d.cache_misses = 1;
+        d.preload_hits = 9;
+        d.preload_total = 10;
+        assert_eq!(d.cache_hit_rate(), 0.75);
+        assert_eq!(d.preload_precision(), 0.9);
+    }
+}

@@ -1,0 +1,226 @@
+//! DRAM-side model state: the always-resident dense tensors (embeddings,
+//! norms, LM head), per-layer KV caches, and the vector math the engine
+//! runs natively (rmsnorm / residual / argmax / softmax sampling) — the
+//! cheap glue between HLO artifact calls (DESIGN.md §5 op split).
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::layout::AwgfFile;
+use crate::util::rng::Xorshift;
+
+/// Always-resident tensors, loaded once at startup (not via the flash sim:
+/// the paper keeps embeddings/norms/head in DRAM permanently).
+pub struct DenseTensors {
+    pub embed: Vec<f32>,       // [vocab, d]
+    pub g_attn: Vec<Vec<f32>>, // per layer [d]
+    pub g_mlp: Vec<Vec<f32>>,  // per layer [d]
+    pub g_final: Vec<f32>,     // [d]
+    pub lm_head: Vec<f32>,     // [d, vocab]
+}
+
+impl DenseTensors {
+    pub fn load(awgf: &AwgfFile) -> Result<DenseTensors> {
+        let m = &awgf.model;
+        let mut g_attn = Vec::with_capacity(m.n_layers);
+        let mut g_mlp = Vec::with_capacity(m.n_layers);
+        for li in 0..m.n_layers {
+            g_attn.push(awgf.read_dense(&format!("g_attn.{li}"))?.0);
+            g_mlp.push(awgf.read_dense(&format!("g_mlp.{li}"))?.0);
+        }
+        Ok(DenseTensors {
+            embed: awgf.read_dense("embed")?.0,
+            g_attn,
+            g_mlp,
+            g_final: awgf.read_dense("g_final")?.0,
+            lm_head: awgf.read_dense("lm_head")?.0,
+        })
+    }
+
+    pub fn embedding(&self, cfg: &ModelConfig, token: u32) -> &[f32] {
+        let d = cfg.d_model;
+        let t = token as usize % cfg.vocab_size;
+        &self.embed[t * d..(t + 1) * d]
+    }
+
+    /// Resident bytes of the dense tensors (memory accounting).
+    pub fn bytes(&self) -> u64 {
+        let per: usize = self.embed.len()
+            + self.g_attn.iter().map(|v| v.len()).sum::<usize>()
+            + self.g_mlp.iter().map(|v| v.len()).sum::<usize>()
+            + self.g_final.len()
+            + self.lm_head.len();
+        (per * 4) as u64
+    }
+}
+
+/// Static-shape KV cache for one layer ([max_seq, d_kv] each for K and V),
+/// kept on the host and round-tripped through the attn_core artifact.
+pub struct KvLayer {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+pub struct KvState {
+    pub layers: Vec<KvLayer>,
+    pub pos: usize,
+    pub max_seq: usize,
+}
+
+impl KvState {
+    pub fn new(cfg: &ModelConfig) -> KvState {
+        let n = cfg.max_seq * cfg.d_kv();
+        KvState {
+            layers: (0..cfg.n_layers)
+                .map(|_| KvLayer {
+                    k: vec![0.0; n],
+                    v: vec![0.0; n],
+                })
+                .collect(),
+            pos: 0,
+            max_seq: cfg.max_seq,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for l in &mut self.layers {
+            l.k.fill(0.0);
+            l.v.fill(0.0);
+        }
+        self.pos = 0;
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| ((l.k.len() + l.v.len()) * 4) as u64)
+            .sum()
+    }
+}
+
+// ----------------------------------------------------------- vector math
+// (Mirrors python/compile/kernels/ref.py — tolerances checked by the golden
+// integration test.)
+
+/// RMSNorm: x * rsqrt(mean(x²)+eps) * g, into `out`.
+pub fn rmsnorm(x: &[f32], g: &[f32], eps: f32, out: &mut [f32]) {
+    let ms: f64 =
+        x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+    let r = (1.0 / (ms + eps as f64).sqrt()) as f32;
+    for ((o, &xv), &gv) in out.iter_mut().zip(x).zip(g) {
+        *o = xv * r * gv;
+    }
+}
+
+/// x += y
+pub fn add_inplace(x: &mut [f32], y: &[f32]) {
+    for (a, &b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..x.len() {
+        if x[i] > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sample from softmax(logits / temp) with the given RNG (greedy if
+/// temp <= 0).
+pub fn sample(logits: &[f32], temp: f32, rng: &mut Xorshift) -> usize {
+    if temp <= 0.0 {
+        return argmax(logits);
+    }
+    let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let exps: Vec<f64> = logits
+        .iter()
+        .map(|&v| (((v - max) / temp) as f64).exp())
+        .collect();
+    let total: f64 = exps.iter().sum();
+    let mut u = rng.f64() * total;
+    for (i, e) in exps.iter().enumerate() {
+        u -= e;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    logits.len() - 1
+}
+
+/// log_softmax(logits)[target] — per-token log-prob for perplexity.
+pub fn log_prob(logits: &[f32], target: usize) -> f64 {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)) as f64;
+    let lse: f64 = logits
+        .iter()
+        .map(|&v| ((v as f64) - max).exp())
+        .sum::<f64>()
+        .ln()
+        + max;
+    logits[target] as f64 - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit_gain() {
+        let x = [3.0f32, -4.0]; // rms = sqrt(12.5)
+        let g = [1.0f32, 1.0];
+        let mut out = [0f32; 2];
+        rmsnorm(&x, &g, 0.0, &mut out);
+        let rms = (12.5f32).sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] + 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn greedy_sample_is_argmax() {
+        let mut rng = Xorshift::new(1);
+        assert_eq!(sample(&[0.0, 5.0, 1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sample_distribution_roughly_softmax() {
+        let mut rng = Xorshift::new(2);
+        let logits = [0.0f32, 2.0];
+        let mut counts = [0usize; 2];
+        for _ in 0..2000 {
+            counts[sample(&logits, 1.0, &mut rng)] += 1;
+        }
+        let p1 = counts[1] as f64 / 2000.0;
+        let want = (2f64).exp() / (1.0 + (2f64).exp()); // ≈ 0.881
+        assert!((p1 - want).abs() < 0.05, "p1={p1} want≈{want}");
+    }
+
+    #[test]
+    fn log_prob_uniform() {
+        let lp = log_prob(&[0.0; 4], 2);
+        assert!((lp + (4f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_state_reset() {
+        let cfg = crate::config::ModelConfig::tiny();
+        let mut kv = KvState::new(&cfg);
+        kv.layers[0].k[0] = 5.0;
+        kv.pos = 7;
+        kv.reset();
+        assert_eq!(kv.layers[0].k[0], 0.0);
+        assert_eq!(kv.pos, 0);
+        assert_eq!(
+            kv.bytes(),
+            (cfg.n_layers * 2 * cfg.max_seq * cfg.d_kv() * 4) as u64
+        );
+    }
+}

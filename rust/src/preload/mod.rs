@@ -1,0 +1,198 @@
+//! Cross-layer active-weight prediction (paper §3, Fig 8).
+//!
+//! Exploits the residual-stream similarity observation (§2.2): the Top-K
+//! index set computed from the *current* layer's activation predicts the
+//! active channels of the next N layers' corresponding operators. Per-op
+//! mapping of predictor activation → predicted weights:
+//!
+//!   attn input (post-norm)  → Wq / Wk / Wv of the next group
+//!   attn output             → Wo
+//!   mlp input (post-norm)   → Wg / Wu
+//!   ffn intermediate        → Wd
+//!
+//! Channels missed by prediction are fetched by on-demand loading once the
+//! actual activation is known (engine), which the paper measures at ~5%.
+
+use crate::layout::OpKind;
+use crate::sparsity;
+
+/// A preload request for one op family of one upcoming layer group: load
+/// `channels` (ascending) of `op` for every layer in group `group`.
+#[derive(Debug, Clone)]
+pub struct OpPrediction {
+    pub op: OpKind,
+    pub channels: Vec<usize>,
+}
+
+/// Which ops are predicted from which activation site (shared index sets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActSite {
+    AttnInput,  // predicts wq, wk, wv
+    AttnOutput, // predicts wo
+    MlpInput,   // predicts wg, wu
+    FfnInter,   // predicts wd
+}
+
+impl ActSite {
+    pub fn ops(&self) -> &'static [OpKind] {
+        match self {
+            ActSite::AttnInput => &[OpKind::Wq, OpKind::Wk, OpKind::Wv],
+            ActSite::AttnOutput => &[OpKind::Wo],
+            ActSite::MlpInput => &[OpKind::Wg, OpKind::Wu],
+            ActSite::FfnInter => &[OpKind::Wd],
+        }
+    }
+
+    pub const ALL: [ActSite; 4] = [
+        ActSite::AttnInput,
+        ActSite::AttnOutput,
+        ActSite::MlpInput,
+        ActSite::FfnInter,
+    ];
+}
+
+/// Build the per-op predictions for a site from its activation.
+pub fn predict(site: ActSite, activation: &[f32], k: usize) -> Vec<OpPrediction> {
+    let idx = sparsity::topk_indices(activation, k);
+    site.ops()
+        .iter()
+        .map(|&op| OpPrediction {
+            op,
+            channels: idx.clone(),
+        })
+        .collect()
+}
+
+/// Rolling tracker of prediction quality + cross-layer similarity — feeds
+/// the cost model's `si` parameter and the Fig 4 / Fig 16a benches.
+#[derive(Debug, Default, Clone)]
+pub struct SimilarityTracker {
+    /// Per-site (predicted ∩ actual)/k accumulators.
+    hits: [u64; 4],
+    total: [u64; 4],
+    cos_sum: [f64; 4],
+    cos_n: [u64; 4],
+    prev: [Option<Vec<f32>>; 4],
+}
+
+impl SimilarityTracker {
+    fn site_idx(site: ActSite) -> usize {
+        ActSite::ALL.iter().position(|s| *s == site).unwrap()
+    }
+
+    /// Record the actual activation of `site` at some layer; compares with
+    /// the previous layer's activation at the same site.
+    pub fn observe(&mut self, site: ActSite, activation: &[f32], k: usize) {
+        let i = Self::site_idx(site);
+        if let Some(prev) = &self.prev[i] {
+            if prev.len() == activation.len() {
+                self.cos_sum[i] += sparsity::cosine(prev, activation);
+                self.cos_n[i] += 1;
+                let pred = sparsity::topk_indices(prev, k);
+                let act = sparsity::topk_indices(activation, k);
+                let inter = (sparsity::index_overlap(&act, &pred)
+                    * act.len() as f64)
+                    .round() as u64;
+                self.hits[i] += inter;
+                self.total[i] += act.len() as u64;
+            }
+        }
+        self.prev[i] = Some(activation.to_vec());
+    }
+
+    /// Layer-group boundary in a new sequence: forget the previous layer.
+    pub fn reset_layer_chain(&mut self) {
+        self.prev = [None, None, None, None];
+    }
+
+    /// Average top-k prediction precision across sites (the paper's si).
+    pub fn avg_precision(&self) -> f64 {
+        let h: u64 = self.hits.iter().sum();
+        let t: u64 = self.total.iter().sum();
+        if t == 0 {
+            0.0
+        } else {
+            h as f64 / t as f64
+        }
+    }
+
+    pub fn site_precision(&self, site: ActSite) -> f64 {
+        let i = Self::site_idx(site);
+        if self.total[i] == 0 {
+            0.0
+        } else {
+            self.hits[i] as f64 / self.total[i] as f64
+        }
+    }
+
+    pub fn site_cosine(&self, site: ActSite) -> f64 {
+        let i = Self::site_idx(site);
+        if self.cos_n[i] == 0 {
+            0.0
+        } else {
+            self.cos_sum[i] / self.cos_n[i] as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sites_cover_all_seven_ops() {
+        let mut ops: Vec<OpKind> = ActSite::ALL
+            .iter()
+            .flat_map(|s| s.ops().iter().copied())
+            .collect();
+        ops.sort();
+        ops.dedup();
+        assert_eq!(ops.len(), 7);
+    }
+
+    #[test]
+    fn predict_shares_index_set_across_qkv() {
+        let a = [0.1f32, -2.0, 0.5, 3.0, -0.2, 0.05, 1.0, -0.9];
+        let preds = predict(ActSite::AttnInput, &a, 3);
+        assert_eq!(preds.len(), 3);
+        assert_eq!(preds[0].channels, preds[1].channels);
+        assert_eq!(preds[0].channels, vec![1, 3, 6]);
+    }
+
+    #[test]
+    fn tracker_perfect_similarity() {
+        let mut t = SimilarityTracker::default();
+        let a = [1.0f32, -3.0, 0.2, 2.0];
+        t.observe(ActSite::AttnInput, &a, 2);
+        t.observe(ActSite::AttnInput, &a, 2); // identical -> precision 1
+        assert!((t.avg_precision() - 1.0).abs() < 1e-9);
+        assert!((t.site_cosine(ActSite::AttnInput) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracker_orthogonal_activations() {
+        let mut t = SimilarityTracker::default();
+        t.observe(ActSite::MlpInput, &[5.0, 5.0, 0.0, 0.0], 2);
+        t.observe(ActSite::MlpInput, &[0.0, 0.0, 5.0, 5.0], 2);
+        assert_eq!(t.avg_precision(), 0.0);
+        assert!(t.site_cosine(ActSite::MlpInput).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracker_reset_breaks_chain() {
+        let mut t = SimilarityTracker::default();
+        t.observe(ActSite::FfnInter, &[1.0, 0.0], 1);
+        t.reset_layer_chain();
+        t.observe(ActSite::FfnInter, &[1.0, 0.0], 1);
+        // only pairs within a chain count
+        assert_eq!(t.avg_precision(), 0.0);
+    }
+
+    #[test]
+    fn first_observation_records_nothing() {
+        let mut t = SimilarityTracker::default();
+        t.observe(ActSite::AttnOutput, &[1.0, 2.0], 1);
+        assert_eq!(t.avg_precision(), 0.0);
+        assert_eq!(t.site_cosine(ActSite::AttnOutput), 0.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `python -m
+//! compile.aot` and executes them on the CPU PJRT client. This is the only
+//! module that touches the `xla` crate — everything above it deals in
+//! `&[f32]` slices.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* → HloModuleProto →
+//! XlaComputation → compile → execute; outputs arrive as a single tuple
+//! literal (lowered with return_tuple=True) and are decomposed here.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Handle to one compiled artifact.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+    pub calls: std::cell::Cell<u64>,
+    pub busy: std::cell::Cell<Duration>,
+}
+
+/// The artifact registry: compiles lazily, caches executables.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: std::path::PathBuf,
+    exes: BTreeMap<String, Executable>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let client = PjRtClient::cpu().map_err(wrap)?;
+        Ok(Runtime {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            exes: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch) the artifact `name` (file `<name>.hlo.txt`).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.exes.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(wrap)
+            .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(wrap)?;
+            self.exes.insert(
+                name.to_string(),
+                Executable {
+                    exe,
+                    name: name.to_string(),
+                    calls: std::cell::Cell::new(0),
+                    busy: std::cell::Cell::new(Duration::ZERO),
+                },
+            );
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// Execute artifact `name` with the given inputs; returns the decomposed
+    /// output tuple.
+    pub fn exec(&mut self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        self.load(name)?;
+        let e = &self.exes[name];
+        let t0 = Instant::now();
+        let result = e.exe.execute::<Literal>(inputs).map_err(wrap)?;
+        let lit = result[0][0].to_literal_sync().map_err(wrap)?;
+        e.calls.set(e.calls.get() + 1);
+        e.busy.set(e.busy.get() + t0.elapsed());
+        lit.to_tuple().map_err(wrap)
+    }
+
+    /// Total compute-busy time across all executables (perf accounting).
+    pub fn total_busy(&self) -> Duration {
+        self.exes.values().map(|e| e.busy.get()).sum()
+    }
+
+    pub fn call_counts(&self) -> Vec<(String, u64, Duration)> {
+        self.exes
+            .values()
+            .map(|e| (e.name.clone(), e.calls.get(), e.busy.get()))
+            .collect()
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+// ------------------------------------------------------- literal helpers
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    debug_assert_eq!(n as usize, data.len());
+    Literal::vec1(data).reshape(dims).map_err(wrap)
+}
+
+/// Scalar i32 literal (the `pos` input of attn_core).
+pub fn lit_i32_scalar(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Copy a literal's f32 contents into a reusable buffer.
+pub fn lit_to_f32(lit: &Literal, out: &mut Vec<f32>) -> Result<()> {
+    let n = lit.element_count();
+    out.resize(n, 0.0);
+    lit.copy_raw_to(out.as_mut_slice()).map_err(wrap)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime-level tests that need real artifacts live in
+    // rust/tests/ (they require `make artifacts`).
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        let mut back = Vec::new();
+        lit_to_f32(&lit, &mut back).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn scalar_i32() {
+        let lit = lit_i32_scalar(42);
+        assert_eq!(lit.element_count(), 1);
+        assert_eq!(lit.get_first_element::<i32>().unwrap(), 42);
+    }
+}

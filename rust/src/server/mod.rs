@@ -1,0 +1,304 @@
+//! Serving front-end: a TCP line-JSON server with a FIFO admission queue in
+//! front of one decode engine.
+//!
+//! On-device engines decode one sequence at a time (the paper's setting —
+//! decode is memory-bandwidth-bound, so batching buys nothing on a phone);
+//! the "batcher" therefore multiplexes *requests*, tracking queueing vs
+//! decode latency separately, and exposes the elastic-memory controls
+//! (`set_budget` re-runs the §4.1 search and reports the parameters the
+//! engine would adopt).
+//!
+//! Protocol: one JSON object per line.
+//!   {"prompt": "...", "n_tokens": 32, "temp": 0.0}
+//!   {"cmd": "stats"}
+//!   {"cmd": "set_budget", "bytes": 1200000000}
+//!   {"cmd": "shutdown"}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::costmodel;
+use crate::engine::{EngineOptions, SwapEngine};
+use crate::layout::AwgfFile;
+use crate::metrics;
+use crate::tokenizer;
+use crate::util::json::{self, arr, num, obj, s, Value};
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub artifact_dir: PathBuf,
+    pub opts: EngineOptions,
+}
+
+struct Request {
+    prompt: Vec<u32>,
+    n_tokens: usize,
+    temp: f32,
+    enqueued: Instant,
+    resp: Sender<Value>,
+}
+
+enum Job {
+    Decode(Request),
+    Stop,
+}
+
+#[derive(Default)]
+struct ServerStats {
+    served: AtomicU64,
+    tokens: AtomicU64,
+    queue_ns: AtomicU64,
+    decode_ns: AtomicU64,
+}
+
+/// Run the server until a `shutdown` command arrives. Returns the number of
+/// requests served.
+pub fn serve(cfg: ServerConfig) -> Result<u64> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    eprintln!("[server] listening on {}", cfg.addr);
+
+    let (job_tx, job_rx) = channel::<Job>();
+    let stats = Arc::new(ServerStats::default());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // ---- engine worker: owns the SwapEngine, drains the queue FIFO.
+    let worker_stats = stats.clone();
+    let artifact_dir = cfg.artifact_dir.clone();
+    let opts_device = cfg.opts.device;
+    let worker = std::thread::spawn(move || -> Result<()> {
+        let mut engine = SwapEngine::open(&artifact_dir, cfg.opts)?;
+        eprintln!(
+            "[server] engine ready: model={} level={} device={}",
+            engine.model().name,
+            engine.sparsity_tag(),
+            opts_device.name
+        );
+        while let Ok(job) = job_rx.recv() {
+            let req = match job {
+                Job::Stop => break,
+                Job::Decode(r) => r,
+            };
+            let queue_t = req.enqueued.elapsed();
+            let t0 = Instant::now();
+            let before = engine.metrics.clone();
+            let result = engine.generate(&req.prompt, req.n_tokens, req.temp);
+            let decode_t = t0.elapsed();
+            let resp = match result {
+                Err(e) => obj(vec![("error", s(&format!("{e:#}")))]),
+                Ok(toks) => {
+                    let delta_tokens =
+                        engine.metrics.tokens - before.tokens;
+                    worker_stats.served.fetch_add(1, Ordering::Relaxed);
+                    worker_stats
+                        .tokens
+                        .fetch_add(delta_tokens, Ordering::Relaxed);
+                    worker_stats.queue_ns.fetch_add(
+                        queue_t.as_nanos() as u64,
+                        Ordering::Relaxed,
+                    );
+                    worker_stats.decode_ns.fetch_add(
+                        decode_t.as_nanos() as u64,
+                        Ordering::Relaxed,
+                    );
+                    obj(vec![
+                        ("text", s(&tokenizer::decode(&toks))),
+                        (
+                            "tokens",
+                            arr(toks.iter().map(|&t| num(t as f64)).collect()),
+                        ),
+                        ("queue_ms", num(queue_t.as_secs_f64() * 1e3)),
+                        ("decode_ms", num(decode_t.as_secs_f64() * 1e3)),
+                        (
+                            "toks_per_sec",
+                            num(req.n_tokens as f64
+                                / decode_t.as_secs_f64().max(1e-9)),
+                        ),
+                        ("cache_hit_rate", num(engine.cache_hit_rate())),
+                    ])
+                }
+            };
+            let _ = req.resp.send(resp);
+        }
+        Ok(())
+    });
+
+    // ---- accept loop
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let conn = match conn {
+            Ok(c) => c,
+            Err(_) => continue,
+        };
+        let job_tx = job_tx.clone();
+        let stats = stats.clone();
+        let stop2 = stop.clone();
+        let artifact_dir = cfg.artifact_dir.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(conn, job_tx, stats, stop2, &artifact_dir,
+                                opts_device);
+        });
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    let _ = job_tx.send(Job::Stop);
+    let _ = worker.join();
+    Ok(stats.served.load(Ordering::Relaxed))
+}
+
+fn handle_conn(
+    conn: TcpStream,
+    job_tx: Sender<Job>,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    artifact_dir: &std::path::Path,
+    device: &'static crate::device::DeviceProfile,
+) -> Result<()> {
+    let mut writer = conn.try_clone()?;
+    let reader = BufReader::new(conn);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match json::parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                respond(&mut writer,
+                        &obj(vec![("error", s(&format!("bad json: {e}")))]))?;
+                continue;
+            }
+        };
+        match req.get("cmd").and_then(Value::as_str) {
+            Some("stats") => {
+                let served = stats.served.load(Ordering::Relaxed);
+                let tokens = stats.tokens.load(Ordering::Relaxed);
+                let dec_ns = stats.decode_ns.load(Ordering::Relaxed);
+                respond(
+                    &mut writer,
+                    &obj(vec![
+                        ("served", num(served as f64)),
+                        ("tokens", num(tokens as f64)),
+                        (
+                            "avg_queue_ms",
+                            num(stats.queue_ns.load(Ordering::Relaxed) as f64
+                                / 1e6
+                                / served.max(1) as f64),
+                        ),
+                        (
+                            "throughput_toks_per_sec",
+                            num(tokens as f64 / (dec_ns as f64 / 1e9).max(1e-9)),
+                        ),
+                    ]),
+                )?;
+            }
+            Some("set_budget") => {
+                // Elastic memory: re-run the §4.1 search for the new budget
+                // and report the configuration the engine adopts on reload.
+                let budget =
+                    req.get("bytes").and_then(Value::as_f64).unwrap_or(0.0)
+                        as u64;
+                let awgf = AwgfFile::open(
+                    &crate::config::ArtifactConfig::load(artifact_dir)?
+                        .weights_file,
+                )?;
+                let geo = costmodel::Geometry::from_awgf(&awgf);
+                let grid = [0.5, 0.6, 0.7, 0.8, 0.9];
+                let resp = match costmodel::search(device, &geo, budget, 0.85,
+                                                   1.0, &grid) {
+                    None => obj(vec![(
+                        "error",
+                        s("budget below minimum servable configuration"),
+                    )]),
+                    Some(r) => obj(vec![
+                        ("sparsity", num(r.params.sp)),
+                        ("group_size", num(r.params.n_group as f64)),
+                        ("cache_bytes", num(r.params.cache_bytes as f64)),
+                        ("pred_mem_bytes", num(r.cost.mem_bytes as f64)),
+                        ("pred_decode_ms", num(r.cost.t_decode * 1e3)),
+                    ]),
+                };
+                respond(&mut writer, &resp)?;
+            }
+            Some("shutdown") => {
+                stop.store(true, Ordering::Relaxed);
+                respond(&mut writer, &obj(vec![("ok", Value::Bool(true))]))?;
+                // poke the accept loop
+                let _ = TcpStream::connect(
+                    conn_addr(&writer).unwrap_or("127.0.0.1:0".into()),
+                );
+                break;
+            }
+            _ => {
+                let prompt = tokenizer::encode(
+                    req.get("prompt").and_then(Value::as_str).unwrap_or(" "),
+                );
+                let n_tokens = req
+                    .get("n_tokens")
+                    .and_then(Value::as_usize)
+                    .unwrap_or(32);
+                let temp = req
+                    .get("temp")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(0.0) as f32;
+                let (tx, rx) = channel();
+                let _ = job_tx.send(Job::Decode(Request {
+                    prompt,
+                    n_tokens,
+                    temp,
+                    enqueued: Instant::now(),
+                    resp: tx,
+                }));
+                match rx.recv() {
+                    Ok(v) => respond(&mut writer, &v)?,
+                    Err(_) => respond(
+                        &mut writer,
+                        &obj(vec![("error", s("engine gone"))]),
+                    )?,
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn conn_addr(stream: &TcpStream) -> Option<String> {
+    stream.local_addr().ok().map(|a| a.to_string())
+}
+
+fn respond(w: &mut TcpStream, v: &Value) -> Result<()> {
+    let mut line = v.to_string();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    Ok(())
+}
+
+/// Client helper (examples + tests): send one request, read one response.
+pub fn client_roundtrip(addr: &str, request: &Value) -> Result<Value> {
+    let mut conn = TcpStream::connect(addr)?;
+    let mut line = request.to_string();
+    line.push('\n');
+    conn.write_all(line.as_bytes())?;
+    let mut reader = BufReader::new(conn);
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    json::parse(resp.trim())
+}
+
+/// Energy summary helper reused by the CLI.
+pub fn energy_summary(
+    dev: &crate::device::DeviceProfile,
+    m: &crate::metrics::DecodeMetrics,
+) -> metrics::EnergyReport {
+    metrics::energy(dev, m)
+}

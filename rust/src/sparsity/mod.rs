@@ -1,0 +1,201 @@
+//! Top-K contextual sparsity utilities (paper §2.1): active-channel
+//! selection, calibrated thresholds, and index-set similarity stats used by
+//! the preloader and the Fig 4 analysis.
+
+/// Indices of the `k` largest-|a| entries, ascending. Matches
+/// `python/compile/kernels/ref.py::topk_indices_ref` exactly (ties broken
+/// toward lower index).
+pub fn topk_indices(a: &[f32], k: usize) -> Vec<usize> {
+    let mut idx = Vec::with_capacity(a.len());
+    topk_indices_into(a, k, &mut idx);
+    idx
+}
+
+/// Allocation-free variant for the decode hot path.
+pub fn topk_indices_into(a: &[f32], k: usize, out: &mut Vec<usize>) {
+    let k = k.min(a.len());
+    out.clear();
+    out.extend(0..a.len());
+    if k < a.len() {
+        // Partial selection: O(d) average. Tie-break on index to match the
+        // stable jax sort order.
+        out.select_nth_unstable_by(k, |&i, &j| {
+            let (ai, aj) = (a[i].abs(), a[j].abs());
+            aj.partial_cmp(&ai).unwrap().then(i.cmp(&j))
+        });
+        out.truncate(k);
+    }
+    out.sort_unstable();
+}
+
+/// Gather `a[idx]` into `out` (len == idx.len()).
+pub fn gather_into(a: &[f32], idx: &[usize], out: &mut [f32]) {
+    for (o, &i) in out.iter_mut().zip(idx) {
+        *o = a[i];
+    }
+}
+
+/// Threshold-based selection (TEAL-style calibrated kernels, paper §6).
+pub fn threshold_indices(a: &[f32], t: f32) -> Vec<usize> {
+    (0..a.len()).filter(|&i| a[i].abs() >= t).collect()
+}
+
+/// The |a| quantile achieving expected sparsity `sp` over calibration
+/// samples (mirror of python `calibrate_threshold`).
+pub fn calibrate_threshold(samples: &[f32], sp: f64) -> f32 {
+    assert!(!samples.is_empty());
+    let mut mags: Vec<f32> = samples.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (sp * (mags.len() - 1) as f64).round() as usize;
+    mags[pos.min(mags.len() - 1)]
+}
+
+/// |A ∩ B| / |A| for two ascending index sets — the "top-k precision"
+/// plotted in paper Fig 4a.
+pub fn index_overlap(a: &[usize], b: &[usize]) -> f64 {
+    if a.is_empty() {
+        return 1.0;
+    }
+    let mut hits = 0usize;
+    let mut j = 0usize;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j < b.len() && b[j] == x {
+            hits += 1;
+        }
+    }
+    hits as f64 / a.len() as f64
+}
+
+/// Cosine similarity between two activation vectors (Fig 4a).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += (x * y) as f64;
+        na += (x * x) as f64;
+        nb += (y * y) as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, GenExt};
+
+    #[test]
+    fn topk_basic() {
+        let a = [0.1, -5.0, 2.0, -0.5, 3.0];
+        assert_eq!(topk_indices(&a, 2), vec![1, 4]);
+        assert_eq!(topk_indices(&a, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(topk_indices(&a, 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn topk_properties() {
+        check("topk", |g| {
+            let d = g.usize_in(1, 512);
+            let k = g.usize_in(0, d);
+            let a = g.vec_f32(d, -4.0, 4.0);
+            let idx = topk_indices(&a, k);
+            if idx.len() != k {
+                return Err("wrong len".into());
+            }
+            if idx.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("not ascending/unique".into());
+            }
+            // selection property: min selected |a| >= max unselected |a|
+            let sel: std::collections::HashSet<_> = idx.iter().copied().collect();
+            let min_sel = idx
+                .iter()
+                .map(|&i| a[i].abs())
+                .fold(f32::INFINITY, f32::min);
+            let max_unsel = (0..d)
+                .filter(|i| !sel.contains(i))
+                .map(|i| a[i].abs())
+                .fold(0f32, f32::max);
+            if k > 0 && k < d && min_sel < max_unsel - 1e-6 {
+                return Err(format!("selection broken {min_sel} < {max_unsel}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn topk_into_reuses_buffer() {
+        let a = [1.0f32, 3.0, -2.0];
+        let mut buf = Vec::new();
+        topk_indices_into(&a, 2, &mut buf);
+        assert_eq!(buf, vec![1, 2]);
+        topk_indices_into(&a, 1, &mut buf);
+        assert_eq!(buf, vec![1]);
+    }
+
+    #[test]
+    fn gather_matches_index() {
+        let a = [10.0f32, 20.0, 30.0, 40.0];
+        let mut out = [0f32; 2];
+        gather_into(&a, &[1, 3], &mut out);
+        assert_eq!(out, [20.0, 40.0]);
+    }
+
+    #[test]
+    fn threshold_matches_topk_at_calibrated_point() {
+        check("threshold-vs-topk", |g| {
+            let d = g.usize_in(32, 256);
+            let a = g.vec_f32(d, -2.0, 2.0);
+            let sp = 0.5;
+            let t = calibrate_threshold(&a, sp);
+            let th = threshold_indices(&a, t);
+            let k = th.len();
+            let tk = topk_indices(&a, k);
+            // same cardinality set selected by both methods
+            if index_overlap(&th, &tk) < 0.99 {
+                return Err("threshold and topk disagree".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn overlap_bounds() {
+        check("overlap", |g| {
+            let n = g.usize_in(1, 100);
+            let ka = g.usize_in(0, n);
+            let a = g.subset(n, ka);
+            let kb = g.usize_in(0, n);
+            let b = g.subset(n, kb);
+            let o = index_overlap(&a, &b);
+            if !(0.0..=1.0).contains(&o) {
+                return Err(format!("overlap {o} out of bounds"));
+            }
+            if (index_overlap(&a, &a) - 1.0).abs() > 1e-12 {
+                return Err("self overlap != 1".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cosine_props() {
+        let a = [1.0f32, 0.0, 2.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-9);
+        let b = [0.0f32, 3.0, 0.0];
+        assert!(cosine(&a, &b).abs() < 1e-9);
+        let neg: Vec<f32> = a.iter().map(|v| -v).collect();
+        assert!((cosine(&a, &neg) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibrate_threshold_quantile() {
+        let samples: Vec<f32> = (0..1000).map(|i| i as f32 / 1000.0).collect();
+        let t = calibrate_threshold(&samples, 0.8);
+        assert!((t - 0.8).abs() < 0.01);
+    }
+}

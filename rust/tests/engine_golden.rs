@@ -1,0 +1,198 @@
+//! Integration: the rust SwapEngine must reproduce the python model's
+//! logits and greedy continuations bit-for-bit (within f32 tolerance) on
+//! the golden vectors exported by `python -m compile.aot`.
+//!
+//! Requires `make artifacts`. Tests self-skip when artifacts are absent.
+
+use std::path::{Path, PathBuf};
+
+use activeflow::baselines::DenseInMemory;
+use activeflow::cache::CachePolicy;
+use activeflow::device::PIXEL6;
+use activeflow::engine::{EngineOptions, PreloadTrigger, SwapEngine, SwapMode};
+use activeflow::flash::ClockMode;
+use activeflow::util::json::{self, Value};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("model_config.json").exists() && dir.join("goldens.json").exists()
+    {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn goldens(dir: &Path) -> Value {
+    let text = std::fs::read_to_string(dir.join("goldens.json")).unwrap();
+    json::parse(&text).unwrap()
+}
+
+fn prompt_tokens(g: &Value) -> Vec<u32> {
+    g.get("prompt")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect()
+}
+
+fn expect_logits(g: &Value, key: &str) -> Vec<f32> {
+    g.get(key)
+        .unwrap()
+        .get("logits_last_prompt")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn expect_greedy(g: &Value, key: &str) -> Vec<u32> {
+    g.get(key)
+        .unwrap()
+        .get("greedy")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect()
+}
+
+fn opts(sp: f64, mode: SwapMode, cache_kb: u64) -> EngineOptions {
+    EngineOptions {
+        sparsity: sp,
+        group_size: 4,
+        swap_mode: mode,
+        cache_bytes: cache_kb * 1024,
+        cache_policy: CachePolicy::Contextual,
+        device: &PIXEL6,
+        clock: ClockMode::Modeled, // fast: no sleeping in CI tests
+        bw_scale: 1.0,
+        trigger: PreloadTrigger::FirstLayer,
+    }
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0f32;
+    for (g, w) in got.iter().zip(want) {
+        worst = worst.max((g - w).abs());
+    }
+    assert!(
+        worst < tol,
+        "{what}: max |Δlogit| = {worst} (tol {tol})"
+    );
+}
+
+#[test]
+fn sparse_engine_matches_python_goldens_sp60() {
+    let Some(dir) = artifacts() else { return };
+    let g = goldens(&dir);
+    let prompt = prompt_tokens(&g);
+    let mut eng =
+        SwapEngine::open(&dir, opts(0.6, SwapMode::Preload, 256)).unwrap();
+    let logits = eng.forced_logits(&prompt).unwrap();
+    assert_close(
+        logits.last().unwrap(),
+        &expect_logits(&g, "sp60"),
+        5e-3,
+        "sp60 last-prompt logits",
+    );
+
+    // greedy continuation must match python exactly
+    let toks = eng.generate(&prompt, 12, 0.0).unwrap();
+    assert_eq!(toks, expect_greedy(&g, "sp60"), "sp60 greedy continuation");
+}
+
+#[test]
+fn dense_swap_engine_matches_python_goldens() {
+    let Some(dir) = artifacts() else { return };
+    let g = goldens(&dir);
+    let prompt = prompt_tokens(&g);
+    let mut eng =
+        SwapEngine::open(&dir, opts(0.0, SwapMode::Preload, 1024)).unwrap();
+    let logits = eng.forced_logits(&prompt).unwrap();
+    assert_close(
+        logits.last().unwrap(),
+        &expect_logits(&g, "dense"),
+        5e-3,
+        "dense last-prompt logits",
+    );
+    let toks = eng.generate(&prompt, 12, 0.0).unwrap();
+    assert_eq!(toks, expect_greedy(&g, "dense"), "dense greedy");
+}
+
+#[test]
+fn dense_in_memory_baseline_matches_goldens() {
+    let Some(dir) = artifacts() else { return };
+    let g = goldens(&dir);
+    let prompt = prompt_tokens(&g);
+    let mut eng = DenseInMemory::open(&dir).unwrap();
+    let logits = eng.forced_logits(&prompt).unwrap();
+    assert_close(
+        logits.last().unwrap(),
+        &expect_logits(&g, "dense"),
+        5e-3,
+        "dense-in-memory logits",
+    );
+    let toks = eng.generate(&prompt, 12).unwrap();
+    assert_eq!(toks, expect_greedy(&g, "dense"));
+}
+
+#[test]
+fn preload_and_ondemand_agree_exactly() {
+    // Weight movement strategy must never change the numerics.
+    let Some(dir) = artifacts() else { return };
+    let g = goldens(&dir);
+    let prompt = prompt_tokens(&g);
+    let mut a =
+        SwapEngine::open(&dir, opts(0.7, SwapMode::Preload, 128)).unwrap();
+    let mut b =
+        SwapEngine::open(&dir, opts(0.7, SwapMode::OnDemand, 0)).unwrap();
+    let la = a.forced_logits(&prompt).unwrap();
+    let lb = b.forced_logits(&prompt).unwrap();
+    for (x, y) in la.iter().zip(&lb) {
+        assert_close(x, y, 1e-5, "preload vs ondemand");
+    }
+}
+
+#[test]
+fn preload_precision_is_high_on_real_activations() {
+    // Paper §3: ~95% of active weights are correctly preloaded.
+    let Some(dir) = artifacts() else { return };
+    let g = goldens(&dir);
+    let prompt = prompt_tokens(&g);
+    // N=1: consecutive-layer prediction (the Fig 4 quantity). The tiny
+    // 8-layer model measures ~0.59 (a 7B per the paper: >0.8) — assert a
+    // floor well above chance (k/d = 0.4 at sp 0.6).
+    let mut o = opts(0.6, SwapMode::Preload, 0);
+    o.group_size = 1;
+    let mut eng = SwapEngine::open(&dir, o).unwrap();
+    eng.forced_logits(&prompt).unwrap();
+    let p = eng.metrics.preload_precision();
+    assert!(
+        p > 0.45,
+        "cross-layer preload precision {p:.2} too low — similarity \
+         observation broken? (chance level ≈ 0.40)"
+    );
+    eprintln!("preload precision = {p:.3}, similarity = {:.3}",
+              eng.tracker.avg_precision());
+}
+
+#[test]
+fn cache_warms_up_across_tokens() {
+    let Some(dir) = artifacts() else { return };
+    let g = goldens(&dir);
+    let prompt = prompt_tokens(&g);
+    let mut eng =
+        SwapEngine::open(&dir, opts(0.6, SwapMode::Preload, 2048)).unwrap();
+    eng.forced_logits(&prompt).unwrap();
+    let hr = eng.cache_hit_rate();
+    assert!(hr > 0.25, "hit rate {hr:.2} — cache not effective");
+    eprintln!("cache hit rate over prompt = {hr:.3}");
+}

@@ -1,0 +1,102 @@
+//! Integration: serving front-end end-to-end over a real TCP socket.
+//! Requires `make artifacts`; self-skips otherwise.
+
+use std::path::{Path, PathBuf};
+
+use activeflow::cache::CachePolicy;
+use activeflow::device::PIXEL6;
+use activeflow::engine::{EngineOptions, PreloadTrigger, SwapMode};
+use activeflow::flash::ClockMode;
+use activeflow::server::{client_roundtrip, serve, ServerConfig};
+use activeflow::util::json::{num, obj, s, Value};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("model_config.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn serve_generate_stats_shutdown() {
+    let Some(dir) = artifacts() else { return };
+    let addr = "127.0.0.1:17071";
+    let cfg = ServerConfig {
+        addr: addr.into(),
+        artifact_dir: dir,
+        opts: EngineOptions {
+            sparsity: 0.6,
+            group_size: 4,
+            swap_mode: SwapMode::Preload,
+            cache_bytes: 256 * 1024,
+            cache_policy: CachePolicy::Contextual,
+            device: &PIXEL6,
+            clock: ClockMode::Modeled,
+            bw_scale: 1.0,
+        trigger: PreloadTrigger::FirstLayer,
+        },
+    };
+    let server = std::thread::spawn(move || serve(cfg).unwrap());
+    // wait for bind
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    // wait until engine worker compiled artifacts: poll with a tiny request
+    let req = obj(vec![
+        ("prompt", s("the sparse model ")),
+        ("n_tokens", num(8.0)),
+        ("temp", num(0.0)),
+    ]);
+    let mut resp = None;
+    for _ in 0..60 {
+        match client_roundtrip(addr, &req) {
+            Ok(v) => {
+                resp = Some(v);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(250)),
+        }
+    }
+    let resp = resp.expect("server never came up");
+    assert!(resp.get("error").is_none(), "error: {:?}", resp.get("error"));
+    let toks = resp.get("tokens").unwrap().as_arr().unwrap();
+    assert_eq!(toks.len(), 8);
+    assert!(resp.get("toks_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    assert!(resp.get("text").unwrap().as_str().is_some());
+
+    // a second request exercises queue accounting
+    let r2 = client_roundtrip(addr, &req).unwrap();
+    assert!(r2.get("error").is_none());
+
+    // stats
+    let stats =
+        client_roundtrip(addr, &obj(vec![("cmd", s("stats"))])).unwrap();
+    assert_eq!(stats.get("served").unwrap().as_f64().unwrap() as u64, 2);
+    assert!(stats
+        .get("throughput_toks_per_sec")
+        .unwrap()
+        .as_f64()
+        .unwrap()
+        > 0.0);
+
+    // elastic budget query (cost-model search for the tiny AWGF geometry)
+    let budget = client_roundtrip(
+        addr,
+        &obj(vec![
+            ("cmd", s("set_budget")),
+            ("bytes", num(1.0e6)),
+        ]),
+    )
+    .unwrap();
+    assert!(
+        budget.get("sparsity").is_some() || budget.get("error").is_some(),
+        "set_budget must answer: {budget:?}"
+    );
+
+    // shutdown
+    let bye =
+        client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();
+    assert_eq!(bye.get("ok"), Some(&Value::Bool(true)));
+    server.join().unwrap();
+}
