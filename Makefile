@@ -1,0 +1,22 @@
+# ActiveFlow build/bench entry points. The rust crate lives in rust/; the
+# python side (L2/L1) only runs at artifact-build time.
+
+.PHONY: build test artifacts bench-smoke
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+# JAX model + HLO artifacts + AWGF weight file + goldens (needed by the
+# engine integration tests and all end-to-end benches).
+artifacts:
+	cd python && python -m compile.aot --out ../rust/artifacts
+
+# Perf trajectory point (PERF.md): decode a fixed synthetic prompt and
+# write BENCH_decode.json at the repo root. Compare against the previous
+# run on the same machine before/after hot-path changes.
+bench-smoke:
+	cd rust && cargo run --release -- bench smoke \
+		--artifacts artifacts --out ../BENCH_decode.json

@@ -1,0 +1,121 @@
+//! Micro-bench: the decode fetch path's preload-store representation — the
+//! contiguous `PartSlab` (one buffer + offset index, single-lock batched
+//! cache inserts) against the old per-row store (`HashMap<(TensorId, u32),
+//! Vec<f32>>` + one cache lock per inserted row). This is pure bookkeeping
+//! overhead: no flash I/O, exactly what the slab refactor removed from the
+//! hot path. The reference implementation is kept here (not in src/) so
+//! the shipped pipeline holds zero per-row allocations.
+
+mod support;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use activeflow::cache::{CachePolicy, SharedCache, WeightCache};
+use activeflow::layout::{OpKind, TensorId};
+use activeflow::pipeline::PartSlab;
+use activeflow::util::rng::Xorshift;
+use support::Bench;
+
+const D_IN: usize = 4096; // llama-7b-like channel count
+const D_OUT: usize = 128;
+const K: usize = 1024; // active channels per fetch (sp 0.75)
+
+fn fetch_channels(rng: &mut Xorshift) -> Vec<usize> {
+    let mut chs: Vec<usize> = (0..K).map(|_| rng.below(D_IN as u64) as usize)
+        .collect();
+    chs.sort_unstable();
+    chs.dedup();
+    chs
+}
+
+fn shared_cache() -> Arc<SharedCache> {
+    SharedCache::new(WeightCache::new(
+        &[(TensorId::new(0, OpKind::Wq), D_IN, D_OUT)],
+        u64::MAX,
+        CachePolicy::Contextual,
+    ))
+}
+
+fn main() {
+    let b = Bench::new("fetch_packed");
+    let layers: Arc<[usize]> = Arc::from(&[0usize][..]);
+    let all: Vec<usize> = (0..D_IN).collect();
+    let row: Vec<f32> = (0..D_OUT).map(|j| j as f32).collect();
+    let id = TensorId::new(0, OpKind::Wq);
+
+    // ---- store build: dequant destination per preloaded row
+    b.run("build_slab_store", 3, 50, || {
+        let mut slab = PartSlab::new(OpKind::Wq, layers.clone(), &all, D_OUT);
+        for ch in 0..D_IN {
+            slab.row_mut(0, ch).unwrap().copy_from_slice(&row);
+        }
+        assert!(slab.row(0, D_IN - 1).is_some());
+    });
+    b.run("build_hashmap_store (old)", 3, 50, || {
+        let mut store: HashMap<(TensorId, u32), Vec<f32>> =
+            HashMap::with_capacity(D_IN);
+        for ch in 0..D_IN {
+            store.insert((id, ch as u32), row.clone()); // per-row Vec
+        }
+        assert!(store.contains_key(&(id, (D_IN - 1) as u32)));
+    });
+
+    // ---- steady-state fetch: gather K rows into packed + cache inserts
+    let mut slab = PartSlab::new(OpKind::Wq, layers.clone(), &all, D_OUT);
+    let mut store: HashMap<(TensorId, u32), Vec<f32>> =
+        HashMap::with_capacity(D_IN);
+    for ch in 0..D_IN {
+        slab.row_mut(0, ch).unwrap().copy_from_slice(&row);
+        store.insert((id, ch as u32), row.clone());
+    }
+    let mut packed = vec![0f32; K * D_OUT];
+    let mut rng = Xorshift::new(0xFE7C);
+    let mut chs = fetch_channels(&mut rng);
+
+    let cache = shared_cache();
+    b.run("slab_fetch_single_lock", 10, 2_000, || {
+        let mut c = cache.lock(); // ONE acquisition for the whole fetch
+        let tc = c.tensor_mut(id);
+        for (slot, &ch) in chs.iter().enumerate() {
+            let r = slab.row(0, ch).unwrap();
+            packed[slot * D_OUT..(slot + 1) * D_OUT].copy_from_slice(r);
+            tc.lookup(ch);
+        }
+        let rows: &[f32] = &packed;
+        tc.insert_rows(chs.iter().enumerate().map(|(slot, &ch)| {
+            (ch, &rows[slot * D_OUT..(slot + 1) * D_OUT])
+        }));
+        drop(c);
+        chs = fetch_channels(&mut rng);
+    });
+    println!(
+        "    slab path lock acquisitions: {} over 2010 fetches",
+        cache.lock_acquires()
+    );
+
+    let cache = shared_cache();
+    b.run("hashmap_fetch_lock_per_row (old)", 10, 2_000, || {
+        {
+            // old path, pass 1: lookup lock
+            let mut c = cache.lock();
+            let tc = c.tensor_mut(id);
+            for &ch in chs.iter() {
+                tc.lookup(ch);
+            }
+        }
+        for (slot, &ch) in chs.iter().enumerate() {
+            let r = store.get(&(id, ch as u32)).unwrap(); // per-row hash
+            packed[slot * D_OUT..(slot + 1) * D_OUT].copy_from_slice(r);
+            // old path, pass 2: re-lock the cache for every row offered
+            let mut c = cache.lock();
+            c.tensor_mut(id)
+                .insert(ch, &packed[slot * D_OUT..(slot + 1) * D_OUT]);
+        }
+        chs = fetch_channels(&mut rng);
+    });
+    println!(
+        "    per-row path lock acquisitions: {} over 2010 fetches",
+        cache.lock_acquires()
+    );
+}

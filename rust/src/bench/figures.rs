@@ -501,6 +501,80 @@ pub fn moe_sim(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+// ======================================================== perf trajectory
+
+/// `bench smoke` (PERF.md): decode a fixed synthetic prompt on a fixed
+/// config and emit `BENCH_decode.json` — the machine-readable point the
+/// perf trajectory tracks from PR to PR. Numbers are for *comparing runs
+/// on the same machine*, not paper claims; see PERF.md for the
+/// methodology and the field reference.
+pub fn bench_smoke(args: &Args) -> Result<()> {
+    use crate::util::json::{num, obj, s};
+
+    let dir = artifact_dir(args);
+    let n_tok = args.opt_usize("n", 32)?;
+    let scale = bw_scale(args);
+    let out_path = args.opt_or("out", "BENCH_decode.json");
+    let dev = &device::PIXEL6;
+    let o = opts(0.6, 4, SwapMode::Preload, 256, dev, ClockMode::Timed,
+                 scale);
+    // fixed prompt: the same one fig14 uses, so numbers line up
+    let prompt = tokenizer::encode("the sparse model swaps active weights. ");
+
+    let mut eng = SwapEngine::open(&dir, o)?;
+    eng.generate(&prompt, n_tok, 0.0)?;
+    let m = eng.metrics.clone();
+    let mem = eng.memory_report();
+    let loader = eng.loader_stats();
+    let e = metrics::energy(dev, &m);
+
+    let v = obj(vec![
+        ("bench", s("decode-smoke")),
+        ("device", s(dev.name)),
+        ("sparsity", num(0.6)),
+        ("group_size", num(4.0)),
+        ("bw_scale", num(scale)),
+        ("prompt_tokens", num(prompt.len() as f64)),
+        ("gen_tokens", num(n_tok as f64)),
+        ("tokens", num(m.tokens as f64)),
+        ("tokens_per_sec", num(m.tokens_per_sec())),
+        ("wall_ms", num(m.wall.as_secs_f64() * 1e3)),
+        ("compute_busy_ms", num(m.compute_busy.as_secs_f64() * 1e3)),
+        ("flash_busy_ms", num(m.flash_busy.as_secs_f64() * 1e3)),
+        ("flash_bytes", num(m.flash_bytes as f64)),
+        ("cache_hit_rate", num(eng.cache_hit_rate())),
+        ("preload_precision", num(m.preload_precision())),
+        ("cache_lock_acquires", num(m.cache_lock_acquires as f64)),
+        ("cache_locks_avoided", num(m.cache_locks_avoided as f64)),
+        ("batched_inserts", num(m.batched_inserts as f64)),
+        ("ondemand_rows", num(m.ondemand_rows as f64)),
+        (
+            "ondemand_coalesced_runs",
+            num(m.ondemand_coalesced_runs as f64),
+        ),
+        ("slab_bytes_peak", num(m.slab_bytes_peak as f64)),
+        ("loader_chunks_read", num(loader.chunks_read as f64)),
+        ("loader_bytes_read", num(loader.bytes_read as f64)),
+        ("dram_total_bytes", num(mem.dram_total() as f64)),
+        ("energy_per_token_j", num(e.energy_per_token_j)),
+    ]);
+    let mut text = v.to_string();
+    text.push('\n');
+    std::fs::write(&out_path, &text)?;
+    println!(
+        "bench smoke: {:.2} tok/s | hit {:.1}% | preload {:.1}% | \
+         {} lock acquisitions ({} avoided) | slab peak {}",
+        m.tokens_per_sec(),
+        eng.cache_hit_rate() * 100.0,
+        m.preload_precision() * 100.0,
+        m.cache_lock_acquires,
+        m.cache_locks_avoided,
+        human_bytes(m.slab_bytes_peak),
+    );
+    println!("wrote {out_path}");
+    Ok(())
+}
+
 // ================================================================ Fig 2
 
 /// Upper-bound contextual sparsity (computed by python analysis; printed

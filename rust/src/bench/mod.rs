@@ -27,6 +27,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "energy" => figures::fig19_energy(args),
         "moe-sim" => figures::moe_sim(args),
         "upper-bound" => figures::fig2_upper_bound(args),
+        "smoke" => figures::bench_smoke(args),
         "all" => {
             for name in [
                 "flash", "similarity", "hot-weights", "upper-bound",
@@ -44,7 +45,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
             bail!(
                 "bench what? flash|similarity|hot-weights|upper-bound|pareto|\
                  e2e|ablation|preload-tradeoff|layer-group|cache-policy|\
-                 energy|moe-sim|all"
+                 energy|moe-sim|smoke|all"
             )
         }
     }

@@ -8,7 +8,10 @@
 //! activeflow inspect  devices|artifacts|weights
 //! activeflow bench    <pareto|e2e|ablation|flash|preload-tradeoff|
 //!                      layer-group|cache-policy|hot-weights|similarity|
-//!                      energy|moe-sim>
+//!                      energy|moe-sim|smoke>
+//!
+//! `bench smoke` writes the perf-trajectory point `BENCH_decode.json`
+//! (also reachable as `make bench-smoke`; methodology in PERF.md).
 //! ```
 
 use std::path::PathBuf;

@@ -26,6 +26,22 @@ pub struct DecodeMetrics {
     /// Channels correctly preloaded / total needed (preload precision).
     pub preload_hits: u64,
     pub preload_total: u64,
+    // ---- hot-path bookkeeping counters (slab-store fetch path, PERF.md)
+    /// WeightCache mutex acquisitions by the fetch path (one per op-family
+    /// fetch is the invariant — lookups, slab copies, batched inserts, and
+    /// on-demand fills all share a single guard).
+    pub cache_lock_acquires: u64,
+    /// Acquisitions the old per-row path would have taken minus what the
+    /// batched path took (per-op lookup locks + one lock per row offered).
+    pub cache_locks_avoided: u64,
+    /// `insert_rows` batches issued (each replaces N per-row lock+insert).
+    pub batched_inserts: u64,
+    /// Rows filled by on-demand flash reads (preload/cache misses).
+    pub ondemand_rows: u64,
+    /// On-demand reads that bundled ≥2 adjacent channels into one I/O.
+    pub ondemand_coalesced_runs: u64,
+    /// High-water mark of the preload slab store (M_cl peak, bytes).
+    pub slab_bytes_peak: u64,
 }
 
 impl DecodeMetrics {
@@ -66,6 +82,13 @@ impl DecodeMetrics {
         self.cache_misses += other.cache_misses;
         self.preload_hits += other.preload_hits;
         self.preload_total += other.preload_total;
+        self.cache_lock_acquires += other.cache_lock_acquires;
+        self.cache_locks_avoided += other.cache_locks_avoided;
+        self.batched_inserts += other.batched_inserts;
+        self.ondemand_rows += other.ondemand_rows;
+        self.ondemand_coalesced_runs += other.ondemand_coalesced_runs;
+        // a peak merges as a max, not a sum
+        self.slab_bytes_peak = self.slab_bytes_peak.max(other.slab_bytes_peak);
     }
 }
 
@@ -152,6 +175,31 @@ mod tests {
         a.merge(&m(5, 100, 50, 20));
         assert_eq!(a.tokens, 10);
         assert_eq!(a.wall, Duration::from_millis(200));
+    }
+
+    #[test]
+    fn merge_sums_lock_counters_and_maxes_slab_peak() {
+        let mut a = m(1, 100, 0, 0);
+        a.cache_lock_acquires = 4;
+        a.cache_locks_avoided = 10;
+        a.batched_inserts = 2;
+        a.ondemand_rows = 3;
+        a.ondemand_coalesced_runs = 1;
+        a.slab_bytes_peak = 4096;
+        let mut b = m(1, 100, 0, 0);
+        b.cache_lock_acquires = 6;
+        b.cache_locks_avoided = 5;
+        b.batched_inserts = 1;
+        b.ondemand_rows = 2;
+        b.ondemand_coalesced_runs = 2;
+        b.slab_bytes_peak = 1024;
+        a.merge(&b);
+        assert_eq!(a.cache_lock_acquires, 10);
+        assert_eq!(a.cache_locks_avoided, 15);
+        assert_eq!(a.batched_inserts, 3);
+        assert_eq!(a.ondemand_rows, 5);
+        assert_eq!(a.ondemand_coalesced_runs, 3);
+        assert_eq!(a.slab_bytes_peak, 4096, "peak is a max, not a sum");
     }
 
     #[test]

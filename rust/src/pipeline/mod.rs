@@ -9,12 +9,20 @@
 //!   ──────────────                    ─────────────
 //!   layer l0 of group G:
 //!     topk(h)  ──request(G+1, qkv)──▶  read cross-layer chunks (Fig 9),
-//!     exec qkv / attn / o / gu / down   dequantize, fill the group store
+//!     exec qkv / attn / o / gu / down   dequantize *into the part slab*
 //!     ...layers l0+1..l0+N-1...
 //!   group G+1: wait(part) — usually already complete → near-zero stall
 //!
 //! Per-part completion signalling lets the engine start consuming Wq/Wk/Wv
 //! of the next group while its Wd part is still streaming.
+//!
+//! **Slab store.** Each `(seq, op)` part is one contiguous `Vec<f32>` slab
+//! laid out `[channel-major][layer][d_out]` plus a small index (sorted
+//! channel list + per-row fill bitmap) — no per-row heap allocations. The
+//! loader dequantizes flash chunks directly into their final slab slots;
+//! the engine clones an `Arc<PartSlab>` out of the store (one map lock per
+//! part) and then borrows row slices lock-free. LLM-in-a-flash-style
+//! bundling (arXiv 2312.11514): rows land in their packed layout in place.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -24,9 +32,8 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::cache::WeightCache;
 use crate::flash::FlashDevice;
-use crate::layout::{quant, AwgfFile, OpKind, TensorId};
+use crate::layout::{quant, AwgfFile, OpKind};
 
 /// Key of a preload part: (monotonic group sequence number, op family).
 pub type PartKey = (u64, OpKind);
@@ -36,11 +43,23 @@ pub type PartKey = (u64, OpKind);
 /// layers onto the file's fixed layout groups — a runtime group smaller
 /// than the on-flash group reads only the contiguous sub-span of each
 /// chunk covering the requested layers.
+///
+/// `layers` and `channels` are shared slices: sibling ops of one site
+/// (Wq/Wk/Wv) clone the same `Arc<[usize]>` pointers whenever their
+/// filtered channel lists coincide — no per-op `Vec` copies.
+///
+/// The **issuer** filters out channels that are already cache-resident
+/// for the op (engine: one brief containment-only lock per site) — the
+/// loader itself never touches the weight cache, which is what makes the
+/// engine's wait-under-guard fetch path safe (PERF.md). `skipped_cached`
+/// carries the per-op filtered row count so `LoaderStats` keeps its
+/// historical meaning.
 pub struct PreloadJob {
     pub seq: u64,
     pub op: OpKind,
-    pub layers: Vec<usize>,
-    pub channels: Vec<usize>,
+    pub layers: Arc<[usize]>,
+    pub channels: Arc<[usize]>,
+    pub skipped_cached: u64,
 }
 
 enum Msg {
@@ -48,17 +67,100 @@ enum Msg {
     Stop,
 }
 
-/// Rows preloaded for upcoming layers, keyed by (tensor, channel).
-#[derive(Default)]
-pub struct GroupStore {
-    pub rows: HashMap<(TensorId, u32), Vec<f32>>,
+/// Contiguous dequantized rows of one preload part, laid out
+/// `[channel-major][layer][d_out]`:
+///
+/// ```text
+/// data = [ ch[0]·layer[0]·f32[d_out] | ch[0]·layer[1]·… | ch[1]·layer[0]·… ]
+/// ```
+///
+/// The index is the sorted `channels` list (binary-searched) plus a fill
+/// bitmap — rows the loader never wrote (channel not in the job's
+/// pre-filtered list, or a failed read) stay unfilled and `row()` returns
+/// `None` for them, which sends the engine down its on-demand path exactly
+/// like a store miss did under the old per-row `HashMap`.
+pub struct PartSlab {
+    pub op: OpKind,
+    layers: Arc<[usize]>,
+    channels: Vec<usize>,
+    d_out: usize,
+    filled: Vec<bool>,
+    data: Vec<f32>,
+}
+
+impl PartSlab {
+    pub fn new(
+        op: OpKind,
+        layers: Arc<[usize]>,
+        channels: &[usize],
+        d_out: usize,
+    ) -> PartSlab {
+        let mut channels = channels.to_vec();
+        channels.sort_unstable();
+        channels.dedup();
+        let rows = channels.len() * layers.len();
+        PartSlab {
+            op,
+            layers,
+            channels,
+            d_out,
+            filled: vec![false; rows],
+            data: vec![0f32; rows * d_out],
+        }
+    }
+
+    fn slot(&self, layer: usize, channel: usize) -> Option<usize> {
+        let ci = self.channels.binary_search(&channel).ok()?;
+        let li = self.layers.iter().position(|&l| l == layer)?;
+        Some(ci * self.layers.len() + li)
+    }
+
+    /// Borrow one dequantized row (engine consumption, lock-free through
+    /// the part's `Arc`). `None` until the loader has filled that row.
+    pub fn row(&self, layer: usize, channel: usize) -> Option<&[f32]> {
+        let s = self.slot(layer, channel)?;
+        if !self.filled[s] {
+            return None;
+        }
+        Some(&self.data[s * self.d_out..(s + 1) * self.d_out])
+    }
+
+    /// Mutable row slot for the loader's in-place dequantization; marks the
+    /// row filled.
+    pub fn row_mut(&mut self, layer: usize, channel: usize) -> Option<&mut [f32]> {
+        let s = self.slot(layer, channel)?;
+        self.filled[s] = true;
+        Some(&mut self.data[s * self.d_out..(s + 1) * self.d_out])
+    }
+
+    pub fn layers(&self) -> &[usize] {
+        &self.layers
+    }
+
+    /// Sorted, deduplicated channel index of the slab.
+    pub fn channels(&self) -> &[usize] {
+        &self.channels
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    /// Slab payload bytes (the live M_cl component of this part).
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
 }
 
 #[derive(Default)]
 struct SharedState {
-    /// Completed parts and their row stores (merged per group seq).
-    stores: Mutex<HashMap<u64, GroupStore>>,
+    /// Completed parts. A part appears here only once fully loaded.
+    slabs: Mutex<HashMap<PartKey, Arc<PartSlab>>>,
     done: Mutex<std::collections::HashSet<PartKey>>,
+    /// Highest retired group seq (seqs are monotonic). A slab finishing
+    /// after its group was retired is dropped instead of published — the
+    /// engine has already moved on and nothing would ever free it.
+    retired: Mutex<u64>,
     /// Loader-side statistics.
     stats: Mutex<LoaderStats>,
 }
@@ -69,6 +171,10 @@ pub struct LoaderStats {
     pub bytes_read: u64,
     pub channels_loaded: u64,
     pub channels_skipped_cached: u64,
+    /// Bytes currently held by live part slabs.
+    pub slab_bytes: u64,
+    /// High-water mark of `slab_bytes` (M_cl peak, loader view).
+    pub slab_bytes_peak: u64,
     /// Modeled flash busy time.
     pub busy: Duration,
 }
@@ -83,11 +189,7 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
-    pub fn spawn(
-        awgf: Arc<AwgfFile>,
-        flash: Arc<FlashDevice>,
-        cache: Arc<Mutex<WeightCache>>,
-    ) -> Pipeline {
+    pub fn spawn(awgf: Arc<AwgfFile>, flash: Arc<FlashDevice>) -> Pipeline {
         let (tx, rx) = channel();
         let shared = Arc::new(SharedState::default());
         let cv = Arc::new(Condvar::new());
@@ -95,7 +197,6 @@ impl Pipeline {
         let worker = LoaderWorker {
             awgf,
             flash,
-            cache,
             shared: shared.clone(),
             cv: cv.clone(),
             cv_guard: cv_guard.clone(),
@@ -145,34 +246,47 @@ impl Pipeline {
         self.shared.done.lock().unwrap().contains(&key)
     }
 
-    /// Take a preloaded row out of the group store (engine consumption).
-    pub fn take_row(&self, seq: u64, id: TensorId, channel: usize) -> Option<Vec<f32>> {
-        let mut stores = self.shared.stores.lock().unwrap();
-        stores
-            .get_mut(&seq)?
-            .rows
-            .remove(&(id, channel as u32))
+    /// Clone the completed part's slab out of the store — one map lock,
+    /// after which the engine reads rows without any synchronization.
+    pub fn part(&self, key: PartKey) -> Option<Arc<PartSlab>> {
+        self.shared.slabs.lock().unwrap().get(&key).cloned()
     }
 
-    /// Drop a fully consumed group's store + completion marks (frees M_cl).
+    /// Drop a fully consumed group's slabs + completion marks (frees
+    /// M_cl). Holding the `retired` guard across the removals excludes the
+    /// loader's publish: a part finishing after this point sees the raised
+    /// high-water mark and is dropped, never leaked (seqs are monotonic,
+    /// so retiring `seq` can also cover any abandoned earlier groups).
     pub fn retire_group(&self, seq: u64) {
-        self.shared.stores.lock().unwrap().remove(&seq);
+        let mut retired = self.shared.retired.lock().unwrap();
+        *retired = (*retired).max(seq);
+        let mut freed = 0u64;
+        {
+            let mut slabs = self.shared.slabs.lock().unwrap();
+            slabs.retain(|(s, _), slab| {
+                if *s <= seq {
+                    freed += slab.bytes();
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        if freed > 0 {
+            let mut st = self.shared.stats.lock().unwrap();
+            st.slab_bytes = st.slab_bytes.saturating_sub(freed);
+        }
         self.shared
             .done
             .lock()
             .unwrap()
-            .retain(|(s, _)| *s != seq);
+            .retain(|(s, _)| *s > seq);
     }
 
-    /// Bytes currently held in preload stores (the live M_cl component).
+    /// Bytes currently held in preload slabs (the live M_cl component).
     pub fn stored_bytes(&self) -> u64 {
-        let stores = self.shared.stores.lock().unwrap();
-        stores
-            .values()
-            .map(|g| {
-                g.rows.values().map(|r| (r.len() * 4) as u64).sum::<u64>()
-            })
-            .sum()
+        let slabs = self.shared.slabs.lock().unwrap();
+        slabs.values().map(|s| s.bytes()).sum()
     }
 
     pub fn loader_stats(&self) -> LoaderStats {
@@ -192,7 +306,6 @@ impl Drop for Pipeline {
 struct LoaderWorker {
     awgf: Arc<AwgfFile>,
     flash: Arc<FlashDevice>,
-    cache: Arc<Mutex<WeightCache>>,
     shared: Arc<SharedState>,
     cv: Arc<Condvar>,
     cv_guard: Arc<Mutex<u64>>,
@@ -204,15 +317,42 @@ impl LoaderWorker {
             match msg {
                 Msg::Stop => break,
                 Msg::Job(job) => {
-                    if let Err(e) = self.process(&job) {
-                        eprintln!("[loader] preload failed: {e:#}");
+                    let slab = match self.process(&job) {
+                        Ok(s) => Some(s),
+                        Err(e) => {
+                            eprintln!("[loader] preload failed: {e:#}");
+                            None // still mark done: waiters fall back
+                        }
+                    };
+                    // Publish + mark done under the `retired` guard: if the
+                    // engine retired this group while we were loading (its
+                    // fetch never needed to wait), the slab is dropped here
+                    // instead of leaking in the store forever.
+                    {
+                        let retired = self.shared.retired.lock().unwrap();
+                        if job.seq > *retired {
+                            if let Some(slab) = slab {
+                                let bytes = slab.bytes();
+                                self.shared
+                                    .slabs
+                                    .lock()
+                                    .unwrap()
+                                    .insert((job.seq, job.op), Arc::new(slab));
+                                let mut st =
+                                    self.shared.stats.lock().unwrap();
+                                st.slab_bytes += bytes;
+                                st.slab_bytes_peak =
+                                    st.slab_bytes_peak.max(st.slab_bytes);
+                            }
+                            self.shared
+                                .done
+                                .lock()
+                                .unwrap()
+                                .insert((job.seq, job.op));
+                        }
                     }
-                    // mark part done + wake waiters
-                    self.shared
-                        .done
-                        .lock()
-                        .unwrap()
-                        .insert((job.seq, job.op));
+                    // wake waiters (also on the retired/error paths, so a
+                    // racing wait_part re-checks instead of sleeping on)
                     let mut gen = self.cv_guard.lock().unwrap();
                     *gen += 1;
                     drop(gen);
@@ -222,18 +362,29 @@ impl LoaderWorker {
         }
     }
 
-    fn process(&self, job: &PreloadJob) -> Result<()> {
+    fn process(&self, job: &PreloadJob) -> Result<PartSlab> {
         let info = self.awgf.op(job.op);
         let dout = info.d_out;
         let rb = info.row_bytes;
         let quant = self.awgf.quant;
+
+        // The part's slab, allocated once; every read dequantizes straight
+        // into its final slot (no per-row scratch, no per-row Vec). The
+        // channel list arrives pre-filtered (issuer dropped cache-resident
+        // channels); account the skips for the historical stat.
+        if job.skipped_cached > 0 {
+            self.shared.stats.lock().unwrap().channels_skipped_cached +=
+                job.skipped_cached;
+        }
+        let mut slab =
+            PartSlab::new(job.op, job.layers.clone(), &job.channels, dout);
 
         // Partition the runtime layers by on-flash layout group; within a
         // layout group the requested layers occupy consecutive row slots of
         // every chunk, so each (layout-group, channel) is one contiguous
         // sub-span read.
         let mut by_group: Vec<(usize, Vec<usize>)> = Vec::new();
-        for &l in &job.layers {
+        for &l in job.layers.iter() {
             let g = info
                 .groups
                 .iter()
@@ -254,42 +405,16 @@ impl LoaderWorker {
             let full_chunk = span == grp.layers.len() * rb;
             let n_layers = layers.len();
 
-            // Skip channels already cached for every requested layer.
-            let mut to_read: Vec<usize> =
-                Vec::with_capacity(job.channels.len());
-            {
-                let cache = self.cache.lock().unwrap();
-                for &ch in &job.channels {
-                    let all_cached = layers.iter().all(|&l| {
-                        cache
-                            .tensors
-                            .get(&TensorId::new(l, job.op))
-                            .map(|t| t.contains(ch))
-                            .unwrap_or(false)
-                    });
-                    if all_cached {
-                        self.shared
-                            .stats
-                            .lock()
-                            .unwrap()
-                            .channels_skipped_cached += n_layers as u64;
-                    } else {
-                        to_read.push(ch);
-                    }
-                }
-            }
-
             // Coalesce adjacent channels into single I/Os — only valid when
             // the sub-span is the whole chunk (otherwise reads have gaps).
             let mut runs: Vec<(usize, usize)> = Vec::new();
-            for &ch in &to_read {
+            for &ch in slab.channels() {
                 match runs.last_mut() {
                     Some((s, l)) if full_chunk && *s + *l == ch => *l += 1,
                     _ => runs.push((ch, 1)),
                 }
             }
 
-            let mut row_f32 = vec![0f32; dout];
             for (start_ch, len) in runs {
                 let (chunk_off, chunk_len) =
                     self.awgf.chunk_span(job.op, g, start_ch);
@@ -309,26 +434,20 @@ impl LoaderWorker {
                         self.flash.model_read_ns(total as u64),
                     );
                 }
-                let mut stores = self.shared.stores.lock().unwrap();
-                let store = stores.entry(job.seq).or_default();
                 for ci in 0..len {
                     let ch = start_ch + ci;
                     for &layer in &layers {
                         let base = ci * stride + (j_of(layer) - j_min) * rb;
-                        quant::dequantize_row(
-                            &buf[base..base + rb],
-                            quant,
-                            &mut row_f32,
-                        );
-                        store.rows.insert(
-                            (TensorId::new(layer, job.op), ch as u32),
-                            row_f32.clone(),
-                        );
+                        let row = slab
+                            .row_mut(layer, ch)
+                            .expect("slab covers all job channels");
+                        quant::dequantize_row(&buf[base..base + rb], quant, row);
                     }
                 }
             }
         }
-        Ok(())
+
+        Ok(slab)
     }
 }
 
@@ -338,10 +457,11 @@ mod tests {
     // rust/tests/pipeline_integration.rs (built from artifacts/model.awgf)
     // and in the in-memory harness below using a synthetic file.
     use super::*;
-    use crate::cache::{CachePolicy, WeightCache};
     use crate::config::ModelConfig;
     use crate::device::PIXEL6;
     use crate::flash::ClockMode;
+    use crate::layout::TensorId;
+    use crate::util::prop::{check, GenExt};
 
     /// Build a tiny synthetic AWGF file on disk via the python-compatible
     /// writer logic (re-implemented in the test for independence).
@@ -397,8 +517,7 @@ mod tests {
         path
     }
 
-    fn setup() -> (Arc<AwgfFile>, Arc<FlashDevice>, Arc<Mutex<WeightCache>>,
-                   std::path::PathBuf) {
+    fn setup() -> (Arc<AwgfFile>, Arc<FlashDevice>, std::path::PathBuf) {
         let dir = std::env::temp_dir()
             .join(format!("awf_pipe_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
@@ -406,32 +525,30 @@ mod tests {
         let awgf = Arc::new(AwgfFile::open(&path).unwrap());
         let flash =
             FlashDevice::open(&path, &PIXEL6, ClockMode::Modeled, 1.0).unwrap();
-        let dims: Vec<(TensorId, usize, usize)> = (0..2)
-            .map(|l| (TensorId::new(l, OpKind::Wq), 128, 128))
-            .collect();
-        let cache = Arc::new(Mutex::new(WeightCache::new(
-            &dims,
-            64 * 1024,
-            CachePolicy::Contextual,
-        )));
-        (awgf, flash, cache, path)
+        (awgf, flash, path)
+    }
+
+    fn job(seq: u64, layers: &[usize], channels: &[usize]) -> PreloadJob {
+        PreloadJob {
+            seq,
+            op: OpKind::Wq,
+            layers: Arc::from(layers),
+            channels: Arc::from(channels),
+            skipped_cached: 0,
+        }
     }
 
     #[test]
     fn preload_roundtrip_values_match_layout() {
-        let (awgf, flash, cache, _p) = setup();
-        let pipe = Pipeline::spawn(awgf, flash, cache);
-        pipe.request(PreloadJob {
-            seq: 1,
-            op: OpKind::Wq,
-            layers: vec![0, 1],
-            channels: vec![3, 4, 5, 100],
-        });
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
+        pipe.request(job(1, &[0, 1], &[3, 4, 5, 100]));
         pipe.wait_part((1, OpKind::Wq));
+        let slab = pipe.part((1, OpKind::Wq)).expect("slab published");
         for l in 0..2usize {
             for ch in [3usize, 4, 5, 100] {
-                let row = pipe
-                    .take_row(1, TensorId::new(l, OpKind::Wq), ch)
+                let row = slab
+                    .row(l, ch)
                     .unwrap_or_else(|| panic!("missing row l{l} ch{ch}"));
                 // synth rows encode (c*2+l) in element 0 (q8_0 tolerance)
                 let want = (ch * 2 + l) as f32;
@@ -442,80 +559,187 @@ mod tests {
                 );
             }
         }
-        // consumed rows are gone
-        assert!(pipe
-            .take_row(1, TensorId::new(0, OpKind::Wq), 3)
-            .is_none());
+        // rows are borrowed, not consumed — a second read sees them too
+        assert!(slab.row(0, 3).is_some());
+        // unrequested channels are store misses
+        assert!(slab.row(0, 7).is_none());
     }
 
     #[test]
     fn adjacent_channels_coalesce_into_one_chunk() {
-        let (awgf, flash, cache, _p) = setup();
-        let pipe = Pipeline::spawn(awgf, flash, cache);
-        pipe.request(PreloadJob {
-            seq: 7,
-            op: OpKind::Wq,
-            layers: vec![0, 1],
-            channels: (10..20).collect(), // one contiguous run
-        });
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
+        let chs: Vec<usize> = (10..20).collect(); // one contiguous run
+        pipe.request(job(7, &[0, 1], &chs));
         pipe.wait_part((7, OpKind::Wq));
         let st = pipe.loader_stats();
         assert_eq!(st.chunks_read, 1, "10 adjacent channels = 1 I/O");
         assert_eq!(st.channels_loaded, 20);
+        assert!(st.slab_bytes_peak > 0);
     }
 
     #[test]
-    fn cached_channels_are_skipped() {
-        let (awgf, flash, cache, _p) = setup();
-        // pre-cache channel 42 for both layers
-        {
-            let mut c = cache.lock().unwrap();
-            let row = vec![0f32; 128];
-            for l in 0..2 {
-                let t = c.tensor_mut(TensorId::new(l, OpKind::Wq));
-                t.lookup(42);
-                t.insert(42, &row);
-            }
-        }
-        let pipe = Pipeline::spawn(awgf, flash, cache);
+    fn issuer_filtered_channels_stay_out_of_the_slab() {
+        // The engine filters cache-resident channels *before* sending the
+        // job (the loader never touches the cache — PERF.md): a job whose
+        // channel list had ch42 filtered out must not load it, and the
+        // skip count it carries lands in the historical stat.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
         pipe.request(PreloadJob {
             seq: 2,
             op: OpKind::Wq,
-            layers: vec![0, 1],
-            channels: vec![41, 42, 43],
+            layers: Arc::from(&[0usize, 1][..]),
+            channels: Arc::from(&[41usize, 43][..]), // 42 filtered out
+            skipped_cached: 2,                       // ch42 × 2 layers
         });
         pipe.wait_part((2, OpKind::Wq));
         let st = pipe.loader_stats();
-        assert_eq!(st.channels_skipped_cached, 2); // ch42 × 2 layers
-        assert!(pipe
-            .take_row(2, TensorId::new(0, OpKind::Wq), 42)
-            .is_none());
-        assert!(pipe
-            .take_row(2, TensorId::new(0, OpKind::Wq), 41)
-            .is_some());
+        assert_eq!(st.channels_skipped_cached, 2);
+        assert_eq!(st.channels_loaded, 4); // 2 channels × 2 layers
+        let slab = pipe.part((2, OpKind::Wq)).unwrap();
+        assert!(slab.row(0, 42).is_none(), "filtered row stays unfilled");
+        assert!(slab.row(0, 41).is_some());
+        assert!(slab.row(1, 43).is_some());
     }
 
     #[test]
     fn retire_group_frees_store() {
-        let (awgf, flash, cache, _p) = setup();
-        let pipe = Pipeline::spawn(awgf, flash, cache);
-        pipe.request(PreloadJob {
-            seq: 3,
-            op: OpKind::Wq,
-            layers: vec![0, 1],
-            channels: vec![0, 1],
-        });
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
+        pipe.request(job(3, &[0, 1], &[0, 1]));
         pipe.wait_part((3, OpKind::Wq));
         assert!(pipe.stored_bytes() > 0);
         pipe.retire_group(3);
         assert_eq!(pipe.stored_bytes(), 0);
+        assert_eq!(pipe.loader_stats().slab_bytes, 0);
         assert!(!pipe.part_ready((3, OpKind::Wq)));
+        assert!(pipe.part((3, OpKind::Wq)).is_none());
+    }
+
+    #[test]
+    fn slab_finishing_after_retire_is_dropped_not_leaked() {
+        // The engine retires a group as soon as it finishes consuming it —
+        // possibly while the loader is still reading that group's last
+        // part (a fully cache-served fetch never waits). The late slab
+        // must be dropped, and the byte accounting must not drift.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
+        pipe.retire_group(5); // group 5 already consumed and retired
+        pipe.request(job(5, &[0, 1], &[1, 2])); // loader finishes late
+        pipe.request(job(6, &[0, 1], &[3]));
+        assert!(pipe.wait_part((6, OpKind::Wq))); // FIFO: 5 processed first
+        assert!(!pipe.part_ready((5, OpKind::Wq)));
+        assert!(pipe.part((5, OpKind::Wq)).is_none(), "late slab dropped");
+        let bytes6 = pipe.part((6, OpKind::Wq)).unwrap().bytes();
+        assert_eq!(pipe.stored_bytes(), bytes6);
+        assert_eq!(pipe.loader_stats().slab_bytes, bytes6,
+                   "accounting excludes the dropped slab");
     }
 
     #[test]
     fn pipeline_shutdown_clean() {
-        let (awgf, flash, cache, _p) = setup();
-        let pipe = Pipeline::spawn(awgf, flash, cache);
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
         drop(pipe); // must join without deadlock
+    }
+
+    #[test]
+    fn slab_rows_hold_no_per_row_allocations() {
+        // the whole part is exactly one contiguous buffer: channels×layers
+        // rows of d_out floats, regardless of access order
+        let layers: Arc<[usize]> = Arc::from(&[0usize, 1][..]);
+        let mut slab = PartSlab::new(OpKind::Wq, layers, &[9, 4, 4, 2], 8);
+        assert_eq!(slab.channels(), &[2, 4, 9]); // sorted + deduped
+        assert_eq!(slab.bytes(), (3 * 2 * 8 * 4) as u64);
+        assert!(slab.row(0, 4).is_none(), "unfilled row is a miss");
+        slab.row_mut(0, 4).unwrap().fill(7.0);
+        assert_eq!(slab.row(0, 4).unwrap(), &[7.0f32; 8][..]);
+        assert!(slab.row(1, 4).is_none(), "per-(layer,channel) fill");
+        assert!(slab.row(0, 3).is_none(), "unknown channel");
+        assert!(slab.row_mut(2, 4).is_none(), "unknown layer");
+    }
+
+    /// The slab store must be bit-identical to the old per-row HashMap
+    /// store: both dequantize the same flash bytes with the same codec, so
+    /// for every random (layers, channels, cache-filter state) each loaded
+    /// row must equal an independently read+dequantized reference row
+    /// exactly, and filtered channels must stay store misses.
+    #[test]
+    fn slab_store_bit_identical_to_per_row_reference() {
+        let (awgf, flash, _p) = setup();
+        check("slab-vs-hashmap", |g| {
+            let n_layers = g.usize_in(1, 2);
+            let layers: Vec<usize> = if n_layers == 2 {
+                vec![0, 1]
+            } else {
+                vec![g.usize_in(0, 1)]
+            };
+            let k = g.usize_in(1, 24);
+            let requested = g.subset(128, k);
+            // random cache state: the issuer filters a random subset of
+            // the requested channels out of the job (as the engine does
+            // for fully cache-resident channels)
+            let pre = g.subset(128, g.usize_in(0, 16));
+            let channels: Vec<usize> = requested
+                .iter()
+                .copied()
+                .filter(|ch| !pre.contains(ch))
+                .collect();
+            let pipe = Pipeline::spawn(awgf.clone(), flash.clone());
+            pipe.request(PreloadJob {
+                seq: 1,
+                op: OpKind::Wq,
+                layers: Arc::from(&layers[..]),
+                channels: Arc::from(&channels[..]),
+                skipped_cached: ((requested.len() - channels.len())
+                    * layers.len()) as u64,
+            });
+            if !pipe.wait_part((1, OpKind::Wq)) {
+                return Err("loader timed out".into());
+            }
+            let slab = pipe.part((1, OpKind::Wq)).unwrap();
+            // reference: the old per-row path — read each (layer, channel)
+            // row span individually and dequantize into its own Vec
+            let mut reference: HashMap<(TensorId, u32), Vec<f32>> =
+                HashMap::new();
+            for &l in &layers {
+                for &ch in &channels {
+                    let (off, len) = awgf.row_span(OpKind::Wq, l, ch);
+                    let buf = flash.read(off, len).map_err(|e| e.to_string())?;
+                    let mut row = vec![0f32; 128];
+                    quant::dequantize_row(&buf, awgf.quant, &mut row);
+                    reference.insert((TensorId::new(l, OpKind::Wq), ch as u32), row);
+                }
+            }
+            for &l in &layers {
+                for &ch in &requested {
+                    match slab.row(l, ch) {
+                        Some(got) => {
+                            if pre.contains(&ch) {
+                                return Err(format!(
+                                    "filtered ch{ch} must stay a store miss"
+                                ));
+                            }
+                            let want = &reference
+                                [&(TensorId::new(l, OpKind::Wq), ch as u32)];
+                            if got != want.as_slice() {
+                                return Err(format!(
+                                    "row l{l} ch{ch} differs from reference"
+                                ));
+                            }
+                        }
+                        None => {
+                            if !pre.contains(&ch) {
+                                return Err(format!(
+                                    "row l{l} ch{ch} missing from slab"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -56,6 +56,17 @@ struct ServerStats {
     tokens: AtomicU64,
     queue_ns: AtomicU64,
     decode_ns: AtomicU64,
+    // hot-path counters mirrored out of DecodeMetrics (PERF.md): the
+    // engine lives on the worker thread, so `stats` connections read these
+    // atomics instead of poking the engine
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    lock_acquires: AtomicU64,
+    locks_avoided: AtomicU64,
+    batched_inserts: AtomicU64,
+    ondemand_rows: AtomicU64,
+    ondemand_coalesced_runs: AtomicU64,
+    slab_bytes_peak: AtomicU64,
 }
 
 /// Run the server until a `shutdown` command arrives. Returns the number of
@@ -94,12 +105,44 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
             let resp = match result {
                 Err(e) => obj(vec![("error", s(&format!("{e:#}")))]),
                 Ok(toks) => {
-                    let delta_tokens =
-                        engine.metrics.tokens - before.tokens;
+                    let m = &engine.metrics;
+                    let delta_tokens = m.tokens - before.tokens;
                     worker_stats.served.fetch_add(1, Ordering::Relaxed);
                     worker_stats
                         .tokens
                         .fetch_add(delta_tokens, Ordering::Relaxed);
+                    worker_stats.cache_hits.fetch_add(
+                        m.cache_hits - before.cache_hits,
+                        Ordering::Relaxed,
+                    );
+                    worker_stats.cache_misses.fetch_add(
+                        m.cache_misses - before.cache_misses,
+                        Ordering::Relaxed,
+                    );
+                    worker_stats.lock_acquires.fetch_add(
+                        m.cache_lock_acquires - before.cache_lock_acquires,
+                        Ordering::Relaxed,
+                    );
+                    worker_stats.locks_avoided.fetch_add(
+                        m.cache_locks_avoided - before.cache_locks_avoided,
+                        Ordering::Relaxed,
+                    );
+                    worker_stats.batched_inserts.fetch_add(
+                        m.batched_inserts - before.batched_inserts,
+                        Ordering::Relaxed,
+                    );
+                    worker_stats.ondemand_rows.fetch_add(
+                        m.ondemand_rows - before.ondemand_rows,
+                        Ordering::Relaxed,
+                    );
+                    worker_stats.ondemand_coalesced_runs.fetch_add(
+                        m.ondemand_coalesced_runs
+                            - before.ondemand_coalesced_runs,
+                        Ordering::Relaxed,
+                    );
+                    worker_stats
+                        .slab_bytes_peak
+                        .fetch_max(m.slab_bytes_peak, Ordering::Relaxed);
                     worker_stats.queue_ns.fetch_add(
                         queue_t.as_nanos() as u64,
                         Ordering::Relaxed,
@@ -198,6 +241,52 @@ fn handle_conn(
                         (
                             "throughput_toks_per_sec",
                             num(tokens as f64 / (dec_ns as f64 / 1e9).max(1e-9)),
+                        ),
+                        (
+                            "cache_hit_rate",
+                            num({
+                                let h = stats
+                                    .cache_hits
+                                    .load(Ordering::Relaxed)
+                                    as f64;
+                                let mi = stats
+                                    .cache_misses
+                                    .load(Ordering::Relaxed)
+                                    as f64;
+                                if h + mi == 0.0 { 0.0 } else { h / (h + mi) }
+                            }),
+                        ),
+                        (
+                            "cache_lock_acquires",
+                            num(stats.lock_acquires.load(Ordering::Relaxed)
+                                as f64),
+                        ),
+                        (
+                            "cache_locks_avoided",
+                            num(stats.locks_avoided.load(Ordering::Relaxed)
+                                as f64),
+                        ),
+                        (
+                            "batched_inserts",
+                            num(stats.batched_inserts.load(Ordering::Relaxed)
+                                as f64),
+                        ),
+                        (
+                            "ondemand_rows",
+                            num(stats.ondemand_rows.load(Ordering::Relaxed)
+                                as f64),
+                        ),
+                        (
+                            "ondemand_coalesced_runs",
+                            num(stats
+                                .ondemand_coalesced_runs
+                                .load(Ordering::Relaxed)
+                                as f64),
+                        ),
+                        (
+                            "slab_bytes_peak",
+                            num(stats.slab_bytes_peak.load(Ordering::Relaxed)
+                                as f64),
                         ),
                     ]),
                 )?;

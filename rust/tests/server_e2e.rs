@@ -79,6 +79,19 @@ fn serve_generate_stats_shutdown() {
         .as_f64()
         .unwrap()
         > 0.0);
+    // hot-path counters (PERF.md): one cache lock per op-family fetch → 4
+    // fetches per layer per token, and far more acquisitions avoided than
+    // taken once rows start moving
+    let acquires =
+        stats.get("cache_lock_acquires").unwrap().as_f64().unwrap();
+    assert!(acquires > 0.0, "lock counter must be plumbed: {stats:?}");
+    assert!(stats.get("cache_locks_avoided").is_some());
+    assert!(stats.get("batched_inserts").is_some());
+    assert!(stats.get("ondemand_rows").is_some());
+    assert!(stats.get("ondemand_coalesced_runs").is_some());
+    assert!(stats.get("slab_bytes_peak").is_some());
+    let rate = stats.get("cache_hit_rate").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&rate));
 
     // elastic budget query (cost-model search for the tiny AWGF geometry)
     let budget = client_roundtrip(
