@@ -1,7 +1,7 @@
 # ActiveFlow build/bench entry points. The rust crate lives in rust/; the
 # python side (L2/L1) only runs at artifact-build time.
 
-.PHONY: build test artifacts bench-smoke
+.PHONY: build test artifacts bench-smoke bench-governor check-perf
 
 build:
 	cd rust && cargo build --release
@@ -15,8 +15,24 @@ artifacts:
 	cd python && python -m compile.aot --out ../rust/artifacts
 
 # Perf trajectory point (PERF.md): decode a fixed synthetic prompt and
-# write BENCH_decode.json at the repo root. Compare against the previous
-# run on the same machine before/after hot-path changes.
+# write BENCH_decode.json at the repo root. The previous point rotates to
+# BENCH_decode.prev.json only after a *successful* bench run (a failed
+# run must not destroy the baseline), so `make check-perf` always diffs
+# two distinct real points.
 bench-smoke:
 	cd rust && cargo run --release -- bench smoke \
-		--artifacts artifacts --out ../BENCH_decode.json
+		--artifacts artifacts --out ../BENCH_decode.new.json
+	@if [ -f BENCH_decode.json ]; then \
+		cp BENCH_decode.json BENCH_decode.prev.json; fi
+	mv BENCH_decode.new.json BENCH_decode.json
+
+# Governor trajectory point (PERF.md): tokens/sec + settle time across a
+# scripted DRAM budget step-down on one live engine.
+bench-governor:
+	cd rust && cargo bench --bench governor_rebudget -- \
+		--out ../BENCH_governor.json
+
+# Diff the decode perf point against the previous run; fails on a >5%
+# tokens/sec regression (ROADMAP perf-trajectory gate).
+check-perf:
+	@python3 scripts/check_perf.py BENCH_decode.prev.json BENCH_decode.json

@@ -1,7 +1,11 @@
-//! Adaptive DRAM usage — the paper's headline capability: the same model
-//! served under shrinking memory budgets. For each budget the §4.1 search
-//! picks (sp, N, cache) and the engine actually runs with them, reporting
-//! measured DRAM and speed.
+//! Adaptive DRAM usage — the paper's headline capability, now *live*: one
+//! engine served under a shrinking memory budget with **no restarts**.
+//! A scripted [`PressureSchedule`] steps M_max down; at every step the
+//! [`DramGovernor`] re-runs the §4.1 search online and applies
+//! `(sp, N, cache)` to the running engine — the weight cache evicts down
+//! to its new target, the loader gets a tighter slab ceiling, and the
+//! active sparsity level switches across the compiled artifact sets
+//! between requests.
 //!
 //! ```sh
 //! cargo run --release --example adaptive_memory
@@ -13,9 +17,14 @@ use activeflow::costmodel::{self, Geometry};
 use activeflow::device;
 use activeflow::engine::{EngineOptions, PreloadTrigger, SwapEngine, SwapMode};
 use activeflow::flash::ClockMode;
+use activeflow::governor::{
+    DramGovernor, GovernorConfig, PressureSchedule, RebudgetTrigger,
+};
 use activeflow::layout::AwgfFile;
 use activeflow::tokenizer;
 use activeflow::util::human_bytes;
+
+const TOKENS_PER_PHASE: u64 = 16;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::path::Path::new("artifacts");
@@ -26,58 +35,124 @@ fn main() -> anyhow::Result<()> {
     let grid = [0.5, 0.6, 0.7, 0.8, 0.9];
     let prompt = tokenizer::encode("the sparse model swaps active weights. ");
 
+    // Scripted pressure trace: weight budgets from "almost everything
+    // fits" down to "barely anything does" (KV is a fixed cost on top —
+    // paper Eq 8), one phase of decoding between steps. The spec-string
+    // round-trip is deliberate: it is the same scriptable path the
+    // governor bench and a server-side schedule use.
+    let spec = [0.9, 0.6, 0.45, 0.3, 0.15]
+        .iter()
+        .enumerate()
+        .map(|(i, frac)| {
+            let budget =
+                geo.kv_bytes + (geo.model_bytes as f64 * frac) as u64;
+            format!("{}@{}", budget, i as u64 * TOKENS_PER_PHASE)
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    let mut schedule = PressureSchedule::parse(&spec)?;
+
+    // Open ONE engine at the first (largest) budget's configuration…
+    let first_budget = schedule.steps()[0].budget;
+    let r0 = costmodel::search(dev, &geo, first_budget, 0.85, 1.0, &grid)
+        .expect("largest budget must be feasible");
+    let mut eng = SwapEngine::open(dir, EngineOptions {
+        sparsity: r0.params.sp,
+        group_size: r0.params.n_group,
+        swap_mode: SwapMode::Preload,
+        cache_bytes: r0.params.cache_bytes,
+        cache_policy: CachePolicy::Contextual,
+        device: dev,
+        clock: ClockMode::Timed,
+        bw_scale: 1.0,
+        trigger: PreloadTrigger::FirstLayer,
+    })?;
+    // …and let the governor drive every later step on the live engine.
+    let mut gov =
+        DramGovernor::new(&eng, GovernorConfig::default(), first_budget);
+
     println!(
-        "adaptive DRAM sweep on {} — model {} on flash, KV {}",
+        "live adaptive DRAM on {} — model {} on flash, KV {}, one engine, \
+         {} scripted budget steps, zero restarts",
         dev.name,
         human_bytes(geo.model_bytes),
-        human_bytes(geo.kv_bytes)
+        human_bytes(geo.kv_bytes),
+        schedule.len()
     );
     println!(
-        "{:>10} {:>6} {:>3} {:>10} | {:>10} {:>8} {:>7}",
-        "budget", "sp", "N", "cache", "meas-dram", "tok/s", "ppl-tag"
+        "{:>10} {:>6} {:>3} {:>10} | {:>10} {:>10} {:>10} | {:>8} {:>7} \
+         {:>9}",
+        "budget", "sp", "N", "cache-tgt", "L:cache", "L:preload",
+        "L:compute", "tok/s", "evict", "settle"
     );
 
-    // weight budgets from "almost everything fits" down to "barely
-    // anything does" (KV is a fixed cost on top — paper Eq 8)
-    for frac in [0.9, 0.6, 0.45, 0.3, 0.15] {
-        let budget = geo.kv_bytes + (geo.model_bytes as f64 * frac) as u64;
-        let Some(r) = costmodel::search(dev, &geo, budget, 0.85, 1.0, &grid)
-        else {
-            println!("{:>10}  -> infeasible", human_bytes(budget));
+    let mut decoded = 0u64;
+    while let Some(budget) = schedule.due(decoded) {
+        let d = gov.set_budget(&mut eng, budget, RebudgetTrigger::Schedule)?;
+        if !d.applied && d.note == "infeasible" {
+            println!("{:>10}  -> infeasible (engine keeps sp={:.2})",
+                     human_bytes(budget), d.old_sp);
+            decoded += TOKENS_PER_PHASE;
             continue;
-        };
-        let opts = EngineOptions {
-            sparsity: r.params.sp,
-            group_size: r.params.n_group,
-            swap_mode: SwapMode::Preload,
-            cache_bytes: r.params.cache_bytes,
-            cache_policy: CachePolicy::Contextual,
-            device: dev,
-            clock: ClockMode::Timed,
-            bw_scale: 1.0,
-        trigger: PreloadTrigger::FirstLayer,
-        };
-        let mut eng = SwapEngine::open(dir, opts)?;
-        eng.generate(&prompt, 16, 0.0)?;
-        let mem = eng.memory_report();
+        }
+        let before = eng.metrics.clone();
+        eng.generate(&prompt, TOKENS_PER_PHASE as usize, 0.0)?;
+        decoded += TOKENS_PER_PHASE;
+        let wall = (eng.metrics.wall - before.wall).as_secs_f64();
+        let toks = eng.metrics.tokens - before.tokens;
+        let ledger = eng.pool_ledger();
         println!(
-            "{:>10} {:>6.2} {:>3} {:>10} | {:>10} {:>8.2} {:>7}",
+            "{:>10} {:>6.2} {:>3} {:>10} | {:>10} {:>10} {:>10} | {:>8.2} \
+             {:>7} {:>7.1}ms",
             human_bytes(budget),
-            r.params.sp,
-            r.params.n_group,
-            human_bytes(r.params.cache_bytes),
-            human_bytes(mem.dram_total()),
-            eng.metrics.tokens_per_sec(),
-            eng.sparsity_tag(),
+            d.new_sp,
+            d.new_group,
+            human_bytes(d.cache_target),
+            human_bytes(ledger.cache_bytes),
+            human_bytes(ledger.preload_bytes),
+            human_bytes(ledger.compute_bytes),
+            toks as f64 / wall.max(1e-9),
+            d.evicted_rows,
+            d.settle.as_secs_f64() * 1e3,
         );
         assert!(
-            mem.dram_total() <= budget + geo.kv_bytes,
-            "engine exceeded its budget!"
+            ledger.cache_bytes <= d.cache_target,
+            "cache did not shrink to its target: {} > {}",
+            ledger.cache_bytes,
+            d.cache_target
         );
+        // end-to-end budget compliance (Eq 8 pools vs M_max): between
+        // requests the preload store must be drained, and the applied
+        // plan's pools — measured cache + the searched M_cl the slab cap
+        // protects + fixed KV — must fit the scripted budget
+        assert_eq!(
+            ledger.preload_bytes, 0,
+            "preload slabs must be retired between requests"
+        );
+        if d.applied {
+            assert!(
+                ledger.cache_bytes + d.m_cl + geo.kv_bytes <= budget,
+                "engine exceeded its budget: cache {} + M_cl {} + kv {} > {}",
+                ledger.cache_bytes,
+                d.m_cl,
+                geo.kv_bytes,
+                budget
+            );
+        }
     }
+
+    let m = &eng.metrics;
     println!(
-        "\nsame binary, same flash file — only the budget changed. \
-         (user-oblivious adaptive DRAM usage, paper §1)"
+        "\nsame engine, same flash file — only the budget moved underneath \
+         it. {} re-budgets applied ({} rows evicted, {} level switches, \
+         {:.1} ms total settle); decisions recorded: {}",
+        m.rebudgets_applied,
+        m.rebudget_rows_evicted,
+        m.level_switches,
+        m.rebudget_settle.as_secs_f64() * 1e3,
+        gov.decisions().len(),
     );
+    println!("(user-oblivious adaptive DRAM usage, paper §1 — now without \
+              engine restarts)");
     Ok(())
 }

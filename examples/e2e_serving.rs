@@ -14,6 +14,7 @@ use activeflow::cache::CachePolicy;
 use activeflow::device;
 use activeflow::engine::{EngineOptions, PreloadTrigger, SwapMode};
 use activeflow::flash::ClockMode;
+use activeflow::governor::GovernorConfig;
 use activeflow::server::{client_roundtrip, serve, ServerConfig};
 use activeflow::tokenizer;
 use activeflow::util::json::{num, obj, s, Value};
@@ -39,6 +40,9 @@ fn main() -> anyhow::Result<()> {
             bw_scale: 1.0,
         trigger: PreloadTrigger::FirstLayer,
         },
+        governor: GovernorConfig::default(),
+        initial_budget: None,
+        pressure_schedule: None,
     };
     let server = std::thread::spawn(move || serve(cfg));
 

@@ -1,0 +1,146 @@
+//! Governor re-budget bench: tokens/sec across a scripted DRAM budget
+//! step-down on ONE live engine (no restarts), plus the settle time of
+//! every re-budget. Writes `BENCH_governor.json` (override with
+//! `--out PATH`) so the perf trajectory of the live control loop is
+//! tracked the same way `BENCH_decode.json` tracks the decode hot path.
+//!
+//! Requires `make artifacts`; self-skips otherwise.
+
+mod support;
+
+use activeflow::cache::CachePolicy;
+use activeflow::costmodel::{self, Geometry};
+use activeflow::device;
+use activeflow::engine::{EngineOptions, PreloadTrigger, SwapEngine, SwapMode};
+use activeflow::flash::ClockMode;
+use activeflow::governor::{
+    DramGovernor, GovernorConfig, PressureSchedule, RebudgetTrigger,
+};
+use activeflow::layout::AwgfFile;
+use activeflow::tokenizer;
+use activeflow::util::human_bytes;
+use activeflow::util::json::{arr, num, obj, s};
+
+const TOKENS_PER_PHASE: u64 = 24;
+
+fn out_path() -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "../BENCH_governor.json".into())
+}
+
+fn main() {
+    let Some(dir) = support::artifacts_dir() else { return };
+    let cfg = activeflow::config::ArtifactConfig::load(&dir).unwrap();
+    let awgf = AwgfFile::open(&cfg.weights_file).unwrap();
+    let geo = Geometry::from_awgf(&awgf);
+    let dev = &device::PIXEL6;
+    let grid = [0.5, 0.6, 0.7, 0.8, 0.9];
+    let prompt = tokenizer::encode("the sparse model swaps active weights. ");
+
+    // budget staircase: 90% → 45% → 15% of the model on top of KV
+    let spec = [0.9, 0.45, 0.15]
+        .iter()
+        .enumerate()
+        .map(|(i, frac)| {
+            let b = geo.kv_bytes + (geo.model_bytes as f64 * frac) as u64;
+            format!("{}@{}", b, i as u64 * TOKENS_PER_PHASE)
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    let mut schedule = PressureSchedule::parse(&spec).unwrap();
+    let first_budget = schedule.steps()[0].budget;
+    let r0 = costmodel::search(dev, &geo, first_budget, 0.85, 1.0, &grid)
+        .expect("largest budget feasible");
+
+    let mut eng = SwapEngine::open(&dir, EngineOptions {
+        sparsity: r0.params.sp,
+        group_size: r0.params.n_group,
+        swap_mode: SwapMode::Preload,
+        cache_bytes: r0.params.cache_bytes,
+        cache_policy: CachePolicy::Contextual,
+        device: dev,
+        clock: ClockMode::Timed,
+        bw_scale: 1.0,
+        trigger: PreloadTrigger::FirstLayer,
+    })
+    .unwrap();
+    let mut gov =
+        DramGovernor::new(&eng, GovernorConfig::default(), first_budget);
+
+    println!("\n== bench: governor_rebudget ==");
+    println!(
+        "{:>10} {:>6} {:>3} {:>10} {:>8} {:>9} {:>7}",
+        "budget", "sp", "N", "cache", "tok/s", "settle", "evict"
+    );
+
+    let mut decoded = 0u64;
+    let mut phases = Vec::new();
+    while let Some(budget) = schedule.due(decoded) {
+        let d = gov
+            .set_budget(&mut eng, budget, RebudgetTrigger::Schedule)
+            .unwrap();
+        let before = eng.metrics.clone();
+        eng.generate(&prompt, TOKENS_PER_PHASE as usize, 0.0).unwrap();
+        decoded += TOKENS_PER_PHASE;
+        let wall = (eng.metrics.wall - before.wall).as_secs_f64();
+        let toks = eng.metrics.tokens - before.tokens;
+        let tps = toks as f64 / wall.max(1e-9);
+        let ledger = eng.pool_ledger();
+        assert!(
+            ledger.cache_bytes <= d.cache_target,
+            "cache above target after re-budget"
+        );
+        println!(
+            "{:>10} {:>6.2} {:>3} {:>10} {:>8.2} {:>7.1}ms {:>7}",
+            human_bytes(budget),
+            d.new_sp,
+            d.new_group,
+            human_bytes(d.cache_target),
+            tps,
+            d.settle.as_secs_f64() * 1e3,
+            d.evicted_rows
+        );
+        phases.push(obj(vec![
+            ("budget_bytes", num(budget as f64)),
+            ("applied", activeflow::util::json::Value::Bool(d.applied)),
+            ("sparsity", num(d.new_sp)),
+            ("group_size", num(d.new_group as f64)),
+            ("cache_target_bytes", num(d.cache_target as f64)),
+            ("slab_cap_bytes", num(d.slab_cap as f64)),
+            ("evicted_rows", num(d.evicted_rows as f64)),
+            ("settle_ms", num(d.settle.as_secs_f64() * 1e3)),
+            ("tokens_per_sec", num(tps)),
+            ("ledger_cache_bytes", num(ledger.cache_bytes as f64)),
+            ("ledger_preload_bytes", num(ledger.preload_bytes as f64)),
+            ("ledger_compute_bytes", num(ledger.compute_bytes as f64)),
+        ]));
+    }
+
+    let m = &eng.metrics;
+    let v = obj(vec![
+        ("bench", s("governor-rebudget")),
+        ("device", s(dev.name)),
+        ("tokens_per_phase", num(TOKENS_PER_PHASE as f64)),
+        ("phases", arr(phases)),
+        ("rebudgets_applied", num(m.rebudgets_applied as f64)),
+        ("rebudgets_skipped", num(m.rebudgets_skipped as f64)),
+        ("rebudget_rows_evicted", num(m.rebudget_rows_evicted as f64)),
+        ("level_switches", num(m.level_switches as f64)),
+        (
+            "rebudget_settle_ms",
+            num(m.rebudget_settle.as_secs_f64() * 1e3),
+        ),
+    ]);
+    let out = out_path();
+    let mut text = v.to_string();
+    text.push('\n');
+    std::fs::write(&out, &text).unwrap();
+    println!(
+        "governor bench: {} re-budgets on one live engine, {} rows \
+         evicted, {} level switches; wrote {out}",
+        m.rebudgets_applied, m.rebudget_rows_evicted, m.level_switches
+    );
+}

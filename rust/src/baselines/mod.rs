@@ -15,16 +15,17 @@
 //!   ablation floor (on-demand, no cache).
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::CachePolicy;
+use crate::cache::{CachePolicy, SharedCache, WeightCache};
 use crate::config::ArtifactConfig;
 use crate::device::DeviceProfile;
 use crate::engine::{EngineOptions, PreloadTrigger, SwapMode};
 use crate::flash::ClockMode;
-use crate::layout::{quant, AwgfFile, OpKind, SPARSE_OPS};
+use crate::layout::{quant, AwgfFile, OpKind, TensorId, SPARSE_OPS};
 use crate::metrics::DecodeMetrics;
 use crate::model::{self, DenseTensors, KvState};
 use crate::runtime::{lit_f32, lit_i32_scalar, lit_to_f32, Runtime};
@@ -119,12 +120,21 @@ pub fn serial_options(
 
 /// llama.cpp-like baseline: the whole (dequantized) model lives in DRAM;
 /// decode runs the fused `dense_layer` artifact per layer.
+///
+/// The resident weights live in the same [`WeightCache`] the swap engine
+/// uses (every tensor at full capacity, task-static so nothing ever
+/// evicts), and decode fetches them under the **same single-lock
+/// op-family discipline** as `SwapEngine::fetch_packed` — one counted
+/// `SharedCache` acquisition per family, batched bulk inserts at load.
+/// That makes the baseline's `cache_lock_acquires` / `cache_hits` /
+/// `cache_bytes` counters directly comparable to ActiveFlow's instead of
+/// reading zero (PERF.md).
 pub struct DenseInMemory {
     pub cfg: ArtifactConfig,
     rt: Runtime,
     dense: DenseTensors,
-    /// Per layer, per op: full [d_in, d_out] matrices.
-    weights: Vec<Vec<Vec<f32>>>,
+    /// Full-capacity resident store: one `TensorCache` per (layer, op).
+    cache: Arc<SharedCache>,
     kv: KvState,
     pub metrics: DecodeMetrics,
     pub load_seconds: f64,
@@ -139,12 +149,26 @@ impl DenseInMemory {
         let dense = DenseTensors::load(&awgf)?;
         let t0 = Instant::now();
 
-        // Bulk-load every sparse op dequantized (startup, not per-token).
+        // The resident store: every (layer, op) tensor at full capacity.
+        let mut dims = Vec::new();
+        for l in 0..awgf.model.n_layers {
+            for op in SPARSE_OPS {
+                let info = awgf.op(op);
+                dims.push((TensorId::new(l, op), info.d_in, info.d_out));
+            }
+        }
+        let cache = SharedCache::new(WeightCache::new(
+            &dims,
+            u64::MAX,
+            CachePolicy::TaskStatic,
+        ));
+
+        // Bulk-load every sparse op dequantized (startup, not per-token):
+        // one batched insert_rows per tensor under one lock — the same
+        // batched-insert discipline as the swap engine's fetch path.
         let file = std::fs::File::open(awgf.path())?;
         use std::os::unix::fs::FileExt;
-        let mut weights = Vec::with_capacity(awgf.model.n_layers);
         for l in 0..awgf.model.n_layers {
-            let mut per_op = Vec::with_capacity(SPARSE_OPS.len());
             for op in SPARSE_OPS {
                 let info = awgf.op(op);
                 let mut w = vec![0f32; info.d_in * info.d_out];
@@ -159,9 +183,14 @@ impl DenseInMemory {
                         &mut w[c * info.d_out..(c + 1) * info.d_out],
                     );
                 }
-                per_op.push(w);
+                let mut c = cache.lock();
+                c.insert_rows(
+                    TensorId::new(l, op),
+                    (0..info.d_in).map(|ch| {
+                        (ch, &w[ch * info.d_out..(ch + 1) * info.d_out])
+                    }),
+                );
             }
-            weights.push(per_op);
         }
         let load_seconds = t0.elapsed().as_secs_f64();
 
@@ -175,7 +204,7 @@ impl DenseInMemory {
             cfg,
             rt,
             dense,
-            weights,
+            cache,
             kv,
             metrics: DecodeMetrics::default(),
             load_seconds,
@@ -186,8 +215,35 @@ impl DenseInMemory {
         self.kv.reset();
     }
 
-    fn op(&self, l: usize, op: OpKind) -> &[f32] {
-        &self.weights[l][op.index()]
+    /// Fetch one op family's full matrices as literals under exactly
+    /// **one** counted `WeightCache` acquisition (PERF.md single-lock
+    /// fetch discipline, dense flavor: every channel is a cache hit, so
+    /// the family's literals are built straight off the contiguous
+    /// resident store — no copy into an intermediate packed buffer).
+    fn fetch_family(
+        &mut self,
+        layer: usize,
+        ops: &[OpKind],
+    ) -> Result<Vec<xla::Literal>> {
+        self.metrics.cache_lock_acquires += 1;
+        self.metrics.cache_locks_avoided += ops.len() as u64 - 1;
+        let mut guard = self.cache.lock();
+        let mut lits = Vec::with_capacity(ops.len());
+        for &op in ops {
+            let tc = guard.tensor_mut(TensorId::new(layer, op));
+            let (din, dout) = (tc.d_in, tc.row_len);
+            tc.hits += din as u64;
+            self.metrics.cache_hits += din as u64;
+            let bytes = (din * dout * 4) as u64;
+            self.metrics.cache_bytes += bytes;
+            // DRAM traffic: the full matrix streams to the ALU
+            self.metrics.dram_bytes += bytes;
+            lits.push(lit_f32(
+                tc.packed_rows(),
+                &[din as i64, dout as i64],
+            )?);
+        }
+        Ok(lits)
     }
 
     pub fn decode_token(&mut self, token: u32) -> Result<&[f32]> {
@@ -199,26 +255,31 @@ impl DenseInMemory {
         let t0 = Instant::now();
         let busy0 = self.rt.total_busy();
         let mut x = self.dense.embedding(&m, token).to_vec();
-        let (d, qd, dkv, dff, s) = (
+        let (d, dkv, s) = (
             m.d_model as i64,
-            m.q_dim() as i64,
             m.d_kv() as i64,
-            m.d_ff as i64,
             m.max_seq as i64,
         );
         for l in 0..m.n_layers {
+            // the same four op-family fetches per layer as the swap
+            // engine, each one lock acquisition
+            let qkv =
+                self.fetch_family(l, &[OpKind::Wq, OpKind::Wk, OpKind::Wv])?;
+            let o = self.fetch_family(l, &[OpKind::Wo])?;
+            let gu = self.fetch_family(l, &[OpKind::Wg, OpKind::Wu])?;
+            let down = self.fetch_family(l, &[OpKind::Wd])?;
             let kvl = &self.kv.layers[l];
             let out = self.rt.exec(
                 "dense_layer",
                 &[
                     lit_f32(&x, &[1, d])?,
-                    lit_f32(self.op(l, OpKind::Wq), &[d, qd])?,
-                    lit_f32(self.op(l, OpKind::Wk), &[d, dkv])?,
-                    lit_f32(self.op(l, OpKind::Wv), &[d, dkv])?,
-                    lit_f32(self.op(l, OpKind::Wo), &[qd, d])?,
-                    lit_f32(self.op(l, OpKind::Wg), &[d, dff])?,
-                    lit_f32(self.op(l, OpKind::Wu), &[d, dff])?,
-                    lit_f32(self.op(l, OpKind::Wd), &[dff, d])?,
+                    qkv[0].clone(),
+                    qkv[1].clone(),
+                    qkv[2].clone(),
+                    o[0].clone(),
+                    gu[0].clone(),
+                    gu[1].clone(),
+                    down[0].clone(),
                     lit_f32(&self.dense.g_attn[l], &[d])?,
                     lit_f32(&self.dense.g_mlp[l], &[d])?,
                     lit_f32(&kvl.k, &[s, dkv])?,
@@ -230,11 +291,6 @@ impl DenseInMemory {
             x.copy_from_slice(&self.tmp);
             lit_to_f32(&out[1], &mut self.kv.layers[l].k)?;
             lit_to_f32(&out[2], &mut self.kv.layers[l].v)?;
-            // DRAM traffic: the full layer's weights are streamed to the ALU
-            self.metrics.dram_bytes += self.weights[l]
-                .iter()
-                .map(|w| (w.len() * 4) as u64)
-                .sum::<u64>();
         }
         self.tmp.resize(m.d_model, 0.0);
         let mut xn = std::mem::take(&mut self.tmp);
@@ -284,11 +340,14 @@ impl DenseInMemory {
 
     /// Resident weight bytes (the llama.cpp memory cost in Fig 14).
     pub fn weight_bytes(&self) -> u64 {
-        self.weights
-            .iter()
-            .flat_map(|per| per.iter().map(|w| (w.len() * 4) as u64))
-            .sum::<u64>()
-            + self.dense.bytes()
+        self.cache.lock().bytes() + self.dense.bytes()
+    }
+
+    /// Total counted `WeightCache` acquisitions (single-lock discipline:
+    /// 4 per layer per token plus one bulk-insert lock per tensor at
+    /// load; comparable to `SwapEngine::cache_lock_acquires_total`).
+    pub fn cache_lock_acquires_total(&self) -> u64 {
+        self.cache.lock_acquires()
     }
 
     pub fn perplexity(&mut self, tokens: &[u32]) -> Result<f64> {

@@ -161,6 +161,67 @@ impl TensorCache {
         best
     }
 
+    /// Re-budget this tensor's capacity in place (runtime DRAM governor).
+    /// Growing keeps every resident row; shrinking evicts the
+    /// lowest-count channels until the survivors fit, compacting the
+    /// store so allocated bytes drop to the new capacity. Surviving rows
+    /// are moved verbatim — bit-identical contents, LFU counters intact.
+    /// Returns the number of evicted rows.
+    pub fn resize(&mut self, new_capacity: usize) -> usize {
+        let new_capacity = new_capacity.min(self.d_in);
+        if new_capacity == self.capacity {
+            return 0;
+        }
+        if new_capacity > self.capacity {
+            let used = self.used_slots * self.row_len;
+            let mut store = vec![0f32; new_capacity * self.row_len];
+            store[..used].copy_from_slice(&self.store[..used]);
+            self.store = store;
+            self.chan_of.resize(new_capacity, u32::MAX);
+            self.capacity = new_capacity;
+            return 0;
+        }
+        // Shrink: keep the highest-count residents (ties → lower channel,
+        // deterministic). Rebuild slot maps and compact the store.
+        let mut keep: Vec<(usize, usize)> = (0..self.used_slots)
+            .map(|slot| (slot, self.chan_of[slot] as usize))
+            .collect();
+        let counts = &self.counts;
+        keep.sort_by(|a, b| {
+            counts[b.1].cmp(&counts[a.1]).then(a.1.cmp(&b.1))
+        });
+        let survivors = keep.len().min(new_capacity);
+        let evicted = keep.len() - survivors;
+        let mut store = vec![0f32; new_capacity * self.row_len];
+        let mut chan_of = vec![u32::MAX; new_capacity];
+        for &(_, ch) in &keep {
+            self.slot_of[ch] = 0;
+        }
+        for (new_slot, &(old_slot, ch)) in
+            keep[..survivors].iter().enumerate()
+        {
+            store[new_slot * self.row_len..(new_slot + 1) * self.row_len]
+                .copy_from_slice(
+                    &self.store[old_slot * self.row_len
+                        ..(old_slot + 1) * self.row_len],
+                );
+            chan_of[new_slot] = ch as u32;
+            self.slot_of[ch] = (new_slot + 1) as u32;
+        }
+        self.store = store;
+        self.chan_of = chan_of;
+        self.used_slots = survivors;
+        self.capacity = new_capacity;
+        evicted
+    }
+
+    /// Contiguous resident rows in slot order. With full capacity and
+    /// channel-order inserts (the dense baseline's bulk load) this is the
+    /// whole `[d_in, d_out]` matrix.
+    pub fn packed_rows(&self) -> &[f32] {
+        &self.store[..self.used_slots * self.row_len]
+    }
+
     /// Sequence boundary: context-level counters restart (cached contents
     /// stay — only the recency signal resets).
     pub fn reset_context(&mut self) {
@@ -208,6 +269,17 @@ pub struct WeightCache {
     pub budget_bytes: u64,
 }
 
+/// The §4.2 balanced split, shared by construction and runtime resize so
+/// the two can never diverge: the fraction of each tensor's channels a
+/// byte budget affords when split proportionally to tensor size.
+fn balanced_frac(total_bytes: u64, budget_bytes: u64) -> f64 {
+    if total_bytes == 0 {
+        0.0
+    } else {
+        (budget_bytes as f64 / total_bytes as f64).min(1.0)
+    }
+}
+
 impl WeightCache {
     /// `tensor_dims`: (id, d_in, d_out_f32_len) for every cached tensor.
     pub fn new(
@@ -219,11 +291,7 @@ impl WeightCache {
             .iter()
             .map(|(_, din, dlen)| (din * dlen * 4) as u64)
             .sum();
-        let frac = if total == 0 {
-            0.0
-        } else {
-            (budget_bytes as f64 / total as f64).min(1.0)
-        };
+        let frac = balanced_frac(total, budget_bytes);
         let tensors = tensor_dims
             .iter()
             .map(|&(id, din, dlen)| {
@@ -283,6 +351,28 @@ impl WeightCache {
     /// Actual allocated bytes (≤ budget).
     pub fn bytes(&self) -> u64 {
         self.tensors.values().map(|t| t.bytes()).sum()
+    }
+
+    /// Re-budget the whole cache to `budget_bytes` (runtime DRAM
+    /// governor): the byte budget is re-split proportionally so every
+    /// tensor keeps caching the same *fraction* of its channels (§4.2
+    /// balanced split), then each [`TensorCache`] resizes in place —
+    /// shrink evicts its coldest rows, grow preserves everything.
+    /// Returns total evicted rows.
+    pub fn resize(&mut self, budget_bytes: u64) -> u64 {
+        let total: u64 = self
+            .tensors
+            .values()
+            .map(|t| (t.d_in * t.row_len * 4) as u64)
+            .sum();
+        let frac = balanced_frac(total, budget_bytes);
+        let mut evicted = 0u64;
+        for t in self.tensors.values_mut() {
+            let cap = (t.d_in as f64 * frac).floor() as usize;
+            evicted += t.resize(cap) as u64;
+        }
+        self.budget_bytes = budget_bytes;
+        evicted
     }
 }
 
@@ -536,6 +626,141 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn resize_shrink_evicts_cold_rows_keeps_survivors_intact() {
+        // Property (governor correctness): after a shrink the cache holds
+        // ≤ target rows, every surviving row is bit-identical to the
+        // reference content, and no evicted channel out-counts a survivor.
+        check("cache-resize-shrink", |g| {
+            let d = g.usize_in(4, 48);
+            let cap = g.usize_in(1, d);
+            let mut c = TensorCache::new(d, 2, cap, CachePolicy::Contextual);
+            let refrow = |ch: usize| [ch as f32, (ch * 7) as f32];
+            for _ in 0..g.usize_in(10, 300) {
+                let ch = g.usize_in(0, d - 1);
+                if c.lookup(ch).is_none() {
+                    c.insert(ch, &refrow(ch));
+                }
+            }
+            let new_cap = g.usize_in(0, d);
+            let before: Vec<usize> =
+                (0..d).filter(|&ch| c.contains(ch)).collect();
+            let evicted = c.resize(new_cap);
+            let after: Vec<usize> =
+                (0..d).filter(|&ch| c.contains(ch)).collect();
+            if c.resident_channels() > new_cap {
+                return Err("residents exceed new capacity".into());
+            }
+            if c.bytes() != (new_cap.min(d) * 2 * 4) as u64 {
+                return Err("allocated bytes != new capacity".into());
+            }
+            if evicted != before.len() - after.len() {
+                return Err("evicted count wrong".into());
+            }
+            for &ch in &after {
+                if !before.contains(&ch) {
+                    return Err(format!("resize invented channel {ch}"));
+                }
+                if c.peek(ch) != Some(&refrow(ch)[..]) {
+                    return Err(format!("survivor {ch} corrupted"));
+                }
+            }
+            // LFU discipline: survivors out-count (or tie) every evictee
+            let min_kept =
+                after.iter().map(|&ch| c.count_of(ch)).min().unwrap_or(0);
+            for &ch in before.iter().filter(|ch| !after.contains(ch)) {
+                if c.count_of(ch) > min_kept {
+                    return Err(format!(
+                        "evicted hot channel {ch} over a colder survivor"
+                    ));
+                }
+            }
+            // the shrunk cache keeps working: lookups + inserts stay sane
+            for _ in 0..20 {
+                let ch = g.usize_in(0, d - 1);
+                match c.lookup(ch) {
+                    Some(r) => {
+                        if r != refrow(ch) {
+                            return Err(format!("post-resize {ch} corrupt"));
+                        }
+                    }
+                    None => {
+                        c.insert(ch, &refrow(ch));
+                    }
+                }
+                if c.resident_channels() > new_cap {
+                    return Err("post-resize capacity exceeded".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn resize_grow_preserves_contents() {
+        let mut c = tc(2);
+        c.lookup(1);
+        c.insert(1, &row(1.0));
+        c.lookup(5);
+        c.insert(5, &row(5.0));
+        assert_eq!(c.resize(6), 0);
+        assert_eq!(c.capacity, 6);
+        assert_eq!(c.peek(1).unwrap(), &row(1.0)[..]);
+        assert_eq!(c.peek(5).unwrap(), &row(5.0)[..]);
+        // new headroom is usable
+        c.lookup(3);
+        assert!(c.insert(3, &row(3.0)));
+        assert_eq!(c.resident_channels(), 3);
+    }
+
+    #[test]
+    fn weight_cache_resize_rebalances_budget() {
+        let dims = vec![
+            (TensorId::new(0, OpKind::Wq), 128usize, 128usize),
+            (TensorId::new(0, OpKind::Wg), 128, 384),
+        ];
+        let total: u64 =
+            dims.iter().map(|(_, a, b)| (a * b * 4) as u64).sum();
+        let mut wc = WeightCache::new(&dims, total, CachePolicy::Contextual);
+        // warm every channel of both tensors
+        for (id, din, dlen) in &dims {
+            let row = vec![1.0f32; *dlen];
+            let t = wc.tensor_mut(*id);
+            for ch in 0..*din {
+                t.lookup(ch);
+                t.insert(ch, &row);
+            }
+        }
+        assert_eq!(wc.bytes(), total);
+        let evicted = wc.resize(total / 4);
+        assert!(wc.bytes() <= total / 4, "{} > {}", wc.bytes(), total / 4);
+        assert_eq!(wc.budget_bytes, total / 4);
+        // both tensors keep ~a quarter of their channels (balanced split)
+        for (id, din, _) in &dims {
+            let cap = wc.tensor(*id).capacity;
+            assert!(
+                (cap as f64 - *din as f64 / 4.0).abs() <= 1.0,
+                "cap {cap} not ~{}",
+                din / 4
+            );
+        }
+        assert_eq!(evicted as usize, 2 * 128 - 2 * 32);
+    }
+
+    #[test]
+    fn packed_rows_is_the_full_matrix_after_bulk_fill() {
+        // dense-baseline contract: channel-order fill at full capacity
+        // makes the store the whole [d_in, row_len] matrix in order
+        let mut c = TensorCache::new(4, 2, 4, CachePolicy::TaskStatic);
+        for ch in 0..4 {
+            c.insert(ch, &[ch as f32, ch as f32 + 0.5]);
+        }
+        assert_eq!(
+            c.packed_rows(),
+            &[0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5]
+        );
     }
 
     #[test]

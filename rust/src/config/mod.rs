@@ -168,6 +168,12 @@ pub struct RuntimeConfig {
     /// Scale flash bandwidth to emulate larger models on the tiny geometry
     /// (e.g. 0.02 ≈ Llama-7B-sized layers per DESIGN.md §1).
     pub bw_scale: f64,
+    /// Runtime DRAM governor: relative budget change below which a
+    /// `set_budget` event is ignored (anti-thrash hysteresis).
+    pub rebudget_hysteresis: f64,
+    /// Runtime DRAM governor: optional scripted pressure trace
+    /// (`"<size>@<token>,..."` — see [`crate::governor::PressureSchedule`]).
+    pub pressure_schedule: Option<String>,
 }
 
 impl Default for RuntimeConfig {
@@ -180,6 +186,8 @@ impl Default for RuntimeConfig {
             device: "pixel6".into(),
             timed_flash: true,
             bw_scale: 1.0,
+            rebudget_hysteresis: 0.05,
+            pressure_schedule: None,
         }
     }
 }
@@ -214,6 +222,13 @@ mod tests {
             c.name = n.into();
             c
         }
+    }
+
+    #[test]
+    fn runtime_defaults_include_governor_knobs() {
+        let rc = RuntimeConfig::default();
+        assert_eq!(rc.rebudget_hysteresis, 0.05);
+        assert!(rc.pressure_schedule.is_none());
     }
 
     #[test]

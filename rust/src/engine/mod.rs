@@ -39,12 +39,16 @@ use anyhow::{anyhow, Result};
 
 use crate::cache::{CachePolicy, SharedCache, TensorCache, WeightCache};
 use crate::config::{ArtifactConfig, RuntimeConfig, SparsityLevel};
+use crate::costmodel::Geometry;
 use crate::device;
 use crate::flash::{ClockMode, FlashDevice};
+use crate::governor::PoolLedger;
 use crate::layout::{quant, AwgfFile, OpKind, TensorId};
 use crate::metrics::DecodeMetrics;
 use crate::model::{self, DenseTensors, KvState};
-use crate::pipeline::{PartSlab, Pipeline, PreloadJob};
+use crate::pipeline::{
+    PartRequest, PartSlab, PartSpan, Pipeline, PreloadBatch,
+};
 use crate::preload::{ActSite, SimilarityTracker};
 use crate::runtime::{lit_f32, lit_i32_scalar, lit_to_f32, Runtime};
 use crate::sparsity;
@@ -111,6 +115,35 @@ struct Level {
     k_ff: usize,
 }
 
+/// Parameters the DRAM governor applies to a *live* engine (between
+/// requests — never mid-decode). Produced by the online §4.1 search in
+/// [`crate::governor`].
+#[derive(Debug, Clone, Copy)]
+pub struct RebudgetPlan {
+    /// Target sparsity; snapped to the nearest compiled artifact level.
+    pub sparsity: f64,
+    /// Cross-layer preload look-ahead depth (paper N).
+    pub group_size: usize,
+    /// New `WeightCache` byte budget (M_cache).
+    pub cache_bytes: u64,
+    /// Preload slab-store ceiling handed to the loader (M_cl headroom);
+    /// parts past it are dropped and served on-demand instead.
+    pub slab_cap_bytes: u64,
+}
+
+/// What applying a [`RebudgetPlan`] actually did.
+#[derive(Debug, Clone)]
+pub struct RebudgetOutcome {
+    /// Rows the cache shrink evicted.
+    pub evicted_rows: u64,
+    /// Wall time to apply (artifact compile + cache resize).
+    pub settle: Duration,
+    /// Active artifact tag after the switch (e.g. `sp70`).
+    pub level_tag: String,
+    /// Whether the sparsity level actually changed.
+    pub level_switched: bool,
+}
+
 pub struct SwapEngine {
     pub cfg: ArtifactConfig,
     pub opts: EngineOptions,
@@ -139,7 +172,9 @@ pub struct SwapEngine {
     packed2: Vec<f32>,
     packed3: Vec<f32>,
     idx: Vec<usize>,
-    pre_ops: [Vec<usize>; 3], // issue_preload's per-op filtered channels
+    /// issue_preload's per-op filtered spans: (lo, hi, channels) where
+    /// `layers[lo..hi]` is one on-flash layout-group partition.
+    pre_spans: [Vec<(usize, usize, Vec<usize>)>; 3],
     logits: Vec<f32>,
     tmp: Vec<f32>,
     ondemand: Vec<(usize, usize, usize)>, // (op slot in family, row slot, channel)
@@ -175,24 +210,7 @@ impl SwapEngine {
             opts.cache_policy,
         ));
 
-        let level = if opts.sparsity <= 0.0 {
-            Level {
-                tag: "dense".into(),
-                k_attn: m.d_model,
-                k_o: m.q_dim(),
-                k_ff: m.d_ff,
-            }
-        } else {
-            let lv: &SparsityLevel = cfg
-                .nearest_level(opts.sparsity)
-                .ok_or_else(|| anyhow!("no sparsity levels configured"))?;
-            Level {
-                tag: format!("sp{:02}", (lv.sp * 100.0).round() as u32),
-                k_attn: lv.k_attn,
-                k_o: lv.k_o,
-                k_ff: lv.k_ff,
-            }
-        };
+        let level = Self::resolve_level(&cfg, opts.sparsity)?;
 
         let mut rt = Runtime::new(artifact_dir)?;
         // Pre-compile the artifact set so first-token latency is clean.
@@ -228,7 +246,7 @@ impl SwapEngine {
             packed2: Vec::new(),
             packed3: Vec::new(),
             idx: Vec::new(),
-            pre_ops: [Vec::new(), Vec::new(), Vec::new()],
+            pre_spans: [Vec::new(), Vec::new(), Vec::new()],
             logits: vec![0.0; cfg.model.vocab_size],
             tmp: Vec::new(),
             ondemand: Vec::new(),
@@ -260,6 +278,103 @@ impl SwapEngine {
 
     pub fn model(&self) -> &crate::config::ModelConfig {
         &self.cfg.model
+    }
+
+    /// Snap `sparsity` to a compiled artifact level (`<= 0` → dense).
+    fn resolve_level(cfg: &ArtifactConfig, sparsity: f64) -> Result<Level> {
+        let m = &cfg.model;
+        if sparsity <= 0.0 {
+            return Ok(Level {
+                tag: "dense".into(),
+                k_attn: m.d_model,
+                k_o: m.q_dim(),
+                k_ff: m.d_ff,
+            });
+        }
+        let lv: &SparsityLevel = cfg
+            .nearest_level(sparsity)
+            .ok_or_else(|| anyhow!("no sparsity levels configured"))?;
+        Ok(Level {
+            tag: format!("sp{:02}", (lv.sp * 100.0).round() as u32),
+            k_attn: lv.k_attn,
+            k_o: lv.k_o,
+            k_ff: lv.k_ff,
+        })
+    }
+
+    /// Apply a governor re-budget to the **running** engine — no restart:
+    /// switch the active sparsity level across the compiled AWGF artifact
+    /// sets (pre-compiling the new set so the next decode pays nothing),
+    /// retune the preload look-ahead depth, shrink/grow the weight cache
+    /// in place, and hand the loader its new slab ceiling. Call between
+    /// requests only (decode numerics change with the level; a sequence
+    /// in flight would mix levels).
+    pub fn apply_plan(&mut self, plan: &RebudgetPlan) -> Result<RebudgetOutcome> {
+        let t0 = Instant::now();
+        let new_level = Self::resolve_level(&self.cfg, plan.sparsity)?;
+        let level_switched = new_level.tag != self.level.tag;
+        if level_switched {
+            for name in [
+                format!("qkv_{}", new_level.tag),
+                format!("o_{}", new_level.tag),
+                format!("gu_{}", new_level.tag),
+                format!("down_{}", new_level.tag),
+            ] {
+                self.rt.load(&name)?;
+            }
+            self.level = new_level;
+            self.metrics.level_switches += 1;
+        }
+        self.opts.sparsity = plan.sparsity;
+        self.opts.group_size = plan.group_size.max(1);
+        let evicted = self.cache.lock().resize(plan.cache_bytes);
+        self.opts.cache_bytes = plan.cache_bytes;
+        self.pipe.set_slab_cap(plan.slab_cap_bytes);
+        self.metrics.rebudget_rows_evicted += evicted;
+        Ok(RebudgetOutcome {
+            evicted_rows: evicted,
+            settle: t0.elapsed(),
+            level_tag: self.level.tag.clone(),
+            level_switched,
+        })
+    }
+
+    /// Cost-model geometry of the engine's weight file (governor input).
+    pub fn geometry(&self) -> Geometry {
+        Geometry::from_awgf(&self.awgf)
+    }
+
+    /// The loader's current preload slab-store ceiling
+    /// (`u64::MAX` = unthrottled).
+    pub fn slab_cap(&self) -> u64 {
+        self.pipe.slab_cap()
+    }
+
+    /// Live snapshot of the three DRAM pools the governor arbitrates.
+    pub fn pool_ledger(&self) -> PoolLedger {
+        PoolLedger {
+            cache_bytes: self.cache.lock().bytes(),
+            preload_bytes: self.pipe.stored_bytes(),
+            compute_bytes: self.dense.bytes()
+                + self.kv.bytes()
+                + self.scratch_bytes(),
+        }
+    }
+
+    /// Bytes held by the reusable decode scratch buffers (the
+    /// "computation-involved weights" pool beyond dense + KV).
+    fn scratch_bytes(&self) -> u64 {
+        ((self.h1.capacity()
+            + self.h2.capacity()
+            + self.xs.capacity()
+            + self.packed.capacity()
+            + self.packed2.capacity()
+            + self.packed3.capacity()
+            + self.logits.capacity()
+            + self.tmp.capacity()
+            + self.rowf32.capacity())
+            * 4
+            + self.rowbuf.capacity()) as u64
     }
 
     /// Decode one token; returns the logits slice.
@@ -492,16 +607,19 @@ impl SwapEngine {
     /// `Arc` is shared across the site's ops — no per-op `Vec` clones and
     /// no activation copy.
     ///
-    /// Channels already cache-resident for every next-group layer are
-    /// filtered out **per op** here, under one brief containment-only
+    /// Channels already cache-resident are filtered out **per op and per
+    /// layout-group partition** here, under one brief containment-only
     /// lock — this is what keeps the **loader** entirely cache-free, so a
     /// fetch that waits on the pipeline while holding the cache guard can
-    /// never slow the loader down (PERF.md). When sibling ops' filtered
-    /// lists coincide (the common case: residency rarely diverges within
-    /// a site) they share one `Arc`; a diverged op gets its own. This
-    /// matches the loader's old per-op filter except when a runtime group
-    /// straddles on-flash layout groups (the old pass filtered per
-    /// partition; this one per whole group — see ROADMAP).
+    /// never slow the loader down (PERF.md). Partition granularity
+    /// matters when a runtime group straddles on-flash layout groups: a
+    /// channel resident for all layers of one partition but not the
+    /// other is dropped from the first partition's reads only, matching
+    /// the old loader-side per-partition pass instead of issuing
+    /// avoidable reads (ROADMAP). When sibling ops' filtered span lists
+    /// coincide (the common case: residency rarely diverges within a
+    /// site) they share the same channel `Arc`s; a diverged op gets its
+    /// own. All parts of the site leave as **one** loader message.
     fn issue_preload(
         &mut self,
         seq: Option<u64>,
@@ -513,43 +631,81 @@ impl SwapEngine {
         {
             let cache = self.cache.lock();
             for (oi, &op) in ops.iter().enumerate() {
-                let list = &mut self.pre_ops[oi];
-                list.clear();
-                // hoist the per-(op, layer) tensor refs out of the channel
-                // loop: k channels cost k·layers contains() bit-checks,
-                // not k·layers BTreeMap walks, while the lock is held
-                let tcs: Vec<&TensorCache> = layers
-                    .iter()
-                    .map(|&l| cache.tensor(TensorId::new(l, op)))
-                    .collect();
-                for &ch in &self.idx {
-                    if !tcs.iter().all(|t| t.contains(ch)) {
-                        list.push(ch);
+                let mut n_spans = 0usize;
+                let mut lo = 0usize;
+                // partition the runtime group by on-flash layout group
+                while lo < layers.len() {
+                    let g0 = self.awgf.group_of(op, layers[lo]);
+                    let mut hi = lo + 1;
+                    while hi < layers.len()
+                        && self.awgf.group_of(op, layers[hi]) == g0
+                    {
+                        hi += 1;
                     }
+                    // hoist the per-(op, layer) tensor refs out of the
+                    // channel loop: k channels cost k·layers contains()
+                    // bit-checks, not k·layers BTreeMap walks, while the
+                    // lock is held
+                    let tcs: Vec<&TensorCache> = layers[lo..hi]
+                        .iter()
+                        .map(|&l| cache.tensor(TensorId::new(l, op)))
+                        .collect();
+                    let spans = &mut self.pre_spans[oi];
+                    if n_spans == spans.len() {
+                        spans.push((lo, hi, Vec::new()));
+                    } else {
+                        spans[n_spans].0 = lo;
+                        spans[n_spans].1 = hi;
+                        spans[n_spans].2.clear();
+                    }
+                    let list = &mut spans[n_spans].2;
+                    for &ch in &self.idx {
+                        if !tcs.iter().all(|t| t.contains(ch)) {
+                            list.push(ch);
+                        }
+                    }
+                    n_spans += 1;
+                    lo = hi;
                 }
+                self.pre_spans[oi].truncate(n_spans);
             }
         }
-        // always send, even with an empty channel list: the next group's
-        // fetch waits on this part's completion mark
-        let mut arcs: [Option<Arc<[usize]>>; 3] = [None, None, None];
+        // always send, even with empty channel lists: the next group's
+        // fetch waits on each part's completion mark. One message carries
+        // every op of the site (formerly one send per op).
+        let mut parts: Vec<PartRequest> = Vec::with_capacity(ops.len());
         for (oi, &op) in ops.iter().enumerate() {
-            let channels = match (0..oi)
-                .find(|&pj| self.pre_ops[pj] == self.pre_ops[oi])
+            let spans: Vec<PartSpan> = match (0..oi)
+                .find(|&pj| self.pre_spans[pj] == self.pre_spans[oi])
             {
-                Some(pj) => arcs[pj].clone().unwrap(),
-                None => Arc::from(self.pre_ops[oi].as_slice()),
+                Some(pj) => parts[pj].spans.clone(),
+                None => self.pre_spans[oi]
+                    .iter()
+                    .map(|&(lo, hi, ref list)| PartSpan {
+                        lo,
+                        hi,
+                        channels: Arc::from(list.as_slice()),
+                    })
+                    .collect(),
             };
-            let skipped_cached = ((self.idx.len() - self.pre_ops[oi].len())
-                * layers.len()) as u64;
-            self.pipe.request(PreloadJob {
-                seq,
+            let skipped_cached: u64 = spans
+                .iter()
+                .map(|s| {
+                    ((self.idx.len() - s.channels.len()) * (s.hi - s.lo))
+                        as u64
+                })
+                .sum();
+            parts.push(PartRequest {
                 op,
-                layers: layers.clone(),
-                channels: channels.clone(),
+                spans,
                 skipped_cached,
             });
-            arcs[oi] = Some(channels);
         }
+        self.pipe.request(PreloadBatch {
+            seq,
+            layers: layers.clone(),
+            parts,
+        });
     }
 
     /// Gather the packed weight matrices `W[idx, :]` for every op of one

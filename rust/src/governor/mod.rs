@@ -1,0 +1,455 @@
+//! Runtime DRAM governor (paper §4.1 made *live*): re-budgets a running
+//! [`SwapEngine`] when the available DRAM changes, without restarting it.
+//!
+//! The paper's third technique "orchestrates the DRAM space allocation
+//! among the hot weight cache, preloaded active weights, and
+//! computation-involved weights based on available memory". Before this
+//! module that orchestration was a one-shot startup search; a phone's free
+//! DRAM moves while the app runs, so the governor owns a **ledger** of the
+//! three pools and replays the §4.1 search online:
+//!
+//! ```text
+//!   pools (Eq 8):   M = M_cl (preload slabs) + M_cache + M_compute
+//!   event           {"cmd":"set_budget"} | PressureSchedule step
+//!        │
+//!        ▼
+//!   hysteresis gate ── small relative change → record + skip
+//!        │
+//!        ▼
+//!   costmodel::search(M_max') → (sp, N, M_cache')
+//!        │
+//!        ▼
+//!   SwapEngine::apply_plan:
+//!     · WeightCache::resize — evict down to the new cache target
+//!     · preload slab cap    — loader drops parts past the M_cl ceiling
+//!     · group size N        — preload look-ahead depth
+//!     · sparsity level      — switch the active AWGF artifact set
+//! ```
+//!
+//! Every decision (old→new pools, trigger, settle time) is recorded and
+//! surfaced through [`DecodeMetrics`](crate::metrics::DecodeMetrics) and
+//! the server `stats` command.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::costmodel::{self, Geometry};
+use crate::device::DeviceProfile;
+use crate::engine::{RebudgetPlan, SwapEngine};
+
+/// Snapshot of the three DRAM pools the governor arbitrates (paper Eq 8).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolLedger {
+    /// Hot weight cache: `WeightCache` allocated bytes (M_cache).
+    pub cache_bytes: u64,
+    /// In-flight preloaded active weights: live part-slab bytes (M_cl).
+    pub preload_bytes: u64,
+    /// Computation-involved bytes: dense tensors + KV state + engine
+    /// scratch (packed matrices, activations, row buffers).
+    pub compute_bytes: u64,
+}
+
+impl PoolLedger {
+    pub fn total(&self) -> u64 {
+        self.cache_bytes + self.preload_bytes + self.compute_bytes
+    }
+}
+
+/// What caused a re-budget attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebudgetTrigger {
+    /// Server `{"cmd":"set_budget"}`.
+    Command,
+    /// A [`PressureSchedule`] step fired.
+    Schedule,
+    /// Direct library call (examples, tests).
+    Manual,
+}
+
+impl RebudgetTrigger {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RebudgetTrigger::Command => "command",
+            RebudgetTrigger::Schedule => "schedule",
+            RebudgetTrigger::Manual => "manual",
+        }
+    }
+}
+
+/// One re-budget decision, applied or not. The full history is kept by the
+/// governor; the newest entry backs the server `stats` fields.
+#[derive(Debug, Clone)]
+pub struct RebudgetDecision {
+    pub trigger: RebudgetTrigger,
+    pub old_budget: u64,
+    pub new_budget: u64,
+    pub old_pools: PoolLedger,
+    pub new_pools: PoolLedger,
+    pub old_sp: f64,
+    pub new_sp: f64,
+    pub old_group: usize,
+    pub new_group: usize,
+    /// Cache byte target the search assigned (M_cache').
+    pub cache_target: u64,
+    /// The search's per-group preload bytes (Eq 9 M_cl; 0 when the
+    /// decision was not applied).
+    pub m_cl: u64,
+    /// Preload slab ceiling handed to the loader (M_cl × headroom).
+    pub slab_cap: u64,
+    /// Rows evicted by the cache shrink.
+    pub evicted_rows: u64,
+    /// Wall time to apply the plan (artifact switch + cache resize).
+    pub settle: Duration,
+    /// False when the hysteresis gate or an infeasible budget stopped the
+    /// re-budget; the engine keeps its previous configuration.
+    pub applied: bool,
+    /// "applied" | "hysteresis" | "infeasible".
+    pub note: &'static str,
+}
+
+/// Governor knobs. Defaults follow the paper's search inputs.
+#[derive(Debug, Clone)]
+pub struct GovernorConfig {
+    /// Fallback cross-layer similarity for the search before the engine
+    /// has measured any (paper uses ~0.85 for 7B-class models).
+    pub similarity: f64,
+    /// Sparsity grid the search snaps to (must match compiled artifacts).
+    pub sp_grid: Vec<f64>,
+    /// Hysteresis: relative budget change below which a re-budget is
+    /// skipped (avoids thrashing the cache on noisy pressure signals).
+    pub hysteresis: f64,
+    /// Preload-slab ceiling as a multiple of the searched M_cl (current
+    /// group + the next one in flight).
+    pub slab_headroom: f64,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            similarity: 0.85,
+            sp_grid: vec![0.5, 0.6, 0.7, 0.8, 0.9],
+            hysteresis: 0.05,
+            slab_headroom: 2.0,
+        }
+    }
+}
+
+impl GovernorConfig {
+    pub fn from_runtime(rc: &crate::config::RuntimeConfig) -> GovernorConfig {
+        GovernorConfig {
+            hysteresis: rc.rebudget_hysteresis,
+            ..GovernorConfig::default()
+        }
+    }
+}
+
+/// The live re-budgeting control loop around one [`SwapEngine`].
+pub struct DramGovernor {
+    cfg: GovernorConfig,
+    geo: Geometry,
+    device: &'static DeviceProfile,
+    bw_scale: f64,
+    /// Last budget a decision was *applied* for (M_max).
+    budget: u64,
+    applied_once: bool,
+    decisions: Vec<RebudgetDecision>,
+}
+
+impl DramGovernor {
+    /// Build a governor for `engine`, assuming `initial_budget` bytes of
+    /// DRAM (typically the device's physical DRAM until the first
+    /// `set_budget` arrives).
+    pub fn new(
+        engine: &SwapEngine,
+        cfg: GovernorConfig,
+        initial_budget: u64,
+    ) -> DramGovernor {
+        DramGovernor {
+            cfg,
+            geo: engine.geometry(),
+            device: engine.opts.device,
+            bw_scale: engine.opts.bw_scale,
+            budget: initial_budget,
+            applied_once: false,
+            decisions: Vec::new(),
+        }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    pub fn decisions(&self) -> &[RebudgetDecision] {
+        &self.decisions
+    }
+
+    pub fn last_decision(&self) -> Option<&RebudgetDecision> {
+        self.decisions.last()
+    }
+
+    /// Handle a budget-change event: gate on hysteresis, re-run the §4.1
+    /// search under the new `M_max`, and apply `(sp, N, cache)` to the
+    /// running engine. Must be called between requests (it takes the
+    /// engine mutably; a decode is never in flight). Returns the recorded
+    /// decision — `applied == false` means the engine was left untouched.
+    pub fn set_budget(
+        &mut self,
+        engine: &mut SwapEngine,
+        bytes: u64,
+        trigger: RebudgetTrigger,
+    ) -> Result<RebudgetDecision> {
+        let old_pools = engine.pool_ledger();
+        let old_sp = engine.opts.sparsity;
+        let old_group = engine.opts.group_size;
+        let mut d = RebudgetDecision {
+            trigger,
+            old_budget: self.budget,
+            new_budget: bytes,
+            old_pools,
+            new_pools: old_pools,
+            old_sp,
+            new_sp: old_sp,
+            old_group,
+            new_group: old_group,
+            cache_target: engine.opts.cache_bytes,
+            m_cl: 0,
+            // skipped decisions report the engine's *current* ceiling,
+            // not a sentinel
+            slab_cap: engine.slab_cap(),
+            evicted_rows: 0,
+            settle: Duration::ZERO,
+            applied: false,
+            note: "applied",
+        };
+
+        // Hysteresis: once a configuration is in place, ignore wiggle.
+        // The reference point is the last *applied* budget, so repeated
+        // small steps in one direction accumulate and eventually pass.
+        let rel = (bytes as f64 - self.budget as f64).abs()
+            / self.budget.max(1) as f64;
+        if self.applied_once && rel < self.cfg.hysteresis {
+            d.note = "hysteresis";
+            engine.metrics.rebudgets_skipped += 1;
+            self.decisions.push(d.clone());
+            return Ok(d);
+        }
+
+        // Online §4.1 search under the new M_max. Similarity comes from
+        // the engine's own tracker once it has observed real activations.
+        let measured_si = engine.tracker.avg_precision();
+        let si = if measured_si > 0.0 {
+            measured_si
+        } else {
+            self.cfg.similarity
+        };
+        let Some(r) = costmodel::search(
+            self.device,
+            &self.geo,
+            bytes,
+            si,
+            self.bw_scale,
+            &self.cfg.sp_grid,
+        ) else {
+            // Below the sparsest servable configuration: keep running the
+            // old parameters (we cannot do better than max sparsity) and
+            // record the refusal.
+            d.note = "infeasible";
+            engine.metrics.rebudgets_skipped += 1;
+            self.decisions.push(d.clone());
+            return Ok(d);
+        };
+
+        let slab_cap =
+            (r.cost.m_cl as f64 * self.cfg.slab_headroom).ceil() as u64;
+        let plan = RebudgetPlan {
+            sparsity: r.params.sp,
+            group_size: r.params.n_group,
+            cache_bytes: r.params.cache_bytes,
+            slab_cap_bytes: slab_cap.max(1),
+        };
+        let outcome = engine.apply_plan(&plan)?;
+
+        d.new_sp = r.params.sp;
+        d.new_group = r.params.n_group;
+        d.cache_target = r.params.cache_bytes;
+        d.m_cl = r.cost.m_cl;
+        d.slab_cap = plan.slab_cap_bytes;
+        d.evicted_rows = outcome.evicted_rows;
+        d.settle = outcome.settle;
+        d.new_pools = engine.pool_ledger();
+        d.applied = true;
+        self.budget = bytes;
+        self.applied_once = true;
+        engine.metrics.rebudgets_applied += 1;
+        engine.metrics.rebudget_settle += outcome.settle;
+        self.decisions.push(d.clone());
+        Ok(d)
+    }
+}
+
+// ===================================================== pressure schedule
+
+/// One step of a scripted memory-pressure trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PressureStep {
+    /// Fire once the engine has decoded at least this many tokens.
+    pub at_token: u64,
+    /// New DRAM budget in bytes.
+    pub budget: u64,
+}
+
+/// Scriptable pressure schedule for benches, examples, and `serve
+/// --pressure`: a list of `(budget, token)` steps parsed from
+/// `"<size>@<token>[,...]"`, e.g. `"48mb@0,24mb@32,12mb@64"`. Sizes
+/// accept `b`/`kb`/`mb`/`gb` suffixes (binary: 1kb = 1024,
+/// case-insensitive) or raw byte counts.
+#[derive(Debug, Clone, Default)]
+pub struct PressureSchedule {
+    steps: Vec<PressureStep>,
+    next: usize,
+}
+
+impl PressureSchedule {
+    pub fn new(mut steps: Vec<PressureStep>) -> PressureSchedule {
+        steps.sort_by_key(|s| s.at_token);
+        PressureSchedule { steps, next: 0 }
+    }
+
+    pub fn parse(spec: &str) -> Result<PressureSchedule> {
+        let mut steps = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (size, at) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow!("bad pressure step '{part}' \
+                                        (want <size>@<token>)"))?;
+            steps.push(PressureStep {
+                at_token: at.trim().parse::<u64>().map_err(|_| {
+                    anyhow!("bad token index '{at}' in '{part}'")
+                })?,
+                budget: parse_bytes(size.trim())?,
+            });
+        }
+        if steps.is_empty() {
+            return Err(anyhow!("empty pressure schedule '{spec}'"));
+        }
+        Ok(PressureSchedule::new(steps))
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn steps(&self) -> &[PressureStep] {
+        &self.steps
+    }
+
+    /// The next budget whose step time has passed, if any. Consuming:
+    /// each step fires once. When several steps are overdue the *latest*
+    /// wins (the intermediate budgets were never observed).
+    pub fn due(&mut self, tokens_decoded: u64) -> Option<u64> {
+        let mut fired = None;
+        while self.next < self.steps.len()
+            && self.steps[self.next].at_token <= tokens_decoded
+        {
+            fired = Some(self.steps[self.next].budget);
+            self.next += 1;
+        }
+        fired
+    }
+}
+
+/// Parse `"123"`, `"64kb"`, `"1536mb"`, `"2gb"` into bytes (binary
+/// suffixes — 1kb = 1024, 1mb = 2^20 — case-insensitive, fractional
+/// values allowed: `"1.5gb"`).
+pub fn parse_bytes(s: &str) -> Result<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(n) = t.strip_suffix("gb") {
+        (n, 1u64 << 30)
+    } else if let Some(n) = t.strip_suffix("mb") {
+        (n, 1u64 << 20)
+    } else if let Some(n) = t.strip_suffix("kb") {
+        (n, 1u64 << 10)
+    } else if let Some(n) = t.strip_suffix('b') {
+        (n, 1)
+    } else {
+        (t.as_str(), 1)
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("bad byte size '{s}'"))?;
+    if v < 0.0 {
+        return Err(anyhow!("negative byte size '{s}'"));
+    }
+    Ok((v * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_totals() {
+        let l = PoolLedger {
+            cache_bytes: 100,
+            preload_bytes: 20,
+            compute_bytes: 3,
+        };
+        assert_eq!(l.total(), 123);
+    }
+
+    #[test]
+    fn parse_bytes_suffixes() {
+        assert_eq!(parse_bytes("123").unwrap(), 123);
+        assert_eq!(parse_bytes("123b").unwrap(), 123);
+        assert_eq!(parse_bytes("64kb").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("2MB").unwrap(), 2 << 20);
+        assert_eq!(parse_bytes("1gb").unwrap(), 1 << 30);
+        assert_eq!(parse_bytes("1.5gb").unwrap(), 3 << 29);
+        assert!(parse_bytes("x").is_err());
+        assert!(parse_bytes("-4kb").is_err());
+    }
+
+    #[test]
+    fn schedule_parse_and_order() {
+        let mut s =
+            PressureSchedule::parse("24mb@32, 48mb@0 ,12mb@64").unwrap();
+        assert_eq!(s.len(), 3);
+        // sorted by token regardless of spec order
+        assert_eq!(s.steps()[0], PressureStep {
+            at_token: 0,
+            budget: 48 << 20
+        });
+        assert_eq!(s.due(0), Some(48 << 20));
+        assert_eq!(s.due(10), None, "no step due between 0 and 32");
+        assert_eq!(s.due(40), Some(24 << 20));
+        assert_eq!(s.due(64), Some(12 << 20));
+        assert_eq!(s.due(1000), None, "steps fire once");
+    }
+
+    #[test]
+    fn schedule_overdue_steps_collapse_to_latest() {
+        let mut s = PressureSchedule::parse("48mb@0,24mb@8,12mb@16").unwrap();
+        // the engine decoded straight past two steps: only the newest
+        // budget matters
+        assert_eq!(s.due(100), Some(12 << 20));
+        assert_eq!(s.due(101), None);
+    }
+
+    #[test]
+    fn schedule_rejects_garbage() {
+        assert!(PressureSchedule::parse("").is_err());
+        assert!(PressureSchedule::parse("12mb").is_err());
+        assert!(PressureSchedule::parse("@12").is_err());
+        assert!(PressureSchedule::parse("12mb@x").is_err());
+    }
+}

@@ -25,6 +25,7 @@ pub mod costmodel;
 pub mod runtime;
 pub mod model;
 pub mod engine;
+pub mod governor;
 pub mod baselines;
 pub mod bench;
 pub mod server;

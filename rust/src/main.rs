@@ -3,7 +3,8 @@
 //! ```text
 //! activeflow generate --prompt "..." --n 32 --sp 0.6 --group 4
 //! activeflow eval     --sp 0.6 --windows 4
-//! activeflow serve    --addr 127.0.0.1:7071 --sp 0.6
+//! activeflow serve    --addr 127.0.0.1:7071 --sp 0.6 [--budget-mb N]
+//!                     [--rebudget-hysteresis F] [--pressure SIZE@TOK,..]
 //! activeflow search   --device pixel6 --budget-mb 1500 --geometry llama7b
 //! activeflow inspect  devices|artifacts|weights
 //! activeflow bench    <pareto|e2e|ablation|flash|preload-tradeoff|
@@ -26,6 +27,7 @@ use activeflow::costmodel;
 use activeflow::device;
 use activeflow::engine::{EngineOptions, PreloadTrigger, SwapEngine, SwapMode};
 use activeflow::flash::ClockMode;
+use activeflow::governor::GovernorConfig;
 use activeflow::layout::AwgfFile;
 use activeflow::metrics;
 use activeflow::server::{serve, ServerConfig};
@@ -192,10 +194,25 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let opts = engine_options(args)?;
+    // --budget-mb: hand the runtime DRAM governor an initial M_max; the
+    // startup search overrides --sp/--group/--cache-kb with its result.
+    let initial_budget = match args.opt_usize("budget-mb", 0)? {
+        0 => None,
+        mb => Some((mb as u64) << 20),
+    };
+    // governor knobs flow through RuntimeConfig so CLI and file-driven
+    // configs share one source of defaults
+    let mut rc = RuntimeConfig::default();
+    rc.rebudget_hysteresis =
+        args.opt_f64("rebudget-hysteresis", rc.rebudget_hysteresis)?;
+    rc.pressure_schedule = args.opt("pressure").map(String::from);
     let cfg = ServerConfig {
         addr: args.opt_or("addr", "127.0.0.1:7071"),
         artifact_dir: artifact_dir(args),
         opts,
+        governor: GovernorConfig::from_runtime(&rc),
+        initial_budget,
+        pressure_schedule: rc.pressure_schedule.clone(),
     };
     let served = serve(cfg)?;
     println!("[server] shut down after {served} requests");

@@ -42,6 +42,17 @@ pub struct DecodeMetrics {
     pub ondemand_coalesced_runs: u64,
     /// High-water mark of the preload slab store (M_cl peak, bytes).
     pub slab_bytes_peak: u64,
+    // ---- runtime DRAM governor counters (governor module)
+    /// Re-budget decisions applied to the live engine.
+    pub rebudgets_applied: u64,
+    /// Re-budget events gated off (hysteresis) or infeasible.
+    pub rebudgets_skipped: u64,
+    /// Rows evicted by governor-driven cache shrinks.
+    pub rebudget_rows_evicted: u64,
+    /// Active-sparsity-level artifact switches.
+    pub level_switches: u64,
+    /// Total wall time spent applying re-budget plans.
+    pub rebudget_settle: Duration,
 }
 
 impl DecodeMetrics {
@@ -89,6 +100,11 @@ impl DecodeMetrics {
         self.ondemand_coalesced_runs += other.ondemand_coalesced_runs;
         // a peak merges as a max, not a sum
         self.slab_bytes_peak = self.slab_bytes_peak.max(other.slab_bytes_peak);
+        self.rebudgets_applied += other.rebudgets_applied;
+        self.rebudgets_skipped += other.rebudgets_skipped;
+        self.rebudget_rows_evicted += other.rebudget_rows_evicted;
+        self.level_switches += other.level_switches;
+        self.rebudget_settle += other.rebudget_settle;
     }
 }
 
@@ -193,6 +209,11 @@ mod tests {
         b.ondemand_rows = 2;
         b.ondemand_coalesced_runs = 2;
         b.slab_bytes_peak = 1024;
+        b.rebudgets_applied = 2;
+        b.rebudgets_skipped = 1;
+        b.rebudget_rows_evicted = 7;
+        b.level_switches = 1;
+        b.rebudget_settle = Duration::from_millis(3);
         a.merge(&b);
         assert_eq!(a.cache_lock_acquires, 10);
         assert_eq!(a.cache_locks_avoided, 15);
@@ -200,6 +221,11 @@ mod tests {
         assert_eq!(a.ondemand_rows, 5);
         assert_eq!(a.ondemand_coalesced_runs, 3);
         assert_eq!(a.slab_bytes_peak, 4096, "peak is a max, not a sum");
+        assert_eq!(a.rebudgets_applied, 2);
+        assert_eq!(a.rebudgets_skipped, 1);
+        assert_eq!(a.rebudget_rows_evicted, 7);
+        assert_eq!(a.level_switches, 1);
+        assert_eq!(a.rebudget_settle, Duration::from_millis(3));
     }
 
     #[test]

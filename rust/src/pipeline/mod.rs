@@ -25,6 +25,7 @@
 //! bundling (arXiv 2312.11514): rows land in their packed layout in place.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -38,32 +39,75 @@ use crate::layout::{quant, AwgfFile, OpKind};
 /// Key of a preload part: (monotonic group sequence number, op family).
 pub type PartKey = (u64, OpKind);
 
-/// One preload job: fetch `channels` of `op` for every layer in `layers`
-/// (a runtime layer group, sequence number `seq`). The loader maps runtime
-/// layers onto the file's fixed layout groups — a runtime group smaller
-/// than the on-flash group reads only the contiguous sub-span of each
-/// chunk covering the requested layers.
-///
-/// `layers` and `channels` are shared slices: sibling ops of one site
-/// (Wq/Wk/Wv) clone the same `Arc<[usize]>` pointers whenever their
-/// filtered channel lists coincide — no per-op `Vec` copies.
-///
-/// The **issuer** filters out channels that are already cache-resident
-/// for the op (engine: one brief containment-only lock per site) — the
-/// loader itself never touches the weight cache, which is what makes the
-/// engine's wait-under-guard fetch path safe (PERF.md). `skipped_cached`
-/// carries the per-op filtered row count so `LoaderStats` keeps its
-/// historical meaning.
-pub struct PreloadJob {
-    pub seq: u64,
-    pub op: OpKind,
-    pub layers: Arc<[usize]>,
+/// One on-flash layout-group partition of a part request: the channels to
+/// load for `layers[lo..hi]` of the owning batch. The **issuer** filters
+/// cache-resident channels *per partition* (engine: one brief
+/// containment-only lock per site) — a channel resident for every layer
+/// of one partition but missing somewhere in another is read only where
+/// it is actually needed. The loader itself never touches the weight
+/// cache, which is what makes the engine's wait-under-guard fetch path
+/// safe (PERF.md).
+#[derive(Debug, Clone)]
+pub struct PartSpan {
+    /// Start index (inclusive) into the batch's `layers`.
+    pub lo: usize,
+    /// End index (exclusive) into the batch's `layers`.
+    pub hi: usize,
+    /// Filtered channels to load for this partition's layers.
     pub channels: Arc<[usize]>,
+}
+
+/// One preload part: fetch one op family's spans for the batch's layer
+/// group. `skipped_cached` carries the filtered row count so
+/// `LoaderStats` keeps its historical meaning.
+#[derive(Debug, Clone)]
+pub struct PartRequest {
+    pub op: OpKind,
+    pub spans: Vec<PartSpan>,
     pub skipped_cached: u64,
 }
 
+/// One preload **batch**: every op part of one activation site for the
+/// upcoming runtime layer group `seq`, delivered to the loader as a
+/// single channel message (formerly one send per op — 3 for Wq/Wk/Wv).
+/// Sibling parts whose filtered span lists coincide share the same
+/// channel `Arc`s — no per-op `Vec` copies.
+pub struct PreloadBatch {
+    pub seq: u64,
+    /// The runtime group's layers, shared by every part.
+    pub layers: Arc<[usize]>,
+    pub parts: Vec<PartRequest>,
+}
+
+impl PreloadBatch {
+    /// Single-part convenience (tests, hand-built requests): one op, one
+    /// span covering the whole group.
+    pub fn single(
+        seq: u64,
+        layers: Arc<[usize]>,
+        op: OpKind,
+        channels: Arc<[usize]>,
+        skipped_cached: u64,
+    ) -> PreloadBatch {
+        let hi = layers.len();
+        PreloadBatch {
+            seq,
+            layers,
+            parts: vec![PartRequest {
+                op,
+                spans: vec![PartSpan {
+                    lo: 0,
+                    hi,
+                    channels,
+                }],
+                skipped_cached,
+            }],
+        }
+    }
+}
+
 enum Msg {
-    Job(PreloadJob),
+    Batch(PreloadBatch),
     Stop,
 }
 
@@ -98,6 +142,19 @@ impl PartSlab {
         let mut channels = channels.to_vec();
         channels.sort_unstable();
         channels.dedup();
+        Self::from_sorted(op, layers, channels, d_out)
+    }
+
+    /// Construct from an already sorted + deduplicated channel list,
+    /// taking ownership — the loader path normalizes the union once for
+    /// its cap pre-check and must not pay a second sort/dedup/copy here.
+    pub fn from_sorted(
+        op: OpKind,
+        layers: Arc<[usize]>,
+        channels: Vec<usize>,
+        d_out: usize,
+    ) -> PartSlab {
+        debug_assert!(channels.windows(2).all(|w| w[0] < w[1]));
         let rows = channels.len() * layers.len();
         PartSlab {
             op,
@@ -152,7 +209,6 @@ impl PartSlab {
     }
 }
 
-#[derive(Default)]
 struct SharedState {
     /// Completed parts. A part appears here only once fully loaded.
     slabs: Mutex<HashMap<PartKey, Arc<PartSlab>>>,
@@ -161,8 +217,25 @@ struct SharedState {
     /// after its group was retired is dropped instead of published — the
     /// engine has already moved on and nothing would ever free it.
     retired: Mutex<u64>,
+    /// Governor's preload-pool ceiling (bytes). A part whose (pre-I/O
+    /// computable) slab size would push the live slab bytes past it is
+    /// dropped before any flash read — still marked done, so the engine
+    /// falls back to on-demand. `u64::MAX` = unthrottled.
+    slab_cap: AtomicU64,
     /// Loader-side statistics.
     stats: Mutex<LoaderStats>,
+}
+
+impl Default for SharedState {
+    fn default() -> SharedState {
+        SharedState {
+            slabs: Mutex::new(HashMap::new()),
+            done: Mutex::new(std::collections::HashSet::new()),
+            retired: Mutex::new(0),
+            slab_cap: AtomicU64::new(u64::MAX),
+            stats: Mutex::new(LoaderStats::default()),
+        }
+    }
 }
 
 #[derive(Debug, Default, Clone)]
@@ -175,6 +248,15 @@ pub struct LoaderStats {
     pub slab_bytes: u64,
     /// High-water mark of `slab_bytes` (M_cl peak, loader view).
     pub slab_bytes_peak: u64,
+    /// Loader messages received (one per site batch — the batched send
+    /// path delivers all sibling ops of a site in one message).
+    pub batch_msgs: u64,
+    /// Parts loaded **and published** (one per op of each batch); a part
+    /// dropped for budget or retirement does not count.
+    pub parts_loaded: u64,
+    /// Parts dropped unpublished because the slab store hit the
+    /// governor's byte ceiling; their waiters fell back to on-demand.
+    pub slabs_dropped_budget: u64,
     /// Modeled flash busy time.
     pub busy: Duration,
 }
@@ -214,9 +296,20 @@ impl Pipeline {
         }
     }
 
-    /// Enqueue a preload part (non-blocking — the submit side of io_uring).
-    pub fn request(&self, job: PreloadJob) {
-        let _ = self.tx.send(Msg::Job(job));
+    /// Enqueue a preload batch (non-blocking — the submit side of
+    /// io_uring). One message covers every op part of the site.
+    pub fn request(&self, batch: PreloadBatch) {
+        let _ = self.tx.send(Msg::Batch(batch));
+    }
+
+    /// Set the preload slab-store byte ceiling (runtime DRAM governor).
+    /// Takes effect for the next part the loader handles.
+    pub fn set_slab_cap(&self, bytes: u64) {
+        self.shared.slab_cap.store(bytes.max(1), Ordering::Relaxed);
+    }
+
+    pub fn slab_cap(&self) -> u64 {
+        self.shared.slab_cap.load(Ordering::Relaxed)
     }
 
     /// Block until part `(seq, op)` has been fully loaded. Returns false on
@@ -316,132 +409,202 @@ impl LoaderWorker {
         while let Ok(msg) = rx.recv() {
             match msg {
                 Msg::Stop => break,
-                Msg::Job(job) => {
-                    let slab = match self.process(&job) {
-                        Ok(s) => Some(s),
-                        Err(e) => {
-                            eprintln!("[loader] preload failed: {e:#}");
-                            None // still mark done: waiters fall back
-                        }
-                    };
-                    // Publish + mark done under the `retired` guard: if the
-                    // engine retired this group while we were loading (its
-                    // fetch never needed to wait), the slab is dropped here
-                    // instead of leaking in the store forever.
-                    {
-                        let retired = self.shared.retired.lock().unwrap();
-                        if job.seq > *retired {
-                            if let Some(slab) = slab {
-                                let bytes = slab.bytes();
-                                self.shared
-                                    .slabs
-                                    .lock()
-                                    .unwrap()
-                                    .insert((job.seq, job.op), Arc::new(slab));
-                                let mut st =
-                                    self.shared.stats.lock().unwrap();
-                                st.slab_bytes += bytes;
-                                st.slab_bytes_peak =
-                                    st.slab_bytes_peak.max(st.slab_bytes);
-                            }
-                            self.shared
-                                .done
-                                .lock()
-                                .unwrap()
-                                .insert((job.seq, job.op));
-                        }
+                Msg::Batch(batch) => {
+                    self.shared.stats.lock().unwrap().batch_msgs += 1;
+                    for part in &batch.parts {
+                        self.handle_part(batch.seq, &batch.layers, part);
                     }
-                    // wake waiters (also on the retired/error paths, so a
-                    // racing wait_part re-checks instead of sleeping on)
-                    let mut gen = self.cv_guard.lock().unwrap();
-                    *gen += 1;
-                    drop(gen);
-                    self.cv.notify_all();
                 }
             }
         }
     }
 
-    fn process(&self, job: &PreloadJob) -> Result<PartSlab> {
-        let info = self.awgf.op(job.op);
+    /// Load, publish, and signal one part of a batch.
+    fn handle_part(&self, seq: u64, layers: &Arc<[usize]>, part: &PartRequest) {
+        let cap = self.shared.slab_cap.load(Ordering::Relaxed);
+        // The slab's size is fully determined before any I/O (union of
+        // span channels × layers × d_out); a part that would overflow the
+        // governor's ceiling is dropped *before* reading flash — paying
+        // the reads and then discarding the slab would make preload
+        // strictly worse than disabled under a tight cap. The union is
+        // normalized once here and handed to the slab allocation.
+        let mut union: Vec<usize> = part
+            .spans
+            .iter()
+            .flat_map(|s| s.channels.iter().copied())
+            .collect();
+        union.sort_unstable();
+        union.dedup();
+        let prospective = (union.len()
+            * layers.len()
+            * self.awgf.op(part.op).d_out
+            * 4) as u64;
+        let throttled = {
+            // one guard covers the issuer skip accounting (channel lists
+            // arrive pre-filtered) and the throttle read
+            let mut st = self.shared.stats.lock().unwrap();
+            st.channels_skipped_cached += part.skipped_cached;
+            st.slab_bytes.saturating_add(prospective) > cap
+        };
+        let slab = if throttled {
+            // pressure valve: waiters fall back to on-demand loading
+            None
+        } else {
+            match self.process(layers, part, union) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    eprintln!("[loader] preload failed: {e:#}");
+                    None // still mark done: waiters fall back
+                }
+            }
+        };
+        // Publish + mark done under the `retired` guard: if the engine
+        // retired this group while we were loading (its fetch never
+        // needed to wait), the slab is dropped here instead of leaking in
+        // the store forever. No cap re-check: `prospective` equals the
+        // built slab's bytes exactly, and live slab bytes only shrink
+        // (retire) between the pre-check and here.
+        {
+            let retired = self.shared.retired.lock().unwrap();
+            if seq > *retired {
+                if let Some(slab) = slab {
+                    let bytes = slab.bytes();
+                    self.shared
+                        .slabs
+                        .lock()
+                        .unwrap()
+                        .insert((seq, part.op), Arc::new(slab));
+                    let mut st = self.shared.stats.lock().unwrap();
+                    st.slab_bytes += bytes;
+                    st.slab_bytes_peak =
+                        st.slab_bytes_peak.max(st.slab_bytes);
+                    st.parts_loaded += 1;
+                } else if throttled {
+                    self.shared.stats.lock().unwrap().slabs_dropped_budget +=
+                        1;
+                }
+                self.shared.done.lock().unwrap().insert((seq, part.op));
+            }
+        }
+        // wake waiters (also on the retired/error/throttled paths, so a
+        // racing wait_part re-checks instead of sleeping on)
+        let mut gen = self.cv_guard.lock().unwrap();
+        *gen += 1;
+        drop(gen);
+        self.cv.notify_all();
+    }
+
+    fn process(
+        &self,
+        layers: &Arc<[usize]>,
+        part: &PartRequest,
+        union: Vec<usize>,
+    ) -> Result<PartSlab> {
+        let info = self.awgf.op(part.op);
         let dout = info.d_out;
         let rb = info.row_bytes;
         let quant = self.awgf.quant;
 
-        // The part's slab, allocated once; every read dequantizes straight
-        // into its final slot (no per-row scratch, no per-row Vec). The
-        // channel list arrives pre-filtered (issuer dropped cache-resident
-        // channels); account the skips for the historical stat.
-        if job.skipped_cached > 0 {
-            self.shared.stats.lock().unwrap().channels_skipped_cached +=
-                job.skipped_cached;
-        }
+        // The part's slab, allocated once over the caller's sorted union
+        // of the spans' channel lists; every read dequantizes straight
+        // into its final slot (no per-row scratch, no per-row Vec). A
+        // (layer, channel) row outside its layer's span stays unfilled —
+        // the engine finds those channels in the cache (that is why they
+        // were filtered). When span channel lists diverge (straddling
+        // group AND residency differing per partition — rare) the union
+        // over-allocates the unfilled rows; bytes() reports the real
+        // allocation, so the governor ledger stays truthful. Per-span
+        // sub-slabs would remove the waste (ROADMAP).
         let mut slab =
-            PartSlab::new(job.op, job.layers.clone(), &job.channels, dout);
+            PartSlab::from_sorted(part.op, layers.clone(), union, dout);
 
-        // Partition the runtime layers by on-flash layout group; within a
-        // layout group the requested layers occupy consecutive row slots of
-        // every chunk, so each (layout-group, channel) is one contiguous
-        // sub-span read.
-        let mut by_group: Vec<(usize, Vec<usize>)> = Vec::new();
-        for &l in job.layers.iter() {
-            let g = info
-                .groups
-                .iter()
-                .position(|grp| grp.layers.contains(&l))
-                .ok_or_else(|| anyhow::anyhow!("layer {l} not in layout"))?;
-            match by_group.last_mut() {
-                Some((gg, ls)) if *gg == g => ls.push(l),
-                _ => by_group.push((g, vec![l])),
+        for span in &part.spans {
+            let span_layers = &layers[span.lo..span.hi];
+            if span_layers.is_empty() || span.channels.is_empty() {
+                continue;
             }
-        }
+            // sorted channel list of this span for run coalescing
+            let mut chs: Vec<usize> = span.channels.to_vec();
+            chs.sort_unstable();
+            chs.dedup();
 
-        for (g, layers) in by_group {
-            let grp = &info.groups[g];
-            let j_of = |l: usize| grp.layers.iter().position(|&x| x == l).unwrap();
-            let j_min = layers.iter().map(|&l| j_of(l)).min().unwrap();
-            let j_max = layers.iter().map(|&l| j_of(l)).max().unwrap();
-            let span = (j_max - j_min + 1) * rb;
-            let full_chunk = span == grp.layers.len() * rb;
-            let n_layers = layers.len();
-
-            // Coalesce adjacent channels into single I/Os — only valid when
-            // the sub-span is the whole chunk (otherwise reads have gaps).
-            let mut runs: Vec<(usize, usize)> = Vec::new();
-            for &ch in slab.channels() {
-                match runs.last_mut() {
-                    Some((s, l)) if full_chunk && *s + *l == ch => *l += 1,
-                    _ => runs.push((ch, 1)),
+            // Partition by on-flash layout group; within a layout group
+            // the requested layers occupy consecutive row slots of every
+            // chunk, so each (layout-group, channel) is one contiguous
+            // sub-span read. (An engine-built span is exactly one layout
+            // group; stay robust to hand-built requests.)
+            let mut by_group: Vec<(usize, Vec<usize>)> = Vec::new();
+            for &l in span_layers {
+                let g = info
+                    .groups
+                    .iter()
+                    .position(|grp| grp.layers.contains(&l))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("layer {l} not in layout")
+                    })?;
+                match by_group.last_mut() {
+                    Some((gg, ls)) if *gg == g => ls.push(l),
+                    _ => by_group.push((g, vec![l])),
                 }
             }
 
-            for (start_ch, len) in runs {
-                let (chunk_off, chunk_len) =
-                    self.awgf.chunk_span(job.op, g, start_ch);
-                let (off, stride) = if full_chunk {
-                    (chunk_off, chunk_len)
-                } else {
-                    (chunk_off + (j_min * rb) as u64, span)
-                };
-                let total = if full_chunk { chunk_len * len } else { span };
-                let buf = self.flash.read(off, total)?;
-                {
-                    let mut st = self.shared.stats.lock().unwrap();
-                    st.chunks_read += 1;
-                    st.bytes_read += total as u64;
-                    st.channels_loaded += (len * n_layers) as u64;
-                    st.busy += Duration::from_nanos(
-                        self.flash.model_read_ns(total as u64),
-                    );
+            for (g, glayers) in by_group {
+                let grp = &info.groups[g];
+                let j_of =
+                    |l: usize| grp.layers.iter().position(|&x| x == l).unwrap();
+                let j_min = glayers.iter().map(|&l| j_of(l)).min().unwrap();
+                let j_max = glayers.iter().map(|&l| j_of(l)).max().unwrap();
+                let sub = (j_max - j_min + 1) * rb;
+                let full_chunk = sub == grp.layers.len() * rb;
+                let n_layers = glayers.len();
+
+                // Coalesce adjacent channels into single I/Os — only
+                // valid when the sub-span is the whole chunk (otherwise
+                // reads have gaps).
+                let mut runs: Vec<(usize, usize)> = Vec::new();
+                for &ch in &chs {
+                    match runs.last_mut() {
+                        Some((s, l)) if full_chunk && *s + *l == ch => {
+                            *l += 1
+                        }
+                        _ => runs.push((ch, 1)),
+                    }
                 }
-                for ci in 0..len {
-                    let ch = start_ch + ci;
-                    for &layer in &layers {
-                        let base = ci * stride + (j_of(layer) - j_min) * rb;
-                        let row = slab
-                            .row_mut(layer, ch)
-                            .expect("slab covers all job channels");
-                        quant::dequantize_row(&buf[base..base + rb], quant, row);
+
+                for (start_ch, len) in runs {
+                    let (chunk_off, chunk_len) =
+                        self.awgf.chunk_span(part.op, g, start_ch);
+                    let (off, stride) = if full_chunk {
+                        (chunk_off, chunk_len)
+                    } else {
+                        (chunk_off + (j_min * rb) as u64, sub)
+                    };
+                    let total =
+                        if full_chunk { chunk_len * len } else { sub };
+                    let buf = self.flash.read(off, total)?;
+                    {
+                        let mut st = self.shared.stats.lock().unwrap();
+                        st.chunks_read += 1;
+                        st.bytes_read += total as u64;
+                        st.channels_loaded += (len * n_layers) as u64;
+                        st.busy += Duration::from_nanos(
+                            self.flash.model_read_ns(total as u64),
+                        );
+                    }
+                    for ci in 0..len {
+                        let ch = start_ch + ci;
+                        for &layer in &glayers {
+                            let base =
+                                ci * stride + (j_of(layer) - j_min) * rb;
+                            let row = slab
+                                .row_mut(layer, ch)
+                                .expect("slab covers all span channels");
+                            quant::dequantize_row(
+                                &buf[base..base + rb],
+                                quant,
+                                row,
+                            );
+                        }
                     }
                 }
             }
@@ -464,45 +627,74 @@ mod tests {
     use crate::util::prop::{check, GenExt};
 
     /// Build a tiny synthetic AWGF file on disk via the python-compatible
-    /// writer logic (re-implemented in the test for independence).
+    /// writer logic (re-implemented in the test for independence). Two
+    /// ops (wq 128→128, wk 128→64) across four layers in two layout
+    /// groups `[0,1]` / `[2,3]` — enough to exercise multi-part batches
+    /// and runtime groups that straddle layout groups.
     fn synth_awgf(dir: &std::path::Path) -> std::path::PathBuf {
         use crate::layout::quant::{quantize_row, Quant};
         let cfg = ModelConfig {
-            n_layers: 2,
+            n_layers: 4,
             ..ModelConfig::tiny()
         };
         let path = dir.join("synth.awgf");
-        // header json mirroring export.py, single op (wq) for brevity
         let mut payload: Vec<u8> = Vec::new();
         // dense: embed [vocab,d] zeros
         let embed_len = cfg.vocab_size * cfg.d_model * 4;
         let embed_off = payload.len();
         payload.extend(std::iter::repeat(0u8).take(embed_len));
-        // op wq: d_in=128 rows of d_out=128, layers [0,1] in one group
+        // wq: d_in=128 rows of d_out=128; rows encode (c*2+l) in elem 0
         let rb = crate::layout::row_bytes(Quant::Q8_0, cfg.d_model);
-        let wq_off = payload.len();
-        for c in 0..cfg.d_model {
-            for l in 0..2usize {
-                let row: Vec<f32> = (0..cfg.d_model)
-                    .map(|j| (c * 2 + l) as f32 + j as f32 * 1e-3)
-                    .collect();
-                payload.extend(quantize_row(&row, Quant::Q8_0));
+        let mut wq_offs = [0usize; 2];
+        for (g, offs) in wq_offs.iter_mut().enumerate() {
+            *offs = payload.len();
+            for c in 0..cfg.d_model {
+                for l in (g * 2)..(g * 2 + 2) {
+                    let row: Vec<f32> = (0..cfg.d_model)
+                        .map(|j| (c * 2 + l) as f32 + j as f32 * 1e-3)
+                        .collect();
+                    payload.extend(quantize_row(&row, Quant::Q8_0));
+                }
+            }
+        }
+        // wk: d_in=128 rows of d_out=64; rows encode (c*3+l) in elem 0
+        let dk = 64usize;
+        let rbk = crate::layout::row_bytes(Quant::Q8_0, dk);
+        let mut wk_offs = [0usize; 2];
+        for (g, offs) in wk_offs.iter_mut().enumerate() {
+            *offs = payload.len();
+            for c in 0..cfg.d_model {
+                for l in (g * 2)..(g * 2 + 2) {
+                    let row: Vec<f32> = (0..dk)
+                        .map(|j| (c * 3 + l) as f32 + j as f32 * 1e-3)
+                        .collect();
+                    payload.extend(quantize_row(&row, Quant::Q8_0));
+                }
             }
         }
         let hdr = format!(
             r#"{{"model":{{"name":"synth","vocab_size":{v},"d_model":{d},
-"n_layers":2,"n_heads":4,"n_kv_heads":2,"head_dim":32,"d_ff":384,
+"n_layers":4,"n_heads":4,"n_kv_heads":2,"head_dim":32,"d_ff":384,
 "max_seq":16,"rope_theta":10000.0,"norm_eps":1e-5}},
 "quant":"q8_0","group_size":2,
 "dense":{{"embed":{{"offset":{eo},"len":{el},"shape":[{v},{d}]}}}},
 "ops":{{"wq":{{"d_in":{d},"d_out":{d},"row_bytes":{rb},
-"groups":[{{"layers":[0,1],"offset":{wo}}}]}}}}}}"#,
+"groups":[{{"layers":[0,1],"offset":{wo0}}},
+{{"layers":[2,3],"offset":{wo1}}}]}},
+"wk":{{"d_in":{d},"d_out":{dk},"row_bytes":{rbk},
+"groups":[{{"layers":[0,1],"offset":{ko0}}},
+{{"layers":[2,3],"offset":{ko1}}}]}}}}}}"#,
             v = cfg.vocab_size,
             d = cfg.d_model,
+            dk = dk,
             eo = embed_off,
             el = embed_len,
             rb = rb,
-            wo = wq_off,
+            rbk = rbk,
+            wo0 = wq_offs[0],
+            wo1 = wq_offs[1],
+            ko0 = wk_offs[0],
+            ko1 = wk_offs[1],
         );
         let mut file = Vec::new();
         file.extend(b"AWGF");
@@ -528,14 +720,14 @@ mod tests {
         (awgf, flash, path)
     }
 
-    fn job(seq: u64, layers: &[usize], channels: &[usize]) -> PreloadJob {
-        PreloadJob {
+    fn job(seq: u64, layers: &[usize], channels: &[usize]) -> PreloadBatch {
+        PreloadBatch::single(
             seq,
-            op: OpKind::Wq,
-            layers: Arc::from(layers),
-            channels: Arc::from(channels),
-            skipped_cached: 0,
-        }
+            Arc::from(layers),
+            OpKind::Wq,
+            Arc::from(channels),
+            0,
+        )
     }
 
     #[test]
@@ -586,13 +778,13 @@ mod tests {
         // skip count it carries lands in the historical stat.
         let (awgf, flash, _p) = setup();
         let pipe = Pipeline::spawn(awgf, flash);
-        pipe.request(PreloadJob {
-            seq: 2,
-            op: OpKind::Wq,
-            layers: Arc::from(&[0usize, 1][..]),
-            channels: Arc::from(&[41usize, 43][..]), // 42 filtered out
-            skipped_cached: 2,                       // ch42 × 2 layers
-        });
+        pipe.request(PreloadBatch::single(
+            2,
+            Arc::from(&[0usize, 1][..]),
+            OpKind::Wq,
+            Arc::from(&[41usize, 43][..]), // 42 filtered out
+            2,                             // ch42 × 2 layers
+        ));
         pipe.wait_part((2, OpKind::Wq));
         let st = pipe.loader_stats();
         assert_eq!(st.channels_skipped_cached, 2);
@@ -601,6 +793,124 @@ mod tests {
         assert!(slab.row(0, 42).is_none(), "filtered row stays unfilled");
         assert!(slab.row(0, 41).is_some());
         assert!(slab.row(1, 43).is_some());
+    }
+
+    #[test]
+    fn one_message_carries_every_part_of_a_site() {
+        // ROADMAP: the per-site sends are batched — sibling ops arrive in
+        // ONE loader message but keep per-part slabs and completion marks.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
+        let layers: Arc<[usize]> = Arc::from(&[0usize, 1][..]);
+        let chans: Arc<[usize]> = Arc::from(&[3usize, 9][..]);
+        pipe.request(PreloadBatch {
+            seq: 1,
+            layers: layers.clone(),
+            parts: vec![
+                PartRequest {
+                    op: OpKind::Wq,
+                    spans: vec![PartSpan {
+                        lo: 0,
+                        hi: 2,
+                        channels: chans.clone(),
+                    }],
+                    skipped_cached: 0,
+                },
+                PartRequest {
+                    op: OpKind::Wk,
+                    spans: vec![PartSpan {
+                        lo: 0,
+                        hi: 2,
+                        channels: chans.clone(),
+                    }],
+                    skipped_cached: 0,
+                },
+            ],
+        });
+        assert!(pipe.wait_part((1, OpKind::Wq)));
+        assert!(pipe.wait_part((1, OpKind::Wk)));
+        let st = pipe.loader_stats();
+        assert_eq!(st.batch_msgs, 1, "both parts rode one message");
+        assert_eq!(st.parts_loaded, 2);
+        let wq = pipe.part((1, OpKind::Wq)).unwrap();
+        let wk = pipe.part((1, OpKind::Wk)).unwrap();
+        assert_eq!(wq.d_out(), 128);
+        assert_eq!(wk.d_out(), 64);
+        // synth encodes (c*2+l) in wq rows and (c*3+l) in wk rows
+        let q = wq.row(1, 9).unwrap()[0];
+        assert!((q - 19.0).abs() <= 19.0 / 127.0 + 1e-2, "wq {q}");
+        let k = wk.row(1, 9).unwrap()[0];
+        assert!((k - 28.0).abs() <= 28.0 / 127.0 + 1e-2, "wk {k}");
+    }
+
+    #[test]
+    fn straddling_group_filters_each_partition_separately() {
+        // A runtime group [1, 2] straddles the on-flash layout groups
+        // [0,1] / [2,3]. Per-partition spans mean channel 5 (resident for
+        // layer 2's partition, say) is read only for layer 1, and channel
+        // 7 only for layer 2 — the old whole-group filter would have read
+        // both channels for both layers.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
+        let layers: Arc<[usize]> = Arc::from(&[1usize, 2][..]);
+        pipe.request(PreloadBatch {
+            seq: 4,
+            layers,
+            parts: vec![PartRequest {
+                op: OpKind::Wq,
+                spans: vec![
+                    PartSpan {
+                        lo: 0,
+                        hi: 1,
+                        channels: Arc::from(&[5usize][..]),
+                    },
+                    PartSpan {
+                        lo: 1,
+                        hi: 2,
+                        channels: Arc::from(&[7usize][..]),
+                    },
+                ],
+                skipped_cached: 2, // ch7@layer1 + ch5@layer2 filtered
+            }],
+        });
+        assert!(pipe.wait_part((4, OpKind::Wq)));
+        let st = pipe.loader_stats();
+        assert_eq!(st.channels_loaded, 2, "one row per partition");
+        assert_eq!(st.channels_skipped_cached, 2);
+        let slab = pipe.part((4, OpKind::Wq)).unwrap();
+        let r15 = slab.row(1, 5).expect("ch5 loaded for layer 1")[0];
+        assert!((r15 - 11.0).abs() <= 11.0 / 127.0 + 1e-2, "got {r15}");
+        let r27 = slab.row(2, 7).expect("ch7 loaded for layer 2")[0];
+        assert!((r27 - 16.0).abs() <= 16.0 / 127.0 + 1e-2, "got {r27}");
+        // the filtered (layer, channel) combinations stay store misses
+        assert!(slab.row(2, 5).is_none(), "ch5 not read for layer 2");
+        assert!(slab.row(1, 7).is_none(), "ch7 not read for layer 1");
+    }
+
+    #[test]
+    fn slab_cap_drops_parts_but_still_marks_done() {
+        // Governor pressure valve: past the slab-store ceiling the loader
+        // publishes nothing (waiters fall back to on-demand) but the
+        // completion mark must still arrive — a wedged wait would hang
+        // the decode.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf.clone(), flash.clone());
+        pipe.set_slab_cap(1); // nothing fits
+        pipe.request(job(1, &[0, 1], &[2, 3]));
+        assert!(pipe.wait_part((1, OpKind::Wq)), "done mark must arrive");
+        assert!(pipe.part((1, OpKind::Wq)).is_none(), "slab dropped");
+        assert_eq!(pipe.stored_bytes(), 0);
+        let st = pipe.loader_stats();
+        assert!(st.slabs_dropped_budget >= 1);
+        assert_eq!(st.parts_loaded, 0,
+                   "a budget-dropped part must not count as loaded");
+        assert_eq!(st.chunks_read, 0,
+                   "over-cap part must be dropped BEFORE any flash read");
+        // raising the cap restores normal publishing
+        pipe.set_slab_cap(u64::MAX);
+        pipe.request(job(2, &[0, 1], &[2, 3]));
+        assert!(pipe.wait_part((2, OpKind::Wq)));
+        assert!(pipe.part((2, OpKind::Wq)).is_some());
     }
 
     #[test]
@@ -687,14 +997,13 @@ mod tests {
                 .filter(|ch| !pre.contains(ch))
                 .collect();
             let pipe = Pipeline::spawn(awgf.clone(), flash.clone());
-            pipe.request(PreloadJob {
-                seq: 1,
-                op: OpKind::Wq,
-                layers: Arc::from(&layers[..]),
-                channels: Arc::from(&channels[..]),
-                skipped_cached: ((requested.len() - channels.len())
-                    * layers.len()) as u64,
-            });
+            pipe.request(PreloadBatch::single(
+                1,
+                Arc::from(&layers[..]),
+                OpKind::Wq,
+                Arc::from(&channels[..]),
+                ((requested.len() - channels.len()) * layers.len()) as u64,
+            ));
             if !pipe.wait_part((1, OpKind::Wq)) {
                 return Err("loader timed out".into());
             }

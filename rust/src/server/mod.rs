@@ -4,9 +4,15 @@
 //! On-device engines decode one sequence at a time (the paper's setting —
 //! decode is memory-bandwidth-bound, so batching buys nothing on a phone);
 //! the "batcher" therefore multiplexes *requests*, tracking queueing vs
-//! decode latency separately, and exposes the elastic-memory controls
-//! (`set_budget` re-runs the §4.1 search and reports the parameters the
-//! engine would adopt).
+//! decode latency separately.
+//!
+//! The elastic-memory control (`set_budget`) is **live**: the worker
+//! thread owns a [`DramGovernor`] next to the engine, so a budget change
+//! re-runs the §4.1 search online and applies `(sp, N, cache)` to the
+//! running engine — cache eviction to the new target, preload-depth and
+//! slab-cap retune, sparsity-level artifact switch — between requests,
+//! with no restart. Ledger totals and re-budget decisions surface in
+//! `stats`.
 //!
 //! Protocol: one JSON object per line.
 //!   {"prompt": "...", "n_tokens": 32, "temp": 0.0}
@@ -24,9 +30,10 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::costmodel;
 use crate::engine::{EngineOptions, SwapEngine};
-use crate::layout::AwgfFile;
+use crate::governor::{
+    DramGovernor, GovernorConfig, PressureSchedule, RebudgetTrigger,
+};
 use crate::metrics;
 use crate::tokenizer;
 use crate::util::json::{self, arr, num, obj, s, Value};
@@ -35,6 +42,16 @@ pub struct ServerConfig {
     pub addr: String,
     pub artifact_dir: PathBuf,
     pub opts: EngineOptions,
+    /// Governor knobs (hysteresis, search grid) — see
+    /// [`GovernorConfig::from_runtime`].
+    pub governor: GovernorConfig,
+    /// Apply this DRAM budget at startup (otherwise the governor assumes
+    /// the device's physical DRAM until the first `set_budget`).
+    pub initial_budget: Option<u64>,
+    /// Scripted pressure trace (`"<size>@<token>,..."`): the worker fires
+    /// each step between requests once the served-token count passes it —
+    /// the same path a `set_budget` command takes.
+    pub pressure_schedule: Option<String>,
 }
 
 struct Request {
@@ -47,6 +64,9 @@ struct Request {
 
 enum Job {
     Decode(Request),
+    /// Live re-budget: the worker runs the governor against its engine
+    /// between requests and answers with the decision.
+    Rebudget { bytes: u64, resp: Sender<Value> },
     Stop,
 }
 
@@ -67,6 +87,43 @@ struct ServerStats {
     ondemand_rows: AtomicU64,
     ondemand_coalesced_runs: AtomicU64,
     slab_bytes_peak: AtomicU64,
+    // runtime DRAM governor mirror: budget, pool ledger, decision counters
+    budget_bytes: AtomicU64,
+    ledger_cache_bytes: AtomicU64,
+    ledger_preload_bytes: AtomicU64,
+    ledger_compute_bytes: AtomicU64,
+    rebudgets_applied: AtomicU64,
+    rebudgets_skipped: AtomicU64,
+    rebudget_rows_evicted: AtomicU64,
+    level_switches: AtomicU64,
+    last_settle_us: AtomicU64,
+}
+
+impl ServerStats {
+    /// Refresh the governor mirror from the worker-side engine state.
+    fn publish_governor(&self, engine: &SwapEngine, gov: &DramGovernor) {
+        let ledger = engine.pool_ledger();
+        self.budget_bytes.store(gov.budget(), Ordering::Relaxed);
+        self.ledger_cache_bytes
+            .store(ledger.cache_bytes, Ordering::Relaxed);
+        self.ledger_preload_bytes
+            .store(ledger.preload_bytes, Ordering::Relaxed);
+        self.ledger_compute_bytes
+            .store(ledger.compute_bytes, Ordering::Relaxed);
+        let m = &engine.metrics;
+        self.rebudgets_applied
+            .store(m.rebudgets_applied, Ordering::Relaxed);
+        self.rebudgets_skipped
+            .store(m.rebudgets_skipped, Ordering::Relaxed);
+        self.rebudget_rows_evicted
+            .store(m.rebudget_rows_evicted, Ordering::Relaxed);
+        self.level_switches
+            .store(m.level_switches, Ordering::Relaxed);
+        if let Some(d) = gov.last_decision() {
+            self.last_settle_us
+                .store(d.settle.as_micros() as u64, Ordering::Relaxed);
+        }
+    }
 }
 
 /// Run the server until a `shutdown` command arrives. Returns the number of
@@ -80,12 +137,33 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
     let stats = Arc::new(ServerStats::default());
     let stop = Arc::new(AtomicBool::new(false));
 
-    // ---- engine worker: owns the SwapEngine, drains the queue FIFO.
+    // ---- engine worker: owns the SwapEngine + DramGovernor, drains FIFO.
     let worker_stats = stats.clone();
     let artifact_dir = cfg.artifact_dir.clone();
     let opts_device = cfg.opts.device;
+    let initial_budget = cfg.initial_budget;
+    let governor_cfg = cfg.governor.clone();
+    let mut schedule = match &cfg.pressure_schedule {
+        Some(spec) => Some(PressureSchedule::parse(spec)?),
+        None => None,
+    };
     let worker = std::thread::spawn(move || -> Result<()> {
         let mut engine = SwapEngine::open(&artifact_dir, cfg.opts)?;
+        let mut gov = DramGovernor::new(
+            &engine,
+            governor_cfg,
+            opts_device.dram_bytes,
+        );
+        let mut served_tokens = 0u64;
+        if let Some(budget) = initial_budget {
+            let d = gov.set_budget(&mut engine, budget,
+                                   RebudgetTrigger::Command)?;
+            eprintln!(
+                "[server] initial budget {}: sp={:.2} N={} cache={} ({})",
+                budget, d.new_sp, d.new_group, d.cache_target, d.note
+            );
+        }
+        worker_stats.publish_governor(&engine, &gov);
         eprintln!(
             "[server] engine ready: model={} level={} device={}",
             engine.model().name,
@@ -95,6 +173,44 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
         while let Ok(job) = job_rx.recv() {
             let req = match job {
                 Job::Stop => break,
+                Job::Rebudget { bytes, resp } => {
+                    let v = match gov.set_budget(&mut engine, bytes,
+                                                 RebudgetTrigger::Command) {
+                        Err(e) => obj(vec![("error", s(&format!("{e:#}")))]),
+                        Ok(d) if d.note == "infeasible" => obj(vec![(
+                            "error",
+                            s("budget below minimum servable configuration"),
+                        )]),
+                        Ok(d) => obj(vec![
+                            ("applied", Value::Bool(d.applied)),
+                            ("note", s(d.note)),
+                            ("sparsity", num(d.new_sp)),
+                            ("group_size", num(d.new_group as f64)),
+                            ("cache_bytes", num(d.cache_target as f64)),
+                            ("slab_cap_bytes", num(d.slab_cap as f64)),
+                            ("evicted_rows", num(d.evicted_rows as f64)),
+                            (
+                                "settle_ms",
+                                num(d.settle.as_secs_f64() * 1e3),
+                            ),
+                            (
+                                "ledger_cache_bytes",
+                                num(d.new_pools.cache_bytes as f64),
+                            ),
+                            (
+                                "ledger_preload_bytes",
+                                num(d.new_pools.preload_bytes as f64),
+                            ),
+                            (
+                                "ledger_compute_bytes",
+                                num(d.new_pools.compute_bytes as f64),
+                            ),
+                        ]),
+                    };
+                    worker_stats.publish_governor(&engine, &gov);
+                    let _ = resp.send(v);
+                    continue;
+                }
                 Job::Decode(r) => r,
             };
             let queue_t = req.enqueued.elapsed();
@@ -151,6 +267,7 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
                         decode_t.as_nanos() as u64,
                         Ordering::Relaxed,
                     );
+                    worker_stats.publish_governor(&engine, &gov);
                     obj(vec![
                         ("text", s(&tokenizer::decode(&toks))),
                         (
@@ -169,6 +286,29 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
                 }
             };
             let _ = req.resp.send(resp);
+            // scripted pressure trace: fire due steps between requests,
+            // through the same governor path a set_budget command takes
+            served_tokens = engine.metrics.tokens.max(served_tokens);
+            if let Some(sched) = schedule.as_mut() {
+                if let Some(budget) = sched.due(served_tokens) {
+                    // a failed step must not take down serving — log and
+                    // keep the engine on its previous configuration, the
+                    // same degradation a failed set_budget command gets
+                    match gov.set_budget(&mut engine, budget,
+                                         RebudgetTrigger::Schedule) {
+                        Ok(d) => eprintln!(
+                            "[server] pressure step -> {} ({}): sp={:.2} \
+                             N={} cache={}",
+                            budget, d.note, d.new_sp, d.new_group,
+                            d.cache_target
+                        ),
+                        Err(e) => eprintln!(
+                            "[server] pressure step failed: {e:#}"
+                        ),
+                    }
+                    worker_stats.publish_governor(&engine, &gov);
+                }
+            }
         }
         Ok(())
     });
@@ -185,10 +325,8 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
         let job_tx = job_tx.clone();
         let stats = stats.clone();
         let stop2 = stop.clone();
-        let artifact_dir = cfg.artifact_dir.clone();
         std::thread::spawn(move || {
-            let _ = handle_conn(conn, job_tx, stats, stop2, &artifact_dir,
-                                opts_device);
+            let _ = handle_conn(conn, job_tx, stats, stop2);
         });
         if stop.load(Ordering::Relaxed) {
             break;
@@ -204,8 +342,6 @@ fn handle_conn(
     job_tx: Sender<Job>,
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
-    artifact_dir: &std::path::Path,
-    device: &'static crate::device::DeviceProfile,
 ) -> Result<()> {
     let mut writer = conn.try_clone()?;
     let reader = BufReader::new(conn);
@@ -227,6 +363,7 @@ fn handle_conn(
                 let served = stats.served.load(Ordering::Relaxed);
                 let tokens = stats.tokens.load(Ordering::Relaxed);
                 let dec_ns = stats.decode_ns.load(Ordering::Relaxed);
+                let g = |a: &AtomicU64| num(a.load(Ordering::Relaxed) as f64);
                 respond(
                     &mut writer,
                     &obj(vec![
@@ -256,68 +393,53 @@ fn handle_conn(
                                 if h + mi == 0.0 { 0.0 } else { h / (h + mi) }
                             }),
                         ),
-                        (
-                            "cache_lock_acquires",
-                            num(stats.lock_acquires.load(Ordering::Relaxed)
-                                as f64),
-                        ),
-                        (
-                            "cache_locks_avoided",
-                            num(stats.locks_avoided.load(Ordering::Relaxed)
-                                as f64),
-                        ),
-                        (
-                            "batched_inserts",
-                            num(stats.batched_inserts.load(Ordering::Relaxed)
-                                as f64),
-                        ),
-                        (
-                            "ondemand_rows",
-                            num(stats.ondemand_rows.load(Ordering::Relaxed)
-                                as f64),
-                        ),
+                        ("cache_lock_acquires", g(&stats.lock_acquires)),
+                        ("cache_locks_avoided", g(&stats.locks_avoided)),
+                        ("batched_inserts", g(&stats.batched_inserts)),
+                        ("ondemand_rows", g(&stats.ondemand_rows)),
                         (
                             "ondemand_coalesced_runs",
-                            num(stats
-                                .ondemand_coalesced_runs
-                                .load(Ordering::Relaxed)
-                                as f64),
+                            g(&stats.ondemand_coalesced_runs),
+                        ),
+                        ("slab_bytes_peak", g(&stats.slab_bytes_peak)),
+                        // runtime DRAM governor: budget, pools, decisions
+                        ("budget_bytes", g(&stats.budget_bytes)),
+                        ("ledger_cache_bytes", g(&stats.ledger_cache_bytes)),
+                        (
+                            "ledger_preload_bytes",
+                            g(&stats.ledger_preload_bytes),
                         ),
                         (
-                            "slab_bytes_peak",
-                            num(stats.slab_bytes_peak.load(Ordering::Relaxed)
-                                as f64),
+                            "ledger_compute_bytes",
+                            g(&stats.ledger_compute_bytes),
                         ),
+                        ("rebudgets_applied", g(&stats.rebudgets_applied)),
+                        ("rebudgets_skipped", g(&stats.rebudgets_skipped)),
+                        (
+                            "rebudget_rows_evicted",
+                            g(&stats.rebudget_rows_evicted),
+                        ),
+                        ("level_switches", g(&stats.level_switches)),
+                        ("last_settle_us", g(&stats.last_settle_us)),
                     ]),
                 )?;
             }
             Some("set_budget") => {
-                // Elastic memory: re-run the §4.1 search for the new budget
-                // and report the configuration the engine adopts on reload.
-                let budget =
+                // Elastic memory, live: the worker re-runs the §4.1
+                // search under the new M_max and applies the result to
+                // the running engine between requests.
+                let bytes =
                     req.get("bytes").and_then(Value::as_f64).unwrap_or(0.0)
                         as u64;
-                let awgf = AwgfFile::open(
-                    &crate::config::ArtifactConfig::load(artifact_dir)?
-                        .weights_file,
-                )?;
-                let geo = costmodel::Geometry::from_awgf(&awgf);
-                let grid = [0.5, 0.6, 0.7, 0.8, 0.9];
-                let resp = match costmodel::search(device, &geo, budget, 0.85,
-                                                   1.0, &grid) {
-                    None => obj(vec![(
-                        "error",
-                        s("budget below minimum servable configuration"),
-                    )]),
-                    Some(r) => obj(vec![
-                        ("sparsity", num(r.params.sp)),
-                        ("group_size", num(r.params.n_group as f64)),
-                        ("cache_bytes", num(r.params.cache_bytes as f64)),
-                        ("pred_mem_bytes", num(r.cost.mem_bytes as f64)),
-                        ("pred_decode_ms", num(r.cost.t_decode * 1e3)),
-                    ]),
-                };
-                respond(&mut writer, &resp)?;
+                let (tx, rx) = channel();
+                let _ = job_tx.send(Job::Rebudget { bytes, resp: tx });
+                match rx.recv() {
+                    Ok(v) => respond(&mut writer, &v)?,
+                    Err(_) => respond(
+                        &mut writer,
+                        &obj(vec![("error", s("engine gone"))]),
+                    )?,
+                }
             }
             Some("shutdown") => {
                 stop.store(true, Ordering::Relaxed);

@@ -7,6 +7,7 @@ use activeflow::cache::CachePolicy;
 use activeflow::device::PIXEL6;
 use activeflow::engine::{EngineOptions, PreloadTrigger, SwapMode};
 use activeflow::flash::ClockMode;
+use activeflow::governor::GovernorConfig;
 use activeflow::server::{client_roundtrip, serve, ServerConfig};
 use activeflow::util::json::{num, obj, s, Value};
 
@@ -38,6 +39,9 @@ fn serve_generate_stats_shutdown() {
             bw_scale: 1.0,
         trigger: PreloadTrigger::FirstLayer,
         },
+        governor: GovernorConfig::default(),
+        initial_budget: None,
+        pressure_schedule: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     // wait for bind
@@ -108,6 +112,120 @@ fn serve_generate_stats_shutdown() {
     );
 
     // shutdown
+    let bye =
+        client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();
+    assert_eq!(bye.get("ok"), Some(&Value::Bool(true)));
+    server.join().unwrap();
+}
+
+#[test]
+fn set_budget_rebudgets_live_engine_mid_session() {
+    // The governor acceptance path: a live engine survives a set_budget
+    // step from a large to a small DRAM budget without restart — cache
+    // allocated bytes drop to ≤ the new target, the online search picks
+    // new (sp, N), subsequent decodes succeed, and the ledger/decision
+    // counters show up in `stats`.
+    let Some(dir) = artifacts() else { return };
+    use activeflow::costmodel::Geometry;
+    use activeflow::layout::AwgfFile;
+    let cfgf =
+        activeflow::config::ArtifactConfig::load(&dir).unwrap();
+    let geo = Geometry::from_awgf(&AwgfFile::open(&cfgf.weights_file).unwrap());
+
+    let addr = "127.0.0.1:17072";
+    let cfg = ServerConfig {
+        addr: addr.into(),
+        artifact_dir: dir,
+        opts: EngineOptions {
+            sparsity: 0.5,
+            group_size: 4,
+            swap_mode: SwapMode::Preload,
+            cache_bytes: 512 * 1024,
+            cache_policy: CachePolicy::Contextual,
+            device: &PIXEL6,
+            clock: ClockMode::Modeled,
+            bw_scale: 1.0,
+            trigger: PreloadTrigger::FirstLayer,
+        },
+        governor: GovernorConfig::default(),
+        initial_budget: None,
+        pressure_schedule: None,
+    };
+    let server = std::thread::spawn(move || serve(cfg).unwrap());
+    let req = obj(vec![
+        ("prompt", s("the sparse model ")),
+        ("n_tokens", num(6.0)),
+        ("temp", num(0.0)),
+    ]);
+    let mut resp = None;
+    for _ in 0..60 {
+        match client_roundtrip(addr, &req) {
+            Ok(v) => {
+                resp = Some(v);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(250)),
+        }
+    }
+    let resp = resp.expect("server never came up");
+    assert!(resp.get("error").is_none(), "warmup: {resp:?}");
+
+    // large → small budget step, mid-session (feasible: ~40% of the
+    // model's sparse bytes on top of the fixed KV cost)
+    let small = geo.kv_bytes + (geo.model_bytes as f64 * 0.4) as u64;
+    let d = client_roundtrip(
+        addr,
+        &obj(vec![
+            ("cmd", s("set_budget")),
+            ("bytes", num(small as f64)),
+        ]),
+    )
+    .unwrap();
+    assert!(d.get("error").is_none(), "rebudget refused: {d:?}");
+    assert_eq!(d.get("applied"), Some(&Value::Bool(true)), "{d:?}");
+    let sp = d.get("sparsity").unwrap().as_f64().unwrap();
+    assert!(sp >= 0.5, "search must re-select sparsity, got {sp}");
+    assert!(d.get("group_size").unwrap().as_f64().unwrap() >= 1.0);
+    let cache_target =
+        d.get("cache_bytes").unwrap().as_f64().unwrap() as u64;
+    let ledger_cache =
+        d.get("ledger_cache_bytes").unwrap().as_f64().unwrap() as u64;
+    assert!(
+        ledger_cache <= cache_target,
+        "cache allocated bytes {ledger_cache} above target {cache_target}"
+    );
+
+    // the live engine keeps decoding after the shrink
+    let r2 = client_roundtrip(addr, &req).unwrap();
+    assert!(r2.get("error").is_none(), "decode after rebudget: {r2:?}");
+    assert_eq!(r2.get("tokens").unwrap().as_arr().unwrap().len(), 6);
+
+    // governor counters are visible in stats
+    let stats =
+        client_roundtrip(addr, &obj(vec![("cmd", s("stats"))])).unwrap();
+    assert!(
+        stats.get("rebudgets_applied").unwrap().as_f64().unwrap() >= 1.0,
+        "{stats:?}"
+    );
+    assert_eq!(
+        stats.get("budget_bytes").unwrap().as_f64().unwrap() as u64,
+        small
+    );
+    for key in [
+        "ledger_cache_bytes",
+        "ledger_preload_bytes",
+        "ledger_compute_bytes",
+        "rebudget_rows_evicted",
+        "level_switches",
+        "last_settle_us",
+    ] {
+        assert!(stats.get(key).is_some(), "stats missing {key}");
+    }
+    assert!(
+        stats.get("ledger_compute_bytes").unwrap().as_f64().unwrap() > 0.0,
+        "compute pool must be non-empty"
+    );
+
     let bye =
         client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();
     assert_eq!(bye.get("ok"), Some(&Value::Bool(true)));

@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: diff two BENCH_decode.json points and fail on a
+>5% tokens/sec regression (ROADMAP item; see PERF.md methodology).
+
+Usage: check_perf.py PREV.json CURR.json [--threshold 0.05]
+
+Exit codes: 0 = ok (or no previous point to compare), 1 = regression,
+2 = malformed input.
+"""
+
+import json
+import os
+import sys
+
+THRESHOLD = 0.05
+
+# Secondary counters worth flagging (informational, never fatal): these
+# move with workload changes, so only tokens/sec gates the build.
+WATCHED = [
+    "cache_lock_acquires",
+    "flash_bytes",
+    "ondemand_rows",
+    "slab_bytes_peak",
+]
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__.strip())
+        return 2
+    prev_path, curr_path = argv[1], argv[2]
+    threshold = THRESHOLD
+    if "--threshold" in argv:
+        try:
+            threshold = float(argv[argv.index("--threshold") + 1])
+        except (IndexError, ValueError):
+            print("check-perf: --threshold expects a number")
+            return 2
+
+    if not os.path.exists(curr_path):
+        print(f"check-perf: {curr_path} missing — run `make bench-smoke`")
+        return 2
+    if not os.path.exists(prev_path):
+        print(f"check-perf: no previous point ({prev_path}); nothing to "
+              "diff — baseline recorded")
+        return 0
+
+    try:
+        with open(prev_path) as f:
+            prev = json.load(f)
+        with open(curr_path) as f:
+            curr = json.load(f)
+        tps_prev = float(prev["tokens_per_sec"])
+        tps_curr = float(curr["tokens_per_sec"])
+    except (json.JSONDecodeError, KeyError, ValueError) as e:
+        print(f"check-perf: malformed bench point: {e}")
+        return 2
+
+    if tps_prev <= 0:
+        print("check-perf: previous tokens_per_sec is 0 — skipping diff")
+        return 0
+
+    delta = (tps_curr - tps_prev) / tps_prev
+    print(f"check-perf: tokens/sec {tps_prev:.2f} -> {tps_curr:.2f} "
+          f"({delta:+.1%}, threshold -{threshold:.0%})")
+    for key in WATCHED:
+        if key in prev and key in curr and float(prev[key]) > 0:
+            d = (float(curr[key]) - float(prev[key])) / float(prev[key])
+            if abs(d) >= threshold:
+                print(f"check-perf:   note: {key} {prev[key]} -> "
+                      f"{curr[key]} ({d:+.1%})")
+
+    if delta < -threshold:
+        print("check-perf: FAIL — tokens/sec regressed past the "
+              f"{threshold:.0%} gate")
+        return 1
+    print("check-perf: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
