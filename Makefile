@@ -18,8 +18,11 @@ artifacts:
 # write BENCH_decode.json at the repo root. The previous point rotates to
 # BENCH_decode.prev.json only after a *successful* bench run (a failed
 # run must not destroy the baseline), so `make check-perf` always diffs
-# two distinct real points.
+# two distinct real points. The loader-overlap bench runs first: it is
+# self-asserting (queued preload critical path must beat the sequential
+# baseline on the modeled clock) and needs no artifacts.
 bench-smoke:
+	cd rust && cargo bench --bench loader_overlap
 	cd rust && cargo run --release -- bench smoke \
 		--artifacts artifacts --out ../BENCH_decode.new.json
 	@if [ -f BENCH_decode.json ]; then \
@@ -27,12 +30,18 @@ bench-smoke:
 	mv BENCH_decode.new.json BENCH_decode.json
 
 # Governor trajectory point (PERF.md): tokens/sec + settle time across a
-# scripted DRAM budget step-down on one live engine.
+# scripted DRAM budget step-down on one live engine. Rotates the previous
+# point the same way bench-smoke does, so check-perf can diff settle time.
 bench-governor:
 	cd rust && cargo bench --bench governor_rebudget -- \
-		--out ../BENCH_governor.json
+		--out ../BENCH_governor.new.json
+	@if [ -f BENCH_governor.json ]; then \
+		cp BENCH_governor.json BENCH_governor.prev.json; fi
+	mv BENCH_governor.new.json BENCH_governor.json
 
 # Diff the decode perf point against the previous run; fails on a >5%
-# tokens/sec regression (ROADMAP perf-trajectory gate).
+# tokens/sec regression, and on a >5% governor settle-time regression
+# when BENCH_governor points exist (ROADMAP perf-trajectory gate).
 check-perf:
-	@python3 scripts/check_perf.py BENCH_decode.prev.json BENCH_decode.json
+	@python3 scripts/check_perf.py BENCH_decode.prev.json BENCH_decode.json \
+		--governor BENCH_governor.prev.json BENCH_governor.json

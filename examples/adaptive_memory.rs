@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
         clock: ClockMode::Timed,
         bw_scale: 1.0,
         trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,
     })?;
     // …and let the governor drive every later step on the live engine.
     let mut gov =

@@ -38,7 +38,8 @@ fn main() -> anyhow::Result<()> {
             device: &device::PIXEL6,
             clock: ClockMode::Timed,
             bw_scale: 1.0,
-        trigger: PreloadTrigger::FirstLayer,
+            trigger: PreloadTrigger::FirstLayer,
+            io_queue_depth: 0,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,

@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
         clock: ClockMode::Timed,            // flash reads really take time
         bw_scale: 1.0,
         trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,                  // 0 = device's modeled queue depth
     };
     let mut engine = SwapEngine::open("artifacts".as_ref(), opts)?;
     println!(

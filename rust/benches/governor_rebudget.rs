@@ -65,6 +65,7 @@ fn main() {
         clock: ClockMode::Timed,
         bw_scale: 1.0,
         trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,
     })
     .unwrap();
     let mut gov =

@@ -29,7 +29,8 @@ fn main() {
                 device: &PIXEL6,
                 clock: ClockMode::Modeled,
                 bw_scale: 1.0,
-        trigger: PreloadTrigger::FirstLayer,
+                trigger: PreloadTrigger::FirstLayer,
+                io_queue_depth: 0,
             },
         )
         .unwrap();

@@ -50,6 +50,7 @@ pub fn activeflow_options(
         clock,
         bw_scale,
         trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,
     }
 }
 
@@ -71,6 +72,7 @@ pub fn teal_options(
         clock,
         bw_scale,
         trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,
     }
 }
 
@@ -93,6 +95,7 @@ pub fn llm_in_flash_options(
         clock,
         bw_scale,
         trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,
     }
 }
 
@@ -113,6 +116,7 @@ pub fn serial_options(
         clock,
         bw_scale,
         trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,
     }
 }
 

@@ -43,6 +43,7 @@ fn opts(
         clock,
         bw_scale,
         trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,
     }
 }
 
@@ -553,8 +554,12 @@ pub fn bench_smoke(args: &Args) -> Result<()> {
             num(m.ondemand_coalesced_runs as f64),
         ),
         ("slab_bytes_peak", num(m.slab_bytes_peak as f64)),
+        ("io_batches", num(m.io_batches as f64)),
+        ("io_inflight_peak", num(m.io_inflight_peak as f64)),
+        ("io_wait_us", num(m.io_wait.as_secs_f64() * 1e6)),
         ("loader_chunks_read", num(loader.chunks_read as f64)),
         ("loader_bytes_read", num(loader.bytes_read as f64)),
+        ("loader_parts_failed", num(loader.parts_failed as f64)),
         ("dram_total_bytes", num(mem.dram_total() as f64)),
         ("energy_per_token_j", num(e.energy_per_token_j)),
     ]);

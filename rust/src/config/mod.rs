@@ -168,6 +168,10 @@ pub struct RuntimeConfig {
     /// Scale flash bandwidth to emulate larger models on the tiny geometry
     /// (e.g. 0.02 ≈ Llama-7B-sized layers per DESIGN.md §1).
     pub bw_scale: f64,
+    /// Software bound on flash reads in flight through the shared async
+    /// read queue (loader preloads + on-demand fetch misses). `0` defers
+    /// to the device profile's modeled queue depth.
+    pub io_queue_depth: usize,
     /// Runtime DRAM governor: relative budget change below which a
     /// `set_budget` event is ignored (anti-thrash hysteresis).
     pub rebudget_hysteresis: f64,
@@ -186,6 +190,7 @@ impl Default for RuntimeConfig {
             device: "pixel6".into(),
             timed_flash: true,
             bw_scale: 1.0,
+            io_queue_depth: 0,
             rebudget_hysteresis: 0.05,
             pressure_schedule: None,
         }
@@ -229,6 +234,7 @@ mod tests {
         let rc = RuntimeConfig::default();
         assert_eq!(rc.rebudget_hysteresis, 0.05);
         assert!(rc.pressure_schedule.is_none());
+        assert_eq!(rc.io_queue_depth, 0, "0 = device-profile queue depth");
     }
 
     #[test]

@@ -31,6 +31,13 @@ pub struct DeviceProfile {
     pub flash_max_bw: f64,
     /// Per-I/O fixed latency (s) — controls the Fig 7 knee.
     pub flash_latency: f64,
+    /// Modeled effective command queue depth of the flash controller: how
+    /// many reads the device keeps in flight at once. Reads submitted
+    /// together are serviced in waves of up to this many, and the per-I/O
+    /// fixed latency is paid once per *wave*, not once per read — the
+    /// amortization "LLM in a flash" (arXiv 2312.11514) attributes most of
+    /// the usable small-read bandwidth to.
+    pub queue_depth: usize,
     /// Sustained compute rate (FLOP/s) of the big cores.
     pub compute_flops: f64,
     /// *Effective* decode bandwidth (bytes of weights the CPU decode loop
@@ -47,6 +54,22 @@ impl DeviceProfile {
     /// Modeled duration of a single flash read of `len` bytes.
     pub fn flash_read_seconds(&self, len: u64) -> f64 {
         self.flash_latency + len as f64 / self.flash_max_bw
+    }
+
+    /// Modeled duration of `n` reads totalling `total` bytes submitted as
+    /// one batch: the device services them in waves of up to `queue_depth`
+    /// concurrent reads, so the fixed latency is charged once per wave
+    /// while the payload streams back-to-back at max bandwidth.
+    pub fn flash_batch_seconds(&self, n: usize, total: u64) -> f64 {
+        self.flash_batch_seconds_at(n, total, self.flash_max_bw)
+    }
+
+    /// The same wave model at an explicit effective bandwidth — the flash
+    /// simulator passes its `bw_scale`-adjusted bandwidth through here so
+    /// the batch formula lives in exactly one place.
+    pub fn flash_batch_seconds_at(&self, n: usize, total: u64, bw: f64) -> f64 {
+        let waves = n.max(1).div_ceil(self.queue_depth.max(1));
+        waves as f64 * self.flash_latency + total as f64 / bw
     }
 
     /// Effective flash throughput (bytes/s) at a given chunk size — the
@@ -74,6 +97,7 @@ pub const ONEPLUS12: DeviceProfile = DeviceProfile {
     mem_bw: 60.0e9,
     flash_max_bw: 5.8e9,
     flash_latency: 45e-6,
+    queue_depth: 32,
     compute_flops: 80.0e9,
     decode_bw: 5.7e9,
     dram_bytes: 16 * (1 << 30),
@@ -87,6 +111,7 @@ pub const PIXEL6: DeviceProfile = DeviceProfile {
     mem_bw: 34.0e9,
     flash_max_bw: 4.2e9,
     flash_latency: 70e-6,
+    queue_depth: 16,
     compute_flops: 35.0e9,
     decode_bw: 4.5e9,
     dram_bytes: 8 * (1 << 30),
@@ -100,6 +125,7 @@ pub const INFINIX_ZERO30: DeviceProfile = DeviceProfile {
     mem_bw: 17.0e9,
     flash_max_bw: 3.6e9,
     flash_latency: 120e-6,
+    queue_depth: 8,
     compute_flops: 18.0e9,
     decode_bw: 2.0e9,
     dram_bytes: 8 * (1 << 30),
@@ -150,6 +176,41 @@ mod tests {
             let bw = d.flash_throughput(4 << 10);
             assert!(bw < 0.1e9, "{}: 4KB bw should be <100MB/s", d.name);
         }
+    }
+
+    #[test]
+    fn batched_reads_amortize_fixed_latency() {
+        // A batch within the queue depth pays ONE fixed latency; the same
+        // reads issued one by one pay it n times.
+        for d in ALL {
+            let n = d.queue_depth; // one full wave
+            let chunk = 64u64 << 10;
+            let batch = d.flash_batch_seconds(n, n as u64 * chunk);
+            let serial = n as f64 * d.flash_read_seconds(chunk);
+            assert!(
+                batch < serial,
+                "{}: batch {batch} !< serial {serial}",
+                d.name
+            );
+            // exactly one latency + streamed bytes
+            let want =
+                d.flash_latency + (n as u64 * chunk) as f64 / d.flash_max_bw;
+            assert!((batch - want).abs() < 1e-12, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn batch_waves_bounded_by_queue_depth() {
+        let d = &PIXEL6;
+        let n = d.queue_depth * 2 + 1; // three waves
+        let batch = d.flash_batch_seconds(n, 0);
+        assert!((batch - 3.0 * d.flash_latency).abs() < 1e-12);
+        // a batch of one degenerates to the single-read model
+        assert!(
+            (d.flash_batch_seconds(1, 4096) - d.flash_read_seconds(4096))
+                .abs()
+                < 1e-12
+        );
     }
 
     #[test]

@@ -41,7 +41,7 @@ use crate::cache::{CachePolicy, SharedCache, TensorCache, WeightCache};
 use crate::config::{ArtifactConfig, RuntimeConfig, SparsityLevel};
 use crate::costmodel::Geometry;
 use crate::device;
-use crate::flash::{ClockMode, FlashDevice};
+use crate::flash::{ClockMode, FlashDevice, ReadQueue};
 use crate::governor::PoolLedger;
 use crate::layout::{quant, AwgfFile, OpKind, TensorId};
 use crate::metrics::DecodeMetrics;
@@ -84,6 +84,10 @@ pub struct EngineOptions {
     pub clock: ClockMode,
     pub bw_scale: f64,
     pub trigger: PreloadTrigger,
+    /// Software bound on flash reads in flight through the shared
+    /// [`ReadQueue`] (loader preloads + on-demand fetch misses). `0` uses
+    /// the device profile's modeled queue depth.
+    pub io_queue_depth: usize,
 }
 
 impl EngineOptions {
@@ -102,6 +106,7 @@ impl EngineOptions {
             },
             bw_scale: rc.bw_scale,
             trigger: PreloadTrigger::FirstLayer,
+            io_queue_depth: rc.io_queue_depth,
         }
     }
 }
@@ -151,6 +156,10 @@ pub struct SwapEngine {
     awgf: Arc<AwgfFile>,
     dense: DenseTensors,
     flash: Arc<FlashDevice>,
+    /// Shared async read queue: the loader's preload chunks and the
+    /// fetch path's on-demand misses ride the same submit/reap structure,
+    /// so either side's reads overlap (and batch) with the other's.
+    queue: Arc<ReadQueue>,
     cache: Arc<SharedCache>,
     pipe: Pipeline,
     level: Level,
@@ -179,7 +188,6 @@ pub struct SwapEngine {
     tmp: Vec<f32>,
     ondemand: Vec<(usize, usize, usize)>, // (op slot in family, row slot, channel)
     staged: Vec<(usize, usize, usize)>,   // slab hits awaiting batched insert
-    rowbuf: Vec<u8>,
     rowf32: Vec<f32>,
 }
 
@@ -225,7 +233,10 @@ impl SwapEngine {
             rt.load(&name)?;
         }
 
-        let pipe = Pipeline::spawn(awgf.clone(), flash.clone());
+        // one queue for both read paths: loader preloads and the engine's
+        // on-demand misses share waves and the in-flight bound
+        let queue = ReadQueue::new(flash.clone(), opts.io_queue_depth);
+        let pipe = Pipeline::spawn_with_queue(awgf.clone(), queue.clone());
         let kv = KvState::new(m);
         let d = m.d_model;
         let dff = m.d_ff;
@@ -251,7 +262,6 @@ impl SwapEngine {
             tmp: Vec::new(),
             ondemand: Vec::new(),
             staged: Vec::new(),
-            rowbuf: Vec::new(),
             rowf32: vec![0.0; dff.max(cfg.model.vocab_size)],
             cfg,
             opts,
@@ -259,6 +269,7 @@ impl SwapEngine {
             awgf,
             dense,
             flash,
+            queue,
             cache,
             pipe,
             level,
@@ -373,8 +384,7 @@ impl SwapEngine {
             + self.logits.capacity()
             + self.tmp.capacity()
             + self.rowf32.capacity())
-            * 4
-            + self.rowbuf.capacity()) as u64
+            * 4) as u64
     }
 
     /// Decode one token; returns the logits slice.
@@ -387,6 +397,7 @@ impl SwapEngine {
         let t_start = Instant::now();
         let busy0 = self.rt.total_busy();
         let (_, _, flash_ns0) = self.flash.stats.snapshot();
+        let io0 = self.queue.io_stats();
 
         let n = self.opts.group_size.max(1);
         let n_groups = m.n_layers.div_ceil(n);
@@ -591,6 +602,12 @@ impl SwapEngine {
         let (_, _, flash_ns1) = self.flash.stats.snapshot();
         self.metrics.flash_busy +=
             Duration::from_nanos(flash_ns1 - flash_ns0);
+        let io1 = self.queue.io_stats();
+        self.metrics.io_batches += io1.batches - io0.batches;
+        self.metrics.io_wait +=
+            Duration::from_nanos(io1.wait_ns - io0.wait_ns);
+        self.metrics.io_inflight_peak =
+            self.metrics.io_inflight_peak.max(io1.inflight_peak);
         let loader = self.pipe.loader_stats();
         self.metrics.slab_bytes_peak =
             self.metrics.slab_bytes_peak.max(loader.slab_bytes_peak);
@@ -804,12 +821,12 @@ impl SwapEngine {
                 fetch_ondemand_rows(
                     &self.awgf,
                     &self.flash,
+                    &self.queue,
                     &mut cache,
                     layer,
                     ops,
                     &self.ondemand,
                     &mut bufs,
-                    &mut self.rowbuf,
                     &mut self.metrics,
                 )?;
             }
@@ -1035,29 +1052,54 @@ fn insert_staged(
 /// On-demand flash fill for the channels neither the cache nor the preload
 /// slab covered (paper: ~5%), still under the family fetch's single cache
 /// lock. Adjacent missing channels of the same op are bundled into one
-/// gapped read when the flash model prices the bundle below the separate
-/// row reads (per-read latency dominates small I/Os — Ripple-style
-/// coalescing, arXiv 2410.19274); `flash_bytes` counts bytes actually
-/// read, including bundle gaps.
+/// gapped read when the *batch* model prices the bundle at or below the
+/// split row reads (Ripple-style coalescing, arXiv 2410.19274 — but the
+/// split reads share a wave's fixed latency through the queue now, so
+/// bundling only wins gap-free runs or splits that would spill into
+/// extra waves); `flash_bytes` counts bytes actually read, including
+/// bundle gaps.
+///
+/// All of the fetch's reads — every run, across the family's ops — are
+/// staged first and submitted to the shared [`ReadQueue`] as ONE group, so
+/// they share device waves (one fixed latency per queue-depth's worth)
+/// and overlap with any loader preload already in flight, instead of
+/// serializing one synchronous read at a time. Waiting on completions
+/// under the cache guard is safe for the same reason `wait_part` is: the
+/// queue workers (like the loader) never take the cache mutex.
 #[allow(clippy::too_many_arguments)]
 fn fetch_ondemand_rows(
     awgf: &AwgfFile,
     flash: &FlashDevice,
+    queue: &ReadQueue,
     cache: &mut WeightCache,
     layer: usize,
     ops: &[OpKind],
     ondemand: &[(usize, usize, usize)],
     bufs: &mut [Vec<f32>; 3],
-    rowbuf: &mut Vec<u8>,
     m: &mut DecodeMetrics,
 ) -> Result<()> {
     let quant = awgf.quant;
+
+    /// One planned run: `len` rows starting at `ondemand[i]`, read either
+    /// as one gapped span (`coalesce`) or as `len` row reads beginning at
+    /// request index `req0`.
+    struct Run {
+        i: usize,
+        len: usize,
+        stride: usize,
+        rb: usize,
+        coalesce: bool,
+        req0: usize,
+    }
+
+    // pass 1: plan every run and stage its reads — no I/O yet
+    let mut runs: Vec<Run> = Vec::new();
+    let mut reqs: Vec<(u64, usize)> = Vec::new();
     let mut i = 0usize;
     while i < ondemand.len() {
         let (oi, _, ch0) = ondemand[i];
         let op = ops[oi];
         let info = awgf.op(op);
-        let dout = info.d_out;
         let rb = info.row_bytes;
         // adjacent channels of one (op, layer) sit a fixed stride apart in
         // the file: the layout group's layer count times the row size
@@ -1077,49 +1119,119 @@ fn fetch_ondemand_rows(
 
         let (off0, _) = awgf.row_span(op, layer, ch0);
         let span = (len - 1) * stride + rb;
+        // The split reads share one wave's fixed latency through the
+        // queue anyway, so bundling into a gapped span only wins when it
+        // moves no MORE bytes than the split (gap-free adjacency) or the
+        // split would spill into extra waves — price both through the
+        // batch model, not the old serial single-read comparison.
         let coalesce = len > 1
-            && flash.model_read_ns(span as u64)
-                < len as u64 * flash.model_read_ns(rb as u64);
+            && flash.model_batch_ns_n(1, span as u64)
+                <= flash.model_batch_ns_n(len, (len * rb) as u64);
+        let req0 = reqs.len();
         if coalesce {
-            rowbuf.resize(span, 0);
-            flash.read_into(off0, rowbuf)?;
-            m.flash_bytes += span as u64;
-            m.ondemand_coalesced_runs += 1;
-            for r in 0..len {
-                let (_, slot, _) = ondemand[i + r];
-                quant::dequantize_row(
-                    &rowbuf[r * stride..r * stride + rb],
-                    quant,
-                    &mut bufs[oi][slot * dout..(slot + 1) * dout],
-                );
-            }
+            reqs.push((off0, span));
         } else {
-            rowbuf.resize(rb, 0);
             for r in 0..len {
-                let (_, slot, _) = ondemand[i + r];
-                flash.read_into(off0 + (r * stride) as u64, rowbuf)?;
-                m.flash_bytes += rb as u64;
-                quant::dequantize_row(
-                    rowbuf,
-                    quant,
-                    &mut bufs[oi][slot * dout..(slot + 1) * dout],
-                );
+                reqs.push((off0 + (r * stride) as u64, rb));
             }
         }
-        m.ondemand_rows += len as u64;
+        runs.push(Run {
+            i,
+            len,
+            stride,
+            rb,
+            coalesce,
+            req0,
+        });
+        i += len;
+    }
 
-        // one batched insert per run, under the same (outer) guard
+    // pass 2: one atomic submission for the whole fetch — URGENT: these
+    // rows block the current matmul, so they jump ahead of any preload
+    // wavefront still pending in the shared queue
+    let tags = queue.submit_many_urgent(&reqs);
+
+    // pass 3: reap + dequantize + one batched insert per run, under the
+    // caller's (single) cache guard. After a failure the fetch is dead:
+    // abandon the remaining tags (non-blocking) instead of waiting them
+    // out — unreaped completions would linger in the queue.
+    let mut first_err: Option<anyhow::Error> = None;
+    for run in &runs {
+        let n_reqs = if run.coalesce { 1 } else { run.len };
+        if first_err.is_some() {
+            for r in 0..n_reqs {
+                queue.abandon(tags[run.req0 + r]);
+            }
+            continue;
+        }
+        let (oi, _, _) = ondemand[run.i];
+        let op = ops[oi];
+        let dout = awgf.op(op).d_out;
+        // I/O counters are charged per LANDED read — a failed fetch must
+        // not report flash traffic that never happened (same rule as the
+        // loader's complete_part)
+        if run.coalesce {
+            match queue.wait(tags[run.req0]) {
+                Err(e) => {
+                    first_err = Some(e);
+                    continue;
+                }
+                Ok(c) => {
+                    let span = (run.len - 1) * run.stride + run.rb;
+                    m.flash_bytes += span as u64;
+                    m.ondemand_coalesced_runs += 1;
+                    m.ondemand_rows += run.len as u64;
+                    for r in 0..run.len {
+                        let (_, slot, _) = ondemand[run.i + r];
+                        quant::dequantize_row(
+                            &c.data[r * run.stride..r * run.stride + run.rb],
+                            quant,
+                            &mut bufs[oi][slot * dout..(slot + 1) * dout],
+                        );
+                    }
+                }
+            }
+        } else {
+            let mut failed = false;
+            for r in 0..run.len {
+                if failed {
+                    queue.abandon(tags[run.req0 + r]);
+                    continue;
+                }
+                let (_, slot, _) = ondemand[run.i + r];
+                match queue.wait(tags[run.req0 + r]) {
+                    Err(e) => {
+                        first_err = Some(e);
+                        failed = true;
+                    }
+                    Ok(c) => {
+                        m.flash_bytes += run.rb as u64;
+                        quant::dequantize_row(
+                            &c.data,
+                            quant,
+                            &mut bufs[oi][slot * dout..(slot + 1) * dout],
+                        );
+                    }
+                }
+            }
+            if failed {
+                continue;
+            }
+            m.ondemand_rows += run.len as u64;
+        }
         let tc = cache.tensor_mut(TensorId::new(layer, op));
         let rows: &[f32] = &bufs[oi];
-        tc.insert_rows((0..len).map(|r| {
-            let (_, slot, ch) = ondemand[i + r];
+        tc.insert_rows((0..run.len).map(|r| {
+            let (_, slot, ch) = ondemand[run.i + r];
             (ch, &rows[slot * dout..(slot + 1) * dout])
         }));
         m.batched_inserts += 1;
-        m.cache_locks_avoided += len as u64;
-        i += len;
+        m.cache_locks_avoided += run.len as u64;
     }
-    Ok(())
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
 #[derive(Debug, Clone, Copy)]

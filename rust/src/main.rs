@@ -80,6 +80,8 @@ pub fn engine_options(args: &Args) -> Result<EngineOptions> {
             "last" => PreloadTrigger::LastLayer,
             t => bail!("unknown preload trigger '{t}' (first|last)"),
         },
+        // 0 = the device profile's modeled queue depth
+        io_queue_depth: args.opt_usize("io-depth", 0)?,
     })
 }
 
@@ -98,7 +100,8 @@ fn run(args: &Args) -> Result<()> {
             eprintln!(
                 "usage: activeflow <generate|eval|serve|search|inspect|bench> \
                  [--artifacts DIR] [--sp F] [--group N] [--cache-kb N] \
-                 [--device D] [--mode timed|modeled] [--swap preload|ondemand]"
+                 [--device D] [--mode timed|modeled] [--swap preload|ondemand] \
+                 [--io-depth N]"
             );
             Ok(())
         }

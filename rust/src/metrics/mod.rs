@@ -42,6 +42,15 @@ pub struct DecodeMetrics {
     pub ondemand_coalesced_runs: u64,
     /// High-water mark of the preload slab store (M_cl peak, bytes).
     pub slab_bytes_peak: u64,
+    // ---- async flash read path (shared ReadQueue, PERF.md)
+    /// Read-queue submission waves issued (each amortizes the device's
+    /// fixed latency across up to queue-depth reads).
+    pub io_batches: u64,
+    /// Peak reads in flight through the queue (≤ the queue depth).
+    pub io_inflight_peak: u64,
+    /// Time reapers (loader + on-demand fetches) spent blocked waiting
+    /// for queue completions — the I/O share of the critical path.
+    pub io_wait: Duration,
     // ---- runtime DRAM governor counters (governor module)
     /// Re-budget decisions applied to the live engine.
     pub rebudgets_applied: u64,
@@ -100,6 +109,10 @@ impl DecodeMetrics {
         self.ondemand_coalesced_runs += other.ondemand_coalesced_runs;
         // a peak merges as a max, not a sum
         self.slab_bytes_peak = self.slab_bytes_peak.max(other.slab_bytes_peak);
+        self.io_batches += other.io_batches;
+        self.io_inflight_peak =
+            self.io_inflight_peak.max(other.io_inflight_peak);
+        self.io_wait += other.io_wait;
         self.rebudgets_applied += other.rebudgets_applied;
         self.rebudgets_skipped += other.rebudgets_skipped;
         self.rebudget_rows_evicted += other.rebudget_rows_evicted;
@@ -209,6 +222,12 @@ mod tests {
         b.ondemand_rows = 2;
         b.ondemand_coalesced_runs = 2;
         b.slab_bytes_peak = 1024;
+        a.io_batches = 3;
+        a.io_inflight_peak = 4;
+        a.io_wait = Duration::from_millis(2);
+        b.io_batches = 2;
+        b.io_inflight_peak = 9;
+        b.io_wait = Duration::from_millis(1);
         b.rebudgets_applied = 2;
         b.rebudgets_skipped = 1;
         b.rebudget_rows_evicted = 7;
@@ -221,6 +240,9 @@ mod tests {
         assert_eq!(a.ondemand_rows, 5);
         assert_eq!(a.ondemand_coalesced_runs, 3);
         assert_eq!(a.slab_bytes_peak, 4096, "peak is a max, not a sum");
+        assert_eq!(a.io_batches, 5);
+        assert_eq!(a.io_inflight_peak, 9, "inflight peak is a max");
+        assert_eq!(a.io_wait, Duration::from_millis(3));
         assert_eq!(a.rebudgets_applied, 2);
         assert_eq!(a.rebudgets_skipped, 1);
         assert_eq!(a.rebudget_rows_evicted, 7);

@@ -16,6 +16,14 @@
 //! Per-part completion signalling lets the engine start consuming Wq/Wk/Wv
 //! of the next group while its Wd part is still streaming.
 //!
+//! **Async I/O.** The loader does not read synchronously: every coalesced
+//! chunk run of every part of a batch is *planned* first, then submitted
+//! to the shared [`ReadQueue`] in one atomic group, and only then reaped —
+//! so the runs of one part, and across sibling parts of one
+//! `PreloadBatch`, are in flight together and share device waves (one
+//! fixed latency per queue-depth's worth of reads instead of one per
+//! chunk). Dequantization into slab rows happens as completions land.
+//!
 //! **Slab store.** Each `(seq, op)` part is one contiguous `Vec<f32>` slab
 //! laid out `[channel-major][layer][d_out]` plus a small index (sorted
 //! channel list + per-row fill bitmap) — no per-row heap allocations. The
@@ -33,7 +41,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::flash::FlashDevice;
+use crate::flash::{FlashDevice, ReadQueue};
 use crate::layout::{quant, AwgfFile, OpKind};
 
 /// Key of a preload part: (monotonic group sequence number, op family).
@@ -244,7 +252,10 @@ pub struct LoaderStats {
     pub bytes_read: u64,
     pub channels_loaded: u64,
     pub channels_skipped_cached: u64,
-    /// Bytes currently held by live part slabs.
+    /// Bytes held by live part slabs, **including** reservations for parts
+    /// admitted under the cap but still loading — reserving at admission
+    /// is what keeps concurrently loading parts from jointly overshooting
+    /// the governor's ceiling.
     pub slab_bytes: u64,
     /// High-water mark of `slab_bytes` (M_cl peak, loader view).
     pub slab_bytes_peak: u64,
@@ -257,6 +268,10 @@ pub struct LoaderStats {
     /// Parts dropped unpublished because the slab store hit the
     /// governor's byte ceiling; their waiters fell back to on-demand.
     pub slabs_dropped_budget: u64,
+    /// Parts whose flash reads (or request planning) failed: no slab was
+    /// published, waiters fell back to on-demand. Surfaced by the server
+    /// as `parts_failed` so loader trouble is visible beyond stderr.
+    pub parts_failed: u64,
     /// Modeled flash busy time.
     pub busy: Duration,
 }
@@ -271,14 +286,25 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
+    /// Spawn with a private read queue at the device's default depth
+    /// (tests, standalone use). The engine shares one queue between the
+    /// loader and its on-demand path via [`Pipeline::spawn_with_queue`].
     pub fn spawn(awgf: Arc<AwgfFile>, flash: Arc<FlashDevice>) -> Pipeline {
+        let queue = ReadQueue::new(flash, 0);
+        Pipeline::spawn_with_queue(awgf, queue)
+    }
+
+    pub fn spawn_with_queue(
+        awgf: Arc<AwgfFile>,
+        queue: Arc<ReadQueue>,
+    ) -> Pipeline {
         let (tx, rx) = channel();
         let shared = Arc::new(SharedState::default());
         let cv = Arc::new(Condvar::new());
         let cv_guard = Arc::new(Mutex::new(0u64));
         let worker = LoaderWorker {
             awgf,
-            flash,
+            queue,
             shared: shared.clone(),
             cv: cv.clone(),
             cv_guard: cv_guard.clone(),
@@ -398,10 +424,41 @@ impl Drop for Pipeline {
 
 struct LoaderWorker {
     awgf: Arc<AwgfFile>,
-    flash: Arc<FlashDevice>,
+    queue: Arc<ReadQueue>,
     shared: Arc<SharedState>,
     cv: Arc<Condvar>,
     cv_guard: Arc<Mutex<u64>>,
+}
+
+/// One planned chunk read of a part: the reap tag plus everything needed
+/// to scatter the returned bytes into their slab rows.
+struct PlannedRun {
+    tag: u64,
+    start_ch: usize,
+    n_ch: usize,
+    /// Byte stride between consecutive channels' sub-spans in the buffer.
+    stride: usize,
+    rb: usize,
+    /// Total bytes of this run's read (for completion-time accounting).
+    total: usize,
+    /// `(layer, byte offset of that layer's row within one channel's
+    /// sub-span)` for every layer this run covers.
+    layer_offs: Vec<(usize, usize)>,
+}
+
+/// Outcome of planning one part, before its reads complete.
+enum PartPlan {
+    /// Over the governor ceiling — dropped before any I/O was staged.
+    Throttled,
+    /// Planning failed (malformed request); nothing was submitted.
+    Failed(anyhow::Error),
+    /// Reads submitted; `reserved` bytes are already counted against
+    /// `slab_bytes` (released on every path that does not publish).
+    Loading {
+        slab: PartSlab,
+        reserved: u64,
+        runs: Vec<PlannedRun>,
+    },
 }
 
 impl LoaderWorker {
@@ -409,18 +466,50 @@ impl LoaderWorker {
         while let Ok(msg) = rx.recv() {
             match msg {
                 Msg::Stop => break,
-                Msg::Batch(batch) => {
-                    self.shared.stats.lock().unwrap().batch_msgs += 1;
-                    for part in &batch.parts {
-                        self.handle_part(batch.seq, &batch.layers, part);
-                    }
-                }
+                Msg::Batch(batch) => self.handle_batch(batch),
             }
         }
     }
 
-    /// Load, publish, and signal one part of a batch.
-    fn handle_part(&self, seq: u64, layers: &Arc<[usize]>, part: &PartRequest) {
+    /// Plan every part of the batch, submit ALL reads as one atomic group,
+    /// then reap: chunk runs of one part — and across sibling parts — are
+    /// in flight together, so the device amortizes its fixed latency
+    /// across them instead of paying it once per chunk.
+    fn handle_batch(&self, batch: PreloadBatch) {
+        self.shared.stats.lock().unwrap().batch_msgs += 1;
+        // phase 1: plan (cap admission + run layout); no I/O yet
+        let mut reqs: Vec<(u64, usize)> = Vec::new();
+        let mut plans: Vec<PartPlan> = batch
+            .parts
+            .iter()
+            .map(|part| self.plan_part(&batch.layers, part, &mut reqs))
+            .collect();
+        // phase 2: one submission for the whole batch (tags in req order)
+        let tags = self.queue.submit_many(&reqs);
+        for plan in &mut plans {
+            if let PartPlan::Loading { runs, .. } = plan {
+                for run in runs {
+                    run.tag = tags[run.tag as usize];
+                }
+            }
+        }
+        // phase 3: reap + dequantize + publish, part by part — a part is
+        // published the moment its own runs are in, while later parts'
+        // reads are still streaming
+        for (part, plan) in batch.parts.iter().zip(plans) {
+            self.complete_part(batch.seq, part.op, plan);
+        }
+    }
+
+    /// Admission + run planning for one part. Stages the part's reads
+    /// into `reqs` (tags are indices into it until `handle_batch` swaps
+    /// in the real queue tags).
+    fn plan_part(
+        &self,
+        layers: &Arc<[usize]>,
+        part: &PartRequest,
+        reqs: &mut Vec<(u64, usize)>,
+    ) -> PartPlan {
         let cap = self.shared.slab_cap.load(Ordering::Relaxed);
         // The slab's size is fully determined before any I/O (union of
         // span channels × layers × d_out); a part that would overflow the
@@ -439,84 +528,71 @@ impl LoaderWorker {
             * layers.len()
             * self.awgf.op(part.op).d_out
             * 4) as u64;
-        let throttled = {
-            // one guard covers the issuer skip accounting (channel lists
-            // arrive pre-filtered) and the throttle read
+        {
+            // One guard covers the issuer skip accounting (channel lists
+            // arrive pre-filtered), the throttle check, AND the byte
+            // reservation: parts of a batch load concurrently now, so an
+            // admitted part must reserve its bytes at check time — two
+            // in-flight parts checking against unreserved `slab_bytes`
+            // would both pass and jointly overshoot the ceiling.
             let mut st = self.shared.stats.lock().unwrap();
             st.channels_skipped_cached += part.skipped_cached;
-            st.slab_bytes.saturating_add(prospective) > cap
-        };
-        let slab = if throttled {
-            // pressure valve: waiters fall back to on-demand loading
-            None
-        } else {
-            match self.process(layers, part, union) {
-                Ok(s) => Some(s),
-                Err(e) => {
-                    eprintln!("[loader] preload failed: {e:#}");
-                    None // still mark done: waiters fall back
+            if st.slab_bytes.saturating_add(prospective) > cap {
+                return PartPlan::Throttled;
+            }
+            st.slab_bytes += prospective;
+            st.slab_bytes_peak = st.slab_bytes_peak.max(st.slab_bytes);
+        }
+        match self.plan_runs(layers, part, union) {
+            Ok((slab, mut runs, part_reqs)) => {
+                let base = reqs.len() as u64;
+                for run in &mut runs {
+                    run.tag += base;
+                }
+                reqs.extend(part_reqs);
+                PartPlan::Loading {
+                    slab,
+                    reserved: prospective,
+                    runs,
                 }
             }
-        };
-        // Publish + mark done under the `retired` guard: if the engine
-        // retired this group while we were loading (its fetch never
-        // needed to wait), the slab is dropped here instead of leaking in
-        // the store forever. No cap re-check: `prospective` equals the
-        // built slab's bytes exactly, and live slab bytes only shrink
-        // (retire) between the pre-check and here.
-        {
-            let retired = self.shared.retired.lock().unwrap();
-            if seq > *retired {
-                if let Some(slab) = slab {
-                    let bytes = slab.bytes();
-                    self.shared
-                        .slabs
-                        .lock()
-                        .unwrap()
-                        .insert((seq, part.op), Arc::new(slab));
-                    let mut st = self.shared.stats.lock().unwrap();
-                    st.slab_bytes += bytes;
-                    st.slab_bytes_peak =
-                        st.slab_bytes_peak.max(st.slab_bytes);
-                    st.parts_loaded += 1;
-                } else if throttled {
-                    self.shared.stats.lock().unwrap().slabs_dropped_budget +=
-                        1;
-                }
-                self.shared.done.lock().unwrap().insert((seq, part.op));
+            Err(e) => {
+                // nothing was staged for a failed plan — release the
+                // reservation immediately
+                let mut st = self.shared.stats.lock().unwrap();
+                st.slab_bytes = st.slab_bytes.saturating_sub(prospective);
+                PartPlan::Failed(e)
             }
         }
-        // wake waiters (also on the retired/error/throttled paths, so a
-        // racing wait_part re-checks instead of sleeping on)
-        let mut gen = self.cv_guard.lock().unwrap();
-        *gen += 1;
-        drop(gen);
-        self.cv.notify_all();
     }
 
-    fn process(
+    /// Pure planning: allocate the part's slab and lay out its coalesced
+    /// chunk runs. Returns the staged read list alongside (tags are local
+    /// indices into it); nothing touches the device here.
+    #[allow(clippy::type_complexity)]
+    fn plan_runs(
         &self,
         layers: &Arc<[usize]>,
         part: &PartRequest,
         union: Vec<usize>,
-    ) -> Result<PartSlab> {
+    ) -> Result<(PartSlab, Vec<PlannedRun>, Vec<(u64, usize)>)> {
         let info = self.awgf.op(part.op);
         let dout = info.d_out;
         let rb = info.row_bytes;
-        let quant = self.awgf.quant;
 
         // The part's slab, allocated once over the caller's sorted union
-        // of the spans' channel lists; every read dequantizes straight
-        // into its final slot (no per-row scratch, no per-row Vec). A
-        // (layer, channel) row outside its layer's span stays unfilled —
-        // the engine finds those channels in the cache (that is why they
-        // were filtered). When span channel lists diverge (straddling
-        // group AND residency differing per partition — rare) the union
-        // over-allocates the unfilled rows; bytes() reports the real
-        // allocation, so the governor ledger stays truthful. Per-span
-        // sub-slabs would remove the waste (ROADMAP).
-        let mut slab =
-            PartSlab::from_sorted(part.op, layers.clone(), union, dout);
+        // of the spans' channel lists; every completion dequantizes
+        // straight into its final slot (no per-row scratch, no per-row
+        // Vec). A (layer, channel) row outside its layer's span stays
+        // unfilled — the engine finds those channels in the cache (that
+        // is why they were filtered). When span channel lists diverge
+        // (straddling group AND residency differing per partition — rare)
+        // the union over-allocates the unfilled rows; bytes() reports the
+        // real allocation, so the governor ledger stays truthful.
+        // Per-span sub-slabs would remove the waste (ROADMAP).
+        let slab = PartSlab::from_sorted(part.op, layers.clone(), union, dout);
+        let mut runs: Vec<PlannedRun> = Vec::new();
+        let mut reqs: Vec<(u64, usize)> = Vec::new();
 
         for span in &part.spans {
             let span_layers = &layers[span.lo..span.hi];
@@ -556,22 +632,25 @@ impl LoaderWorker {
                 let j_max = glayers.iter().map(|&l| j_of(l)).max().unwrap();
                 let sub = (j_max - j_min + 1) * rb;
                 let full_chunk = sub == grp.layers.len() * rb;
-                let n_layers = glayers.len();
+                let layer_offs: Vec<(usize, usize)> = glayers
+                    .iter()
+                    .map(|&l| (l, (j_of(l) - j_min) * rb))
+                    .collect();
 
                 // Coalesce adjacent channels into single I/Os — only
                 // valid when the sub-span is the whole chunk (otherwise
                 // reads have gaps).
-                let mut runs: Vec<(usize, usize)> = Vec::new();
+                let mut ch_runs: Vec<(usize, usize)> = Vec::new();
                 for &ch in &chs {
-                    match runs.last_mut() {
+                    match ch_runs.last_mut() {
                         Some((s, l)) if full_chunk && *s + *l == ch => {
                             *l += 1
                         }
-                        _ => runs.push((ch, 1)),
+                        _ => ch_runs.push((ch, 1)),
                     }
                 }
 
-                for (start_ch, len) in runs {
+                for (start_ch, len) in ch_runs {
                     let (chunk_off, chunk_len) =
                         self.awgf.chunk_span(part.op, g, start_ch);
                     let (off, stride) = if full_chunk {
@@ -581,36 +660,142 @@ impl LoaderWorker {
                     };
                     let total =
                         if full_chunk { chunk_len * len } else { sub };
-                    let buf = self.flash.read(off, total)?;
-                    {
-                        let mut st = self.shared.stats.lock().unwrap();
-                        st.chunks_read += 1;
-                        st.bytes_read += total as u64;
-                        st.channels_loaded += (len * n_layers) as u64;
-                        st.busy += Duration::from_nanos(
-                            self.flash.model_read_ns(total as u64),
-                        );
-                    }
-                    for ci in 0..len {
-                        let ch = start_ch + ci;
-                        for &layer in &glayers {
-                            let base =
-                                ci * stride + (j_of(layer) - j_min) * rb;
-                            let row = slab
-                                .row_mut(layer, ch)
-                                .expect("slab covers all span channels");
-                            quant::dequantize_row(
-                                &buf[base..base + rb],
-                                quant,
-                                row,
-                            );
-                        }
-                    }
+                    runs.push(PlannedRun {
+                        tag: reqs.len() as u64,
+                        start_ch,
+                        n_ch: len,
+                        stride,
+                        rb,
+                        total,
+                        layer_offs: layer_offs.clone(),
+                    });
+                    reqs.push((off, total));
                 }
             }
         }
 
-        Ok(slab)
+        Ok((slab, runs, reqs))
+    }
+
+    /// Reap one part's completions, dequantize into its slab, publish,
+    /// and signal — also on the throttled/failed/retired paths, so a
+    /// racing `wait_part` re-checks instead of sleeping on.
+    fn complete_part(&self, seq: u64, op: OpKind, plan: PartPlan) {
+        match plan {
+            PartPlan::Throttled => {
+                // pressure valve: waiters fall back to on-demand loading
+                let retired = self.shared.retired.lock().unwrap();
+                if seq > *retired {
+                    self.shared.stats.lock().unwrap().slabs_dropped_budget +=
+                        1;
+                    self.shared.done.lock().unwrap().insert((seq, op));
+                }
+            }
+            PartPlan::Failed(e) => {
+                eprintln!("[loader] preload failed: {e:#}");
+                let retired = self.shared.retired.lock().unwrap();
+                self.shared.stats.lock().unwrap().parts_failed += 1;
+                if seq > *retired {
+                    self.shared.done.lock().unwrap().insert((seq, op));
+                }
+            }
+            PartPlan::Loading {
+                mut slab,
+                reserved,
+                runs,
+            } => {
+                let quant = self.awgf.quant;
+                let mut busy_ns = 0u64;
+                let mut chunks = 0u64;
+                let mut bytes = 0u64;
+                let mut channels = 0u64;
+                let mut failed: Option<anyhow::Error> = None;
+                for run in &runs {
+                    // after a failure the rest of the part is useless:
+                    // abandon the remaining tags (non-blocking — also
+                    // cancels reads still pending) instead of draining
+                    // them one timeout at a time
+                    if failed.is_some() {
+                        self.queue.abandon(run.tag);
+                        continue;
+                    }
+                    match self.queue.wait(run.tag) {
+                        Err(e) => failed = Some(e),
+                        Ok(c) => {
+                            // loaded-I/O accounting happens here, per
+                            // landed read — a failed part must not count
+                            // bytes that never reached a slab
+                            busy_ns += c.modeled_ns;
+                            chunks += 1;
+                            bytes += run.total as u64;
+                            channels +=
+                                (run.n_ch * run.layer_offs.len()) as u64;
+                            for ci in 0..run.n_ch {
+                                let ch = run.start_ch + ci;
+                                for &(layer, loff) in &run.layer_offs {
+                                    let base = ci * run.stride + loff;
+                                    let row = slab
+                                        .row_mut(layer, ch)
+                                        .expect("slab covers all span channels");
+                                    quant::dequantize_row(
+                                        &c.data[base..base + run.rb],
+                                        quant,
+                                        row,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+                if chunks > 0 {
+                    let mut st = self.shared.stats.lock().unwrap();
+                    st.busy += Duration::from_nanos(busy_ns);
+                    st.chunks_read += chunks;
+                    st.bytes_read += bytes;
+                    st.channels_loaded += channels;
+                }
+                // Publish + mark done under the `retired` guard: if the
+                // engine retired this group while we were loading (its
+                // fetch never needed to wait), the slab is dropped here
+                // instead of leaking in the store forever. The bytes were
+                // reserved at admission — publishing adds nothing, every
+                // non-publish path releases. (Lock order everywhere:
+                // retired → slabs → stats → done, same as retire_group.)
+                let retired = self.shared.retired.lock().unwrap();
+                match failed {
+                    Some(e) => {
+                        eprintln!("[loader] preload failed: {e:#}");
+                        let mut st = self.shared.stats.lock().unwrap();
+                        st.parts_failed += 1;
+                        st.slab_bytes =
+                            st.slab_bytes.saturating_sub(reserved);
+                        if seq > *retired {
+                            self.shared.done.lock().unwrap().insert((seq, op));
+                        }
+                    }
+                    None if seq > *retired => {
+                        self.shared
+                            .slabs
+                            .lock()
+                            .unwrap()
+                            .insert((seq, op), Arc::new(slab));
+                        self.shared.stats.lock().unwrap().parts_loaded += 1;
+                        self.shared.done.lock().unwrap().insert((seq, op));
+                    }
+                    None => {
+                        // group already retired: drop the late slab and
+                        // give its reservation back
+                        let mut st = self.shared.stats.lock().unwrap();
+                        st.slab_bytes =
+                            st.slab_bytes.saturating_sub(reserved);
+                    }
+                }
+            }
+        }
+        let mut gen = self.cv_guard.lock().unwrap();
+        *gen += 1;
+        drop(gen);
+        self.cv.notify_all();
     }
 }
 
@@ -888,6 +1073,107 @@ mod tests {
     }
 
     #[test]
+    fn queued_runs_amortize_fixed_latency() {
+        // The whole point of the async queue: the four non-adjacent
+        // channel runs of this part are submitted together and share one
+        // device wave, so the modeled flash busy time pays ONE fixed
+        // latency — strictly below four sequential single reads.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf.clone(), flash.clone());
+        pipe.request(job(1, &[0, 1], &[0, 2, 4, 6])); // 4 runs of 1
+        assert!(pipe.wait_part((1, OpKind::Wq)));
+        let st = pipe.loader_stats();
+        assert_eq!(st.chunks_read, 4);
+        let (_, chunk_len) = awgf.chunk_span(OpKind::Wq, 0, 0);
+        let sequential = 4 * flash.model_read_ns(chunk_len as u64);
+        assert!(
+            (st.busy.as_nanos() as u64) < sequential,
+            "queued busy {:?} !< sequential {}ns",
+            st.busy,
+            sequential
+        );
+        // values still land in the right rows
+        let slab = pipe.part((1, OpKind::Wq)).unwrap();
+        let r = slab.row(1, 4).unwrap()[0];
+        assert!((r - 9.0).abs() <= 9.0 / 127.0 + 1e-2, "got {r}");
+    }
+
+    #[test]
+    fn concurrent_parts_reserve_bytes_against_the_cap() {
+        // Both parts of this batch are planned (and their reads put in
+        // flight) before either publishes. Without reserving bytes at
+        // admission both would pass the cap check and jointly overshoot
+        // the governor's ceiling; with the reservation the second part is
+        // throttled and the peak stays under the cap.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
+        let layers: Arc<[usize]> = Arc::from(&[0usize, 1][..]);
+        let chans: Arc<[usize]> = Arc::from(&[3usize, 9][..]);
+        // Wq slab: 2ch × 2 layers × 128 × 4 = 4096 B;
+        // Wk slab: 2ch × 2 layers ×  64 × 4 = 2048 B — cap fits only one
+        let cap = 5000u64;
+        pipe.set_slab_cap(cap);
+        pipe.request(PreloadBatch {
+            seq: 1,
+            layers: layers.clone(),
+            parts: vec![
+                PartRequest {
+                    op: OpKind::Wq,
+                    spans: vec![PartSpan {
+                        lo: 0,
+                        hi: 2,
+                        channels: chans.clone(),
+                    }],
+                    skipped_cached: 0,
+                },
+                PartRequest {
+                    op: OpKind::Wk,
+                    spans: vec![PartSpan {
+                        lo: 0,
+                        hi: 2,
+                        channels: chans.clone(),
+                    }],
+                    skipped_cached: 0,
+                },
+            ],
+        });
+        assert!(pipe.wait_part((1, OpKind::Wq)));
+        assert!(pipe.wait_part((1, OpKind::Wk)), "throttled part marks done");
+        assert!(pipe.part((1, OpKind::Wq)).is_some(), "first part fits");
+        assert!(pipe.part((1, OpKind::Wk)).is_none(), "second part dropped");
+        let st = pipe.loader_stats();
+        assert_eq!(st.slabs_dropped_budget, 1);
+        assert_eq!(st.slab_bytes, 4096);
+        assert!(
+            st.slab_bytes_peak <= cap,
+            "in-flight reservations overshot the cap: peak {} > {cap}",
+            st.slab_bytes_peak
+        );
+    }
+
+    #[test]
+    fn failed_reads_count_parts_failed_and_release_reservation() {
+        // Channel 100000 is far outside the weights file: the part's
+        // reads fail at the device. The failure must be *visible* (the
+        // old loader only eprintln'd), the reservation must come back,
+        // and the done mark must still arrive so waiters fall back.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
+        pipe.request(job(1, &[0, 1], &[0, 100000]));
+        assert!(pipe.wait_part((1, OpKind::Wq)), "done mark must arrive");
+        assert!(pipe.part((1, OpKind::Wq)).is_none(), "no slab published");
+        let st = pipe.loader_stats();
+        assert_eq!(st.parts_failed, 1);
+        assert_eq!(st.slab_bytes, 0, "reservation released on failure");
+        assert_eq!(st.parts_loaded, 0);
+        // the loader (and the shared queue) keep working afterwards
+        pipe.request(job(2, &[0, 1], &[5]));
+        assert!(pipe.wait_part((2, OpKind::Wq)));
+        assert!(pipe.part((2, OpKind::Wq)).is_some());
+        assert_eq!(pipe.loader_stats().parts_failed, 1);
+    }
+
+    #[test]
     fn slab_cap_drops_parts_but_still_marks_done() {
         // Governor pressure valve: past the slab-store ceiling the loader
         // publishes nothing (waiters fall back to on-demand) but the
@@ -930,21 +1216,54 @@ mod tests {
     #[test]
     fn slab_finishing_after_retire_is_dropped_not_leaked() {
         // The engine retires a group as soon as it finishes consuming it —
-        // possibly while the loader is still reading that group's last
-        // part (a fully cache-served fetch never waits). The late slab
-        // must be dropped, and the byte accounting must not drift.
+        // possibly while the loader is still reading that group's parts
+        // (a fully cache-served fetch never waits). With the overlapped
+        // loader EVERY part of the batch is in flight (and has reserved
+        // its slab bytes) when the retirement lands: all the late slabs
+        // must be dropped, every reservation released, and the byte
+        // accounting must not drift.
         let (awgf, flash, _p) = setup();
         let pipe = Pipeline::spawn(awgf, flash);
         pipe.retire_group(5); // group 5 already consumed and retired
-        pipe.request(job(5, &[0, 1], &[1, 2])); // loader finishes late
+        let layers: Arc<[usize]> = Arc::from(&[0usize, 1][..]);
+        let chans: Arc<[usize]> = Arc::from(&[1usize, 2][..]);
+        // two sibling parts complete concurrently against the retirement
+        pipe.request(PreloadBatch {
+            seq: 5,
+            layers: layers.clone(),
+            parts: vec![
+                PartRequest {
+                    op: OpKind::Wq,
+                    spans: vec![PartSpan {
+                        lo: 0,
+                        hi: 2,
+                        channels: chans.clone(),
+                    }],
+                    skipped_cached: 0,
+                },
+                PartRequest {
+                    op: OpKind::Wk,
+                    spans: vec![PartSpan {
+                        lo: 0,
+                        hi: 2,
+                        channels: chans.clone(),
+                    }],
+                    skipped_cached: 0,
+                },
+            ],
+        });
         pipe.request(job(6, &[0, 1], &[3]));
         assert!(pipe.wait_part((6, OpKind::Wq))); // FIFO: 5 processed first
-        assert!(!pipe.part_ready((5, OpKind::Wq)));
-        assert!(pipe.part((5, OpKind::Wq)).is_none(), "late slab dropped");
+        for op in [OpKind::Wq, OpKind::Wk] {
+            assert!(!pipe.part_ready((5, op)));
+            assert!(pipe.part((5, op)).is_none(), "late {op:?} slab dropped");
+        }
         let bytes6 = pipe.part((6, OpKind::Wq)).unwrap().bytes();
         assert_eq!(pipe.stored_bytes(), bytes6);
         assert_eq!(pipe.loader_stats().slab_bytes, bytes6,
-                   "accounting excludes the dropped slab");
+                   "accounting excludes the dropped slabs' reservations");
+        assert_eq!(pipe.loader_stats().parts_loaded, 1,
+                   "late parts must not count as loaded");
     }
 
     #[test]

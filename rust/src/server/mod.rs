@@ -87,6 +87,14 @@ struct ServerStats {
     ondemand_rows: AtomicU64,
     ondemand_coalesced_runs: AtomicU64,
     slab_bytes_peak: AtomicU64,
+    // async read-queue mirror (shared ReadQueue, PERF.md)
+    io_batches: AtomicU64,
+    io_inflight_peak: AtomicU64,
+    io_wait_us: AtomicU64,
+    /// Loader parts that failed to load (read/planning errors); waiters
+    /// fell back to on-demand. Non-zero here means the flash file or the
+    /// preload requests are broken — previously only visible on stderr.
+    parts_failed: AtomicU64,
     // runtime DRAM governor mirror: budget, pool ledger, decision counters
     budget_bytes: AtomicU64,
     ledger_cache_bytes: AtomicU64,
@@ -218,6 +226,27 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
             let before = engine.metrics.clone();
             let result = engine.generate(&req.prompt, req.n_tokens, req.temp);
             let decode_t = t0.elapsed();
+            {
+                // published on BOTH result paths: loader failures are the
+                // likeliest cause of a failed decode, so the visibility
+                // counters must not go stale exactly when things break
+                let m = &engine.metrics;
+                worker_stats.io_batches.fetch_add(
+                    m.io_batches - before.io_batches,
+                    Ordering::Relaxed,
+                );
+                worker_stats
+                    .io_inflight_peak
+                    .fetch_max(m.io_inflight_peak, Ordering::Relaxed);
+                worker_stats.io_wait_us.fetch_add(
+                    (m.io_wait - before.io_wait).as_micros() as u64,
+                    Ordering::Relaxed,
+                );
+                worker_stats.parts_failed.store(
+                    engine.loader_stats().parts_failed,
+                    Ordering::Relaxed,
+                );
+            }
             let resp = match result {
                 Err(e) => obj(vec![("error", s(&format!("{e:#}")))]),
                 Ok(toks) => {
@@ -402,6 +431,11 @@ fn handle_conn(
                             g(&stats.ondemand_coalesced_runs),
                         ),
                         ("slab_bytes_peak", g(&stats.slab_bytes_peak)),
+                        // async flash read path (PERF.md)
+                        ("io_batches", g(&stats.io_batches)),
+                        ("io_inflight_peak", g(&stats.io_inflight_peak)),
+                        ("io_wait_us", g(&stats.io_wait_us)),
+                        ("parts_failed", g(&stats.parts_failed)),
                         // runtime DRAM governor: budget, pools, decisions
                         ("budget_bytes", g(&stats.budget_bytes)),
                         ("ledger_cache_bytes", g(&stats.ledger_cache_bytes)),

@@ -74,6 +74,7 @@ fn opts(sp: f64, mode: SwapMode, cache_kb: u64) -> EngineOptions {
         clock: ClockMode::Modeled, // fast: no sleeping in CI tests
         bw_scale: 1.0,
         trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,
     }
 }
 

@@ -37,7 +37,8 @@ fn serve_generate_stats_shutdown() {
             device: &PIXEL6,
             clock: ClockMode::Modeled,
             bw_scale: 1.0,
-        trigger: PreloadTrigger::FirstLayer,
+            trigger: PreloadTrigger::FirstLayer,
+            io_queue_depth: 0,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
@@ -94,6 +95,19 @@ fn serve_generate_stats_shutdown() {
     assert!(stats.get("ondemand_rows").is_some());
     assert!(stats.get("ondemand_coalesced_runs").is_some());
     assert!(stats.get("slab_bytes_peak").is_some());
+    // async read path (PERF.md): preload reads ride the queue in waves,
+    // and loader failures are countable — not just stderr noise
+    assert!(
+        stats.get("io_batches").unwrap().as_f64().unwrap() > 0.0,
+        "preload I/O must flow through the read queue: {stats:?}"
+    );
+    assert!(stats.get("io_inflight_peak").is_some());
+    assert!(stats.get("io_wait_us").is_some());
+    assert_eq!(
+        stats.get("parts_failed").unwrap().as_f64().unwrap(),
+        0.0,
+        "healthy serve must not fail preload parts"
+    );
     let rate = stats.get("cache_hit_rate").unwrap().as_f64().unwrap();
     assert!((0.0..=1.0).contains(&rate));
 
@@ -146,6 +160,7 @@ fn set_budget_rebudgets_live_engine_mid_session() {
             clock: ClockMode::Modeled,
             bw_scale: 1.0,
             trigger: PreloadTrigger::FirstLayer,
+            io_queue_depth: 0,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,

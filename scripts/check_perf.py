@@ -1,8 +1,11 @@
 #!/usr/bin/env python3
 """Perf-trajectory gate: diff two BENCH_decode.json points and fail on a
->5% tokens/sec regression (ROADMAP item; see PERF.md methodology).
+>5% tokens/sec regression; optionally also diff two BENCH_governor.json
+points and fail on a >5% settle-time regression (ROADMAP items; see
+PERF.md methodology).
 
 Usage: check_perf.py PREV.json CURR.json [--threshold 0.05]
+                     [--governor GOV_PREV.json GOV_CURR.json]
 
 Exit codes: 0 = ok (or no previous point to compare), 1 = regression,
 2 = malformed input.
@@ -21,14 +24,80 @@ WATCHED = [
     "flash_bytes",
     "ondemand_rows",
     "slab_bytes_peak",
+    "io_batches",
+    "io_wait_us",
 ]
 
 
-def main(argv):
-    if len(argv) < 3:
-        print(__doc__.strip())
+def load_pair(prev_path, curr_path, what):
+    """Returns (prev, curr) dicts, or None when there is nothing to diff
+    (missing previous point is fine; missing current point is fatal only
+    for the primary decode pair — handled by the caller)."""
+    if not os.path.exists(prev_path):
+        print(f"check-perf: no previous {what} point ({prev_path}); "
+              "nothing to diff — baseline recorded")
+        return None
+    with open(prev_path) as f:
+        prev = json.load(f)
+    with open(curr_path) as f:
+        curr = json.load(f)
+    return prev, curr
+
+
+def check_governor(prev_path, curr_path, threshold):
+    """Settle-time gate over BENCH_governor.json: the total wall time the
+    live engine spent applying re-budget plans must not regress >5%.
+    Returns an exit code (0 ok / 1 regression / 2 malformed)."""
+    if not os.path.exists(curr_path):
+        print(f"check-perf: {curr_path} missing — run `make bench-governor`"
+              " (governor gate skipped)")
+        return 0
+    try:
+        pair = load_pair(prev_path, curr_path, "governor")
+        if pair is None:
+            return 0
+        prev, curr = pair
+        settle_prev = float(prev["rebudget_settle_ms"])
+        settle_curr = float(curr["rebudget_settle_ms"])
+    except (json.JSONDecodeError, KeyError, ValueError) as e:
+        print(f"check-perf: malformed governor bench point: {e}")
         return 2
-    prev_path, curr_path = argv[1], argv[2]
+
+    if settle_prev <= 0:
+        print("check-perf: previous settle time is 0 — skipping "
+              "governor diff")
+        return 0
+    delta = (settle_curr - settle_prev) / settle_prev
+    print(f"check-perf: governor settle {settle_prev:.2f}ms -> "
+          f"{settle_curr:.2f}ms ({delta:+.1%}, threshold +{threshold:.0%})")
+    # informational: per-phase tokens/sec swings
+    for p_prev, p_curr in zip(prev.get("phases", []),
+                              curr.get("phases", [])):
+        tp, tc = p_prev.get("tokens_per_sec"), p_curr.get("tokens_per_sec")
+        if tp and tc and float(tp) > 0:
+            d = (float(tc) - float(tp)) / float(tp)
+            if abs(d) >= threshold:
+                print(f"check-perf:   note: phase@"
+                      f"{p_prev.get('budget_bytes')} tok/s {tp} -> {tc} "
+                      f"({d:+.1%})")
+    if delta > threshold:
+        print("check-perf: FAIL — governor settle time regressed past "
+              f"the {threshold:.0%} gate")
+        return 1
+    return 0
+
+
+def main(argv):
+    argv = list(argv)
+    governor = None
+    if "--governor" in argv:
+        i = argv.index("--governor")
+        try:
+            governor = (argv[i + 1], argv[i + 2])
+        except IndexError:
+            print("check-perf: --governor expects PREV.json CURR.json")
+            return 2
+        del argv[i:i + 3]
     threshold = THRESHOLD
     if "--threshold" in argv:
         try:
@@ -37,45 +106,52 @@ def main(argv):
             print("check-perf: --threshold expects a number")
             return 2
 
+    if len(argv) < 3:
+        print(__doc__.strip())
+        return 2
+    prev_path, curr_path = argv[1], argv[2]
+
     if not os.path.exists(curr_path):
         print(f"check-perf: {curr_path} missing — run `make bench-smoke`")
         return 2
-    if not os.path.exists(prev_path):
-        print(f"check-perf: no previous point ({prev_path}); nothing to "
-              "diff — baseline recorded")
-        return 0
 
+    rc = 0
     try:
-        with open(prev_path) as f:
-            prev = json.load(f)
-        with open(curr_path) as f:
-            curr = json.load(f)
-        tps_prev = float(prev["tokens_per_sec"])
-        tps_curr = float(curr["tokens_per_sec"])
+        pair = load_pair(prev_path, curr_path, "decode")
+        if pair is not None:
+            prev, curr = pair
+            tps_prev = float(prev["tokens_per_sec"])
+            tps_curr = float(curr["tokens_per_sec"])
+            if tps_prev <= 0:
+                print("check-perf: previous tokens_per_sec is 0 — "
+                      "skipping diff")
+            else:
+                delta = (tps_curr - tps_prev) / tps_prev
+                print(f"check-perf: tokens/sec {tps_prev:.2f} -> "
+                      f"{tps_curr:.2f} ({delta:+.1%}, threshold "
+                      f"-{threshold:.0%})")
+                for key in WATCHED:
+                    if key in prev and key in curr and float(prev[key]) > 0:
+                        d = (float(curr[key]) - float(prev[key])) \
+                            / float(prev[key])
+                        if abs(d) >= threshold:
+                            print(f"check-perf:   note: {key} {prev[key]} "
+                                  f"-> {curr[key]} ({d:+.1%})")
+                if delta < -threshold:
+                    print("check-perf: FAIL — tokens/sec regressed past "
+                          f"the {threshold:.0%} gate")
+                    rc = 1
     except (json.JSONDecodeError, KeyError, ValueError) as e:
         print(f"check-perf: malformed bench point: {e}")
         return 2
 
-    if tps_prev <= 0:
-        print("check-perf: previous tokens_per_sec is 0 — skipping diff")
-        return 0
+    if governor is not None:
+        grc = check_governor(governor[0], governor[1], threshold)
+        rc = max(rc, grc)
 
-    delta = (tps_curr - tps_prev) / tps_prev
-    print(f"check-perf: tokens/sec {tps_prev:.2f} -> {tps_curr:.2f} "
-          f"({delta:+.1%}, threshold -{threshold:.0%})")
-    for key in WATCHED:
-        if key in prev and key in curr and float(prev[key]) > 0:
-            d = (float(curr[key]) - float(prev[key])) / float(prev[key])
-            if abs(d) >= threshold:
-                print(f"check-perf:   note: {key} {prev[key]} -> "
-                      f"{curr[key]} ({d:+.1%})")
-
-    if delta < -threshold:
-        print("check-perf: FAIL — tokens/sec regressed past the "
-              f"{threshold:.0%} gate")
-        return 1
-    print("check-perf: ok")
-    return 0
+    if rc == 0:
+        print("check-perf: ok")
+    return rc
 
 
 if __name__ == "__main__":
