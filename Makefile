@@ -1,7 +1,8 @@
 # ActiveFlow build/bench entry points. The rust crate lives in rust/; the
 # python side (L2/L1) only runs at artifact-build time.
 
-.PHONY: build test artifacts bench-smoke bench-governor check-perf
+.PHONY: build test artifacts bench-smoke bench-governor bench-sched \
+        check-perf ci
 
 build:
 	cd rust && cargo build --release
@@ -39,9 +40,30 @@ bench-governor:
 		cp BENCH_governor.json BENCH_governor.prev.json; fi
 	mv BENCH_governor.new.json BENCH_governor.json
 
+# Scheduler trajectory point (PERF.md): aggregate interleaved tokens/sec
+# for N sequences vs the serial baseline, on one engine. Self-asserting
+# (interleaved must beat serial; mid-generation set_budget must apply
+# within one wave). Rotates .prev like the decode/governor points.
+bench-sched:
+	cd rust && cargo bench --bench sched_interleave -- \
+		--out ../BENCH_sched.new.json
+	@if [ -f BENCH_sched.new.json ]; then \
+		if [ -f BENCH_sched.json ]; then \
+			cp BENCH_sched.json BENCH_sched.prev.json; fi; \
+		mv BENCH_sched.new.json BENCH_sched.json; \
+	else \
+		echo "bench-sched: no point written (artifacts missing?)"; fi
+
 # Diff the decode perf point against the previous run; fails on a >5%
-# tokens/sec regression, and on a >5% governor settle-time regression
-# when BENCH_governor points exist (ROADMAP perf-trajectory gate).
+# tokens/sec regression, on a >5% governor settle-time regression, and on
+# a >5% scheduler aggregate-throughput regression when the respective
+# points exist (ROADMAP perf-trajectory gate).
 check-perf:
 	@python3 scripts/check_perf.py BENCH_decode.prev.json BENCH_decode.json \
-		--governor BENCH_governor.prev.json BENCH_governor.json
+		--governor BENCH_governor.prev.json BENCH_governor.json \
+		--sched BENCH_sched.prev.json BENCH_sched.json
+
+# One-shot CI entry point: build → test → perf smoke (decode + scheduler
+# points) → regression gates. Needs `make artifacts` to have run once;
+# the benches self-skip without artifacts, leaving the gates inert.
+ci: build test bench-smoke bench-sched check-perf

@@ -69,8 +69,14 @@ fn main() -> anyhow::Result<()> {
         io_queue_depth: 0,
     })?;
     // …and let the governor drive every later step on the live engine.
-    let mut gov =
-        DramGovernor::new(&eng, GovernorConfig::default(), first_budget);
+    // One sequence at a time here: cap the KV pool at a single seq so
+    // the planner doesn't reserve phantom KV for concurrency this
+    // example never uses.
+    let gcfg = GovernorConfig {
+        max_seqs: 1,
+        ..GovernorConfig::default()
+    };
+    let mut gov = DramGovernor::new(&eng, gcfg, first_budget);
 
     println!(
         "live adaptive DRAM on {} — model {} on flash, KV {}, one engine, \

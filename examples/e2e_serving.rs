@@ -44,6 +44,9 @@ fn main() -> anyhow::Result<()> {
         governor: GovernorConfig::default(),
         initial_budget: None,
         pressure_schedule: None,
+        // continuous batching: both clients' requests decode interleaved
+        max_seqs: N_CLIENTS,
+        sched_queue_cap: 16,
     };
     let server = std::thread::spawn(move || serve(cfg));
 

@@ -68,8 +68,14 @@ fn main() {
         io_queue_depth: 0,
     })
     .unwrap();
-    let mut gov =
-        DramGovernor::new(&eng, GovernorConfig::default(), first_budget);
+    // serial single-sequence bench: a KV pool sized for one sequence, so
+    // the planner's budget split stays comparable to the PR2/PR3 points
+    // (no phantom KV reserved for concurrency the bench never drives)
+    let gcfg = GovernorConfig {
+        max_seqs: 1,
+        ..GovernorConfig::default()
+    };
+    let mut gov = DramGovernor::new(&eng, gcfg, first_budget);
 
     println!("\n== bench: governor_rebudget ==");
     println!(

@@ -556,7 +556,18 @@ pub fn bench_smoke(args: &Args) -> Result<()> {
         ("slab_bytes_peak", num(m.slab_bytes_peak as f64)),
         ("io_batches", num(m.io_batches as f64)),
         ("io_inflight_peak", num(m.io_inflight_peak as f64)),
-        ("io_wait_us", num(m.io_wait.as_secs_f64() * 1e6)),
+        // legacy total + the per-class split (loader reaping vs engine
+        // on-demand stalls — the overlap-diagnosis pair)
+        ("io_wait_us", num(m.io_wait_total().as_secs_f64() * 1e6)),
+        (
+            "io_wait_loader_us",
+            num(m.io_wait_loader.as_secs_f64() * 1e6),
+        ),
+        (
+            "io_wait_engine_us",
+            num(m.io_wait_engine.as_secs_f64() * 1e6),
+        ),
+        ("io_buffers_recycled", num(m.io_buffers_recycled as f64)),
         ("loader_chunks_read", num(loader.chunks_read as f64)),
         ("loader_bytes_read", num(loader.bytes_read as f64)),
         ("loader_parts_failed", num(loader.parts_failed as f64)),

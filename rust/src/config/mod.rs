@@ -178,6 +178,12 @@ pub struct RuntimeConfig {
     /// Runtime DRAM governor: optional scripted pressure trace
     /// (`"<size>@<token>,..."` — see [`crate::governor::PressureSchedule`]).
     pub pressure_schedule: Option<String>,
+    /// Continuous-batching scheduler: hard cap on concurrently decoding
+    /// sequences (`--max-seqs`). The governor may lower the effective
+    /// ceiling below this when the DRAM budget cannot hold that much KV.
+    pub max_seqs: usize,
+    /// Scheduler wait-queue bound; submissions past it are rejected.
+    pub sched_queue_cap: usize,
 }
 
 impl Default for RuntimeConfig {
@@ -193,6 +199,8 @@ impl Default for RuntimeConfig {
             io_queue_depth: 0,
             rebudget_hysteresis: 0.05,
             pressure_schedule: None,
+            max_seqs: 4,
+            sched_queue_cap: 64,
         }
     }
 }
@@ -235,6 +243,8 @@ mod tests {
         assert_eq!(rc.rebudget_hysteresis, 0.05);
         assert!(rc.pressure_schedule.is_none());
         assert_eq!(rc.io_queue_depth, 0, "0 = device-profile queue depth");
+        assert_eq!(rc.max_seqs, 4);
+        assert_eq!(rc.sched_queue_cap, 64);
     }
 
     #[test]

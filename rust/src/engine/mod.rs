@@ -20,6 +20,13 @@
 //! cross-layer preload slab, or on-demand flash reads; the preload for
 //! group G+1 is issued while group G computes (Fig 10).
 //!
+//! **Multi-sequence decode.** Everything per-sequence — KV, sampler,
+//! cross-token preload chain — lives in [`SeqState`]; [`SwapEngine::step`]
+//! is re-entrant across sequences, so a scheduler can interleave tokens of
+//! many sequences through one engine (see [`crate::sched`]). The legacy
+//! single-sequence API (`decode_token`/`generate`/`forced_logits`) rides a
+//! lazily created engine-owned solo sequence.
+//!
 //! **Fetch-path invariant (PERF.md):** one op family — Wq/Wk/Wv, Wo,
 //! Wg/Wu, or Wd — is fetched in a single pass that classifies every
 //! channel once and acquires the `WeightCache` mutex exactly **once**:
@@ -41,7 +48,7 @@ use crate::cache::{CachePolicy, SharedCache, TensorCache, WeightCache};
 use crate::config::{ArtifactConfig, RuntimeConfig, SparsityLevel};
 use crate::costmodel::Geometry;
 use crate::device;
-use crate::flash::{ClockMode, FlashDevice, ReadQueue};
+use crate::flash::{ClockMode, FlashDevice, IoClass, ReadQueue};
 use crate::governor::PoolLedger;
 use crate::layout::{quant, AwgfFile, OpKind, TensorId};
 use crate::metrics::DecodeMetrics;
@@ -149,6 +156,55 @@ pub struct RebudgetOutcome {
     pub level_switched: bool,
 }
 
+/// Per-sequence decode state: everything that must survive between the
+/// interleaved [`SwapEngine::step`] calls of one sequence while other
+/// sequences decode in between. KV is the big item (the governor's
+/// `kv_per_seq × active_seqs` ledger term); the sampler RNG keeps a
+/// sequence's sampling deterministic regardless of interleaving; the
+/// cross-token preload chain (`pending_preload` + the per-site Top-K
+/// snapshot feeding it) is what lets the loader hold multiple outstanding
+/// layer-chains — one per live sequence — so interleaved decode keeps the
+/// flash queue saturated where serial decode left it idle between tokens.
+///
+/// Create with [`SwapEngine::begin_seq`], retire with
+/// [`SwapEngine::end_seq`] (which releases the KV ledger bytes and the
+/// pending preload chain — dropping a `SeqState` without `end_seq` leaks
+/// both until the engine itself is dropped).
+pub struct SeqState {
+    /// Engine-unique sequence id (diagnostics; not the preload seq).
+    pub id: u64,
+    /// Sampling temperature (`<= 0` → greedy argmax).
+    pub temp: f32,
+    kv: KvState,
+    rng: Xorshift,
+    /// Preload group covering layer-group 0 of this sequence's *next*
+    /// token, issued at the end of the previous `step`.
+    pending_preload: Option<u64>,
+    /// Per-site Top-K snapshot from the last layer of the previous step
+    /// (the cross-token prediction input), indexed like `CT_SITES`.
+    next_idx: [Vec<usize>; 4],
+}
+
+impl SeqState {
+    /// Tokens decoded so far in this sequence (its KV position).
+    pub fn pos(&self) -> usize {
+        self.kv.pos
+    }
+}
+
+/// Activation sites of the cross-token group-0 preload, in issue order
+/// (mirrors the in-token site order of one layer).
+const CT_SITES: [ActSite; 4] = [
+    ActSite::AttnInput,
+    ActSite::AttnOutput,
+    ActSite::MlpInput,
+    ActSite::FfnInter,
+];
+
+/// Seed of the engine-owned legacy sequence (`decode_token` & friends) —
+/// the pre-split engine seeded its sampler with this constant.
+const SOLO_SEED: u64 = 0xAF10;
+
 pub struct SwapEngine {
     pub cfg: ArtifactConfig,
     pub opts: EngineOptions,
@@ -163,13 +219,27 @@ pub struct SwapEngine {
     cache: Arc<SharedCache>,
     pipe: Pipeline,
     level: Level,
-    kv: KvState,
+    /// Engine-owned sequence backing the legacy single-sequence API
+    /// (`decode_token` / `generate` / `forced_logits` / `perplexity`),
+    /// created lazily so scheduler-driven engines pay no KV for it.
+    solo: Option<SeqState>,
+    /// Live sequences begun and not yet ended (the governor's
+    /// `active_seqs` factor in the KV pool term).
+    active_seqs: u64,
+    /// KV bytes held by live sequences (`kv_per_seq × active_seqs`; all
+    /// sequences allocate the same fixed-shape KV).
+    seq_kv_bytes: u64,
+    seq_id_counter: u64,
+    /// Issue a group-0 preload for each sequence's next token at the end
+    /// of every step (scheduler mode: the chain overlaps with *other*
+    /// sequences' compute; pointless when decoding a single sequence
+    /// serially, so off by default).
+    cross_token: bool,
     /// Pre-built lm_head literal (perf: rebuilding it copied ~d·V·4 bytes
     /// per token; see EXPERIMENTS.md §Perf).
     lm_head_lit: xla::Literal,
     pub metrics: DecodeMetrics,
     pub tracker: SimilarityTracker,
-    rng: Xorshift,
     seq_counter: u64,
     /// Peak bytes held by the preload store (M_cl measurement).
     pub peak_preload_bytes: u64,
@@ -237,15 +307,17 @@ impl SwapEngine {
         // on-demand misses share waves and the in-flight bound
         let queue = ReadQueue::new(flash.clone(), opts.io_queue_depth);
         let pipe = Pipeline::spawn_with_queue(awgf.clone(), queue.clone());
-        let kv = KvState::new(m);
         let d = m.d_model;
         let dff = m.d_ff;
         let lm_head_lit =
             lit_f32(&dense.lm_head, &[d as i64, m.vocab_size as i64])?;
         Ok(SwapEngine {
-            kv,
+            solo: None,
+            active_seqs: 0,
+            seq_kv_bytes: 0,
+            seq_id_counter: 0,
+            cross_token: false,
             lm_head_lit,
-            rng: Xorshift::new(0xAF10),
             seq_counter: 0,
             peak_preload_bytes: 0,
             metrics: DecodeMetrics::default(),
@@ -276,9 +348,84 @@ impl SwapEngine {
         })
     }
 
-    /// Start a fresh sequence: clear KV, reset context-level cache counters.
+    /// Begin a new decode sequence: allocates its KV (accounted as
+    /// `kv_per_seq` in the governor's compute-pool ledger) and a
+    /// deterministic per-sequence sampler. The caller owns the state and
+    /// passes it back through [`SwapEngine::step`]; retire it with
+    /// [`SwapEngine::end_seq`].
+    pub fn begin_seq(&mut self, temp: f32, seed: u64) -> SeqState {
+        let kv = KvState::new(&self.cfg.model);
+        self.seq_kv_bytes += kv.bytes();
+        self.active_seqs += 1;
+        self.seq_id_counter += 1;
+        SeqState {
+            id: self.seq_id_counter,
+            temp,
+            kv,
+            rng: Xorshift::new(seed),
+            pending_preload: None,
+            next_idx: Default::default(),
+        }
+    }
+
+    /// Retire a sequence: release its KV ledger bytes and retire its
+    /// pending cross-token preload chain (otherwise the loader's slab for
+    /// it would sit in the store until the engine drops).
+    pub fn end_seq(&mut self, seq: SeqState) {
+        if let Some(p) = seq.pending_preload {
+            self.pipe.retire_group(p);
+        }
+        self.seq_kv_bytes = self.seq_kv_bytes.saturating_sub(seq.kv.bytes());
+        self.active_seqs = self.active_seqs.saturating_sub(1);
+    }
+
+    /// Live sequences (begun, not yet ended) — the `active_seqs` factor
+    /// of the governor's KV pool term.
+    pub fn active_seqs(&self) -> u64 {
+        self.active_seqs
+    }
+
+    /// Fixed KV bytes one sequence costs (`kv_per_seq` in the governor's
+    /// ledger: 2 × n_layers × max_seq × d_kv × 4).
+    pub fn kv_per_seq_bytes(&self) -> u64 {
+        let m = &self.cfg.model;
+        (2 * m.n_layers * m.max_seq * m.d_kv() * 4) as u64
+    }
+
+    /// Enable/disable the cross-token group-0 preload issued at the end
+    /// of every step (see [`SeqState`]). The scheduler turns this on;
+    /// numerics are unaffected either way (preloaded rows are
+    /// bit-identical to their cache/flash copies).
+    pub fn set_cross_token_preload(&mut self, on: bool) {
+        self.cross_token = on;
+    }
+
+    /// Sample the next token for `seq` from the logits of its latest
+    /// [`SwapEngine::step`], advancing the sequence's own RNG.
+    pub fn sample_seq(&self, seq: &mut SeqState) -> u32 {
+        model::sample(&self.logits, seq.temp, &mut seq.rng) as u32
+    }
+
+    /// Start the legacy engine-owned sequence afresh: clear its KV, reset
+    /// context-level cache counters.
     pub fn reset_sequence(&mut self) {
-        self.kv.reset();
+        match self.solo.take() {
+            Some(mut s) => {
+                s.kv.reset();
+                // the sampler RNG deliberately survives the reset: the
+                // pre-split engine seeded it once at construction, so
+                // repeated temp>0 generate() calls sample different
+                // continuations — keep that behavior
+                if let Some(p) = s.pending_preload.take() {
+                    self.pipe.retire_group(p);
+                }
+                self.solo = Some(s);
+            }
+            None => {
+                let s = self.begin_seq(0.0, SOLO_SEED);
+                self.solo = Some(s);
+            }
+        }
         self.cache.lock().reset_context();
         self.tracker.reset_layer_chain();
     }
@@ -317,9 +464,12 @@ impl SwapEngine {
     /// switch the active sparsity level across the compiled AWGF artifact
     /// sets (pre-compiling the new set so the next decode pays nothing),
     /// retune the preload look-ahead depth, shrink/grow the weight cache
-    /// in place, and hand the loader its new slab ceiling. Call between
-    /// requests only (decode numerics change with the level; a sequence
-    /// in flight would mix levels).
+    /// in place, and hand the loader its new slab ceiling. Call at an
+    /// **inter-token safe point** — between scheduler waves or between
+    /// requests, never mid-token. Mid-*sequence* is fine: KV is
+    /// level-independent, so a level switch only changes the k-targets of
+    /// subsequent tokens (the scheduler's wave boundary is exactly this
+    /// safe point).
     pub fn apply_plan(&mut self, plan: &RebudgetPlan) -> Result<RebudgetOutcome> {
         let t0 = Instant::now();
         let new_level = Self::resolve_level(&self.cfg, plan.sparsity)?;
@@ -361,13 +511,16 @@ impl SwapEngine {
         self.pipe.slab_cap()
     }
 
-    /// Live snapshot of the three DRAM pools the governor arbitrates.
+    /// Live snapshot of the three DRAM pools the governor arbitrates. The
+    /// compute pool's KV term is `kv_per_seq × active_seqs` — it grows
+    /// and shrinks with scheduler admissions, which is what the
+    /// governor's admission ceiling (`max_seqs`) budgets against.
     pub fn pool_ledger(&self) -> PoolLedger {
         PoolLedger {
             cache_bytes: self.cache.lock().bytes(),
             preload_bytes: self.pipe.stored_bytes(),
             compute_bytes: self.dense.bytes()
-                + self.kv.bytes()
+                + self.seq_kv_bytes
                 + self.scratch_bytes(),
         }
     }
@@ -387,10 +540,55 @@ impl SwapEngine {
             * 4) as u64
     }
 
-    /// Decode one token; returns the logits slice.
+    /// Decode one token on the legacy engine-owned sequence; returns the
+    /// logits slice. (Single-sequence benches/tests; the scheduler path
+    /// uses [`SwapEngine::step`] with explicit [`SeqState`]s.)
     pub fn decode_token(&mut self, token: u32) -> Result<&[f32]> {
+        if self.solo.is_none() {
+            self.solo = Some(self.begin_seq(0.0, SOLO_SEED));
+        }
+        let mut solo = self.solo.take().expect("solo just ensured");
+        let r = self.step_inner(&mut solo, token);
+        self.solo = Some(solo);
+        r?;
+        Ok(&self.logits)
+    }
+
+    /// Decode one token of `seq`; returns the logits slice. **Re-entrant
+    /// across sequences**: steps of different sequences may interleave in
+    /// any order — each keeps its own KV, sampler, and cross-token
+    /// preload chain, and retires its preload groups exactly (the
+    /// pipeline's exact-retirement bookkeeping is what makes chains of
+    /// one sequence survive the interleaved retirements of another).
+    pub fn step(&mut self, seq: &mut SeqState, token: u32) -> Result<&[f32]> {
+        self.step_inner(seq, token)?;
+        Ok(&self.logits)
+    }
+
+    /// [`SwapEngine::step`] + preload-chain hygiene: on an error exit
+    /// every preload group this step allocated (and the sequence's
+    /// pending cross-token chain) is retired, so the pipeline's
+    /// retirement floor keeps advancing — a leaked seq would pin the
+    /// out-of-order retirement set forever.
+    fn step_inner(&mut self, seq: &mut SeqState, token: u32) -> Result<()> {
+        let alloc0 = self.seq_counter;
+        let pending0 = seq.pending_preload;
+        let r = self.step_run(seq, token);
+        if r.is_err() {
+            for s in (alloc0 + 1)..=self.seq_counter {
+                self.pipe.retire_group(s);
+            }
+            if let Some(p) = pending0 {
+                self.pipe.retire_group(p);
+            }
+            seq.pending_preload = None;
+        }
+        r
+    }
+
+    fn step_run(&mut self, seq: &mut SeqState, token: u32) -> Result<()> {
         let m = self.cfg.model.clone();
-        let pos = self.kv.pos;
+        let pos = seq.kv.pos;
         if pos >= m.max_seq {
             return Err(anyhow!("sequence exceeds max_seq={}", m.max_seq));
         }
@@ -404,7 +602,11 @@ impl SwapEngine {
         let mut x: Vec<f32> =
             self.dense.embedding(&m, token).to_vec();
 
-        let mut current_seq: Option<u64> = None;
+        // pick up the cross-token chain issued at the end of this
+        // sequence's previous step: it covers layer-group 0, which the
+        // serial engine always fetched cold
+        let mut current_seq: Option<u64> = seq.pending_preload.take();
+        let ct = self.cross_token && self.opts.swap_mode == SwapMode::Preload;
         self.tracker.reset_layer_chain();
         for g in 0..n_groups {
             let l_lo = g * n;
@@ -433,6 +635,11 @@ impl SwapEngine {
                                      self.level.k_attn);
                 sparsity::topk_indices_into(&self.h1, self.level.k_attn,
                                             &mut self.idx);
+                if ct && l + 1 == m.n_layers {
+                    // last layer: this Top-K doubles as the next *token*'s
+                    // group-0 prediction (cross-token similarity)
+                    seq.next_idx[0].clone_from(&self.idx);
+                }
                 if first {
                     // the Top-K just computed for this layer's fetch doubles
                     // as the next group's prediction (paper §3)
@@ -466,7 +673,7 @@ impl SwapEngine {
                         as u64
                         * 4;
 
-                let kvl = &self.kv.layers[l];
+                let kvl = &seq.kv.layers[l];
                 let s = m.max_seq as i64;
                 let dkv = m.d_kv() as i64;
                 let core = self.rt.exec(
@@ -481,13 +688,16 @@ impl SwapEngine {
                     ],
                 )?;
                 lit_to_f32(&core[0], &mut self.tmp)?; // attn out [q_dim]
-                lit_to_f32(&core[1], &mut self.kv.layers[l].k)?;
-                lit_to_f32(&core[2], &mut self.kv.layers[l].v)?;
+                lit_to_f32(&core[1], &mut seq.kv.layers[l].k)?;
+                lit_to_f32(&core[2], &mut seq.kv.layers[l].v)?;
                 let attn = std::mem::take(&mut self.tmp);
                 self.tracker.observe(ActSite::AttnOutput, &attn,
                                      self.level.k_o);
                 sparsity::topk_indices_into(&attn, self.level.k_o,
                                             &mut self.idx);
+                if ct && l + 1 == m.n_layers {
+                    seq.next_idx[1].clone_from(&self.idx);
+                }
                 if first {
                     self.issue_preload(next_seq, &next_layers,
                                        ActSite::AttnOutput);
@@ -517,6 +727,9 @@ impl SwapEngine {
                                      self.level.k_attn);
                 sparsity::topk_indices_into(&self.h2, self.level.k_attn,
                                             &mut self.idx);
+                if ct && l + 1 == m.n_layers {
+                    seq.next_idx[2].clone_from(&self.idx);
+                }
                 if first {
                     self.issue_preload(next_seq, &next_layers,
                                        ActSite::MlpInput);
@@ -550,6 +763,9 @@ impl SwapEngine {
                                      self.level.k_ff);
                 sparsity::topk_indices_into(&ffv, self.level.k_ff,
                                             &mut self.idx);
+                if ct && l + 1 == m.n_layers {
+                    seq.next_idx[3].clone_from(&self.idx);
+                }
                 if first {
                     self.issue_preload(next_seq, &next_layers,
                                        ActSite::FfnInter);
@@ -584,6 +800,24 @@ impl SwapEngine {
             self.pipe.retire_group(seq);
         }
 
+        // Cross-token preload (scheduler mode): issue layer-group 0 of
+        // this sequence's NEXT token now, predicted from the last layer's
+        // Top-K just recorded. While other interleaved sequences compute
+        // their tokens, the loader streams this chain — the serial engine
+        // always paid group 0 as a cold on-demand fetch instead.
+        if ct && m.n_layers > 0 {
+            self.seq_counter += 1;
+            let ct_seq = self.seq_counter;
+            let layers: Arc<[usize]> = (0..n.min(m.n_layers)).collect();
+            for (si, site) in CT_SITES.iter().enumerate() {
+                std::mem::swap(&mut self.idx, &mut seq.next_idx[si]);
+                self.issue_preload(Some(ct_seq), &layers, *site);
+                std::mem::swap(&mut self.idx, &mut seq.next_idx[si]);
+            }
+            seq.pending_preload = Some(ct_seq);
+            self.metrics.cross_token_preloads += 1;
+        }
+
         // final norm + logits
         model::rmsnorm(&x, &self.dense.g_final, m.norm_eps, &mut self.h1);
         let lg = self.rt.exec(
@@ -595,7 +829,7 @@ impl SwapEngine {
         )?;
         lit_to_f32(&lg[0], &mut self.logits)?;
 
-        self.kv.pos += 1;
+        seq.kv.pos += 1;
         self.metrics.tokens += 1;
         self.metrics.wall += t_start.elapsed();
         self.metrics.compute_busy += self.rt.total_busy() - busy0;
@@ -604,8 +838,14 @@ impl SwapEngine {
             Duration::from_nanos(flash_ns1 - flash_ns0);
         let io1 = self.queue.io_stats();
         self.metrics.io_batches += io1.batches - io0.batches;
-        self.metrics.io_wait +=
-            Duration::from_nanos(io1.wait_ns - io0.wait_ns);
+        self.metrics.io_wait_loader += Duration::from_nanos(
+            io1.wait_loader_ns - io0.wait_loader_ns,
+        );
+        self.metrics.io_wait_engine += Duration::from_nanos(
+            io1.wait_engine_ns - io0.wait_engine_ns,
+        );
+        self.metrics.io_buffers_recycled +=
+            io1.buffers_recycled - io0.buffers_recycled;
         self.metrics.io_inflight_peak =
             self.metrics.io_inflight_peak.max(io1.inflight_peak);
         let loader = self.pipe.loader_stats();
@@ -613,7 +853,7 @@ impl SwapEngine {
             self.metrics.slab_bytes_peak.max(loader.slab_bytes_peak);
         self.peak_preload_bytes =
             self.peak_preload_bytes.max(loader.slab_bytes_peak);
-        Ok(&self.logits)
+        Ok(())
     }
 
     /// Issue the preload for one activation site of the next layer group,
@@ -839,7 +1079,8 @@ impl SwapEngine {
         Ok(())
     }
 
-    /// Greedy/temperature generation. Returns generated tokens.
+    /// Greedy/temperature generation on the legacy engine-owned sequence.
+    /// Returns generated tokens.
     pub fn generate(
         &mut self,
         prompt: &[u32],
@@ -847,19 +1088,37 @@ impl SwapEngine {
         temp: f32,
     ) -> Result<Vec<u32>> {
         self.reset_sequence();
+        let mut solo = self.solo.take().expect("reset_sequence ensures solo");
+        solo.temp = temp;
+        let r = self.generate_with(&mut solo, prompt, n_gen);
+        // a complete request: nothing will consume the cross-token chain
+        // issued for the never-decoded next token — retire it now so the
+        // pipeline's retirement floor keeps advancing
+        if let Some(p) = solo.pending_preload.take() {
+            self.pipe.retire_group(p);
+        }
+        self.solo = Some(solo);
+        r
+    }
+
+    fn generate_with(
+        &mut self,
+        seq: &mut SeqState,
+        prompt: &[u32],
+        n_gen: usize,
+    ) -> Result<Vec<u32>> {
         let mut out = Vec::with_capacity(n_gen);
         let mut last = *prompt.first().ok_or_else(|| anyhow!("empty prompt"))?;
         for (i, &t) in prompt.iter().enumerate() {
             last = t;
             if i + 1 < prompt.len() {
-                self.decode_token(t)?;
+                self.step_inner(seq, t)?;
             }
         }
         for _ in 0..n_gen {
-            self.decode_token(last)?;
+            self.step_inner(seq, last)?;
             // sample borrows the logits scratch directly — no per-token Vec
-            let next =
-                model::sample(&self.logits, temp, &mut self.rng) as u32;
+            let next = self.sample_seq(seq);
             out.push(next);
             last = next;
         }
@@ -884,7 +1143,7 @@ impl SwapEngine {
         let mut count = 0usize;
         self.reset_sequence();
         for w in tokens.windows(2).take(tokens.len() - 1) {
-            if self.kv.pos >= m.max_seq {
+            if self.kv_pos() >= m.max_seq {
                 self.reset_sequence();
             }
             let logits = self.decode_token(w[0])?;
@@ -899,7 +1158,7 @@ impl SwapEngine {
     pub fn memory_report(&self) -> MemoryReport {
         MemoryReport {
             dense_bytes: self.dense.bytes(),
-            kv_bytes: self.kv.bytes(),
+            kv_bytes: self.seq_kv_bytes,
             cache_bytes: self.cache.lock().bytes(),
             preload_peak_bytes: self.peak_preload_bytes,
             flash_file_bytes: std::fs::metadata(self.awgf.path())
@@ -940,9 +1199,10 @@ impl SwapEngine {
         self.cache.lock().reset_stats();
     }
 
-    /// Current KV position (tokens decoded in this sequence).
+    /// Current KV position of the legacy engine-owned sequence (tokens
+    /// decoded since its last reset; 0 when it was never started).
     pub fn kv_pos(&self) -> usize {
-        self.kv.pos
+        self.solo.as_ref().map(|s| s.kv.pos).unwrap_or(0)
     }
 
     pub fn runtime_profile(&self) -> Vec<(String, u64, Duration)> {
@@ -1171,7 +1431,7 @@ fn fetch_ondemand_rows(
         // not report flash traffic that never happened (same rule as the
         // loader's complete_part)
         if run.coalesce {
-            match queue.wait(tags[run.req0]) {
+            match queue.wait_as(tags[run.req0], IoClass::Engine) {
                 Err(e) => {
                     first_err = Some(e);
                     continue;
@@ -1189,6 +1449,7 @@ fn fetch_ondemand_rows(
                             &mut bufs[oi][slot * dout..(slot + 1) * dout],
                         );
                     }
+                    queue.recycle(c.data);
                 }
             }
         } else {
@@ -1199,7 +1460,7 @@ fn fetch_ondemand_rows(
                     continue;
                 }
                 let (_, slot, _) = ondemand[run.i + r];
-                match queue.wait(tags[run.req0 + r]) {
+                match queue.wait_as(tags[run.req0 + r], IoClass::Engine) {
                     Err(e) => {
                         first_err = Some(e);
                         failed = true;
@@ -1211,6 +1472,7 @@ fn fetch_ondemand_rows(
                             quant,
                             &mut bufs[oi][slot * dout..(slot + 1) * dout],
                         );
+                        queue.recycle(c.data);
                     }
                 }
             }

@@ -195,12 +195,35 @@ impl FlashDevice {
     /// one per chunk, which is what a `read` loop would charge. Returns
     /// buffers in submission order.
     pub fn read_batch(&self, reqs: &[(u64, usize)]) -> Result<Vec<Vec<u8>>> {
+        let mut bufs: Vec<Vec<u8>> = reqs.iter().map(|_| Vec::new()).collect();
+        self.read_batch_into(reqs, &mut bufs)?;
+        Ok(bufs)
+    }
+
+    /// [`FlashDevice::read_batch`] into caller-provided buffers (the
+    /// [`ReadQueue`] recycle pool): each buffer is resized to its request's
+    /// length — reusing its capacity when it has any — and filled in
+    /// submission order. Timing is identical to `read_batch`.
+    pub fn read_batch_into(
+        &self,
+        reqs: &[(u64, usize)],
+        bufs: &mut [Vec<u8>],
+    ) -> Result<()> {
         if reqs.is_empty() {
-            return Ok(Vec::new());
+            return Ok(());
         }
+        debug_assert_eq!(reqs.len(), bufs.len());
         let batch_ns = self.model_batch_ns(reqs);
         let lens: Vec<usize> = reqs.iter().map(|&(_, len)| len).collect();
-        let mut out = Vec::with_capacity(reqs.len());
+        let fill = |bufs: &mut [Vec<u8>]| -> Result<()> {
+            for (&(off, len), buf) in reqs.iter().zip(bufs.iter_mut()) {
+                buf.resize(len, 0);
+                self.file
+                    .read_exact_at(buf, off)
+                    .context("flash pread")?;
+            }
+            Ok(())
+        };
         match self.mode {
             ClockMode::Timed => {
                 // hold the channel for the whole batch — it occupies the
@@ -208,30 +231,16 @@ impl FlashDevice {
                 // modeled remainder ONCE, not per chunk
                 let _chan = self.channel.lock().unwrap();
                 let t0 = Instant::now();
-                for &(off, len) in reqs {
-                    let mut buf = vec![0u8; len];
-                    self.file
-                        .read_exact_at(&mut buf, off)
-                        .context("flash pread")?;
-                    out.push(buf);
-                }
+                fill(bufs)?;
                 let real = t0.elapsed().as_nanos() as u64;
                 if batch_ns > real {
                     std::thread::sleep(Duration::from_nanos(batch_ns - real));
                 }
             }
-            ClockMode::Modeled => {
-                for &(off, len) in reqs {
-                    let mut buf = vec![0u8; len];
-                    self.file
-                        .read_exact_at(&mut buf, off)
-                        .context("flash pread")?;
-                    out.push(buf);
-                }
-            }
+            ClockMode::Modeled => fill(bufs)?,
         }
         self.stats.record_batch(&lens, batch_ns);
-        Ok(out)
+        Ok(())
     }
 
     /// Effective throughput at a chunk size, measured through the simulator
@@ -266,6 +275,16 @@ pub struct Completion {
     pub modeled_ns: u64,
 }
 
+/// Who is blocked reaping a completion — the preload loader or the
+/// engine's decode-critical on-demand fetch. Wait time is attributed per
+/// class so overlap diagnosis can tell preload reaping (background, often
+/// free) from on-demand miss stalls (always on the token's critical path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoClass {
+    Loader,
+    Engine,
+}
+
 /// Cumulative queue counters (surfaced as `io_*` in stats/benches).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct IoSnapshot {
@@ -276,8 +295,17 @@ pub struct IoSnapshot {
     pub batches: u64,
     /// Peak number of reads in flight at once (≤ queue depth).
     pub inflight_peak: u64,
-    /// Total time reapers spent blocked in [`ReadQueue::wait`].
+    /// Total time reapers spent blocked in [`ReadQueue::wait`]
+    /// (both classes; `wait_loader_ns + wait_engine_ns`).
     pub wait_ns: u64,
+    /// Wait time attributed to the preload loader's reaps.
+    pub wait_loader_ns: u64,
+    /// Wait time attributed to the engine's on-demand reaps.
+    pub wait_engine_ns: u64,
+    /// Read buffers served from the recycle pool instead of a fresh
+    /// allocation (ROADMAP: the queue used to allocate one `Vec<u8>` per
+    /// read).
+    pub buffers_recycled: u64,
 }
 
 struct QueueInner {
@@ -304,11 +332,33 @@ struct QueueShared {
     work_cv: Condvar,
     /// Reapers wait here for completions.
     done_cv: Condvar,
+    /// Retired read buffers awaiting reuse (never locked while `inner` is
+    /// wanted by the same thread *after* it — lock order is inner → free).
+    free: Mutex<Vec<Vec<u8>>>,
     submitted: AtomicU64,
     batches: AtomicU64,
     inflight_peak: AtomicU64,
-    wait_ns: AtomicU64,
+    wait_loader_ns: AtomicU64,
+    wait_engine_ns: AtomicU64,
+    buffers_recycled: AtomicU64,
 }
+
+impl QueueShared {
+    /// Return a retired buffer to the pool (bounded — excess is dropped).
+    fn push_free(&self, buf: Vec<u8>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut free = self.free.lock().unwrap();
+        if free.len() < BUF_POOL_CAP {
+            free.push(buf);
+        }
+    }
+}
+
+/// Recycle-pool bound: enough for a few full waves of every worker; past
+/// it buffers are simply freed (the pool must not become a leak).
+const BUF_POOL_CAP: usize = 64;
 
 /// An async read queue over a FlashDevice — the io_uring submit/reap
 /// structure of the paper's loader thread (§6 Flash loading), shared by
@@ -359,10 +409,13 @@ impl ReadQueue {
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            free: Mutex::new(Vec::new()),
             submitted: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             inflight_peak: AtomicU64::new(0),
-            wait_ns: AtomicU64::new(0),
+            wait_loader_ns: AtomicU64::new(0),
+            wait_engine_ns: AtomicU64::new(0),
+            buffers_recycled: AtomicU64::new(0),
         });
         let n_workers = depth.min(MAX_QUEUE_WORKERS).max(1);
         let workers = (0..n_workers)
@@ -431,26 +484,51 @@ impl ReadQueue {
     }
 
     /// Give up on a submitted read: still pending → cancelled outright;
-    /// already completed → its buffer is discarded; in flight → the
+    /// already completed → its buffer is recycled; in flight → the
     /// worker drops its completion when the wave lands. Never blocks.
     /// Every submitted tag must be either `wait`ed or `abandon`ed, or its
     /// completion parks in the queue until drop.
     pub fn abandon(&self, tag: u64) {
-        let mut q = self.shared.inner.lock().unwrap();
-        let before = q.pending.len();
-        q.pending.retain(|&(t, _, _)| t != tag);
-        if q.pending.len() != before {
-            return; // never started; nothing will ever complete
-        }
-        if q.done.remove(&tag).is_none() {
-            q.abandoned.insert(tag);
+        let reclaimed = {
+            let mut q = self.shared.inner.lock().unwrap();
+            let before = q.pending.len();
+            q.pending.retain(|&(t, _, _)| t != tag);
+            if q.pending.len() != before {
+                return; // never started; nothing will ever complete
+            }
+            match q.done.remove(&tag) {
+                None => {
+                    q.abandoned.insert(tag);
+                    None
+                }
+                Some(Ok(c)) => Some(c.data),
+                Some(Err(_)) => None,
+            }
+        };
+        if let Some(buf) = reclaimed {
+            self.shared.push_free(buf);
         }
     }
 
-    /// Reap one completion by tag, blocking until its wave lands.
-    /// Completions are reaped at most once; tags may be waited in any
-    /// order (out-of-order reap).
+    /// Hand a consumed completion's buffer back for reuse by later reads
+    /// (the queue used to allocate one `Vec<u8>` per read; the pool cuts
+    /// steady-state allocation on the preload and on-demand paths to
+    /// zero). Optional — dropping the buffer instead is always safe.
+    pub fn recycle(&self, buf: Vec<u8>) {
+        self.shared.push_free(buf);
+    }
+
+    /// Reap one completion by tag, blocking until its wave lands —
+    /// engine-class attribution (see [`ReadQueue::wait_as`]).
     pub fn wait(&self, tag: u64) -> Result<Completion> {
+        self.wait_as(tag, IoClass::Engine)
+    }
+
+    /// Reap one completion by tag, blocking until its wave lands, and
+    /// attribute any blocked time to `class` (`io_wait_loader_ns` vs
+    /// `io_wait_engine_ns`). Completions are reaped at most once; tags
+    /// may be waited in any order (out-of-order reap).
+    pub fn wait_as(&self, tag: u64, class: IoClass) -> Result<Completion> {
         let deadline = Instant::now() + REAP_TIMEOUT;
         let mut waited = Duration::ZERO;
         let mut q = self.shared.inner.lock().unwrap();
@@ -481,9 +559,11 @@ impl ReadQueue {
         };
         drop(q);
         if !waited.is_zero() {
-            self.shared
-                .wait_ns
-                .fetch_add(waited.as_nanos() as u64, Ordering::Relaxed);
+            let ctr = match class {
+                IoClass::Loader => &self.shared.wait_loader_ns,
+                IoClass::Engine => &self.shared.wait_engine_ns,
+            };
+            ctr.fetch_add(waited.as_nanos() as u64, Ordering::Relaxed);
         }
         out
     }
@@ -495,11 +575,19 @@ impl ReadQueue {
     }
 
     pub fn io_stats(&self) -> IoSnapshot {
+        let wl = self.shared.wait_loader_ns.load(Ordering::Relaxed);
+        let we = self.shared.wait_engine_ns.load(Ordering::Relaxed);
         IoSnapshot {
             submitted: self.shared.submitted.load(Ordering::Relaxed),
             batches: self.shared.batches.load(Ordering::Relaxed),
             inflight_peak: self.shared.inflight_peak.load(Ordering::Relaxed),
-            wait_ns: self.shared.wait_ns.load(Ordering::Relaxed),
+            wait_ns: wl + we,
+            wait_loader_ns: wl,
+            wait_engine_ns: we,
+            buffers_recycled: self
+                .shared
+                .buffers_recycled
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -537,18 +625,34 @@ fn worker_loop(sh: Arc<QueueShared>) {
         };
         let reqs: Vec<(u64, usize)> =
             wave.iter().map(|&(_, off, len)| (off, len)).collect();
+        // buffers come from the recycle pool when it has any — the queue
+        // used to allocate one fresh Vec per read
+        let mut bufs: Vec<Vec<u8>> = {
+            let mut free = sh.free.lock().unwrap();
+            reqs.iter()
+                .map(|_| match free.pop() {
+                    Some(b) => {
+                        sh.buffers_recycled.fetch_add(1, Ordering::Relaxed);
+                        b
+                    }
+                    None => Vec::new(),
+                })
+                .collect()
+        };
         let batch_ns = sh.dev.model_batch_ns(&reqs);
         let share = batch_ns / wave.len() as u64;
-        let result = sh.dev.read_batch(&reqs);
+        let result = sh.dev.read_batch_into(&reqs, &mut bufs);
         sh.batches.fetch_add(1, Ordering::Relaxed);
+        let mut reclaimed: Vec<Vec<u8>> = Vec::new();
         {
             let mut q = sh.inner.lock().unwrap();
             q.inflight -= wave.len();
             match result {
-                Ok(bufs) => {
+                Ok(()) => {
                     for (&(tag, _, _), data) in wave.iter().zip(bufs) {
                         if q.abandoned.remove(&tag) {
-                            continue; // reaper gave up on this one
+                            reclaimed.push(data); // reaper gave up
+                            continue;
                         }
                         q.done.insert(
                             tag,
@@ -561,6 +665,7 @@ fn worker_loop(sh: Arc<QueueShared>) {
                 }
                 Err(e) => {
                     let msg = format!("{e:#}");
+                    reclaimed.extend(bufs);
                     for &(tag, _, _) in &wave {
                         if q.abandoned.remove(&tag) {
                             continue;
@@ -569,6 +674,9 @@ fn worker_loop(sh: Arc<QueueShared>) {
                     }
                 }
             }
+        }
+        for buf in reclaimed {
+            sh.push_free(buf);
         }
         sh.done_cv.notify_all();
         sh.work_cv.notify_all(); // in-flight budget freed
@@ -834,6 +942,77 @@ mod tests {
             assert_eq!(c.data[0], ((i * 100) % 251) as u8);
         }
         assert_eq!(q.pending(), 0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn recycled_buffers_are_reused_and_counted() {
+        let (dev, path) = temp_flash(8192, ClockMode::Modeled);
+        let q = ReadQueue::new(dev, 2);
+        // first read allocates; hand its buffer back
+        let t = q.submit(0, 64);
+        let c = q.wait(t).unwrap();
+        assert_eq!(c.data.len(), 64);
+        q.recycle(c.data);
+        // the pool must serve subsequent reads (counter counts reuses) and
+        // the returned bytes must still be correct
+        let mut recycled_seen = 0;
+        for i in 0..4u64 {
+            let t = q.submit(i * 100, 32);
+            let c = q.wait(t).unwrap();
+            assert_eq!(c.data.len(), 32);
+            assert_eq!(c.data[0], ((i * 100) % 251) as u8);
+            recycled_seen = q.io_stats().buffers_recycled;
+            q.recycle(c.data);
+        }
+        assert!(
+            recycled_seen >= 1,
+            "buffer pool never reused a recycled buffer"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn abandoned_done_completions_feed_the_pool() {
+        // abandon() of an already-completed tag must reclaim its buffer
+        // into the pool rather than dropping it on the floor
+        let (dev, path) = temp_flash(8192, ClockMode::Modeled);
+        let q = ReadQueue::new(dev, 2);
+        let t = q.submit(0, 128);
+        // wait for the completion to land without reaping it
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while q.pending() > 0 {
+            assert!(Instant::now() < deadline, "read never completed");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        q.abandon(t);
+        let t2 = q.submit(0, 128);
+        q.wait(t2).unwrap();
+        assert!(
+            q.io_stats().buffers_recycled >= 1,
+            "abandoned completion's buffer was not recycled"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn wait_time_is_attributed_per_class() {
+        // Timed mode: the wave sleeps out its modeled duration, so the
+        // reaper genuinely blocks — all of it must land on the class the
+        // caller named, and the legacy total must stay the sum.
+        let (dev, path) = temp_flash(256 << 10, ClockMode::Timed);
+        let q = ReadQueue::new(dev, 4);
+        let t = q.submit(0, 128 << 10);
+        q.wait_as(t, IoClass::Loader).unwrap();
+        let st = q.io_stats();
+        assert!(st.wait_loader_ns > 0, "loader wait not attributed");
+        assert_eq!(st.wait_engine_ns, 0);
+        assert_eq!(st.wait_ns, st.wait_loader_ns + st.wait_engine_ns);
+        let t = q.submit(0, 128 << 10);
+        q.wait_as(t, IoClass::Engine).unwrap();
+        let st = q.io_stats();
+        assert!(st.wait_engine_ns > 0, "engine wait not attributed");
+        assert_eq!(st.wait_ns, st.wait_loader_ns + st.wait_engine_ns);
         std::fs::remove_file(path).ok();
     }
 

@@ -10,20 +10,22 @@
 //!
 //! ```text
 //!   pools (Eq 8):   M = M_cl (preload slabs) + M_cache + M_compute
+//!                   M_compute's KV term = kv_per_seq × active_seqs
 //!   event           {"cmd":"set_budget"} | PressureSchedule step
 //!        │
 //!        ▼
 //!   hysteresis gate ── small relative change → record + skip
 //!        │
 //!        ▼
-//!   costmodel::search(M_max') → (sp, N, M_cache')
-//!        │
+//!   plan(M_max'): for seqs = max_seqs..1, search(M_max', kv·seqs)
+//!        │           → most concurrency that stays servable
 //!        ▼
-//!   SwapEngine::apply_plan:
+//!   SwapEngine::apply_plan + scheduler admission ceiling:
 //!     · WeightCache::resize — evict down to the new cache target
 //!     · preload slab cap    — loader drops parts past the M_cl ceiling
 //!     · group size N        — preload look-ahead depth
 //!     · sparsity level      — switch the active AWGF artifact set
+//!     · max_seqs            — scheduler sheds/queues sequences past it
 //! ```
 //!
 //! Every decision (old→new pools, trigger, settle time) is recorded and
@@ -99,6 +101,11 @@ pub struct RebudgetDecision {
     pub slab_cap: u64,
     /// Rows evicted by the cache shrink.
     pub evicted_rows: u64,
+    /// Concurrent-sequence ceiling under the new budget: the ledger's KV
+    /// pool term is `kv_per_seq × active_seqs`, and the planner admits as
+    /// many sequences as the budget fits (≤ the configured `max_seqs`,
+    /// ≥ 1). The scheduler's admission control enforces it.
+    pub max_seqs: usize,
     /// Wall time to apply the plan (artifact switch + cache resize).
     pub settle: Duration,
     /// False when the hysteresis gate or an infeasible budget stopped the
@@ -122,6 +129,11 @@ pub struct GovernorConfig {
     /// Preload-slab ceiling as a multiple of the searched M_cl (current
     /// group + the next one in flight).
     pub slab_headroom: f64,
+    /// Upper bound on concurrently decoding sequences the planner may
+    /// admit (the scheduler's `--max-seqs`); the budget shrinks the
+    /// *effective* ceiling below this when `kv_per_seq × max_seqs` no
+    /// longer fits next to a servable configuration.
+    pub max_seqs: usize,
 }
 
 impl Default for GovernorConfig {
@@ -131,6 +143,7 @@ impl Default for GovernorConfig {
             sp_grid: vec![0.5, 0.6, 0.7, 0.8, 0.9],
             hysteresis: 0.05,
             slab_headroom: 2.0,
+            max_seqs: 4,
         }
     }
 }
@@ -139,6 +152,7 @@ impl GovernorConfig {
     pub fn from_runtime(rc: &crate::config::RuntimeConfig) -> GovernorConfig {
         GovernorConfig {
             hysteresis: rc.rebudget_hysteresis,
+            max_seqs: rc.max_seqs,
             ..GovernorConfig::default()
         }
     }
@@ -150,8 +164,14 @@ pub struct DramGovernor {
     geo: Geometry,
     device: &'static DeviceProfile,
     bw_scale: f64,
+    /// Fixed KV bytes of one sequence (the KV pool term is
+    /// `kv_per_seq × active_seqs`).
+    kv_per_seq: u64,
     /// Last budget a decision was *applied* for (M_max).
     budget: u64,
+    /// Current concurrent-sequence ceiling (≤ `cfg.max_seqs`; shrinks
+    /// under a falling budget, grows back when it recovers).
+    max_seqs: usize,
     applied_once: bool,
     decisions: Vec<RebudgetDecision>,
 }
@@ -165,12 +185,34 @@ impl DramGovernor {
         cfg: GovernorConfig,
         initial_budget: u64,
     ) -> DramGovernor {
+        Self::from_parts(
+            cfg,
+            engine.geometry(),
+            engine.opts.device,
+            engine.opts.bw_scale,
+            engine.kv_per_seq_bytes(),
+            initial_budget,
+        )
+    }
+
+    /// Engine-free constructor (unit tests, synthetic geometries).
+    pub fn from_parts(
+        cfg: GovernorConfig,
+        geo: Geometry,
+        device: &'static DeviceProfile,
+        bw_scale: f64,
+        kv_per_seq: u64,
+        initial_budget: u64,
+    ) -> DramGovernor {
+        let max_seqs = cfg.max_seqs.max(1);
         DramGovernor {
             cfg,
-            geo: engine.geometry(),
-            device: engine.opts.device,
-            bw_scale: engine.opts.bw_scale,
+            geo,
+            device,
+            bw_scale,
+            kv_per_seq,
             budget: initial_budget,
+            max_seqs,
             applied_once: false,
             decisions: Vec::new(),
         }
@@ -178,6 +220,47 @@ impl DramGovernor {
 
     pub fn budget(&self) -> u64 {
         self.budget
+    }
+
+    /// Current concurrent-sequence ceiling the KV pool affords.
+    pub fn max_seqs(&self) -> usize {
+        self.max_seqs
+    }
+
+    pub fn kv_per_seq(&self) -> u64 {
+        self.kv_per_seq
+    }
+
+    /// Pure §4.1 planning under `bytes` of DRAM with the KV pool term
+    /// folded into Eq 8: the fixed M_kv becomes `kv_per_seq × seqs`, and
+    /// the planner admits the **most** concurrent sequences (≤ the
+    /// configured `max_seqs`) that still leave a servable configuration —
+    /// concurrency first, then the search splits what remains between
+    /// preload depth and cache as before. Returns `None` when even one
+    /// sequence does not fit (infeasible budget).
+    pub fn plan(
+        &self,
+        bytes: u64,
+        similarity: f64,
+    ) -> Option<(costmodel::SearchResult, usize)> {
+        let target = self.cfg.max_seqs.max(1);
+        for seqs in (1..=target).rev() {
+            let geo = Geometry {
+                kv_bytes: self.kv_per_seq * seqs as u64,
+                ..self.geo
+            };
+            if let Some(r) = costmodel::search(
+                self.device,
+                &geo,
+                bytes,
+                similarity,
+                self.bw_scale,
+                &self.cfg.sp_grid,
+            ) {
+                return Some((r, seqs));
+            }
+        }
+        None
     }
 
     pub fn decisions(&self) -> &[RebudgetDecision] {
@@ -214,10 +297,11 @@ impl DramGovernor {
             new_group: old_group,
             cache_target: engine.opts.cache_bytes,
             m_cl: 0,
-            // skipped decisions report the engine's *current* ceiling,
-            // not a sentinel
+            // skipped decisions report the engine's *current* ceilings,
+            // not sentinels
             slab_cap: engine.slab_cap(),
             evicted_rows: 0,
+            max_seqs: self.max_seqs,
             settle: Duration::ZERO,
             applied: false,
             note: "applied",
@@ -243,17 +327,10 @@ impl DramGovernor {
         } else {
             self.cfg.similarity
         };
-        let Some(r) = costmodel::search(
-            self.device,
-            &self.geo,
-            bytes,
-            si,
-            self.bw_scale,
-            &self.cfg.sp_grid,
-        ) else {
-            // Below the sparsest servable configuration: keep running the
-            // old parameters (we cannot do better than max sparsity) and
-            // record the refusal.
+        let Some((r, seqs)) = self.plan(bytes, si) else {
+            // Below the sparsest servable one-sequence configuration:
+            // keep running the old parameters (we cannot do better than
+            // max sparsity) and record the refusal.
             d.note = "infeasible";
             engine.metrics.rebudgets_skipped += 1;
             self.decisions.push(d.clone());
@@ -276,10 +353,12 @@ impl DramGovernor {
         d.m_cl = r.cost.m_cl;
         d.slab_cap = plan.slab_cap_bytes;
         d.evicted_rows = outcome.evicted_rows;
+        d.max_seqs = seqs;
         d.settle = outcome.settle;
         d.new_pools = engine.pool_ledger();
         d.applied = true;
         self.budget = bytes;
+        self.max_seqs = seqs;
         self.applied_once = true;
         engine.metrics.rebudgets_applied += 1;
         engine.metrics.rebudget_settle += outcome.settle;
@@ -396,6 +475,60 @@ pub fn parse_bytes(s: &str) -> Result<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::PIXEL6;
+
+    #[test]
+    fn kv_pool_planning_caps_seqs_at_the_budget_boundary() {
+        // Acceptance boundary: the ledger charges KV as kv_per_seq × seqs,
+        // so a budget that fits exactly two sequences' KV next to the
+        // sparsest servable model must admit two — not three.
+        let geo = Geometry::llama7b_q4();
+        let kv = 256u64 << 20;
+        let cfg = GovernorConfig {
+            max_seqs: 4,
+            ..GovernorConfig::default()
+        };
+        let gov =
+            DramGovernor::from_parts(cfg, geo, &PIXEL6, 1.0, kv, 4 << 30);
+        assert_eq!(gov.max_seqs(), 4, "starts at the configured ceiling");
+        // sparsest grid level is sp=0.9 → the model needs ≥10% of S_m
+        let min_model = (geo.model_bytes as f64 * 0.1) as u64;
+        let b2 = 2 * kv + min_model + (1 << 20);
+        let (r, seqs) = gov.plan(b2, 0.85).expect("two sequences fit");
+        assert_eq!(seqs, 2, "a third sequence's KV would overshoot");
+        assert!(
+            r.cost.mem_bytes <= b2,
+            "planned memory {} over budget {b2}",
+            r.cost.mem_bytes
+        );
+        // one more KV's worth of budget admits the third
+        let (_, seqs) = gov.plan(b2 + kv, 0.85).unwrap();
+        assert_eq!(seqs, 3);
+        // plenty of budget: capped at the configured ceiling
+        let (_, seqs) = gov.plan(16 << 30, 0.85).unwrap();
+        assert_eq!(seqs, 4);
+        // below even one sequence: infeasible
+        assert!(gov.plan(kv + min_model / 2, 0.85).is_none());
+    }
+
+    #[test]
+    fn planner_prefers_concurrency_over_cache() {
+        // Doubling the budget beyond the 4-seq ceiling goes to cache, not
+        // more sequences; halving below it sheds sequences first.
+        let geo = Geometry::llama7b_q4();
+        let kv = 256u64 << 20;
+        let cfg = GovernorConfig {
+            max_seqs: 2,
+            ..GovernorConfig::default()
+        };
+        let gov =
+            DramGovernor::from_parts(cfg, geo, &PIXEL6, 1.0, kv, 4 << 30);
+        let (_, seqs) = gov.plan(8 << 30, 0.85).unwrap();
+        assert_eq!(seqs, 2, "ceiling binds, extra budget goes to cache");
+        let min_model = (geo.model_bytes as f64 * 0.1) as u64;
+        let (_, seqs) = gov.plan(kv + min_model + (1 << 20), 0.85).unwrap();
+        assert_eq!(seqs, 1, "tight budget sheds concurrency to stay live");
+    }
 
     #[test]
     fn ledger_totals() {

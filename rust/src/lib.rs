@@ -26,6 +26,7 @@ pub mod runtime;
 pub mod model;
 pub mod engine;
 pub mod governor;
+pub mod sched;
 pub mod baselines;
 pub mod bench;
 pub mod server;

@@ -5,6 +5,7 @@
 //! activeflow eval     --sp 0.6 --windows 4
 //! activeflow serve    --addr 127.0.0.1:7071 --sp 0.6 [--budget-mb N]
 //!                     [--rebudget-hysteresis F] [--pressure SIZE@TOK,..]
+//!                     [--max-seqs N] [--sched-queue-cap N]
 //! activeflow search   --device pixel6 --budget-mb 1500 --geometry llama7b
 //! activeflow inspect  devices|artifacts|weights
 //! activeflow bench    <pareto|e2e|ablation|flash|preload-tradeoff|
@@ -203,12 +204,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0 => None,
         mb => Some((mb as u64) << 20),
     };
-    // governor knobs flow through RuntimeConfig so CLI and file-driven
-    // configs share one source of defaults
+    // governor + scheduler knobs flow through RuntimeConfig so CLI and
+    // file-driven configs share one source of defaults
     let mut rc = RuntimeConfig::default();
     rc.rebudget_hysteresis =
         args.opt_f64("rebudget-hysteresis", rc.rebudget_hysteresis)?;
     rc.pressure_schedule = args.opt("pressure").map(String::from);
+    rc.max_seqs = args.opt_usize("max-seqs", rc.max_seqs)?.max(1);
+    rc.sched_queue_cap =
+        args.opt_usize("sched-queue-cap", rc.sched_queue_cap)?;
     let cfg = ServerConfig {
         addr: args.opt_or("addr", "127.0.0.1:7071"),
         artifact_dir: artifact_dir(args),
@@ -216,6 +220,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         governor: GovernorConfig::from_runtime(&rc),
         initial_budget,
         pressure_schedule: rc.pressure_schedule.clone(),
+        max_seqs: rc.max_seqs,
+        sched_queue_cap: rc.sched_queue_cap,
     };
     let served = serve(cfg)?;
     println!("[server] shut down after {served} requests");

@@ -48,9 +48,17 @@ pub struct DecodeMetrics {
     pub io_batches: u64,
     /// Peak reads in flight through the queue (≤ the queue depth).
     pub io_inflight_peak: u64,
-    /// Time reapers (loader + on-demand fetches) spent blocked waiting
-    /// for queue completions — the I/O share of the critical path.
-    pub io_wait: Duration,
+    /// Time the preload **loader** spent blocked reaping queue
+    /// completions — background wait, usually hidden behind compute.
+    pub io_wait_loader: Duration,
+    /// Time the **engine**'s on-demand fetches spent blocked reaping —
+    /// always on the decoded token's critical path. The old single
+    /// `io_wait` counter was the sum of both and could not tell preload
+    /// reaping from miss stalls (ROADMAP).
+    pub io_wait_engine: Duration,
+    /// Read buffers served from the queue's recycle pool instead of a
+    /// fresh allocation.
+    pub io_buffers_recycled: u64,
     // ---- runtime DRAM governor counters (governor module)
     /// Re-budget decisions applied to the live engine.
     pub rebudgets_applied: u64,
@@ -62,6 +70,29 @@ pub struct DecodeMetrics {
     pub level_switches: u64,
     /// Total wall time spent applying re-budget plans.
     pub rebudget_settle: Duration,
+    // ---- continuous-batching scheduler counters (sched module)
+    /// Scheduler waves run (one token per live sequence per wave).
+    pub sched_waves: u64,
+    /// Total wall time inside scheduler waves (per-wave latency =
+    /// `sched_wave_time / sched_waves`).
+    pub sched_wave_time: Duration,
+    /// Sequences admitted to the run queue (fresh admissions; a resumed
+    /// preemption re-admission counts again).
+    pub seqs_admitted: u64,
+    /// Sequences that spent time in the wait queue (admission control
+    /// deferred them at least once).
+    pub seqs_queued: u64,
+    /// Sequences rejected outright (wait queue full / bad request).
+    pub seqs_rejected: u64,
+    /// Sequences preempted by a shrinking KV budget (KV freed; resumed
+    /// later by recompute).
+    pub seqs_preempted: u64,
+    /// Sequences retired complete (EOS / token limit / KV limit).
+    pub seqs_completed: u64,
+    /// Cross-token group-0 preload chains issued at inter-token
+    /// boundaries (interleaved decode keeps the flash queue saturated
+    /// with these).
+    pub cross_token_preloads: u64,
 }
 
 impl DecodeMetrics {
@@ -112,12 +143,27 @@ impl DecodeMetrics {
         self.io_batches += other.io_batches;
         self.io_inflight_peak =
             self.io_inflight_peak.max(other.io_inflight_peak);
-        self.io_wait += other.io_wait;
+        self.io_wait_loader += other.io_wait_loader;
+        self.io_wait_engine += other.io_wait_engine;
+        self.io_buffers_recycled += other.io_buffers_recycled;
         self.rebudgets_applied += other.rebudgets_applied;
         self.rebudgets_skipped += other.rebudgets_skipped;
         self.rebudget_rows_evicted += other.rebudget_rows_evicted;
         self.level_switches += other.level_switches;
         self.rebudget_settle += other.rebudget_settle;
+        self.sched_waves += other.sched_waves;
+        self.sched_wave_time += other.sched_wave_time;
+        self.seqs_admitted += other.seqs_admitted;
+        self.seqs_queued += other.seqs_queued;
+        self.seqs_rejected += other.seqs_rejected;
+        self.seqs_preempted += other.seqs_preempted;
+        self.seqs_completed += other.seqs_completed;
+        self.cross_token_preloads += other.cross_token_preloads;
+    }
+
+    /// Total reaper wait (both classes) — the old single `io_wait`.
+    pub fn io_wait_total(&self) -> Duration {
+        self.io_wait_loader + self.io_wait_engine
     }
 }
 
@@ -224,10 +270,21 @@ mod tests {
         b.slab_bytes_peak = 1024;
         a.io_batches = 3;
         a.io_inflight_peak = 4;
-        a.io_wait = Duration::from_millis(2);
+        a.io_wait_loader = Duration::from_millis(2);
+        a.io_wait_engine = Duration::from_millis(4);
+        a.io_buffers_recycled = 5;
         b.io_batches = 2;
         b.io_inflight_peak = 9;
-        b.io_wait = Duration::from_millis(1);
+        b.io_wait_loader = Duration::from_millis(1);
+        b.io_wait_engine = Duration::from_millis(2);
+        b.io_buffers_recycled = 3;
+        b.sched_waves = 4;
+        b.sched_wave_time = Duration::from_millis(8);
+        b.seqs_admitted = 3;
+        b.seqs_queued = 2;
+        b.seqs_preempted = 1;
+        b.seqs_completed = 3;
+        b.cross_token_preloads = 6;
         b.rebudgets_applied = 2;
         b.rebudgets_skipped = 1;
         b.rebudget_rows_evicted = 7;
@@ -242,7 +299,17 @@ mod tests {
         assert_eq!(a.slab_bytes_peak, 4096, "peak is a max, not a sum");
         assert_eq!(a.io_batches, 5);
         assert_eq!(a.io_inflight_peak, 9, "inflight peak is a max");
-        assert_eq!(a.io_wait, Duration::from_millis(3));
+        assert_eq!(a.io_wait_loader, Duration::from_millis(3));
+        assert_eq!(a.io_wait_engine, Duration::from_millis(6));
+        assert_eq!(a.io_wait_total(), Duration::from_millis(9));
+        assert_eq!(a.io_buffers_recycled, 8);
+        assert_eq!(a.sched_waves, 4);
+        assert_eq!(a.sched_wave_time, Duration::from_millis(8));
+        assert_eq!(a.seqs_admitted, 3);
+        assert_eq!(a.seqs_queued, 2);
+        assert_eq!(a.seqs_preempted, 1);
+        assert_eq!(a.seqs_completed, 3);
+        assert_eq!(a.cross_token_preloads, 6);
         assert_eq!(a.rebudgets_applied, 2);
         assert_eq!(a.rebudgets_skipped, 1);
         assert_eq!(a.rebudget_rows_evicted, 7);

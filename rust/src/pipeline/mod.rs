@@ -41,7 +41,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::flash::{FlashDevice, ReadQueue};
+use crate::flash::{FlashDevice, IoClass, ReadQueue};
 use crate::layout::{quant, AwgfFile, OpKind};
 
 /// Key of a preload part: (monotonic group sequence number, op family).
@@ -217,14 +217,48 @@ impl PartSlab {
     }
 }
 
+/// Retired-group bookkeeping. Groups used to retire strictly in seq order,
+/// so a single high-water mark sufficed; interleaved sequences retire out
+/// of order (sequence A's cross-token chain outlives groups B allocated
+/// and retired after it), so retirement is **exact** now: a retired seq
+/// above the floor parks in `above` until every seq below it has retired
+/// too, then the floor compacts over the contiguous prefix. The floor
+/// keeps `above` bounded as long as every allocated seq is eventually
+/// retired — which the engine guarantees on every path, including decode
+/// errors (`step` retires its allocations on the error path) and sequence
+/// teardown (`end_seq` retires the pending cross-token chain).
+#[derive(Default)]
+struct RetiredState {
+    /// Every seq ≤ floor is retired.
+    floor: u64,
+    /// Retired seqs above the floor (awaiting compaction).
+    above: std::collections::BTreeSet<u64>,
+}
+
+impl RetiredState {
+    /// Idempotent: retiring an already-retired seq is a no-op.
+    fn retire(&mut self, seq: u64) {
+        if seq > self.floor {
+            self.above.insert(seq);
+        }
+        while self.above.remove(&(self.floor + 1)) {
+            self.floor += 1;
+        }
+    }
+
+    fn is_retired(&self, seq: u64) -> bool {
+        seq <= self.floor || self.above.contains(&seq)
+    }
+}
+
 struct SharedState {
     /// Completed parts. A part appears here only once fully loaded.
     slabs: Mutex<HashMap<PartKey, Arc<PartSlab>>>,
     done: Mutex<std::collections::HashSet<PartKey>>,
-    /// Highest retired group seq (seqs are monotonic). A slab finishing
+    /// Exactly-retired groups (floor + out-of-order set). A slab finishing
     /// after its group was retired is dropped instead of published — the
     /// engine has already moved on and nothing would ever free it.
-    retired: Mutex<u64>,
+    retired: Mutex<RetiredState>,
     /// Governor's preload-pool ceiling (bytes). A part whose (pre-I/O
     /// computable) slab size would push the live slab bytes past it is
     /// dropped before any flash read — still marked done, so the engine
@@ -239,7 +273,7 @@ impl Default for SharedState {
         SharedState {
             slabs: Mutex::new(HashMap::new()),
             done: Mutex::new(std::collections::HashSet::new()),
-            retired: Mutex::new(0),
+            retired: Mutex::new(RetiredState::default()),
             slab_cap: AtomicU64::new(u64::MAX),
             stats: Mutex::new(LoaderStats::default()),
         }
@@ -372,18 +406,20 @@ impl Pipeline {
     }
 
     /// Drop a fully consumed group's slabs + completion marks (frees
-    /// M_cl). Holding the `retired` guard across the removals excludes the
-    /// loader's publish: a part finishing after this point sees the raised
-    /// high-water mark and is dropped, never leaked (seqs are monotonic,
-    /// so retiring `seq` can also cover any abandoned earlier groups).
+    /// M_cl). Retirement is **exact**: only this seq is dropped, so an
+    /// interleaved sequence's outstanding chain (a *lower* seq consumed
+    /// *later*) survives other sequences retiring newer groups around it.
+    /// Holding the `retired` guard across the removals excludes the
+    /// loader's publish: a part finishing after this point sees its seq
+    /// retired and is dropped, never leaked. Idempotent.
     pub fn retire_group(&self, seq: u64) {
         let mut retired = self.shared.retired.lock().unwrap();
-        *retired = (*retired).max(seq);
+        retired.retire(seq);
         let mut freed = 0u64;
         {
             let mut slabs = self.shared.slabs.lock().unwrap();
             slabs.retain(|(s, _), slab| {
-                if *s <= seq {
+                if retired.is_retired(*s) {
                     freed += slab.bytes();
                     false
                 } else {
@@ -399,7 +435,7 @@ impl Pipeline {
             .done
             .lock()
             .unwrap()
-            .retain(|(s, _)| *s > seq);
+            .retain(|(s, _)| !retired.is_retired(*s));
     }
 
     /// Bytes currently held in preload slabs (the live M_cl component).
@@ -685,7 +721,7 @@ impl LoaderWorker {
             PartPlan::Throttled => {
                 // pressure valve: waiters fall back to on-demand loading
                 let retired = self.shared.retired.lock().unwrap();
-                if seq > *retired {
+                if !retired.is_retired(seq) {
                     self.shared.stats.lock().unwrap().slabs_dropped_budget +=
                         1;
                     self.shared.done.lock().unwrap().insert((seq, op));
@@ -695,7 +731,7 @@ impl LoaderWorker {
                 eprintln!("[loader] preload failed: {e:#}");
                 let retired = self.shared.retired.lock().unwrap();
                 self.shared.stats.lock().unwrap().parts_failed += 1;
-                if seq > *retired {
+                if !retired.is_retired(seq) {
                     self.shared.done.lock().unwrap().insert((seq, op));
                 }
             }
@@ -719,7 +755,7 @@ impl LoaderWorker {
                         self.queue.abandon(run.tag);
                         continue;
                     }
-                    match self.queue.wait(run.tag) {
+                    match self.queue.wait_as(run.tag, IoClass::Loader) {
                         Err(e) => failed = Some(e),
                         Ok(c) => {
                             // loaded-I/O accounting happens here, per
@@ -744,6 +780,9 @@ impl LoaderWorker {
                                     );
                                 }
                             }
+                            // fully consumed: the read buffer goes back
+                            // to the queue's recycle pool
+                            self.queue.recycle(c.data);
                         }
                     }
                 }
@@ -769,11 +808,11 @@ impl LoaderWorker {
                         st.parts_failed += 1;
                         st.slab_bytes =
                             st.slab_bytes.saturating_sub(reserved);
-                        if seq > *retired {
+                        if !retired.is_retired(seq) {
                             self.shared.done.lock().unwrap().insert((seq, op));
                         }
                     }
-                    None if seq > *retired => {
+                    None if !retired.is_retired(seq) => {
                         self.shared
                             .slabs
                             .lock()
@@ -1264,6 +1303,69 @@ mod tests {
                    "accounting excludes the dropped slabs' reservations");
         assert_eq!(pipe.loader_stats().parts_loaded, 1,
                    "late parts must not count as loaded");
+    }
+
+    #[test]
+    fn out_of_order_retire_keeps_older_live_groups() {
+        // Interleaved sequences retire out of order: sequence B retiring
+        // its newer group (seq 2) must NOT drop sequence A's older,
+        // still-unconsumed chain (seq 1). The old high-water-mark
+        // retirement dropped everything ≤ the retired seq.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
+        pipe.request(job(1, &[0, 1], &[4, 5]));
+        pipe.request(job(2, &[2, 3], &[6, 7]));
+        assert!(pipe.wait_part((1, OpKind::Wq)));
+        assert!(pipe.wait_part((2, OpKind::Wq)));
+        pipe.retire_group(2); // B retires first
+        assert!(
+            pipe.part((1, OpKind::Wq)).is_some(),
+            "older unretired chain must survive a newer group's retirement"
+        );
+        assert!(pipe.part((2, OpKind::Wq)).is_none());
+        pipe.retire_group(1);
+        assert!(pipe.part((1, OpKind::Wq)).is_none());
+        assert_eq!(pipe.stored_bytes(), 0);
+        assert_eq!(pipe.loader_stats().slab_bytes, 0);
+    }
+
+    #[test]
+    fn retire_floor_compacts_and_stays_idempotent() {
+        let mut r = RetiredState::default();
+        r.retire(2);
+        r.retire(4);
+        assert_eq!(r.floor, 0);
+        assert!(r.is_retired(2) && r.is_retired(4));
+        assert!(!r.is_retired(1) && !r.is_retired(3));
+        r.retire(1); // contiguous prefix 1..=2 compacts
+        assert_eq!(r.floor, 2);
+        assert!(r.above.contains(&4) && !r.above.contains(&2));
+        r.retire(3); // 3 then 4 compact
+        assert_eq!(r.floor, 4);
+        assert!(r.above.is_empty(), "compacted set must drain");
+        r.retire(3); // idempotent below the floor
+        r.retire(4);
+        assert_eq!(r.floor, 4);
+        assert!(r.above.is_empty());
+        assert!(r.is_retired(4) && !r.is_retired(5));
+    }
+
+    #[test]
+    fn late_publish_for_exactly_retired_seq_is_dropped() {
+        // retire seq 2 BEFORE its batch is handled while seq 3 stays
+        // live: the late seq-2 slab must be dropped (reservation
+        // released), the seq-3 slab published.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
+        pipe.retire_group(2);
+        pipe.request(job(2, &[0, 1], &[1]));
+        pipe.request(job(3, &[0, 1], &[2]));
+        assert!(pipe.wait_part((3, OpKind::Wq)));
+        assert!(!pipe.part_ready((2, OpKind::Wq)));
+        assert!(pipe.part((2, OpKind::Wq)).is_none(), "late slab dropped");
+        let b3 = pipe.part((3, OpKind::Wq)).unwrap().bytes();
+        assert_eq!(pipe.loader_stats().slab_bytes, b3,
+                   "dropped slab's reservation must be released");
     }
 
     #[test]

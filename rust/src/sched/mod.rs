@@ -1,0 +1,918 @@
+//! Continuous-batching scheduler: token-interleaved multi-sequence decode
+//! with governor-managed KV admission (MNN-LLM-style serving over the
+//! ActiveFlow swap pipeline).
+//!
+//! The server used to run one blocking `generate()` per request, so the
+//! swap pipeline only ever served one sequence and `stats`/`set_budget`
+//! starved behind long generations. The scheduler replaces that with a
+//! **wave loop**: every wave steps each live sequence exactly one token,
+//! round-robin —
+//!
+//! ```text
+//!   wave k:   A.step(tokₖ)  B.step(tokₖ)  C.step(tokₖ)
+//!              │ issues A's cross-token group-0 preload ──┐
+//!   wave k+1: A.step(tokₖ₊₁) ◀── slab ready: loader read it while B and
+//!             ...                C computed (I/O the serial engine paid
+//!                                as a cold stall on every token)
+//! ```
+//!
+//! * **Admit on arrival, retire on EOS/limit.** A submitted sequence
+//!   starts decoding at the next wave if a slot is free, else queues;
+//!   when the wait queue is full it is rejected outright. Finished
+//!   sequences leave the run queue at the end of their wave.
+//! * **Fairness by construction.** One token per live sequence per wave:
+//!   no sequence can starve while it is in the run queue, and prompt
+//!   prefill is interleaved token-by-token like generation, so a long
+//!   prompt cannot monopolize the engine either.
+//! * **Safe points.** The gap between waves is an inter-token safe point
+//!   for every live sequence: the server applies governor re-budgets
+//!   there — including mid-sequence sparsity-level switches (KV is
+//!   level-independent; only the k-targets of later tokens change) —
+//!   instead of deferring them to end-of-request.
+//! * **KV pool admission.** The governor plans `max_seqs` from the budget
+//!   (`kv_per_seq × active_seqs` is the ledger's KV term); the scheduler
+//!   enforces it. When a falling budget shrinks the ceiling below the
+//!   live count, the newest sequences are **preempted**: their KV is
+//!   freed, their progress (prompt + tokens so far) parks at the front of
+//!   the wait queue, and on resume they rebuild KV by teacher-forced
+//!   recompute — deterministic, so the resumed stream continues exactly
+//!   where it stopped (vLLM-style recompute preemption).
+//!
+//! The scheduler is generic over [`DecodeBackend`] so its queueing,
+//! fairness, admission, and preemption logic is unit-tested with a mock
+//! backend (no artifacts needed); [`crate::engine::SwapEngine`]
+//! implements the trait for the real thing.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::engine::{SeqState, SwapEngine};
+use crate::metrics::DecodeMetrics;
+
+/// What the scheduler needs from a decode engine. One call = one token;
+/// the backend samples internally (deterministically per sequence) and
+/// returns the next token so replay-on-resume reproduces the stream.
+pub trait DecodeBackend {
+    type Seq;
+    /// Allocate per-sequence state (KV, sampler). `seed` must make
+    /// sampling deterministic per sequence.
+    fn begin_seq(&mut self, temp: f32, seed: u64) -> Result<Self::Seq>;
+    /// Feed `token`; when `sample` is true, return the sampled next token
+    /// (advancing the sequence's sampler). The scheduler requests a
+    /// sample only on token-emitting steps — prompt prefill must not
+    /// burn sampler state or sampling work, so the scheduler's stream
+    /// for a (prompt, seed, temp) matches a solo `generate()`'s.
+    fn step_seq(
+        &mut self,
+        seq: &mut Self::Seq,
+        token: u32,
+        sample: bool,
+    ) -> Result<Option<u32>>;
+    /// Tokens decoded so far in this sequence (its KV position).
+    fn seq_pos(&self, seq: &Self::Seq) -> usize;
+    /// Hard per-sequence KV capacity.
+    fn max_seq_len(&self) -> usize;
+    /// Release per-sequence state (KV ledger bytes, preload chains).
+    fn end_seq(&mut self, seq: Self::Seq);
+    /// Where scheduler counters should be mirrored (engines expose their
+    /// `DecodeMetrics`; mocks may return `None`).
+    fn metrics_sink(&mut self) -> Option<&mut DecodeMetrics> {
+        None
+    }
+}
+
+impl DecodeBackend for SwapEngine {
+    type Seq = SeqState;
+
+    fn begin_seq(&mut self, temp: f32, seed: u64) -> Result<SeqState> {
+        Ok(SwapEngine::begin_seq(self, temp, seed))
+    }
+
+    fn step_seq(
+        &mut self,
+        seq: &mut SeqState,
+        token: u32,
+        sample: bool,
+    ) -> Result<Option<u32>> {
+        self.step(seq, token)?;
+        Ok(if sample {
+            Some(self.sample_seq(seq))
+        } else {
+            None
+        })
+    }
+
+    fn seq_pos(&self, seq: &SeqState) -> usize {
+        seq.pos()
+    }
+
+    fn max_seq_len(&self) -> usize {
+        self.model().max_seq
+    }
+
+    fn end_seq(&mut self, seq: SeqState) {
+        SwapEngine::end_seq(self, seq)
+    }
+
+    fn metrics_sink(&mut self) -> Option<&mut DecodeMetrics> {
+        Some(&mut self.metrics)
+    }
+}
+
+/// Scheduler knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedConfig {
+    /// Hard cap on concurrently decoding sequences (`--max-seqs`). The
+    /// governor may lower the *effective* ceiling below this at runtime;
+    /// it never raises it above.
+    pub max_seqs: usize,
+    /// Wait-queue bound; submissions past it are rejected (admission
+    /// control's backstop against unbounded memory in the queue itself).
+    pub queue_cap: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            max_seqs: 4,
+            queue_cap: 64,
+        }
+    }
+}
+
+/// One decode request.
+#[derive(Debug, Clone)]
+pub struct SeqRequest {
+    pub prompt: Vec<u32>,
+    pub n_tokens: usize,
+    pub temp: f32,
+    /// Sampler seed — replay-on-resume and interleaving determinism both
+    /// hang off this.
+    pub seed: u64,
+    /// Optional stop token: generation retires early when sampled.
+    pub eos: Option<u32>,
+}
+
+/// `submit` verdict.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// In the run queue; decoding starts with the next wave.
+    Admitted { id: u64 },
+    /// Waiting for a slot (KV ceiling reached).
+    Queued { id: u64, depth: usize },
+    /// Dropped (queue full / empty prompt).
+    Rejected { reason: &'static str },
+}
+
+/// A retired sequence, delivered from [`Scheduler::wave`].
+#[derive(Debug)]
+pub struct FinishedSeq {
+    pub id: u64,
+    /// Generated tokens, or the step error that killed the sequence.
+    pub outcome: std::result::Result<Vec<u32>, String>,
+    /// Time spent waiting for admission (including preempted parks).
+    pub queue_wait: Duration,
+    /// Wall time from first step to retirement (interleaved — wall time
+    /// of the waves it lived through, shared with its peers).
+    pub decode: Duration,
+    /// Waves this sequence was stepped in.
+    pub waves: u64,
+    /// True when the sequence hit the KV capacity before its token
+    /// budget (output truncated, not an error).
+    pub truncated: bool,
+}
+
+/// Cumulative scheduler counters (mirrored into [`DecodeMetrics`] and the
+/// server's `stats`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SchedStats {
+    pub seqs_admitted: u64,
+    pub seqs_queued: u64,
+    pub seqs_rejected: u64,
+    pub seqs_preempted: u64,
+    pub seqs_completed: u64,
+    pub waves: u64,
+    pub wave_time: Duration,
+    /// Generated tokens delivered (prompt prefill steps excluded).
+    pub tokens_out: u64,
+}
+
+impl SchedStats {
+    pub fn avg_wave(&self) -> Duration {
+        if self.waves == 0 {
+            Duration::ZERO
+        } else {
+            self.wave_time / self.waves as u32
+        }
+    }
+
+    /// Aggregate generated-token throughput over wave wall time.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let s = self.wave_time.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / s
+        }
+    }
+}
+
+/// A live sequence in the run queue.
+struct Live<S> {
+    id: u64,
+    req: SeqRequest,
+    seq: S,
+    /// Next input index into `prompt ++ out` (replay included).
+    fed: usize,
+    /// Generated tokens (recorded across preemptions).
+    out: Vec<u32>,
+    queue_wait: Duration,
+    started: Instant,
+    prior_decode: Duration,
+    waves: u64,
+}
+
+/// A sequence waiting for admission — fresh, or preempted with progress.
+struct Pending {
+    id: u64,
+    req: SeqRequest,
+    /// Tokens already generated before preemption (empty when fresh).
+    out: Vec<u32>,
+    parked: Instant,
+    queue_wait: Duration,
+    prior_decode: Duration,
+    waves: u64,
+}
+
+/// The continuous-batching scheduler. Owns the backend; the server worker
+/// drives it: drain control jobs → `wave()` → repeat.
+pub struct Scheduler<B: DecodeBackend> {
+    backend: B,
+    cfg: SchedConfig,
+    /// Effective concurrency ceiling (≤ `cfg.max_seqs`; governor-set).
+    max_active: usize,
+    run: VecDeque<Live<B::Seq>>,
+    waitq: VecDeque<Pending>,
+    next_id: u64,
+    stats: SchedStats,
+}
+
+impl<B: DecodeBackend> Scheduler<B> {
+    pub fn new(backend: B, cfg: SchedConfig) -> Scheduler<B> {
+        Scheduler {
+            backend,
+            max_active: cfg.max_seqs.max(1),
+            cfg,
+            run: VecDeque::new(),
+            waitq: VecDeque::new(),
+            next_id: 0,
+            stats: SchedStats::default(),
+        }
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// Mutable backend access for wave-boundary work (governor re-budgets
+    /// run against the engine here — the caller must be between waves,
+    /// which it structurally is: `wave` borrows the scheduler mutably).
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        self.stats
+    }
+
+    /// Live (decoding) sequences.
+    pub fn active(&self) -> usize {
+        self.run.len()
+    }
+
+    /// Sequences parked in the wait queue right now.
+    pub fn queued(&self) -> usize {
+        self.waitq.len()
+    }
+
+    pub fn max_active(&self) -> usize {
+        self.max_active
+    }
+
+    /// Anything left to do (live or waiting)?
+    pub fn has_work(&self) -> bool {
+        !self.run.is_empty() || !self.waitq.is_empty()
+    }
+
+    /// Submit a request: admitted into the run queue when a slot is free,
+    /// queued when the KV ceiling is reached, rejected when the wait
+    /// queue is full.
+    pub fn submit(&mut self, req: SeqRequest) -> SubmitOutcome {
+        if req.prompt.is_empty() {
+            self.stats.seqs_rejected += 1;
+            self.mirror(|m| m.seqs_rejected += 1);
+            return SubmitOutcome::Rejected {
+                reason: "empty prompt",
+            };
+        }
+        self.next_id += 1;
+        let id = self.next_id;
+        let pending = Pending {
+            id,
+            req,
+            out: Vec::new(),
+            parked: Instant::now(),
+            queue_wait: Duration::ZERO,
+            prior_decode: Duration::ZERO,
+            waves: 0,
+        };
+        // fast-path admission only when nobody is already waiting —
+        // fresh submissions must not jump queued (or preempted)
+        // sequences that have FIFO/resume-first priority
+        if self.run.len() < self.max_active && self.waitq.is_empty() {
+            match self.activate(pending) {
+                Ok(()) => SubmitOutcome::Admitted { id },
+                Err((_, reason)) => {
+                    self.stats.seqs_rejected += 1;
+                    self.mirror(|m| m.seqs_rejected += 1);
+                    SubmitOutcome::Rejected { reason }
+                }
+            }
+        } else if self.waitq.len() < self.cfg.queue_cap {
+            self.waitq.push_back(pending);
+            self.stats.seqs_queued += 1;
+            self.mirror(|m| m.seqs_queued += 1);
+            SubmitOutcome::Queued {
+                id,
+                depth: self.waitq.len(),
+            }
+        } else {
+            self.stats.seqs_rejected += 1;
+            self.mirror(|m| m.seqs_rejected += 1);
+            SubmitOutcome::Rejected {
+                reason: "wait queue full",
+            }
+        }
+    }
+
+    /// Lower/raise the concurrency ceiling (governor decision). Shrinking
+    /// below the live count preempts the **newest** sequences — their KV
+    /// is freed immediately and they park at the *front* of the wait
+    /// queue (oldest progress is preserved, preempted work resumes
+    /// first). Returns how many were preempted.
+    pub fn set_max_active(&mut self, n: usize) -> usize {
+        self.max_active = n.clamp(1, self.cfg.max_seqs.max(1));
+        let mut preempted = 0;
+        while self.run.len() > self.max_active {
+            let live = self.run.pop_back().expect("len checked");
+            let Live {
+                id,
+                req,
+                seq,
+                out,
+                queue_wait,
+                started,
+                prior_decode,
+                waves,
+                ..
+            } = live;
+            self.backend.end_seq(seq); // frees kv_per_seq in the ledger
+            self.waitq.push_front(Pending {
+                id,
+                req,
+                out,
+                parked: Instant::now(),
+                queue_wait,
+                prior_decode: prior_decode + started.elapsed(),
+                waves,
+            });
+            preempted += 1;
+        }
+        if preempted > 0 {
+            self.stats.seqs_preempted += preempted as u64;
+            self.mirror(|m| m.seqs_preempted += preempted as u64);
+        }
+        preempted
+    }
+
+    /// Run one wave: admit from the wait queue into free slots, step every
+    /// live sequence exactly one token (round-robin order), retire
+    /// finished sequences. Returns the sequences that retired this wave.
+    /// The return point is the inter-token safe point for every live
+    /// sequence.
+    pub fn wave(&mut self) -> Vec<FinishedSeq> {
+        let t0 = Instant::now();
+        let mut finished = Vec::new();
+        // admit-on-arrival: fill freed slots in FIFO order (preempted
+        // sequences sit at the front and resume first)
+        while self.run.len() < self.max_active {
+            let Some(p) = self.waitq.pop_front() else { break };
+            if let Err((p, reason)) = self.activate(p) {
+                // backend refused the sequence: retire it with an error
+                // outcome so its waiting client is answered, and count
+                // the rejection
+                eprintln!("[sched] activation failed: {reason}");
+                self.stats.seqs_rejected += 1;
+                self.mirror(|m| m.seqs_rejected += 1);
+                finished.push(FinishedSeq {
+                    id: p.id,
+                    outcome: Err(format!("activation failed: {reason}")),
+                    queue_wait: p.queue_wait + p.parked.elapsed(),
+                    decode: p.prior_decode,
+                    waves: p.waves,
+                    truncated: false,
+                });
+            }
+        }
+        let mut i = 0;
+        while i < self.run.len() {
+            let verdict = self.step_live(i);
+            match verdict {
+                None => i += 1,
+                Some(f) => {
+                    let live = self.run.remove(i).expect("index in range");
+                    self.backend.end_seq(live.seq);
+                    self.stats.seqs_completed += 1;
+                    self.mirror(|m| m.seqs_completed += 1);
+                    finished.push(f);
+                }
+            }
+        }
+
+        let dt = t0.elapsed();
+        self.stats.waves += 1;
+        self.stats.wave_time += dt;
+        self.mirror(|m| {
+            m.sched_waves += 1;
+            m.sched_wave_time += dt;
+        });
+        finished
+    }
+
+    /// Tear down: end every live sequence without completing it (server
+    /// shutdown). Waiting sequences are dropped.
+    pub fn shutdown(&mut self) {
+        while let Some(live) = self.run.pop_front() {
+            self.backend.end_seq(live.seq);
+        }
+        self.waitq.clear();
+    }
+
+    /// Consume the scheduler, returning the backend (benches).
+    pub fn into_backend(mut self) -> B {
+        self.shutdown();
+        self.backend
+    }
+
+    // ---------------------------------------------------------- internals
+
+    fn mirror(&mut self, f: impl FnOnce(&mut DecodeMetrics)) {
+        if let Some(m) = self.backend.metrics_sink() {
+            f(m);
+        }
+    }
+
+    /// Move a pending sequence into the run queue (fresh or resumed; a
+    /// resumed sequence replays `prompt ++ out` through fresh KV —
+    /// deterministic sampling makes the replay reproduce the recorded
+    /// stream, after which generation continues where it stopped).
+    fn activate(
+        &mut self,
+        p: Pending,
+    ) -> std::result::Result<(), (Pending, &'static str)> {
+        let seq = match self.backend.begin_seq(p.req.temp, p.req.seed) {
+            Ok(s) => s,
+            Err(_) => return Err((p, "backend begin_seq failed")),
+        };
+        self.run.push_back(Live {
+            id: p.id,
+            req: p.req,
+            seq,
+            fed: 0,
+            out: p.out,
+            queue_wait: p.queue_wait + p.parked.elapsed(),
+            started: Instant::now(),
+            prior_decode: p.prior_decode,
+            waves: p.waves,
+        });
+        self.stats.seqs_admitted += 1;
+        self.mirror(|m| m.seqs_admitted += 1);
+        Ok(())
+    }
+
+    /// Step run-queue entry `i` one token. `Some(finished)` retires it.
+    fn step_live(&mut self, i: usize) -> Option<FinishedSeq> {
+        let live = &mut self.run[i];
+        let p = live.req.prompt.len();
+
+        // token-budget check first: n_tokens == 0 retires without ever
+        // touching the engine, and the final push below retires in the
+        // same step — a sequence never reaches here with a full budget
+        // unless it arrived full
+        if live.out.len() >= live.req.n_tokens {
+            return Some(Self::finish(live, None, false));
+        }
+        // KV capacity: retire truncated rather than erroring the stream
+        if self.backend.seq_pos(&live.seq) >= self.backend.max_seq_len() {
+            return Some(Self::finish(live, None, true));
+        }
+
+        let token = if live.fed < p {
+            live.req.prompt[live.fed]
+        } else {
+            live.out[live.fed - p]
+        };
+        // sample only on token-emitting steps (input index ≥ p-1):
+        // prefill must not burn sampler state, and replayed emitting
+        // steps must (sampling pattern is a function of fed alone, so
+        // replay reproduces the original sampler stream exactly)
+        let emit = live.fed + 1 >= p;
+        let sampled = match self.backend.step_seq(&mut live.seq, token, emit)
+        {
+            Ok(t) => t,
+            Err(e) => {
+                return Some(Self::finish(
+                    live,
+                    Some(format!("{e:#}")),
+                    false,
+                ));
+            }
+        };
+        live.fed += 1;
+        live.waves += 1;
+
+        if live.fed >= p {
+            // stepping input index `fed-1` ≥ p-1 produced output index
+            // `fed - p`; replayed indices keep their recorded token
+            let oi = live.fed - p;
+            if oi == live.out.len() && live.out.len() < live.req.n_tokens {
+                live.out
+                    .push(sampled.expect("emitting step requested a sample"));
+                self.stats.tokens_out += 1;
+            }
+            let done_budget = live.out.len() >= live.req.n_tokens;
+            let done_eos = oi + 1 == live.out.len()
+                && live.req.eos == Some(live.out[oi]);
+            if done_budget || done_eos {
+                return Some(Self::finish(live, None, false));
+            }
+        }
+        None
+    }
+
+    fn finish(
+        live: &mut Live<B::Seq>,
+        error: Option<String>,
+        truncated: bool,
+    ) -> FinishedSeq {
+        FinishedSeq {
+            id: live.id,
+            outcome: match error {
+                Some(e) => Err(e),
+                None => Ok(std::mem::take(&mut live.out)),
+            },
+            queue_wait: live.queue_wait,
+            decode: live.prior_decode + live.started.elapsed(),
+            waves: live.waves,
+            truncated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic mock: next token = f(seed, pos, input). Logs every
+    /// step as (seed, pos) so tests can assert interleaving order, and
+    /// tracks live/peak sequence counts for admission-control proofs.
+    #[derive(Default)]
+    struct Mock {
+        log: Vec<(u64, usize)>,
+        live: usize,
+        live_peak: usize,
+        max_seq: usize,
+        metrics: DecodeMetrics,
+        fail_on_pos: Option<usize>,
+    }
+
+    struct MockSeq {
+        seed: u64,
+        pos: usize,
+    }
+
+    impl Mock {
+        fn new(max_seq: usize) -> Mock {
+            Mock {
+                max_seq,
+                ..Mock::default()
+            }
+        }
+    }
+
+    impl DecodeBackend for Mock {
+        type Seq = MockSeq;
+
+        fn begin_seq(&mut self, _temp: f32, seed: u64) -> Result<MockSeq> {
+            self.live += 1;
+            self.live_peak = self.live_peak.max(self.live);
+            Ok(MockSeq { seed, pos: 0 })
+        }
+
+        fn step_seq(
+            &mut self,
+            s: &mut MockSeq,
+            token: u32,
+            sample: bool,
+        ) -> Result<Option<u32>> {
+            if self.fail_on_pos == Some(s.pos) {
+                anyhow::bail!("injected step failure");
+            }
+            self.log.push((s.seed, s.pos));
+            s.pos += 1;
+            Ok(sample.then(|| {
+                (token.wrapping_mul(31) ^ (s.seed as u32) ^ (s.pos as u32))
+                    % 251
+            }))
+        }
+
+        fn seq_pos(&self, s: &MockSeq) -> usize {
+            s.pos
+        }
+
+        fn max_seq_len(&self) -> usize {
+            self.max_seq
+        }
+
+        fn end_seq(&mut self, _s: MockSeq) {
+            self.live -= 1;
+        }
+
+        fn metrics_sink(&mut self) -> Option<&mut DecodeMetrics> {
+            Some(&mut self.metrics)
+        }
+    }
+
+    fn req(prompt: &[u32], n: usize) -> SeqRequest {
+        SeqRequest {
+            prompt: prompt.to_vec(),
+            n_tokens: n,
+            temp: 0.0,
+            seed: prompt.first().copied().unwrap_or(0) as u64,
+            eos: None,
+        }
+    }
+
+    fn drain<B: DecodeBackend>(s: &mut Scheduler<B>) -> Vec<FinishedSeq> {
+        let mut all = Vec::new();
+        let mut guard = 0;
+        while s.has_work() {
+            all.extend(s.wave());
+            guard += 1;
+            assert!(guard < 10_000, "scheduler wedged");
+        }
+        all
+    }
+
+    #[test]
+    fn round_robin_steps_every_live_seq_once_per_wave() {
+        let mut s = Scheduler::new(Mock::new(256), SchedConfig {
+            max_seqs: 3,
+            queue_cap: 8,
+        });
+        // three sequences of different lengths — short ones retire early,
+        // long ones must keep getting exactly one step per wave
+        s.submit(req(&[1, 2], 2));
+        s.submit(req(&[2, 3], 5));
+        s.submit(req(&[3, 4], 9));
+        let fin = drain(&mut s);
+        assert_eq!(fin.len(), 3);
+        // fairness: between two consecutive steps of any sequence X,
+        // every other sequence that steps at all in that window steps
+        // EXACTLY once — the definition of round-robin non-starvation
+        let log = s.backend().log.clone();
+        let seeds: std::collections::HashSet<u64> =
+            log.iter().map(|&(s, _)| s).collect();
+        for &x in &seeds {
+            let xs: Vec<usize> = log
+                .iter()
+                .enumerate()
+                .filter(|(_, &(s, _))| s == x)
+                .map(|(i, _)| i)
+                .collect();
+            for w in xs.windows(2) {
+                let mut counts: std::collections::HashMap<u64, usize> =
+                    std::collections::HashMap::new();
+                for &(s, _) in &log[w[0] + 1..w[1]] {
+                    *counts.entry(s).or_insert(0) += 1;
+                }
+                for (&other, &c) in &counts {
+                    assert_eq!(
+                        c, 1,
+                        "seq {other} stepped {c}× between consecutive \
+                         steps of seq {x} — not round-robin"
+                    );
+                }
+            }
+        }
+        // starvation check: the longest sequence finished, and its step
+        // count equals prompt-1 + n_tokens
+        let longest = fin.iter().find(|f| f.waves == 10).expect(
+            "9-token seq with 2-token prompt steps 10 times (1 prefill + \
+             9 generation)",
+        );
+        assert_eq!(longest.outcome.as_ref().unwrap().len(), 9);
+    }
+
+    #[test]
+    fn admission_caps_active_at_the_ceiling_and_queues_the_rest() {
+        let mut s = Scheduler::new(Mock::new(256), SchedConfig {
+            max_seqs: 2,
+            queue_cap: 1,
+        });
+        let a = s.submit(req(&[1, 1], 4));
+        let b = s.submit(req(&[2, 2], 4));
+        let c = s.submit(req(&[3, 3], 4));
+        let d = s.submit(req(&[4, 4], 4));
+        assert!(matches!(a, SubmitOutcome::Admitted { .. }));
+        assert!(matches!(b, SubmitOutcome::Admitted { .. }));
+        assert!(matches!(c, SubmitOutcome::Queued { depth: 1, .. }));
+        assert!(
+            matches!(d, SubmitOutcome::Rejected { reason } if reason == "wait queue full")
+        );
+        assert_eq!(s.active(), 2);
+        assert_eq!(s.queued(), 1);
+        let fin = drain(&mut s);
+        assert_eq!(fin.len(), 3, "queued sequence ran after a slot freed");
+        // the KV ceiling provably held: the backend never had 3 live
+        assert_eq!(s.backend().live_peak, 2);
+        assert_eq!(s.backend().live, 0, "all KV released");
+        let st = s.stats();
+        assert_eq!(st.seqs_admitted, 3);
+        assert_eq!(st.seqs_queued, 1);
+        assert_eq!(st.seqs_rejected, 1);
+        assert_eq!(st.seqs_completed, 3);
+        // counters mirrored into the backend's DecodeMetrics
+        assert_eq!(s.backend.metrics.seqs_admitted, 3);
+        assert_eq!(s.backend.metrics.seqs_completed, 3);
+        assert!(s.backend.metrics.sched_waves >= 4);
+    }
+
+    #[test]
+    fn fresh_submissions_do_not_jump_the_wait_queue() {
+        // seq 1 decoding, seq 2 parked; when 1 retires and a NEW request
+        // arrives before the next wave, the queued sequence must get the
+        // slot first (FIFO/resume-first), not the newcomer.
+        let mut s = Scheduler::new(Mock::new(256), SchedConfig {
+            max_seqs: 1,
+            queue_cap: 8,
+        });
+        s.submit(req(&[1, 1], 1)); // finishes after 2 steps
+        s.submit(req(&[2, 2], 4)); // parked
+        let mut fin = Vec::new();
+        while fin.is_empty() {
+            fin.extend(s.wave());
+        }
+        assert_eq!(fin[0].id, 1);
+        assert_eq!(s.active(), 0, "slot is free, seq 2 still parked");
+        // a newcomer at this exact moment must queue BEHIND seq 2
+        let c = s.submit(req(&[3, 3], 1));
+        assert!(
+            matches!(c, SubmitOutcome::Queued { .. }),
+            "fresh submission must not jump the wait queue: {c:?}"
+        );
+        let order: Vec<u64> =
+            drain(&mut s).into_iter().map(|f| f.id).collect();
+        assert_eq!(order[0], 2, "parked sequence resumes first");
+        assert!(order.contains(&3));
+    }
+
+    #[test]
+    fn prefill_steps_do_not_sample() {
+        // the backend is asked to sample only on token-emitting steps, so
+        // prompt prefill (and replay of it) burns no sampler state — the
+        // mock returns None for non-sampling steps and the scheduler must
+        // never need a value there
+        let mut s = Scheduler::new(Mock::new(256), SchedConfig::default());
+        s.submit(req(&[1, 2, 3, 4], 2)); // 3 prefill steps, 2 emitting
+        let fin = drain(&mut s);
+        assert_eq!(fin[0].outcome.as_ref().unwrap().len(), 2);
+        // steps logged: P-1 prefill + n emitting = 3 + 2
+        assert_eq!(s.backend().log.len(), 5);
+    }
+
+    #[test]
+    fn preemption_frees_kv_and_resume_reproduces_the_stream() {
+        // reference: run three sequences to completion unpreempted
+        let mk = || {
+            let mut s = Scheduler::new(Mock::new(256), SchedConfig {
+                max_seqs: 3,
+                queue_cap: 8,
+            });
+            s.submit(req(&[5, 6], 6));
+            s.submit(req(&[7, 8], 6));
+            s.submit(req(&[9, 1], 6));
+            s
+        };
+        let mut reference = mk();
+        let mut want: Vec<_> = drain(&mut reference)
+            .into_iter()
+            .map(|f| (f.id, f.outcome.unwrap()))
+            .collect();
+        want.sort();
+
+        // same workload, but the governor shrinks the ceiling mid-flight
+        let mut s = mk();
+        s.wave();
+        assert_eq!(s.active(), 3);
+        let preempted = s.set_max_active(1);
+        assert_eq!(preempted, 2, "two newest sequences preempted");
+        assert_eq!(s.backend().live, 1, "preempted KV freed immediately");
+        assert_eq!(s.queued(), 2);
+        // recover the budget later: both resume and finish
+        for _ in 0..3 {
+            s.wave();
+        }
+        s.set_max_active(3);
+        let mut got: Vec<_> = drain(&mut s)
+            .into_iter()
+            .map(|f| (f.id, f.outcome.unwrap()))
+            .collect();
+        got.sort();
+        assert_eq!(
+            got, want,
+            "recompute-resume must reproduce the unpreempted streams"
+        );
+        assert_eq!(s.stats().seqs_preempted, 2);
+        // resumed admissions count again
+        assert_eq!(s.stats().seqs_admitted, 5);
+    }
+
+    #[test]
+    fn eos_and_kv_limit_retire_sequences() {
+        // EOS: the mock's deterministic first sample for this request
+        let mut s = Scheduler::new(Mock::new(256), SchedConfig::default());
+        let first_sample = {
+            let mut m = Mock::new(256);
+            let mut q = m.begin_seq(0.0, 5).unwrap();
+            m.step_seq(&mut q, 9, false).unwrap(); // prefill prompt[0]
+            // step on the last prompt token emits the first sample
+            m.step_seq(&mut q, 4, true).unwrap().unwrap()
+        };
+        let mut r = req(&[9, 4], 50);
+        r.seed = 5;
+        r.eos = Some(first_sample);
+        s.submit(r);
+        let fin = drain(&mut s);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(
+            fin[0].outcome.as_ref().unwrap(),
+            &vec![first_sample],
+            "EOS retires after the stop token"
+        );
+        assert!(!fin[0].truncated);
+
+        // KV limit: max_seq 4 cannot hold prompt 2 + 10 generated
+        let mut s = Scheduler::new(Mock::new(4), SchedConfig::default());
+        s.submit(req(&[1, 2], 10));
+        let fin = drain(&mut s);
+        assert_eq!(fin.len(), 1);
+        assert!(fin[0].truncated, "KV-capacity retirement is truncation");
+        let got = fin[0].outcome.as_ref().unwrap().len();
+        assert!(got < 10 && got > 0, "partial output delivered: {got}");
+    }
+
+    #[test]
+    fn step_errors_kill_only_their_sequence() {
+        let mut mock = Mock::new(256);
+        mock.fail_on_pos = Some(2); // third step of every sequence fails
+        let mut s = Scheduler::new(mock, SchedConfig {
+            max_seqs: 2,
+            queue_cap: 4,
+        });
+        s.submit(req(&[1, 2], 1)); // finishes in 2 steps — unaffected
+        s.submit(req(&[3, 4], 8)); // dies at its third step
+        let fin = drain(&mut s);
+        assert_eq!(fin.len(), 2);
+        let by_id: std::collections::HashMap<u64, &FinishedSeq> =
+            fin.iter().map(|f| (f.id, f)).collect();
+        assert!(by_id[&1].outcome.is_ok());
+        assert!(by_id[&2].outcome.is_err(), "failed seq reports its error");
+        assert_eq!(s.backend().live, 0, "failed seq's KV released too");
+    }
+
+    #[test]
+    fn rejects_empty_prompts_and_zero_budgets_complete_fast() {
+        let mut s = Scheduler::new(Mock::new(256), SchedConfig::default());
+        assert!(matches!(
+            s.submit(req(&[], 4)),
+            SubmitOutcome::Rejected { .. }
+        ));
+        s.submit(req(&[1], 0));
+        let fin = drain(&mut s);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].outcome.as_ref().unwrap().len(), 0);
+    }
+}

@@ -1,18 +1,25 @@
-//! Serving front-end: a TCP line-JSON server with a FIFO admission queue in
-//! front of one decode engine.
+//! Serving front-end: a TCP line-JSON server with a continuous-batching
+//! scheduler in front of one decode engine.
 //!
-//! On-device engines decode one sequence at a time (the paper's setting —
-//! decode is memory-bandwidth-bound, so batching buys nothing on a phone);
-//! the "batcher" therefore multiplexes *requests*, tracking queueing vs
-//! decode latency separately.
+//! The worker used to run one blocking `generate()` per request (FIFO):
+//! the swap pipeline only ever served one sequence, and `stats` /
+//! `set_budget` starved behind long generations. It now owns a
+//! [`Scheduler`] and drives it in **waves** — one token per live sequence
+//! per wave, admit-on-arrival, retire-on-EOS/limit — so concurrent
+//! requests decode interleaved (their cross-token preload chains keep the
+//! flash queue saturated while peers compute) and control jobs are
+//! serviced at every wave boundary, which is an inter-token safe point
+//! for all live sequences.
 //!
-//! The elastic-memory control (`set_budget`) is **live**: the worker
-//! thread owns a [`DramGovernor`] next to the engine, so a budget change
-//! re-runs the §4.1 search online and applies `(sp, N, cache)` to the
-//! running engine — cache eviction to the new target, preload-depth and
-//! slab-cap retune, sparsity-level artifact switch — between requests,
-//! with no restart. Ledger totals and re-budget decisions surface in
-//! `stats`.
+//! The elastic-memory control (`set_budget`) is **live** and now applies
+//! *mid-generation*: the worker drains control jobs between waves, so a
+//! budget change re-runs the §4.1 search online and applies
+//! `(sp, N, cache, max_seqs)` to the running engine within one wave —
+//! including mid-sequence sparsity-level switches (KV is
+//! level-independent) and a shrink of the concurrent-sequence ceiling,
+//! which preempts the newest sequences (recompute-on-resume) to free
+//! their KV. Ledger totals, re-budget decisions, and the scheduler's
+//! counters surface in `stats`.
 //!
 //! Protocol: one JSON object per line.
 //!   {"prompt": "...", "n_tokens": 32, "temp": 0.0}
@@ -20,13 +27,14 @@
 //!   {"cmd": "set_budget", "bytes": 1200000000}
 //!   {"cmd": "shutdown"}
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Sender, TryRecvError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -35,6 +43,10 @@ use crate::governor::{
     DramGovernor, GovernorConfig, PressureSchedule, RebudgetTrigger,
 };
 use crate::metrics;
+use crate::metrics::DecodeMetrics;
+use crate::sched::{
+    SchedConfig, SchedStats, Scheduler, SeqRequest, SubmitOutcome,
+};
 use crate::tokenizer;
 use crate::util::json::{self, arr, num, obj, s, Value};
 
@@ -42,16 +54,22 @@ pub struct ServerConfig {
     pub addr: String,
     pub artifact_dir: PathBuf,
     pub opts: EngineOptions,
-    /// Governor knobs (hysteresis, search grid) — see
-    /// [`GovernorConfig::from_runtime`].
+    /// Governor knobs (hysteresis, search grid, KV-pool seq ceiling) —
+    /// see [`GovernorConfig::from_runtime`].
     pub governor: GovernorConfig,
     /// Apply this DRAM budget at startup (otherwise the governor assumes
     /// the device's physical DRAM until the first `set_budget`).
     pub initial_budget: Option<u64>,
     /// Scripted pressure trace (`"<size>@<token>,..."`): the worker fires
-    /// each step between requests once the served-token count passes it —
+    /// each step between waves once the decoded-token count passes it —
     /// the same path a `set_budget` command takes.
     pub pressure_schedule: Option<String>,
+    /// Scheduler: hard cap on concurrently decoding sequences
+    /// (`--max-seqs`); the governor lowers the effective ceiling under
+    /// tight budgets.
+    pub max_seqs: usize,
+    /// Scheduler wait-queue bound (submissions past it are rejected).
+    pub sched_queue_cap: usize,
 }
 
 struct Request {
@@ -64,8 +82,8 @@ struct Request {
 
 enum Job {
     Decode(Request),
-    /// Live re-budget: the worker runs the governor against its engine
-    /// between requests and answers with the decision.
+    /// Live re-budget: the worker runs the governor against its engine at
+    /// the next wave boundary and answers with the decision.
     Rebudget { bytes: u64, resp: Sender<Value> },
     Stop,
 }
@@ -75,6 +93,8 @@ struct ServerStats {
     served: AtomicU64,
     tokens: AtomicU64,
     queue_ns: AtomicU64,
+    /// Total wave wall time (the denominator of aggregate throughput —
+    /// sequences decode interleaved, so per-request durations overlap).
     decode_ns: AtomicU64,
     // hot-path counters mirrored out of DecodeMetrics (PERF.md): the
     // engine lives on the worker thread, so `stats` connections read these
@@ -90,7 +110,9 @@ struct ServerStats {
     // async read-queue mirror (shared ReadQueue, PERF.md)
     io_batches: AtomicU64,
     io_inflight_peak: AtomicU64,
-    io_wait_us: AtomicU64,
+    io_wait_loader_us: AtomicU64,
+    io_wait_engine_us: AtomicU64,
+    io_buffers_recycled: AtomicU64,
     /// Loader parts that failed to load (read/planning errors); waiters
     /// fell back to on-demand. Non-zero here means the flash file or the
     /// preload requests are broken — previously only visible on stderr.
@@ -105,13 +127,76 @@ struct ServerStats {
     rebudget_rows_evicted: AtomicU64,
     level_switches: AtomicU64,
     last_settle_us: AtomicU64,
+    // continuous-batching scheduler mirror
+    seqs_active: AtomicU64,
+    seqs_waiting: AtomicU64,
+    seqs_admitted: AtomicU64,
+    seqs_queued: AtomicU64,
+    seqs_rejected: AtomicU64,
+    seqs_preempted: AtomicU64,
+    seqs_completed: AtomicU64,
+    sched_waves: AtomicU64,
+    sched_wave_us: AtomicU64,
+    max_active_seqs: AtomicU64,
+    kv_per_seq_bytes: AtomicU64,
 }
 
 impl ServerStats {
+    /// Refresh the hot-path mirror from the engine's cumulative counters
+    /// (absolute stores — one engine, one worker).
+    fn publish_hot(&self, m: &DecodeMetrics, parts_failed: u64) {
+        let st = |a: &AtomicU64, v: u64| a.store(v, Ordering::Relaxed);
+        st(&self.cache_hits, m.cache_hits);
+        st(&self.cache_misses, m.cache_misses);
+        st(&self.lock_acquires, m.cache_lock_acquires);
+        st(&self.locks_avoided, m.cache_locks_avoided);
+        st(&self.batched_inserts, m.batched_inserts);
+        st(&self.ondemand_rows, m.ondemand_rows);
+        st(&self.ondemand_coalesced_runs, m.ondemand_coalesced_runs);
+        st(&self.slab_bytes_peak, m.slab_bytes_peak);
+        st(&self.io_batches, m.io_batches);
+        st(&self.io_inflight_peak, m.io_inflight_peak);
+        st(
+            &self.io_wait_loader_us,
+            m.io_wait_loader.as_micros() as u64,
+        );
+        st(
+            &self.io_wait_engine_us,
+            m.io_wait_engine.as_micros() as u64,
+        );
+        st(&self.io_buffers_recycled, m.io_buffers_recycled);
+        st(&self.parts_failed, parts_failed);
+    }
+
+    /// Refresh the scheduler mirror.
+    fn publish_sched(
+        &self,
+        st: &SchedStats,
+        active: usize,
+        waiting: usize,
+        max_active: usize,
+    ) {
+        let w = |a: &AtomicU64, v: u64| a.store(v, Ordering::Relaxed);
+        w(&self.seqs_active, active as u64);
+        w(&self.seqs_waiting, waiting as u64);
+        w(&self.seqs_admitted, st.seqs_admitted);
+        w(&self.seqs_queued, st.seqs_queued);
+        w(&self.seqs_rejected, st.seqs_rejected);
+        w(&self.seqs_preempted, st.seqs_preempted);
+        w(&self.seqs_completed, st.seqs_completed);
+        w(&self.sched_waves, st.waves);
+        w(&self.sched_wave_us, st.wave_time.as_micros() as u64);
+        w(&self.max_active_seqs, max_active as u64);
+        self.decode_ns
+            .store(st.wave_time.as_nanos() as u64, Ordering::Relaxed);
+    }
+
     /// Refresh the governor mirror from the worker-side engine state.
     fn publish_governor(&self, engine: &SwapEngine, gov: &DramGovernor) {
         let ledger = engine.pool_ledger();
         self.budget_bytes.store(gov.budget(), Ordering::Relaxed);
+        self.kv_per_seq_bytes
+            .store(gov.kv_per_seq(), Ordering::Relaxed);
         self.ledger_cache_bytes
             .store(ledger.cache_bytes, Ordering::Relaxed);
         self.ledger_preload_bytes
@@ -145,200 +230,213 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
     let stats = Arc::new(ServerStats::default());
     let stop = Arc::new(AtomicBool::new(false));
 
-    // ---- engine worker: owns the SwapEngine + DramGovernor, drains FIFO.
+    // ---- engine worker: owns Scheduler<SwapEngine> + DramGovernor,
+    //      alternates job-drain and decode waves.
     let worker_stats = stats.clone();
     let artifact_dir = cfg.artifact_dir.clone();
     let opts_device = cfg.opts.device;
     let initial_budget = cfg.initial_budget;
     let governor_cfg = cfg.governor.clone();
-    let mut schedule = match &cfg.pressure_schedule {
+    let sched_cfg = SchedConfig {
+        max_seqs: cfg.max_seqs.max(1),
+        queue_cap: cfg.sched_queue_cap,
+    };
+    let mut pressure = match &cfg.pressure_schedule {
         Some(spec) => Some(PressureSchedule::parse(spec)?),
         None => None,
     };
     let worker = std::thread::spawn(move || -> Result<()> {
         let mut engine = SwapEngine::open(&artifact_dir, cfg.opts)?;
+        // interleaved decode: every sequence's next-token group-0 chain
+        // loads while its peers compute
+        engine.set_cross_token_preload(true);
         let mut gov = DramGovernor::new(
             &engine,
             governor_cfg,
             opts_device.dram_bytes,
         );
-        let mut served_tokens = 0u64;
         if let Some(budget) = initial_budget {
             let d = gov.set_budget(&mut engine, budget,
                                    RebudgetTrigger::Command)?;
             eprintln!(
-                "[server] initial budget {}: sp={:.2} N={} cache={} ({})",
-                budget, d.new_sp, d.new_group, d.cache_target, d.note
+                "[server] initial budget {}: sp={:.2} N={} cache={} \
+                 max_seqs={} ({})",
+                budget, d.new_sp, d.new_group, d.cache_target, d.max_seqs,
+                d.note
             );
         }
         worker_stats.publish_governor(&engine, &gov);
         eprintln!(
-            "[server] engine ready: model={} level={} device={}",
+            "[server] engine ready: model={} level={} device={} max_seqs={}",
             engine.model().name,
             engine.sparsity_tag(),
-            opts_device.name
+            opts_device.name,
+            sched_cfg.max_seqs,
         );
-        while let Ok(job) = job_rx.recv() {
-            let req = match job {
-                Job::Stop => break,
-                Job::Rebudget { bytes, resp } => {
-                    let v = match gov.set_budget(&mut engine, bytes,
-                                                 RebudgetTrigger::Command) {
-                        Err(e) => obj(vec![("error", s(&format!("{e:#}")))]),
-                        Ok(d) if d.note == "infeasible" => obj(vec![(
-                            "error",
-                            s("budget below minimum servable configuration"),
-                        )]),
-                        Ok(d) => obj(vec![
-                            ("applied", Value::Bool(d.applied)),
-                            ("note", s(d.note)),
-                            ("sparsity", num(d.new_sp)),
-                            ("group_size", num(d.new_group as f64)),
-                            ("cache_bytes", num(d.cache_target as f64)),
-                            ("slab_cap_bytes", num(d.slab_cap as f64)),
-                            ("evicted_rows", num(d.evicted_rows as f64)),
-                            (
-                                "settle_ms",
-                                num(d.settle.as_secs_f64() * 1e3),
-                            ),
-                            (
-                                "ledger_cache_bytes",
-                                num(d.new_pools.cache_bytes as f64),
-                            ),
-                            (
-                                "ledger_preload_bytes",
-                                num(d.new_pools.preload_bytes as f64),
-                            ),
-                            (
-                                "ledger_compute_bytes",
-                                num(d.new_pools.compute_bytes as f64),
-                            ),
-                        ]),
-                    };
-                    worker_stats.publish_governor(&engine, &gov);
-                    let _ = resp.send(v);
-                    continue;
+        let mut sched = Scheduler::new(engine, sched_cfg);
+        sched.set_max_active(gov.max_seqs());
+        // response routing: sched seq id → (reply channel, time already
+        // spent queueing before the scheduler saw the request)
+        let mut waiting: HashMap<u64, (Sender<Value>, Duration)> =
+            HashMap::new();
+        let mut seed_counter = 0u64;
+        let mut last_parts_failed = 0u64;
+        'outer: loop {
+            // drain every pending job at this wave boundary — the safe
+            // point where re-budgets (level switches, ceiling shrinks)
+            // apply mid-generation instead of after it
+            loop {
+                let job = if sched.has_work() {
+                    match job_rx.try_recv() {
+                        Ok(j) => Some(j),
+                        Err(TryRecvError::Empty) => None,
+                        Err(TryRecvError::Disconnected) => break 'outer,
+                    }
+                } else {
+                    match job_rx.recv() {
+                        Ok(j) => Some(j),
+                        Err(_) => break 'outer,
+                    }
+                };
+                let Some(job) = job else { break };
+                match job {
+                    Job::Stop => break 'outer,
+                    Job::Rebudget { bytes, resp } => {
+                        let v = apply_rebudget(&mut sched, &mut gov, bytes);
+                        worker_stats
+                            .publish_governor(sched.backend(), &gov);
+                        let _ = resp.send(v);
+                    }
+                    Job::Decode(r) => {
+                        seed_counter += 1;
+                        let pre_queue = r.enqueued.elapsed();
+                        let outcome = sched.submit(SeqRequest {
+                            prompt: r.prompt,
+                            n_tokens: r.n_tokens,
+                            temp: r.temp,
+                            seed: seed_counter,
+                            eos: None,
+                        });
+                        match outcome {
+                            SubmitOutcome::Admitted { id }
+                            | SubmitOutcome::Queued { id, .. } => {
+                                waiting.insert(id, (r.resp, pre_queue));
+                            }
+                            SubmitOutcome::Rejected { reason } => {
+                                let _ = r.resp.send(obj(vec![(
+                                    "error",
+                                    s(reason),
+                                )]));
+                            }
+                        }
+                    }
                 }
-                Job::Decode(r) => r,
-            };
-            let queue_t = req.enqueued.elapsed();
-            let t0 = Instant::now();
-            let before = engine.metrics.clone();
-            let result = engine.generate(&req.prompt, req.n_tokens, req.temp);
-            let decode_t = t0.elapsed();
-            {
-                // published on BOTH result paths: loader failures are the
-                // likeliest cause of a failed decode, so the visibility
-                // counters must not go stale exactly when things break
-                let m = &engine.metrics;
-                worker_stats.io_batches.fetch_add(
-                    m.io_batches - before.io_batches,
-                    Ordering::Relaxed,
-                );
-                worker_stats
-                    .io_inflight_peak
-                    .fetch_max(m.io_inflight_peak, Ordering::Relaxed);
-                worker_stats.io_wait_us.fetch_add(
-                    (m.io_wait - before.io_wait).as_micros() as u64,
-                    Ordering::Relaxed,
-                );
-                worker_stats.parts_failed.store(
-                    engine.loader_stats().parts_failed,
-                    Ordering::Relaxed,
-                );
             }
-            let resp = match result {
-                Err(e) => obj(vec![("error", s(&format!("{e:#}")))]),
-                Ok(toks) => {
-                    let m = &engine.metrics;
-                    let delta_tokens = m.tokens - before.tokens;
-                    worker_stats.served.fetch_add(1, Ordering::Relaxed);
-                    worker_stats
-                        .tokens
-                        .fetch_add(delta_tokens, Ordering::Relaxed);
-                    worker_stats.cache_hits.fetch_add(
-                        m.cache_hits - before.cache_hits,
-                        Ordering::Relaxed,
-                    );
-                    worker_stats.cache_misses.fetch_add(
-                        m.cache_misses - before.cache_misses,
-                        Ordering::Relaxed,
-                    );
-                    worker_stats.lock_acquires.fetch_add(
-                        m.cache_lock_acquires - before.cache_lock_acquires,
-                        Ordering::Relaxed,
-                    );
-                    worker_stats.locks_avoided.fetch_add(
-                        m.cache_locks_avoided - before.cache_locks_avoided,
-                        Ordering::Relaxed,
-                    );
-                    worker_stats.batched_inserts.fetch_add(
-                        m.batched_inserts - before.batched_inserts,
-                        Ordering::Relaxed,
-                    );
-                    worker_stats.ondemand_rows.fetch_add(
-                        m.ondemand_rows - before.ondemand_rows,
-                        Ordering::Relaxed,
-                    );
-                    worker_stats.ondemand_coalesced_runs.fetch_add(
-                        m.ondemand_coalesced_runs
-                            - before.ondemand_coalesced_runs,
-                        Ordering::Relaxed,
-                    );
-                    worker_stats
-                        .slab_bytes_peak
-                        .fetch_max(m.slab_bytes_peak, Ordering::Relaxed);
-                    worker_stats.queue_ns.fetch_add(
-                        queue_t.as_nanos() as u64,
-                        Ordering::Relaxed,
-                    );
-                    worker_stats.decode_ns.fetch_add(
-                        decode_t.as_nanos() as u64,
-                        Ordering::Relaxed,
-                    );
-                    worker_stats.publish_governor(&engine, &gov);
-                    obj(vec![
-                        ("text", s(&tokenizer::decode(&toks))),
-                        (
-                            "tokens",
-                            arr(toks.iter().map(|&t| num(t as f64)).collect()),
-                        ),
-                        ("queue_ms", num(queue_t.as_secs_f64() * 1e3)),
-                        ("decode_ms", num(decode_t.as_secs_f64() * 1e3)),
-                        (
-                            "toks_per_sec",
-                            num(req.n_tokens as f64
-                                / decode_t.as_secs_f64().max(1e-9)),
-                        ),
-                        ("cache_hit_rate", num(engine.cache_hit_rate())),
-                    ])
-                }
-            };
-            let _ = req.resp.send(resp);
-            // scripted pressure trace: fire due steps between requests,
+            if !sched.has_work() {
+                continue; // nothing live — block on the next job
+            }
+
+            // one wave: each live sequence decodes one token
+            let finished = sched.wave();
+            let any_finished = !finished.is_empty();
+            for f in finished {
+                let Some((resp, pre_queue)) = waiting.remove(&f.id) else {
+                    continue;
+                };
+                let queue_t = pre_queue + f.queue_wait;
+                let v = match f.outcome {
+                    Err(e) => obj(vec![("error", s(&e))]),
+                    Ok(toks) => {
+                        worker_stats.served.fetch_add(1, Ordering::Relaxed);
+                        worker_stats
+                            .tokens
+                            .fetch_add(toks.len() as u64, Ordering::Relaxed);
+                        worker_stats.queue_ns.fetch_add(
+                            queue_t.as_nanos() as u64,
+                            Ordering::Relaxed,
+                        );
+                        obj(vec![
+                            ("text", s(&tokenizer::decode(&toks))),
+                            (
+                                "tokens",
+                                arr(toks
+                                    .iter()
+                                    .map(|&t| num(t as f64))
+                                    .collect()),
+                            ),
+                            ("queue_ms", num(queue_t.as_secs_f64() * 1e3)),
+                            (
+                                "decode_ms",
+                                num(f.decode.as_secs_f64() * 1e3),
+                            ),
+                            ("waves", num(f.waves as f64)),
+                            ("truncated", Value::Bool(f.truncated)),
+                            (
+                                "toks_per_sec",
+                                num(toks.len() as f64
+                                    / f.decode.as_secs_f64().max(1e-9)),
+                            ),
+                            (
+                                "cache_hit_rate",
+                                num(sched.backend().cache_hit_rate()),
+                            ),
+                        ])
+                    }
+                };
+                let _ = resp.send(v);
+            }
+
+            // scripted pressure trace: fire due steps between waves,
             // through the same governor path a set_budget command takes
-            served_tokens = engine.metrics.tokens.max(served_tokens);
-            if let Some(sched) = schedule.as_mut() {
-                if let Some(budget) = sched.due(served_tokens) {
+            let decoded = sched.backend().metrics.tokens;
+            if let Some(trace) = pressure.as_mut() {
+                if let Some(budget) = trace.due(decoded) {
                     // a failed step must not take down serving — log and
                     // keep the engine on its previous configuration, the
                     // same degradation a failed set_budget command gets
-                    match gov.set_budget(&mut engine, budget,
+                    match gov.set_budget(sched.backend_mut(), budget,
                                          RebudgetTrigger::Schedule) {
-                        Ok(d) => eprintln!(
-                            "[server] pressure step -> {} ({}): sp={:.2} \
-                             N={} cache={}",
-                            budget, d.note, d.new_sp, d.new_group,
-                            d.cache_target
-                        ),
+                        Ok(d) => {
+                            sched.set_max_active(d.max_seqs);
+                            eprintln!(
+                                "[server] pressure step -> {} ({}): \
+                                 sp={:.2} N={} cache={} max_seqs={}",
+                                budget, d.note, d.new_sp, d.new_group,
+                                d.cache_target, d.max_seqs
+                            );
+                        }
                         Err(e) => eprintln!(
                             "[server] pressure step failed: {e:#}"
                         ),
                     }
-                    worker_stats.publish_governor(&engine, &gov);
+                    worker_stats.publish_governor(sched.backend(), &gov);
                 }
             }
+
+            // refresh the stats mirror — `stats` connections never touch
+            // the engine. The lock-free mirrors (engine counters, sched
+            // atomics) refresh every wave; the mutex-guarded ones (pool
+            // ledger takes the counted WeightCache lock, loader stats its
+            // mutex) only when a sequence retired — per-request frequency,
+            // like the old worker, not per-token lock traffic
+            if any_finished {
+                let parts_failed =
+                    sched.backend().loader_stats().parts_failed;
+                last_parts_failed = parts_failed;
+                worker_stats.publish_governor(sched.backend(), &gov);
+            }
+            worker_stats
+                .publish_hot(&sched.backend().metrics, last_parts_failed);
+            let (active, queued, max_active) =
+                (sched.active(), sched.queued(), sched.max_active());
+            worker_stats.publish_sched(
+                &sched.stats(),
+                active,
+                queued,
+                max_active,
+            );
         }
+        sched.shutdown();
         Ok(())
     });
 
@@ -364,6 +462,55 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
     let _ = job_tx.send(Job::Stop);
     let _ = worker.join();
     Ok(stats.served.load(Ordering::Relaxed))
+}
+
+/// Apply a live re-budget at a wave boundary: governor search + engine
+/// apply + scheduler ceiling (preempting past it), answering with the
+/// decision.
+fn apply_rebudget(
+    sched: &mut Scheduler<SwapEngine>,
+    gov: &mut DramGovernor,
+    bytes: u64,
+) -> Value {
+    match gov.set_budget(sched.backend_mut(), bytes,
+                         RebudgetTrigger::Command) {
+        Err(e) => obj(vec![("error", s(&format!("{e:#}")))]),
+        Ok(d) if d.note == "infeasible" => obj(vec![(
+            "error",
+            s("budget below minimum servable configuration"),
+        )]),
+        Ok(d) => {
+            let preempted = if d.applied {
+                sched.set_max_active(d.max_seqs)
+            } else {
+                0
+            };
+            obj(vec![
+                ("applied", Value::Bool(d.applied)),
+                ("note", s(d.note)),
+                ("sparsity", num(d.new_sp)),
+                ("group_size", num(d.new_group as f64)),
+                ("cache_bytes", num(d.cache_target as f64)),
+                ("slab_cap_bytes", num(d.slab_cap as f64)),
+                ("max_seqs", num(d.max_seqs as f64)),
+                ("seqs_preempted", num(preempted as f64)),
+                ("evicted_rows", num(d.evicted_rows as f64)),
+                ("settle_ms", num(d.settle.as_secs_f64() * 1e3)),
+                (
+                    "ledger_cache_bytes",
+                    num(d.new_pools.cache_bytes as f64),
+                ),
+                (
+                    "ledger_preload_bytes",
+                    num(d.new_pools.preload_bytes as f64),
+                ),
+                (
+                    "ledger_compute_bytes",
+                    num(d.new_pools.compute_bytes as f64),
+                ),
+            ])
+        }
+    }
 }
 
 fn handle_conn(
@@ -392,6 +539,7 @@ fn handle_conn(
                 let served = stats.served.load(Ordering::Relaxed);
                 let tokens = stats.tokens.load(Ordering::Relaxed);
                 let dec_ns = stats.decode_ns.load(Ordering::Relaxed);
+                let waves = stats.sched_waves.load(Ordering::Relaxed);
                 let g = |a: &AtomicU64| num(a.load(Ordering::Relaxed) as f64);
                 respond(
                     &mut writer,
@@ -404,6 +552,9 @@ fn handle_conn(
                                 / 1e6
                                 / served.max(1) as f64),
                         ),
+                        // aggregate generated-token throughput over wave
+                        // wall time (sequences overlap — per-request
+                        // durations must not be summed)
                         (
                             "throughput_toks_per_sec",
                             num(tokens as f64 / (dec_ns as f64 / 1e9).max(1e-9)),
@@ -431,10 +582,27 @@ fn handle_conn(
                             g(&stats.ondemand_coalesced_runs),
                         ),
                         ("slab_bytes_peak", g(&stats.slab_bytes_peak)),
-                        // async flash read path (PERF.md)
+                        // async flash read path (PERF.md): io_wait_us is
+                        // the legacy total; the split tells preload
+                        // reaping from on-demand miss stalls
                         ("io_batches", g(&stats.io_batches)),
                         ("io_inflight_peak", g(&stats.io_inflight_peak)),
-                        ("io_wait_us", g(&stats.io_wait_us)),
+                        (
+                            "io_wait_us",
+                            num((stats
+                                .io_wait_loader_us
+                                .load(Ordering::Relaxed)
+                                + stats
+                                    .io_wait_engine_us
+                                    .load(Ordering::Relaxed))
+                                as f64),
+                        ),
+                        ("io_wait_loader_us", g(&stats.io_wait_loader_us)),
+                        ("io_wait_engine_us", g(&stats.io_wait_engine_us)),
+                        (
+                            "io_buffers_recycled",
+                            g(&stats.io_buffers_recycled),
+                        ),
                         ("parts_failed", g(&stats.parts_failed)),
                         // runtime DRAM governor: budget, pools, decisions
                         ("budget_bytes", g(&stats.budget_bytes)),
@@ -455,13 +623,31 @@ fn handle_conn(
                         ),
                         ("level_switches", g(&stats.level_switches)),
                         ("last_settle_us", g(&stats.last_settle_us)),
+                        // continuous-batching scheduler
+                        ("seqs_active", g(&stats.seqs_active)),
+                        ("seqs_waiting", g(&stats.seqs_waiting)),
+                        ("seqs_admitted", g(&stats.seqs_admitted)),
+                        ("seqs_queued", g(&stats.seqs_queued)),
+                        ("seqs_rejected", g(&stats.seqs_rejected)),
+                        ("seqs_preempted", g(&stats.seqs_preempted)),
+                        ("seqs_completed", g(&stats.seqs_completed)),
+                        ("sched_waves", g(&stats.sched_waves)),
+                        (
+                            "sched_wave_avg_us",
+                            num(stats.sched_wave_us.load(Ordering::Relaxed)
+                                as f64
+                                / waves.max(1) as f64),
+                        ),
+                        ("max_active_seqs", g(&stats.max_active_seqs)),
+                        ("kv_per_seq_bytes", g(&stats.kv_per_seq_bytes)),
                     ]),
                 )?;
             }
             Some("set_budget") => {
                 // Elastic memory, live: the worker re-runs the §4.1
                 // search under the new M_max and applies the result to
-                // the running engine between requests.
+                // the running engine at the next wave boundary — mid-
+                // generation, not after it.
                 let bytes =
                     req.get("bytes").and_then(Value::as_f64).unwrap_or(0.0)
                         as u64;

@@ -1,0 +1,188 @@
+//! Integration: scheduler correctness against the real engine — an
+//! interleaved sequence must be **bit-identical** to the same sequence
+//! run solo, including across a mid-sequence sparsity-level switch at an
+//! inter-token safe point (KV is level-independent; weight rows are
+//! bit-identical whichever source — cache, preload slab, flash — served
+//! them). Also pins the governor's KV ledger accounting to
+//! `kv_per_seq × active_seqs` on a live engine.
+//!
+//! Requires `make artifacts`; self-skips otherwise.
+
+use std::path::{Path, PathBuf};
+
+use activeflow::cache::CachePolicy;
+use activeflow::config::ArtifactConfig;
+use activeflow::device::PIXEL6;
+use activeflow::engine::{
+    EngineOptions, PreloadTrigger, RebudgetPlan, SwapEngine, SwapMode,
+};
+use activeflow::flash::ClockMode;
+use activeflow::sched::{SchedConfig, Scheduler, SeqRequest, SubmitOutcome};
+use activeflow::tokenizer;
+
+const N_GEN: usize = 10;
+const SWITCH_AT: usize = 4; // level switch after this many generated tokens
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("model_config.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts not built");
+        None
+    }
+}
+
+fn opts() -> EngineOptions {
+    EngineOptions {
+        sparsity: 0.6,
+        group_size: 4,
+        swap_mode: SwapMode::Preload,
+        cache_bytes: 256 * 1024,
+        cache_policy: CachePolicy::Contextual,
+        device: &PIXEL6,
+        clock: ClockMode::Modeled,
+        bw_scale: 1.0,
+        trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,
+    }
+}
+
+/// The same level schedule both runs apply: switch to the artifact level
+/// nearest `sp` after `SWITCH_AT` generated tokens.
+fn switch_plan(dir: &Path) -> Option<RebudgetPlan> {
+    let cfg = ArtifactConfig::load(dir).unwrap();
+    let target = cfg.nearest_level(0.8)?;
+    Some(RebudgetPlan {
+        sparsity: target.sp,
+        group_size: 4,
+        cache_bytes: 256 * 1024,
+        slab_cap_bytes: u64::MAX,
+    })
+}
+
+/// Reference: drive one sequence alone through the step API (cross-token
+/// preload off — the serial source mix), applying the level switch at the
+/// same safe point the scheduler uses.
+fn run_solo(
+    dir: &Path,
+    prompt: &[u32],
+    plan: Option<&RebudgetPlan>,
+) -> Vec<u32> {
+    let mut eng = SwapEngine::open(dir, opts()).unwrap();
+    let mut seq = eng.begin_seq(0.0, 7);
+    let mut out = Vec::new();
+    let mut last = prompt[0];
+    for (i, &t) in prompt.iter().enumerate() {
+        last = t;
+        if i + 1 < prompt.len() {
+            eng.step(&mut seq, t).unwrap();
+        }
+    }
+    for k in 0..N_GEN {
+        if k == SWITCH_AT {
+            if let Some(p) = plan {
+                eng.apply_plan(p).unwrap();
+            }
+        }
+        eng.step(&mut seq, last).unwrap();
+        let tok = eng.sample_seq(&mut seq);
+        out.push(tok);
+        last = tok;
+    }
+    eng.end_seq(seq);
+    out
+}
+
+#[test]
+fn interleaved_sequence_matches_solo_across_level_switch() {
+    let Some(dir) = artifacts() else { return };
+    let prompt_a = tokenizer::encode("the sparse model swaps ");
+    let prompt_b = tokenizer::encode("active weights move to ");
+    assert_eq!(
+        prompt_a.len(),
+        prompt_b.len(),
+        "test needs phase-aligned prompts so both sequences hit the \
+         switch point in the same wave"
+    );
+    let plan = switch_plan(&dir);
+    if plan.is_none() {
+        eprintln!("[skip] single-level artifact set — no switch to test");
+    }
+
+    let want_a = run_solo(&dir, &prompt_a, plan.as_ref());
+    let want_b = run_solo(&dir, &prompt_b, plan.as_ref());
+
+    // interleaved: both sequences share one engine + scheduler, with the
+    // cross-token preload chains on (different weight *sources*, same
+    // bits) and the level switch applied at the same token boundary
+    let mut engine = SwapEngine::open(&dir, opts()).unwrap();
+    engine.set_cross_token_preload(true);
+    let mut sched = Scheduler::new(engine, SchedConfig {
+        max_seqs: 2,
+        queue_cap: 4,
+    });
+    let mk = |p: &[u32]| SeqRequest {
+        prompt: p.to_vec(),
+        n_tokens: N_GEN,
+        temp: 0.0,
+        seed: 7,
+        eos: None,
+    };
+    assert!(matches!(
+        sched.submit(mk(&prompt_a)),
+        SubmitOutcome::Admitted { id: 1 }
+    ));
+    assert!(matches!(
+        sched.submit(mk(&prompt_b)),
+        SubmitOutcome::Admitted { id: 2 }
+    ));
+
+    // prompts are phase-aligned: after (P-1) prefill waves, each wave
+    // emits one token per sequence, so the switch lands after
+    // P-1+SWITCH_AT waves — the same schedule run_solo applied
+    let switch_wave = (prompt_a.len() - 1 + SWITCH_AT) as u64;
+    let mut finished = Vec::new();
+    while sched.has_work() {
+        if sched.stats().waves == switch_wave {
+            if let Some(p) = plan.as_ref() {
+                sched.backend_mut().apply_plan(p).unwrap();
+            }
+        }
+        finished.extend(sched.wave());
+    }
+    assert_eq!(finished.len(), 2);
+    finished.sort_by_key(|f| f.id);
+    let got_a = finished[0].outcome.as_ref().unwrap();
+    let got_b = finished[1].outcome.as_ref().unwrap();
+    assert_eq!(
+        got_a, &want_a,
+        "sequence A interleaved (with level switch) diverged from its \
+         solo run — weight-source or KV isolation broke bit-safety"
+    );
+    assert_eq!(got_b, &want_b, "sequence B diverged from its solo run");
+}
+
+#[test]
+fn kv_ledger_tracks_active_seqs() {
+    let Some(dir) = artifacts() else { return };
+    let mut eng = SwapEngine::open(&dir, opts()).unwrap();
+    let kv = eng.kv_per_seq_bytes();
+    assert!(kv > 0);
+    let base = eng.pool_ledger().compute_bytes;
+    assert_eq!(eng.active_seqs(), 0, "no KV before the first sequence");
+
+    let s1 = eng.begin_seq(0.0, 1);
+    let s2 = eng.begin_seq(0.0, 2);
+    assert_eq!(eng.active_seqs(), 2);
+    assert_eq!(
+        eng.pool_ledger().compute_bytes,
+        base + 2 * kv,
+        "ledger must charge kv_per_seq × active_seqs"
+    );
+    eng.end_seq(s1);
+    assert_eq!(eng.pool_ledger().compute_bytes, base + kv);
+    eng.end_seq(s2);
+    assert_eq!(eng.pool_ledger().compute_bytes, base);
+    assert_eq!(eng.active_seqs(), 0);
+}

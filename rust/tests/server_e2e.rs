@@ -43,6 +43,8 @@ fn serve_generate_stats_shutdown() {
         governor: GovernorConfig::default(),
         initial_budget: None,
         pressure_schedule: None,
+        max_seqs: 2,
+        sched_queue_cap: 16,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     // wait for bind
@@ -102,12 +104,35 @@ fn serve_generate_stats_shutdown() {
         "preload I/O must flow through the read queue: {stats:?}"
     );
     assert!(stats.get("io_inflight_peak").is_some());
+    // io_wait split (ROADMAP): legacy total stays, per-class pair added
     assert!(stats.get("io_wait_us").is_some());
+    assert!(stats.get("io_wait_loader_us").is_some());
+    assert!(stats.get("io_wait_engine_us").is_some());
+    assert!(stats.get("io_buffers_recycled").is_some());
     assert_eq!(
         stats.get("parts_failed").unwrap().as_f64().unwrap(),
         0.0,
         "healthy serve must not fail preload parts"
     );
+    // continuous-batching scheduler counters
+    assert!(
+        stats.get("seqs_completed").unwrap().as_f64().unwrap() >= 2.0,
+        "{stats:?}"
+    );
+    assert!(stats.get("seqs_admitted").unwrap().as_f64().unwrap() >= 2.0);
+    assert!(stats.get("sched_waves").unwrap().as_f64().unwrap() > 0.0);
+    for key in [
+        "seqs_active",
+        "seqs_waiting",
+        "seqs_queued",
+        "seqs_rejected",
+        "seqs_preempted",
+        "sched_wave_avg_us",
+        "max_active_seqs",
+        "kv_per_seq_bytes",
+    ] {
+        assert!(stats.get(key).is_some(), "stats missing {key}");
+    }
     let rate = stats.get("cache_hit_rate").unwrap().as_f64().unwrap();
     assert!((0.0..=1.0).contains(&rate));
 
@@ -126,6 +151,186 @@ fn serve_generate_stats_shutdown() {
     );
 
     // shutdown
+    let bye =
+        client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();
+    assert_eq!(bye.get("ok"), Some(&Value::Bool(true)));
+    server.join().unwrap();
+}
+
+#[test]
+fn two_concurrent_clients_decode_interleaved() {
+    // Continuous batching end-to-end: two clients generate at the same
+    // time; both must complete, and the scheduler counters must show two
+    // sequences admitted (interleaved, not serialized FIFO).
+    let Some(dir) = artifacts() else { return };
+    let addr = "127.0.0.1:17073";
+    let cfg = ServerConfig {
+        addr: addr.into(),
+        artifact_dir: dir,
+        opts: EngineOptions {
+            sparsity: 0.6,
+            group_size: 4,
+            swap_mode: SwapMode::Preload,
+            cache_bytes: 256 * 1024,
+            cache_policy: CachePolicy::Contextual,
+            device: &PIXEL6,
+            clock: ClockMode::Modeled,
+            bw_scale: 1.0,
+            trigger: PreloadTrigger::FirstLayer,
+            io_queue_depth: 0,
+        },
+        governor: GovernorConfig::default(),
+        initial_budget: None,
+        pressure_schedule: None,
+        max_seqs: 2,
+        sched_queue_cap: 16,
+    };
+    let server = std::thread::spawn(move || serve(cfg).unwrap());
+    let req = obj(vec![
+        ("prompt", s("the sparse model ")),
+        ("n_tokens", num(12.0)),
+        ("temp", num(0.0)),
+    ]);
+    // wait for the engine to come up
+    let mut up = false;
+    for _ in 0..60 {
+        if client_roundtrip(addr, &req).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    assert!(up, "server never came up");
+
+    // two clients in flight at once
+    fn gen_req() -> Value {
+        obj(vec![
+            ("prompt", s("the sparse model swaps ")),
+            ("n_tokens", num(16.0)),
+            ("temp", num(0.0)),
+        ])
+    }
+    let a = std::thread::spawn(move || client_roundtrip(addr, &gen_req()));
+    let b = std::thread::spawn(move || client_roundtrip(addr, &gen_req()));
+    let ra = a.join().unwrap().unwrap();
+    let rb = b.join().unwrap().unwrap();
+    for (name, r) in [("a", &ra), ("b", &rb)] {
+        assert!(r.get("error").is_none(), "client {name}: {r:?}");
+        assert_eq!(
+            r.get("tokens").unwrap().as_arr().unwrap().len(),
+            16,
+            "client {name} short output"
+        );
+        assert!(r.get("waves").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    let stats =
+        client_roundtrip(addr, &obj(vec![("cmd", s("stats"))])).unwrap();
+    assert!(
+        stats.get("served").unwrap().as_f64().unwrap() >= 3.0,
+        "{stats:?}"
+    );
+    assert!(
+        stats.get("seqs_admitted").unwrap().as_f64().unwrap() >= 3.0,
+        "both concurrent sequences must pass through the scheduler: \
+         {stats:?}"
+    );
+    assert!(
+        stats.get("max_active_seqs").unwrap().as_f64().unwrap() >= 2.0
+    );
+
+    let bye =
+        client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();
+    assert_eq!(bye.get("ok"), Some(&Value::Bool(true)));
+    server.join().unwrap();
+}
+
+#[test]
+fn set_budget_is_not_starved_behind_a_long_generation() {
+    // The FIFO worker served control jobs only between requests; the
+    // wave loop drains them at every inter-token boundary. Start a slow
+    // long generation (timed flash, scaled-down bandwidth), issue a
+    // set_budget mid-flight, and require its answer to arrive while the
+    // generation is still running — applied within a wave, not deferred
+    // to end-of-request.
+    let Some(dir) = artifacts() else { return };
+    use activeflow::costmodel::Geometry;
+    use activeflow::layout::AwgfFile;
+    let cfgf = activeflow::config::ArtifactConfig::load(&dir).unwrap();
+    let geo = Geometry::from_awgf(&AwgfFile::open(&cfgf.weights_file).unwrap());
+
+    let addr = "127.0.0.1:17074";
+    let cfg = ServerConfig {
+        addr: addr.into(),
+        artifact_dir: dir,
+        opts: EngineOptions {
+            sparsity: 0.6,
+            group_size: 4,
+            swap_mode: SwapMode::Preload,
+            cache_bytes: 256 * 1024,
+            cache_policy: CachePolicy::Contextual,
+            device: &PIXEL6,
+            clock: ClockMode::Timed, // reads sleep → generation is slow
+            bw_scale: 0.01,
+            trigger: PreloadTrigger::FirstLayer,
+            io_queue_depth: 0,
+        },
+        governor: GovernorConfig::default(),
+        initial_budget: None,
+        pressure_schedule: None,
+        max_seqs: 2,
+        sched_queue_cap: 16,
+    };
+    let server = std::thread::spawn(move || serve(cfg).unwrap());
+    let warm = obj(vec![
+        ("prompt", s("warm ")),
+        ("n_tokens", num(2.0)),
+        ("temp", num(0.0)),
+    ]);
+    let mut up = false;
+    for _ in 0..120 {
+        if client_roundtrip(addr, &warm).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    assert!(up, "server never came up");
+
+    let t0 = std::time::Instant::now();
+    let long = std::thread::spawn(move || {
+        let req = obj(vec![
+            ("prompt", s("the sparse model swaps active weights. ")),
+            ("n_tokens", num(96.0)),
+            ("temp", num(0.0)),
+        ]);
+        let r = client_roundtrip(addr, &req).unwrap();
+        (std::time::Instant::now(), r)
+    });
+    // give the long generation time to get under way
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let small = geo.kv_bytes + (geo.model_bytes as f64 * 0.4) as u64;
+    let d = client_roundtrip(
+        addr,
+        &obj(vec![("cmd", s("set_budget")), ("bytes", num(small as f64))]),
+    )
+    .unwrap();
+    let t_budget = std::time::Instant::now();
+    assert!(d.get("error").is_none(), "mid-generation rebudget: {d:?}");
+    assert_eq!(d.get("applied"), Some(&Value::Bool(true)), "{d:?}");
+
+    let (t_gen, r) = long.join().unwrap();
+    assert!(r.get("error").is_none(), "long generation failed: {r:?}");
+    assert_eq!(r.get("tokens").unwrap().as_arr().unwrap().len(), 96);
+    assert!(
+        t_budget < t_gen,
+        "set_budget answered only after the generation finished \
+         (budget at {:?}, generation at {:?}) — control jobs are still \
+         starved behind decodes",
+        t_budget - t0,
+        t_gen - t0
+    );
+
     let bye =
         client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();
     assert_eq!(bye.get("ok"), Some(&Value::Bool(true)));
@@ -165,6 +370,8 @@ fn set_budget_rebudgets_live_engine_mid_session() {
         governor: GovernorConfig::default(),
         initial_budget: None,
         pressure_schedule: None,
+        max_seqs: 2,
+        sched_queue_cap: 16,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![

@@ -1,11 +1,13 @@
 #!/usr/bin/env python3
 """Perf-trajectory gate: diff two BENCH_decode.json points and fail on a
 >5% tokens/sec regression; optionally also diff two BENCH_governor.json
-points and fail on a >5% settle-time regression (ROADMAP items; see
-PERF.md methodology).
+points (fail on a >5% settle-time regression) and two BENCH_sched.json
+points (fail on a >5% aggregate interleaved tokens/sec regression)
+(ROADMAP items; see PERF.md methodology).
 
 Usage: check_perf.py PREV.json CURR.json [--threshold 0.05]
                      [--governor GOV_PREV.json GOV_CURR.json]
+                     [--sched SCHED_PREV.json SCHED_CURR.json]
 
 Exit codes: 0 = ok (or no previous point to compare), 1 = regression,
 2 = malformed input.
@@ -26,6 +28,9 @@ WATCHED = [
     "slab_bytes_peak",
     "io_batches",
     "io_wait_us",
+    "io_wait_loader_us",
+    "io_wait_engine_us",
+    "io_buffers_recycled",
 ]
 
 
@@ -87,6 +92,45 @@ def check_governor(prev_path, curr_path, threshold):
     return 0
 
 
+def check_sched(prev_path, curr_path, threshold):
+    """Aggregate-throughput gate over BENCH_sched.json: interleaved
+    tokens/sec for the N-sequence workload must not regress >5%. The
+    speedup-over-serial ratio is printed informationally (the bench
+    itself already asserts speedup > 1)."""
+    if not os.path.exists(curr_path):
+        print(f"check-perf: {curr_path} missing — run `make bench-sched`"
+              " (scheduler gate skipped)")
+        return 0
+    try:
+        pair = load_pair(prev_path, curr_path, "sched")
+        if pair is None:
+            return 0
+        prev, curr = pair
+        tps_prev = float(prev["aggregate_tokens_per_sec"])
+        tps_curr = float(curr["aggregate_tokens_per_sec"])
+    except (json.JSONDecodeError, KeyError, ValueError) as e:
+        print(f"check-perf: malformed sched bench point: {e}")
+        return 2
+
+    if tps_prev <= 0:
+        print("check-perf: previous sched tokens/sec is 0 — skipping diff")
+        return 0
+    delta = (tps_curr - tps_prev) / tps_prev
+    print(f"check-perf: sched aggregate {tps_prev:.2f} -> {tps_curr:.2f} "
+          f"tok/s ({delta:+.1%}, threshold -{threshold:.0%})")
+    for key in ("speedup", "wave_avg_us", "io_wait_engine_us_interleaved"):
+        if key in prev and key in curr and float(prev[key]) > 0:
+            d = (float(curr[key]) - float(prev[key])) / float(prev[key])
+            if abs(d) >= threshold:
+                print(f"check-perf:   note: {key} {prev[key]} -> "
+                      f"{curr[key]} ({d:+.1%})")
+    if delta < -threshold:
+        print("check-perf: FAIL — scheduler aggregate throughput "
+              f"regressed past the {threshold:.0%} gate")
+        return 1
+    return 0
+
+
 def main(argv):
     argv = list(argv)
     governor = None
@@ -96,6 +140,15 @@ def main(argv):
             governor = (argv[i + 1], argv[i + 2])
         except IndexError:
             print("check-perf: --governor expects PREV.json CURR.json")
+            return 2
+        del argv[i:i + 3]
+    sched = None
+    if "--sched" in argv:
+        i = argv.index("--sched")
+        try:
+            sched = (argv[i + 1], argv[i + 2])
+        except IndexError:
+            print("check-perf: --sched expects PREV.json CURR.json")
             return 2
         del argv[i:i + 3]
     threshold = THRESHOLD
@@ -148,6 +201,10 @@ def main(argv):
     if governor is not None:
         grc = check_governor(governor[0], governor[1], threshold)
         rc = max(rc, grc)
+
+    if sched is not None:
+        src = check_sched(sched[0], sched[1], threshold)
+        rc = max(rc, src)
 
     if rc == 0:
         print("check-perf: ok")
