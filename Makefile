@@ -2,7 +2,7 @@
 # python side (L2/L1) only runs at artifact-build time.
 
 .PHONY: build test artifacts bench-smoke bench-governor bench-sched \
-        check-perf ci
+        bench-kv check-perf ci
 
 build:
 	cd rust && cargo build --release
@@ -54,16 +54,34 @@ bench-sched:
 	else \
 		echo "bench-sched: no point written (artifacts missing?)"; fi
 
+# Paged-KV trajectory point (PERF.md): admitted concurrency + aggregate
+# tokens/sec of a mixed-length workload under a fixed KV budget,
+# block-granular vs whole-window accounting. Self-asserting (block
+# admission must strictly beat the whole-window ceiling; streams must be
+# concurrency-invariant). Rotates .prev like the other points.
+bench-kv:
+	cd rust && cargo bench --bench kv_paging -- \
+		--out ../BENCH_kv.new.json
+	@if [ -f BENCH_kv.new.json ]; then \
+		if [ -f BENCH_kv.json ]; then \
+			cp BENCH_kv.json BENCH_kv.prev.json; fi; \
+		mv BENCH_kv.new.json BENCH_kv.json; \
+	else \
+		echo "bench-kv: no point written (artifacts missing?)"; fi
+
 # Diff the decode perf point against the previous run; fails on a >5%
-# tokens/sec regression, on a >5% governor settle-time regression, and on
-# a >5% scheduler aggregate-throughput regression when the respective
-# points exist (ROADMAP perf-trajectory gate).
+# tokens/sec regression, on a >5% governor settle-time regression, on a
+# >5% scheduler aggregate-throughput regression, and on a >5% paged-KV
+# admitted-concurrency or aggregate-throughput regression when the
+# respective points exist (ROADMAP perf-trajectory gate).
 check-perf:
 	@python3 scripts/check_perf.py BENCH_decode.prev.json BENCH_decode.json \
 		--governor BENCH_governor.prev.json BENCH_governor.json \
-		--sched BENCH_sched.prev.json BENCH_sched.json
+		--sched BENCH_sched.prev.json BENCH_sched.json \
+		--kv BENCH_kv.prev.json BENCH_kv.json
 
 # One-shot CI entry point: build → test → perf smoke (decode + scheduler
-# points) → regression gates. Needs `make artifacts` to have run once;
-# the benches self-skip without artifacts, leaving the gates inert.
-ci: build test bench-smoke bench-sched check-perf
+# + paged-KV points) → regression gates. Needs `make artifacts` to have
+# run once; the benches self-skip without artifacts, leaving the gates
+# inert. Runs on GitHub Actions via .github/workflows/ci.yml.
+ci: build test bench-smoke bench-sched bench-kv check-perf

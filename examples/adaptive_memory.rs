@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
         bw_scale: 1.0,
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
+        kv_block_tokens: 16,
     })?;
     // …and let the governor drive every later step on the live engine.
     // One sequence at a time here: cap the KV pool at a single seq so

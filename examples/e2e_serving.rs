@@ -40,10 +40,12 @@ fn main() -> anyhow::Result<()> {
             bw_scale: 1.0,
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
+            kv_block_tokens: 16,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
         pressure_schedule: None,
+        pressure_file: None,
         // continuous batching: both clients' requests decode interleaved
         max_seqs: N_CLIENTS,
         sched_queue_cap: 16,

@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
         bw_scale: 1.0,
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,                  // 0 = device's modeled queue depth
+        kv_block_tokens: 16,                // paged KV: tokens per block
     };
     let mut engine = SwapEngine::open("artifacts".as_ref(), opts)?;
     println!(

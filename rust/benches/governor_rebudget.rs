@@ -66,6 +66,7 @@ fn main() {
         bw_scale: 1.0,
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
+        kv_block_tokens: 16,
     })
     .unwrap();
     // serial single-sequence bench: a KV pool sized for one sequence, so

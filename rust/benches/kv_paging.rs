@@ -1,0 +1,195 @@
+//! Paged-KV bench: admitted concurrency and aggregate throughput of a
+//! mixed-length workload under a FIXED KV byte budget — block-granular
+//! accounting (this PR) vs PR 4's whole-`max_seq`-window accounting.
+//!
+//! The whole-window ledger charged every sequence `kv_per_seq = full
+//! window` up front, so a budget of two windows admitted exactly two
+//! sequences no matter how short they were. Block accounting charges
+//! only the blocks a sequence has written, so the same budget holds
+//! every short sequence of the workload at once — admitted concurrency
+//! must be **strictly higher** (the acceptance assert), and the extra
+//! interleaving gives the cross-token preload chains more peer-compute
+//! to hide under (aggregate tok/s recorded for the `check-perf --kv`
+//! trajectory gate).
+//!
+//! Timed flash clock (reads really sleep) at a bandwidth where I/O
+//! matters, like `sched_interleave`. Writes `BENCH_kv.json` (`--out`).
+//! Requires `make artifacts`; self-skips otherwise.
+
+mod support;
+
+use std::time::Instant;
+
+use activeflow::cache::CachePolicy;
+use activeflow::device;
+use activeflow::engine::{
+    EngineOptions, PreloadTrigger, SwapEngine, SwapMode,
+};
+use activeflow::flash::ClockMode;
+use activeflow::sched::{SchedConfig, Scheduler, SeqRequest, SubmitOutcome};
+use activeflow::tokenizer;
+use activeflow::util::json::{num, obj, s};
+
+const N_SEQS: usize = 6;
+/// Mixed generation lengths — the workload the whole-window charge
+/// penalizes most (every one of these is far below max_seq).
+const GEN_LENS: [usize; N_SEQS] = [4, 6, 8, 10, 12, 14];
+const BW_SCALE: f64 = 0.05;
+const KV_BLOCK_TOKENS: usize = 16;
+
+fn opts() -> EngineOptions {
+    EngineOptions {
+        sparsity: 0.6,
+        group_size: 4,
+        swap_mode: SwapMode::Preload,
+        cache_bytes: 256 * 1024,
+        cache_policy: CachePolicy::Contextual,
+        device: &device::PIXEL6,
+        clock: ClockMode::Timed,
+        bw_scale: BW_SCALE,
+        trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,
+        kv_block_tokens: KV_BLOCK_TOKENS,
+    }
+}
+
+fn out_path() -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "../BENCH_kv.json".into())
+}
+
+fn req(prompt: &[u32], n: usize, seed: u64) -> SeqRequest {
+    SeqRequest {
+        prompt: prompt.to_vec(),
+        n_tokens: n,
+        temp: 0.0,
+        seed,
+        eos: None,
+    }
+}
+
+/// Run the mixed workload through a scheduler with `max_seqs` slots and
+/// a `capacity_blocks`-bounded pool; returns (outputs by id, peak
+/// concurrency, aggregate tok/s, oom preemptions).
+fn run_workload(
+    dir: &std::path::Path,
+    prompt: &[u32],
+    max_seqs: usize,
+    capacity_blocks: usize,
+) -> (Vec<(u64, Vec<u32>)>, u64, f64, u64) {
+    let mut engine = SwapEngine::open(dir, opts()).unwrap();
+    engine.set_cross_token_preload(true);
+    engine.generate(prompt, 4, 0.0).unwrap(); // warm artifacts + cache
+    engine.reset_sequence(); // release the warmup's KV blocks
+    engine.set_kv_capacity_blocks(capacity_blocks);
+    let mut sched = Scheduler::new(engine, SchedConfig {
+        max_seqs,
+        queue_cap: N_SEQS + 2,
+    });
+    for (i, &n) in GEN_LENS.iter().enumerate() {
+        let r = sched.submit(req(prompt, n, i as u64));
+        assert!(
+            !matches!(r, SubmitOutcome::Rejected { .. }),
+            "submission {i} rejected: {r:?}"
+        );
+    }
+    let t0 = Instant::now();
+    let mut finished = Vec::new();
+    while sched.has_work() {
+        finished.extend(sched.wave());
+    }
+    let wall = t0.elapsed();
+    let st = sched.stats();
+    let mut out: Vec<(u64, Vec<u32>)> = finished
+        .into_iter()
+        .map(|f| {
+            assert!(!f.truncated, "budget workload must not truncate");
+            (f.id, f.outcome.expect("decode failed"))
+        })
+        .collect();
+    out.sort();
+    let pool = sched.backend().kv_pool_stats();
+    assert_eq!(pool.in_use_blocks, 0, "free-count invariant after drain");
+    assert!(
+        pool.peak_blocks <= capacity_blocks,
+        "pool ceiling violated: peak {} > capacity {capacity_blocks}",
+        pool.peak_blocks
+    );
+    let tps = st.tokens_out as f64 / wall.as_secs_f64();
+    (out, st.peak_active, tps, st.kv_preempted_oom)
+}
+
+fn main() {
+    let Some(dir) = support::artifacts_dir() else { return };
+    let prompt = tokenizer::encode("the sparse model swaps ");
+
+    println!("\n== bench: kv_paging ==");
+
+    // The fixed budget: exactly two whole-window sequences' worth of KV.
+    // PR 4's accounting admitted floor(budget / full_window) = 2 — that
+    // IS the baseline, enforced via the scheduler ceiling.
+    let probe = SwapEngine::open(&dir, opts()).unwrap();
+    let full_window = probe.kv_per_seq_bytes();
+    let block_bytes = probe.kv_block_bytes();
+    drop(probe);
+    let kv_budget = 2 * full_window;
+    let whole_window_ceiling = (kv_budget / full_window) as usize; // = 2
+    let capacity_blocks = (kv_budget / block_bytes) as usize;
+
+    let (base_out, base_peak, base_tps, _) =
+        run_workload(&dir, &prompt, whole_window_ceiling, capacity_blocks);
+    let (paged_out, paged_peak, paged_tps, oom) =
+        run_workload(&dir, &prompt, N_SEQS, capacity_blocks);
+
+    println!(
+        "kv budget {} ({} blocks x {}B): whole-window admits {} \
+         ({base_tps:.2} tok/s) -> block-granular admits {} \
+         ({paged_tps:.2} tok/s, {:.2}x), oom preemptions {}",
+        kv_budget,
+        capacity_blocks,
+        block_bytes,
+        base_peak,
+        paged_peak,
+        paged_tps / base_tps,
+        oom,
+    );
+
+    // acceptance: same budget, strictly more admitted concurrency
+    assert_eq!(base_peak as usize, whole_window_ceiling);
+    assert!(
+        (paged_peak as usize) > whole_window_ceiling,
+        "block-granular admission ({paged_peak}) must exceed the \
+         whole-window ceiling ({whole_window_ceiling}) for mixed-length \
+         sequences under the same KV budget"
+    );
+    // bit-safety under the pool: concurrency must not change any stream
+    assert_eq!(
+        paged_out, base_out,
+        "the same requests must decode to the same tokens regardless of \
+         admitted concurrency"
+    );
+
+    let v = obj(vec![
+        ("bench", s("kv-paging")),
+        ("device", s(device::PIXEL6.name)),
+        ("n_seqs", num(N_SEQS as f64)),
+        ("bw_scale", num(BW_SCALE)),
+        ("kv_block_tokens", num(KV_BLOCK_TOKENS as f64)),
+        ("kv_budget_bytes", num(kv_budget as f64)),
+        ("kv_blocks_total", num(capacity_blocks as f64)),
+        ("whole_window_ceiling", num(whole_window_ceiling as f64)),
+        ("admitted_concurrency", num(paged_peak as f64)),
+        ("baseline_tokens_per_sec", num(base_tps)),
+        ("aggregate_tokens_per_sec", num(paged_tps)),
+        ("speedup_vs_whole_window", num(paged_tps / base_tps)),
+        ("kv_preemptions_oom", num(oom as f64)),
+    ]);
+    let out = out_path();
+    let mut text = v.to_string();
+    text.push('\n');
+    std::fs::write(&out, &text).unwrap();
+    println!("wrote {out}");
+}

@@ -35,6 +35,7 @@ fn main() {
                 bw_scale: 1.0,
                 trigger: PreloadTrigger::FirstLayer,
                 io_queue_depth: 0,
+                kv_block_tokens: 16,
             },
         ),
         (
@@ -50,6 +51,7 @@ fn main() {
                 bw_scale: 1.0,
                 trigger: PreloadTrigger::FirstLayer,
                 io_queue_depth: 0,
+                kv_block_tokens: 16,
             },
         ),
     ];

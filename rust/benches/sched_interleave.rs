@@ -57,6 +57,7 @@ fn opts() -> EngineOptions {
         bw_scale: BW_SCALE,
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
+        kv_block_tokens: 16,
     }
 }
 

@@ -31,6 +31,7 @@ fn main() {
                 bw_scale: 1.0,
                 trigger: PreloadTrigger::FirstLayer,
                 io_queue_depth: 0,
+                kv_block_tokens: 16,
             },
         )
         .unwrap();

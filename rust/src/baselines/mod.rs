@@ -51,6 +51,7 @@ pub fn activeflow_options(
         bw_scale,
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
+        kv_block_tokens: 16,
     }
 }
 
@@ -73,6 +74,7 @@ pub fn teal_options(
         bw_scale,
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
+        kv_block_tokens: 16,
     }
 }
 
@@ -96,6 +98,7 @@ pub fn llm_in_flash_options(
         bw_scale,
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
+        kv_block_tokens: 16,
     }
 }
 
@@ -117,6 +120,7 @@ pub fn serial_options(
         bw_scale,
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
+        kv_block_tokens: 16,
     }
 }
 

@@ -44,6 +44,7 @@ fn opts(
         bw_scale,
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
+        kv_block_tokens: 16,
     }
 }
 

@@ -184,6 +184,15 @@ pub struct RuntimeConfig {
     pub max_seqs: usize,
     /// Scheduler wait-queue bound; submissions past it are rejected.
     pub sched_queue_cap: usize,
+    /// Paged KV pool: tokens per block (`--kv-block-tokens`). A sequence
+    /// is charged `ceil(pos / kv_block_tokens)` blocks instead of a full
+    /// `max_seq` window.
+    pub kv_block_tokens: usize,
+    /// Runtime DRAM governor: optional available-DRAM file polled on the
+    /// server worker (`--pressure-file`, `/proc/meminfo`-style or a plain
+    /// byte count) and fed to `set_budget` as a third trigger next to
+    /// `command`/`schedule`.
+    pub pressure_file: Option<std::path::PathBuf>,
 }
 
 impl Default for RuntimeConfig {
@@ -201,6 +210,8 @@ impl Default for RuntimeConfig {
             pressure_schedule: None,
             max_seqs: 4,
             sched_queue_cap: 64,
+            kv_block_tokens: 16,
+            pressure_file: None,
         }
     }
 }
@@ -245,6 +256,8 @@ mod tests {
         assert_eq!(rc.io_queue_depth, 0, "0 = device-profile queue depth");
         assert_eq!(rc.max_seqs, 4);
         assert_eq!(rc.sched_queue_cap, 64);
+        assert_eq!(rc.kv_block_tokens, 16);
+        assert!(rc.pressure_file.is_none());
     }
 
     #[test]

@@ -50,9 +50,10 @@ use crate::costmodel::Geometry;
 use crate::device;
 use crate::flash::{ClockMode, FlashDevice, IoClass, ReadQueue};
 use crate::governor::PoolLedger;
+use crate::kvpool::{KvPool, KvPoolStats, SeqKv};
 use crate::layout::{quant, AwgfFile, OpKind, TensorId};
 use crate::metrics::DecodeMetrics;
-use crate::model::{self, DenseTensors, KvState};
+use crate::model::{self, DenseTensors};
 use crate::pipeline::{
     PartRequest, PartSlab, PartSpan, Pipeline, PreloadBatch,
 };
@@ -95,6 +96,10 @@ pub struct EngineOptions {
     /// [`ReadQueue`] (loader preloads + on-demand fetch misses). `0` uses
     /// the device profile's modeled queue depth.
     pub io_queue_depth: usize,
+    /// Tokens per KV block in the paged [`KvPool`] (`--kv-block-tokens`):
+    /// a sequence holds `ceil(pos / kv_block_tokens)` blocks instead of a
+    /// whole `max_seq` window.
+    pub kv_block_tokens: usize,
 }
 
 impl EngineOptions {
@@ -114,6 +119,7 @@ impl EngineOptions {
             bw_scale: rc.bw_scale,
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: rc.io_queue_depth,
+            kv_block_tokens: rc.kv_block_tokens,
         }
     }
 }
@@ -141,6 +147,11 @@ pub struct RebudgetPlan {
     /// Preload slab-store ceiling handed to the loader (M_cl headroom);
     /// parts past it are dropped and served on-demand instead.
     pub slab_cap_bytes: u64,
+    /// Paged-KV pool ceiling in blocks (the budgeted M_kv divided by the
+    /// block size; `usize::MAX` = unthrottled). Shrinking below the
+    /// in-use count only refuses *new* blocks — the scheduler's
+    /// preemption paths release held ones.
+    pub kv_capacity_blocks: usize,
 }
 
 /// What applying a [`RebudgetPlan`] actually did.
@@ -175,7 +186,11 @@ pub struct SeqState {
     pub id: u64,
     /// Sampling temperature (`<= 0` → greedy argmax).
     pub temp: f32,
-    kv: KvState,
+    /// Block-tabled KV: zero blocks at `begin_seq`, grown on demand as
+    /// decode advances, released by `end_seq` (occupancy drives the
+    /// scheduler's admission; the ledger charges the pool's resident
+    /// bytes).
+    kv: SeqKv,
     rng: Xorshift,
     /// Preload group covering layer-group 0 of this sequence's *next*
     /// token, issued at the end of the previous `step`.
@@ -226,9 +241,15 @@ pub struct SwapEngine {
     /// Live sequences begun and not yet ended (the governor's
     /// `active_seqs` factor in the KV pool term).
     active_seqs: u64,
-    /// KV bytes held by live sequences (`kv_per_seq × active_seqs`; all
-    /// sequences allocate the same fixed-shape KV).
-    seq_kv_bytes: u64,
+    /// Paged KV block pool shared by every live sequence: the ledger's
+    /// KV term is the pool's resident bytes (blocks decode materialized,
+    /// including freed ones parked for reuse), never `max_seq`-window
+    /// reservations.
+    kvpool: KvPool,
+    /// Token-length samples of ended sequences (the governor's
+    /// expected-occupancy input: mean tokens per sequence, block-rounded).
+    kv_seq_tokens_sum: u64,
+    kv_seqs_ended: u64,
     seq_id_counter: u64,
     /// Issue a group-0 preload for each sequence's next token at the end
     /// of every step (scheduler mode: the chain overlaps with *other*
@@ -259,6 +280,10 @@ pub struct SwapEngine {
     ondemand: Vec<(usize, usize, usize)>, // (op slot in family, row slot, channel)
     staged: Vec<(usize, usize, usize)>,   // slab hits awaiting batched insert
     rowf32: Vec<f32>,
+    /// Contiguous `[max_seq, d_kv]` K/V windows the block table is
+    /// gathered into for the attn_core call (and scattered back from).
+    kv_k: Vec<f32>,
+    kv_v: Vec<f32>,
 }
 
 impl SwapEngine {
@@ -311,10 +336,15 @@ impl SwapEngine {
         let dff = m.d_ff;
         let lm_head_lit =
             lit_f32(&dense.lm_head, &[d as i64, m.vocab_size as i64])?;
+        let kvpool =
+            KvPool::new(opts.kv_block_tokens.max(1), m.n_layers, m.d_kv());
+        let kv_scr = m.max_seq * m.d_kv();
         Ok(SwapEngine {
             solo: None,
             active_seqs: 0,
-            seq_kv_bytes: 0,
+            kvpool,
+            kv_seq_tokens_sum: 0,
+            kv_seqs_ended: 0,
             seq_id_counter: 0,
             cross_token: false,
             lm_head_lit,
@@ -335,6 +365,8 @@ impl SwapEngine {
             ondemand: Vec::new(),
             staged: Vec::new(),
             rowf32: vec![0.0; dff.max(cfg.model.vocab_size)],
+            kv_k: vec![0.0; kv_scr],
+            kv_v: vec![0.0; kv_scr],
             cfg,
             opts,
             rt,
@@ -348,34 +380,53 @@ impl SwapEngine {
         })
     }
 
-    /// Begin a new decode sequence: allocates its KV (accounted as
-    /// `kv_per_seq` in the governor's compute-pool ledger) and a
-    /// deterministic per-sequence sampler. The caller owns the state and
-    /// passes it back through [`SwapEngine::step`]; retire it with
-    /// [`SwapEngine::end_seq`].
+    /// Begin a new decode sequence: an **empty** KV block table (blocks
+    /// are charged to the compute-pool ledger only as decode writes them)
+    /// and a deterministic per-sequence sampler. The caller owns the
+    /// state and passes it back through [`SwapEngine::step`]; retire it
+    /// with [`SwapEngine::end_seq`].
     pub fn begin_seq(&mut self, temp: f32, seed: u64) -> SeqState {
-        let kv = KvState::new(&self.cfg.model);
-        self.seq_kv_bytes += kv.bytes();
         self.active_seqs += 1;
         self.seq_id_counter += 1;
         SeqState {
             id: self.seq_id_counter,
             temp,
-            kv,
+            kv: SeqKv::new(),
             rng: Xorshift::new(seed),
             pending_preload: None,
             next_idx: Default::default(),
         }
     }
 
-    /// Retire a sequence: release its KV ledger bytes and retire its
-    /// pending cross-token preload chain (otherwise the loader's slab for
-    /// it would sit in the store until the engine drops).
+    /// Retire a sequence: release its KV blocks back to the pool and
+    /// retire its pending cross-token preload chain (otherwise the
+    /// loader's slab for it would sit in the store until the engine
+    /// drops). Genuinely *finished* sequences' token counts feed the
+    /// governor's expected-occupancy estimate.
     pub fn end_seq(&mut self, seq: SeqState) {
+        self.end_seq_inner(seq, true)
+    }
+
+    /// [`SwapEngine::end_seq`] for a **preempted** sequence (it will be
+    /// replayed and ended again later): blocks and chains are released
+    /// identically, but the partial token count stays OUT of the
+    /// expected-occupancy mean — counting it would (a) double-count the
+    /// sequence and (b) bias the estimate low under pressure, shrinking
+    /// the next planned pool and causing more preemptions: a feedback
+    /// loop, not noise.
+    pub fn end_seq_preempted(&mut self, seq: SeqState) {
+        self.end_seq_inner(seq, false)
+    }
+
+    fn end_seq_inner(&mut self, mut seq: SeqState, record_len: bool) {
         if let Some(p) = seq.pending_preload {
             self.pipe.retire_group(p);
         }
-        self.seq_kv_bytes = self.seq_kv_bytes.saturating_sub(seq.kv.bytes());
+        if record_len && seq.kv.pos > 0 {
+            self.kv_seq_tokens_sum += seq.kv.pos as u64;
+            self.kv_seqs_ended += 1;
+        }
+        seq.kv.release(&mut self.kvpool);
         self.active_seqs = self.active_seqs.saturating_sub(1);
     }
 
@@ -385,11 +436,69 @@ impl SwapEngine {
         self.active_seqs
     }
 
-    /// Fixed KV bytes one sequence costs (`kv_per_seq` in the governor's
-    /// ledger: 2 × n_layers × max_seq × d_kv × 4).
+    /// Worst-case KV bytes one sequence can cost: a full `max_seq` window
+    /// rounded up to whole blocks. This was the ledger's per-sequence
+    /// charge before block-granular KV; it survives as the conservative
+    /// bound surfaced in `stats`, while planning uses
+    /// [`SwapEngine::kv_expected_seq_bytes`].
     pub fn kv_per_seq_bytes(&self) -> u64 {
-        let m = &self.cfg.model;
-        (2 * m.n_layers * m.max_seq * m.d_kv() * 4) as u64
+        self.kvpool.blocks_for(self.cfg.model.max_seq) as u64
+            * self.kvpool.block_bytes()
+    }
+
+    /// Expected KV bytes per sequence under observed traffic: the running
+    /// mean token length of ended sequences, block-rounded — `max_seq`
+    /// until the first sequence ends. The governor prices `M_kv` with
+    /// this, so `max_seqs` reflects *expected* occupancy and short-request
+    /// workloads admit multiplicatively more concurrency than the
+    /// whole-window charge allowed.
+    pub fn kv_expected_seq_bytes(&self) -> u64 {
+        let expected = if self.kv_seqs_ended > 0 {
+            ((self.kv_seq_tokens_sum / self.kv_seqs_ended) as usize)
+                .clamp(1, self.cfg.model.max_seq)
+        } else {
+            self.cfg.model.max_seq
+        };
+        self.kvpool.blocks_for(expected) as u64 * self.kvpool.block_bytes()
+    }
+
+    /// Bytes one KV block costs (`kv_block_tokens × kv_bytes_per_token`).
+    pub fn kv_block_bytes(&self) -> u64 {
+        self.kvpool.block_bytes()
+    }
+
+    /// Blocks a sequence of `tokens` tokens occupies.
+    pub fn kv_blocks_for(&self, tokens: usize) -> usize {
+        self.kvpool.blocks_for(tokens)
+    }
+
+    /// Blocks still allocatable under the pool ceiling (the scheduler's
+    /// admission headroom).
+    pub fn kv_free_blocks(&self) -> usize {
+        self.kvpool.free_blocks()
+    }
+
+    /// Current pool ceiling in blocks (`usize::MAX` = unthrottled).
+    pub fn kv_capacity_blocks(&self) -> usize {
+        self.kvpool.capacity_blocks()
+    }
+
+    /// Set the pool ceiling directly (benches/tests; the governor drives
+    /// it through [`RebudgetPlan::kv_capacity_blocks`]).
+    pub fn set_kv_capacity_blocks(&mut self, n: usize) {
+        self.kvpool.set_capacity_blocks(n);
+    }
+
+    /// Live/peak pool usage (server `stats`, benches).
+    pub fn kv_pool_stats(&self) -> KvPoolStats {
+        self.kvpool.stats()
+    }
+
+    /// Grow `seq`'s block table so its next token has a home. False =
+    /// the pool is dry — the scheduler preempts newest-first (releasing
+    /// their blocks) before stepping, instead of letting the step fail.
+    pub fn seq_try_grow(&mut self, seq: &mut SeqState) -> bool {
+        seq.kv.ensure_tokens(&mut self.kvpool, seq.kv.pos + 1)
     }
 
     /// Enable/disable the cross-token group-0 preload issued at the end
@@ -411,7 +520,9 @@ impl SwapEngine {
     pub fn reset_sequence(&mut self) {
         match self.solo.take() {
             Some(mut s) => {
-                s.kv.reset();
+                // release the blocks rather than zeroing them: the next
+                // request re-grows from the (recycled) free list
+                s.kv.release(&mut self.kvpool);
                 // the sampler RNG deliberately survives the reset: the
                 // pre-split engine seeded it once at construction, so
                 // repeated temp>0 generate() calls sample different
@@ -491,6 +602,7 @@ impl SwapEngine {
         let evicted = self.cache.lock().resize(plan.cache_bytes);
         self.opts.cache_bytes = plan.cache_bytes;
         self.pipe.set_slab_cap(plan.slab_cap_bytes);
+        self.kvpool.set_capacity_blocks(plan.kv_capacity_blocks);
         self.metrics.rebudget_rows_evicted += evicted;
         Ok(RebudgetOutcome {
             evicted_rows: evicted,
@@ -512,15 +624,18 @@ impl SwapEngine {
     }
 
     /// Live snapshot of the three DRAM pools the governor arbitrates. The
-    /// compute pool's KV term is `kv_per_seq × active_seqs` — it grows
-    /// and shrinks with scheduler admissions, which is what the
-    /// governor's admission ceiling (`max_seqs`) budgets against.
+    /// compute pool's KV term is the paged pool's **resident** bytes —
+    /// blocks materialized by decode, including freed ones parked for
+    /// reuse — not `max_seq`-window reservations: it grows one block at
+    /// a time as decode advances, and snaps down when a governor shrink
+    /// trims the parked storage. Occupancy (blocks actually held by live
+    /// sequences) is the `kv_pool_stats()` view.
     pub fn pool_ledger(&self) -> PoolLedger {
         PoolLedger {
             cache_bytes: self.cache.lock().bytes(),
             preload_bytes: self.pipe.stored_bytes(),
             compute_bytes: self.dense.bytes()
-                + self.seq_kv_bytes
+                + self.kvpool.resident_bytes()
                 + self.scratch_bytes(),
         }
     }
@@ -536,7 +651,9 @@ impl SwapEngine {
             + self.packed3.capacity()
             + self.logits.capacity()
             + self.tmp.capacity()
-            + self.rowf32.capacity())
+            + self.rowf32.capacity()
+            + self.kv_k.capacity()
+            + self.kv_v.capacity())
             * 4) as u64
     }
 
@@ -591,6 +708,17 @@ impl SwapEngine {
         let pos = seq.kv.pos;
         if pos >= m.max_seq {
             return Err(anyhow!("sequence exceeds max_seq={}", m.max_seq));
+        }
+        // paged KV: this token's row needs a home in the block table
+        // before any layer runs. On the scheduler path the pre-step
+        // `seq_try_grow` already did this (and preempted if dry); solo
+        // paths allocate here against an unbounded pool.
+        if !seq.kv.ensure_tokens(&mut self.kvpool, pos + 1) {
+            return Err(anyhow!(
+                "kv pool exhausted: {} blocks in use, capacity {}",
+                self.kvpool.in_use_blocks(),
+                self.kvpool.capacity_blocks()
+            ));
         }
         let t_start = Instant::now();
         let busy0 = self.rt.total_busy();
@@ -673,7 +801,17 @@ impl SwapEngine {
                         as u64
                         * 4;
 
-                let kvl = &seq.kv.layers[l];
+                // materialize this layer's contiguous [max_seq, d_kv]
+                // window out of the block table (written rows + zero
+                // tail — bit-identical to the old monolithic buffer),
+                // run the artifact, then scatter the written prefix back
+                seq.kv.gather_layer(
+                    &self.kvpool,
+                    l,
+                    pos,
+                    &mut self.kv_k,
+                    &mut self.kv_v,
+                );
                 let s = m.max_seq as i64;
                 let dkv = m.d_kv() as i64;
                 let core = self.rt.exec(
@@ -682,14 +820,24 @@ impl SwapEngine {
                         qkv[0].clone(),
                         qkv[1].clone(),
                         qkv[2].clone(),
-                        lit_f32(&kvl.k, &[s, dkv])?,
-                        lit_f32(&kvl.v, &[s, dkv])?,
+                        lit_f32(&self.kv_k, &[s, dkv])?,
+                        lit_f32(&self.kv_v, &[s, dkv])?,
                         lit_i32_scalar(pos as i32),
                     ],
                 )?;
                 lit_to_f32(&core[0], &mut self.tmp)?; // attn out [q_dim]
-                lit_to_f32(&core[1], &mut seq.kv.layers[l].k)?;
-                lit_to_f32(&core[2], &mut seq.kv.layers[l].v)?;
+                lit_to_f32(&core[1], &mut self.kv_k)?;
+                lit_to_f32(&core[2], &mut self.kv_v)?;
+                // only row `pos` is new — rows 0..pos came out of the
+                // table via the gather and pass through attn_core
+                // unchanged, so one row write keeps the table exact
+                seq.kv.scatter_row(
+                    &mut self.kvpool,
+                    l,
+                    pos,
+                    &self.kv_k,
+                    &self.kv_v,
+                );
                 let attn = std::mem::take(&mut self.tmp);
                 self.tracker.observe(ActSite::AttnOutput, &attn,
                                      self.level.k_o);
@@ -853,6 +1001,10 @@ impl SwapEngine {
             self.metrics.slab_bytes_peak.max(loader.slab_bytes_peak);
         self.peak_preload_bytes =
             self.peak_preload_bytes.max(loader.slab_bytes_peak);
+        self.metrics.kv_blocks_peak = self
+            .metrics
+            .kv_blocks_peak
+            .max(self.kvpool.stats().peak_blocks as u64);
         Ok(())
     }
 
@@ -1158,7 +1310,7 @@ impl SwapEngine {
     pub fn memory_report(&self) -> MemoryReport {
         MemoryReport {
             dense_bytes: self.dense.bytes(),
-            kv_bytes: self.seq_kv_bytes,
+            kv_bytes: self.kvpool.resident_bytes(),
             cache_bytes: self.cache.lock().bytes(),
             preload_peak_bytes: self.peak_preload_bytes,
             flash_file_bytes: std::fs::metadata(self.awgf.path())

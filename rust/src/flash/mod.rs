@@ -309,8 +309,9 @@ pub struct IoSnapshot {
 }
 
 struct QueueInner {
-    /// Submitted, not yet picked up by a worker: (tag, offset, len).
-    pending: VecDeque<(u64, u64, usize)>,
+    /// Submitted, not yet picked up by a worker:
+    /// (tag, offset, len, urgent).
+    pending: VecDeque<(u64, u64, usize, bool)>,
     /// Completed, not yet reaped. Errors carried as strings (anyhow errors
     /// don't clone across the wave's reads).
     done: HashMap<u64, Result<Completion, String>>,
@@ -320,6 +321,10 @@ struct QueueInner {
     abandoned: HashSet<u64>,
     /// Reads currently inside a worker's wave.
     inflight: usize,
+    /// The non-urgent (preload) share of `inflight`: capped below the
+    /// full depth so an urgent arrival always finds device budget within
+    /// at most one *partial* wave (see `worker_loop`).
+    inflight_nonurgent: usize,
     next_tag: u64,
     stop: bool,
 }
@@ -404,6 +409,7 @@ impl ReadQueue {
                 done: HashMap::new(),
                 abandoned: HashSet::new(),
                 inflight: 0,
+                inflight_nonurgent: 0,
                 next_tag: 0,
                 stop: false,
             }),
@@ -450,8 +456,11 @@ impl ReadQueue {
     /// Like [`ReadQueue::submit_many`], but the group jumps the pending
     /// line (keeping its internal order): decode-critical on-demand
     /// fetches must not drain behind a whole preload wavefront. A wave
-    /// already in flight is not preempted — the worst-case wait is one
-    /// wave, like the old per-read channel contention.
+    /// already in flight is not preempted, but non-urgent waves are
+    /// **split** (capped at half the depth per wave, with an in-flight
+    /// reserve of `depth/4` slots only urgent reads may use), so the
+    /// worst-case wait is one *partial* preload wave — not a full-depth
+    /// one.
     pub fn submit_many_urgent(&self, reqs: &[(u64, usize)]) -> Vec<u64> {
         self.submit_group(reqs, true)
     }
@@ -464,7 +473,7 @@ impl ReadQueue {
                 let tag = q.next_tag;
                 q.next_tag += 1;
                 if !urgent {
-                    q.pending.push_back((tag, off, len));
+                    q.pending.push_back((tag, off, len, false));
                 }
                 tag
             })
@@ -472,7 +481,7 @@ impl ReadQueue {
         if urgent {
             // front-insert in reverse so the group's own order survives
             for (&tag, &(off, len)) in tags.iter().zip(reqs).rev() {
-                q.pending.push_front((tag, off, len));
+                q.pending.push_front((tag, off, len, true));
             }
         }
         self.shared
@@ -492,7 +501,7 @@ impl ReadQueue {
         let reclaimed = {
             let mut q = self.shared.inner.lock().unwrap();
             let before = q.pending.len();
-            q.pending.retain(|&(t, _, _)| t != tag);
+            q.pending.retain(|&(t, _, _, _)| t != tag);
             if q.pending.len() != before {
                 return; // never started; nothing will ever complete
             }
@@ -541,7 +550,7 @@ impl ReadQueue {
                 // orphan the tag wherever it is — a completion landing
                 // after this must not park in the done map forever
                 let before = q.pending.len();
-                q.pending.retain(|&(t, _, _)| t != tag);
+                q.pending.retain(|&(t, _, _, _)| t != tag);
                 if q.pending.len() == before {
                     q.abandoned.insert(tag);
                 }
@@ -602,20 +611,63 @@ impl Drop for ReadQueue {
     }
 }
 
+/// Urgent device-budget reserve: non-urgent (preload) reads may never
+/// occupy more than `depth - reserve` in-flight slots, so an urgent
+/// arrival always finds budget without waiting out a full preload wave.
+fn urgent_reserve(depth: usize) -> usize {
+    if depth <= 1 {
+        0
+    } else {
+        (depth / 4).max(1)
+    }
+}
+
 fn worker_loop(sh: Arc<QueueShared>) {
     loop {
-        // claim a wave: up to the remaining in-flight budget
-        let wave: Vec<(u64, u64, usize)> = {
+        // Claim a wave: a contiguous same-class run from the front of
+        // the pending queue, up to the remaining in-flight budget.
+        // Urgent waves may use the whole budget; non-urgent (preload)
+        // waves are SPLIT — capped at depth/2 per wave and at
+        // depth - urgent_reserve in-flight overall — so an urgent
+        // submission arriving mid-wavefront lands within at most one
+        // *partial* wave instead of draining behind a full-depth preload
+        // wave (ROADMAP "I/O wave preemption").
+        let (wave, wave_urgent): (Vec<(u64, u64, usize, bool)>, bool) = {
             let mut q = sh.inner.lock().unwrap();
             loop {
                 let budget = sh.depth.saturating_sub(q.inflight);
-                if !q.pending.is_empty() && budget > 0 {
-                    let take = q.pending.len().min(budget);
-                    let wave: Vec<_> = q.pending.drain(..take).collect();
-                    q.inflight += wave.len();
-                    sh.inflight_peak
-                        .fetch_max(q.inflight as u64, Ordering::Relaxed);
-                    break wave;
+                let front_urgent =
+                    q.pending.front().map(|&(_, _, _, u)| u);
+                if let (Some(urgent), true) = (front_urgent, budget > 0) {
+                    let cap = if urgent {
+                        budget
+                    } else {
+                        let class_room = (sh.depth
+                            - urgent_reserve(sh.depth))
+                        .saturating_sub(q.inflight_nonurgent);
+                        budget.min(class_room).min((sh.depth / 2).max(1))
+                    };
+                    if cap > 0 {
+                        let mut take = 0usize;
+                        while take < cap
+                            && q.pending
+                                .get(take)
+                                .is_some_and(|&(_, _, _, u)| u == urgent)
+                        {
+                            take += 1;
+                        }
+                        let wave: Vec<_> =
+                            q.pending.drain(..take).collect();
+                        q.inflight += wave.len();
+                        if !urgent {
+                            q.inflight_nonurgent += wave.len();
+                        }
+                        sh.inflight_peak.fetch_max(
+                            q.inflight as u64,
+                            Ordering::Relaxed,
+                        );
+                        break (wave, urgent);
+                    }
                 }
                 if q.stop && q.pending.is_empty() {
                     return;
@@ -624,7 +676,7 @@ fn worker_loop(sh: Arc<QueueShared>) {
             }
         };
         let reqs: Vec<(u64, usize)> =
-            wave.iter().map(|&(_, off, len)| (off, len)).collect();
+            wave.iter().map(|&(_, off, len, _)| (off, len)).collect();
         // buffers come from the recycle pool when it has any — the queue
         // used to allocate one fresh Vec per read
         let mut bufs: Vec<Vec<u8>> = {
@@ -647,9 +699,12 @@ fn worker_loop(sh: Arc<QueueShared>) {
         {
             let mut q = sh.inner.lock().unwrap();
             q.inflight -= wave.len();
+            if !wave_urgent {
+                q.inflight_nonurgent -= wave.len();
+            }
             match result {
                 Ok(()) => {
-                    for (&(tag, _, _), data) in wave.iter().zip(bufs) {
+                    for (&(tag, _, _, _), data) in wave.iter().zip(bufs) {
                         if q.abandoned.remove(&tag) {
                             reclaimed.push(data); // reaper gave up
                             continue;
@@ -666,7 +721,7 @@ fn worker_loop(sh: Arc<QueueShared>) {
                 Err(e) => {
                     let msg = format!("{e:#}");
                     reclaimed.extend(bufs);
-                    for &(tag, _, _) in &wave {
+                    for &(tag, _, _, _) in &wave {
                         if q.abandoned.remove(&tag) {
                             continue;
                         }
@@ -880,6 +935,55 @@ mod tests {
             st.inflight_peak
         );
         assert!(st.batches >= 5, "10 reads at depth 2 need >= 5 waves");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn nonurgent_waves_split_and_leave_urgent_headroom() {
+        // ROADMAP "I/O wave preemption": a depth-8 queue must never let
+        // preload reads claim the whole device budget in one wave — the
+        // urgent reserve (depth/4 = 2) caps non-urgent in-flight at 6,
+        // and the per-wave split (depth/2 = 4) bounds how long any one
+        // non-urgent wave can hold what it did claim.
+        let (dev, path) = temp_flash(1 << 20, ClockMode::Modeled);
+        let q = ReadQueue::new(dev, 8);
+        let reqs: Vec<(u64, usize)> =
+            (0..8).map(|i| (i as u64 * 512, 512)).collect();
+        let tags = q.submit_many(&reqs);
+        for t in tags {
+            q.wait_as(t, IoClass::Loader).unwrap();
+        }
+        let st = q.io_stats();
+        assert!(
+            st.inflight_peak <= 6,
+            "non-urgent reads filled the urgent reserve: peak {}",
+            st.inflight_peak
+        );
+        assert!(
+            st.batches >= 2,
+            "an 8-read preload group must split into partial waves"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn urgent_group_may_use_the_full_depth_in_one_wave() {
+        // The reserve and the wave split apply to PRELOAD reads only:
+        // urgent groups keep full-depth amortization.
+        let (dev, path) = temp_flash(1 << 20, ClockMode::Modeled);
+        let q = ReadQueue::new(dev, 8);
+        let reqs: Vec<(u64, usize)> =
+            (0..8).map(|i| (i as u64 * 512, 512)).collect();
+        let tags = q.submit_many_urgent(&reqs);
+        for t in tags {
+            q.wait(t).unwrap();
+        }
+        let st = q.io_stats();
+        assert_eq!(
+            st.batches, 1,
+            "an atomic urgent group within the depth is ONE wave"
+        );
+        assert_eq!(st.inflight_peak, 8);
         std::fs::remove_file(path).ok();
     }
 

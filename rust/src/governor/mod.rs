@@ -10,8 +10,10 @@
 //!
 //! ```text
 //!   pools (Eq 8):   M = M_cl (preload slabs) + M_cache + M_compute
-//!                   M_compute's KV term = kv_per_seq × active_seqs
+//!                   M_compute's KV term = blocks-in-use × block bytes
+//!                   (planned as expected-occupancy blocks × seqs)
 //!   event           {"cmd":"set_budget"} | PressureSchedule step
+//!                   | --pressure-file poll (available-DRAM change)
 //!        │
 //!        ▼
 //!   hysteresis gate ── small relative change → record + skip
@@ -26,6 +28,7 @@
 //!     · group size N        — preload look-ahead depth
 //!     · sparsity level      — switch the active AWGF artifact set
 //!     · max_seqs            — scheduler sheds/queues sequences past it
+//!     · kv pool blocks      — paged-KV ceiling (OOM preemption past it)
 //! ```
 //!
 //! Every decision (old→new pools, trigger, settle time) is recorded and
@@ -65,6 +68,9 @@ pub enum RebudgetTrigger {
     Command,
     /// A [`PressureSchedule`] step fired.
     Schedule,
+    /// The polled available-DRAM file changed (`--pressure-file`, the OS
+    /// memory-pressure source next to `command`/`schedule`).
+    Pressure,
     /// Direct library call (examples, tests).
     Manual,
 }
@@ -74,6 +80,7 @@ impl RebudgetTrigger {
         match self {
             RebudgetTrigger::Command => "command",
             RebudgetTrigger::Schedule => "schedule",
+            RebudgetTrigger::Pressure => "pressure",
             RebudgetTrigger::Manual => "manual",
         }
     }
@@ -101,11 +108,17 @@ pub struct RebudgetDecision {
     pub slab_cap: u64,
     /// Rows evicted by the cache shrink.
     pub evicted_rows: u64,
-    /// Concurrent-sequence ceiling under the new budget: the ledger's KV
-    /// pool term is `kv_per_seq × active_seqs`, and the planner admits as
-    /// many sequences as the budget fits (≤ the configured `max_seqs`,
-    /// ≥ 1). The scheduler's admission control enforces it.
+    /// Concurrent-sequence ceiling under the new budget: the planner
+    /// prices `M_kv` as `kv_per_seq × seqs` where `kv_per_seq` is the
+    /// **expected** per-sequence occupancy in whole KV blocks (mean ended
+    /// -sequence length, block-rounded — `max_seq` before any traffic),
+    /// and admits as many sequences as the budget fits (≤ the configured
+    /// `max_seqs`, ≥ 1). The scheduler's block-headroom admission and
+    /// OOM preemption enforce the realized occupancy.
     pub max_seqs: usize,
+    /// Paged-KV pool ceiling handed to the engine: the budgeted `M_kv`
+    /// in blocks (`kv_per_seq × max_seqs / block_bytes`).
+    pub kv_pool_blocks: usize,
     /// Wall time to apply the plan (artifact switch + cache resize).
     pub settle: Duration,
     /// False when the hysteresis gate or an infeasible budget stopped the
@@ -164,8 +177,10 @@ pub struct DramGovernor {
     geo: Geometry,
     device: &'static DeviceProfile,
     bw_scale: f64,
-    /// Fixed KV bytes of one sequence (the KV pool term is
-    /// `kv_per_seq × active_seqs`).
+    /// Expected KV bytes of one sequence in whole blocks (the KV pool
+    /// term is `kv_per_seq × seqs`). Refreshed from the engine's
+    /// observed traffic on every `set_budget`, so `max_seqs` tracks
+    /// *expected* occupancy — short-request workloads admit more.
     kv_per_seq: u64,
     /// Last budget a decision was *applied* for (M_max).
     budget: u64,
@@ -190,7 +205,7 @@ impl DramGovernor {
             engine.geometry(),
             engine.opts.device,
             engine.opts.bw_scale,
-            engine.kv_per_seq_bytes(),
+            engine.kv_expected_seq_bytes(),
             initial_budget,
         )
     }
@@ -282,6 +297,10 @@ impl DramGovernor {
         bytes: u64,
         trigger: RebudgetTrigger,
     ) -> Result<RebudgetDecision> {
+        // expected per-sequence occupancy under observed traffic (block-
+        // rounded): re-sampled at every budget event so the Eq 8 KV term
+        // tracks what sequences actually use, not the max_seq worst case
+        self.kv_per_seq = engine.kv_expected_seq_bytes().max(1);
         let old_pools = engine.pool_ledger();
         let old_sp = engine.opts.sparsity;
         let old_group = engine.opts.group_size;
@@ -302,6 +321,7 @@ impl DramGovernor {
             slab_cap: engine.slab_cap(),
             evicted_rows: 0,
             max_seqs: self.max_seqs,
+            kv_pool_blocks: engine.kv_capacity_blocks(),
             settle: Duration::ZERO,
             applied: false,
             note: "applied",
@@ -339,11 +359,25 @@ impl DramGovernor {
 
         let slab_cap =
             (r.cost.m_cl as f64 * self.cfg.slab_headroom).ceil() as u64;
+        // The budgeted M_kv, expressed as the pool's block ceiling: the
+        // scheduler grows block tables freely inside it and sheds load
+        // (OOM preemption) past it. Floored at ONE full max_seq window
+        // so a legal long prompt is never permanently unservable after
+        // short-request traffic shrinks the expected occupancy — blocks
+        // are materialized lazily, so the floor costs nothing until a
+        // long request actually arrives (and then OOM preemption sheds
+        // its peers rather than the scheduler rejecting it outright).
+        let blk = engine.kv_block_bytes().max(1);
+        let window_blocks = (engine.kv_per_seq_bytes() / blk).max(1) as usize;
+        let kv_pool_blocks = (((self.kv_per_seq * seqs as u64) / blk)
+            .max(1) as usize)
+            .max(window_blocks);
         let plan = RebudgetPlan {
             sparsity: r.params.sp,
             group_size: r.params.n_group,
             cache_bytes: r.params.cache_bytes,
             slab_cap_bytes: slab_cap.max(1),
+            kv_capacity_blocks: kv_pool_blocks,
         };
         let outcome = engine.apply_plan(&plan)?;
 
@@ -354,6 +388,7 @@ impl DramGovernor {
         d.slab_cap = plan.slab_cap_bytes;
         d.evicted_rows = outcome.evicted_rows;
         d.max_seqs = seqs;
+        d.kv_pool_blocks = kv_pool_blocks;
         d.settle = outcome.settle;
         d.new_pools = engine.pool_ledger();
         d.applied = true;
@@ -444,6 +479,47 @@ impl PressureSchedule {
         }
         fired
     }
+}
+
+/// Read an available-DRAM figure from a memory-pressure file (the
+/// `--pressure-file` source, polled on the server worker between waves
+/// and fed to [`DramGovernor::set_budget`] as the third trigger next to
+/// `command`/`schedule`). Two formats:
+///
+/// * `/proc/meminfo` style — the `MemAvailable:` line wins
+///   (`MemAvailable:  123456 kB`); `MemFree:` is the fallback when
+///   `MemAvailable` is absent (old kernels).
+/// * a plain byte figure (`"1536mb"`, `"402653184"`) — mock files in
+///   tests and cgroup-style single-value limits.
+pub fn read_pressure_file(path: &std::path::Path) -> Result<u64> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading pressure file {}: {e}", path.display()))?;
+    let mut fallback = None;
+    for line in text.lines() {
+        let Some((key, rest)) = line.split_once(':') else { continue };
+        let key = key.trim();
+        if key != "MemAvailable" && key != "MemFree" {
+            continue;
+        }
+        let rest = rest.trim();
+        let (num, mult) = match rest.strip_suffix("kB") {
+            Some(n) => (n.trim(), 1024u64),
+            None => (rest, 1),
+        };
+        let v: u64 = num
+            .parse()
+            .map_err(|_| anyhow!("bad {key} value '{rest}'"))?;
+        if key == "MemAvailable" {
+            return Ok(v * mult);
+        }
+        fallback = Some(v * mult);
+    }
+    if let Some(v) = fallback {
+        return Ok(v);
+    }
+    parse_bytes(text.trim())
+        .map_err(|_| anyhow!("pressure file {} holds neither a MemAvailable \
+                              line nor a byte figure", path.display()))
 }
 
 /// Parse `"123"`, `"64kb"`, `"1536mb"`, `"2gb"` into bytes (binary
@@ -576,6 +652,34 @@ mod tests {
         // budget matters
         assert_eq!(s.due(100), Some(12 << 20));
         assert_eq!(s.due(101), None);
+    }
+
+    #[test]
+    fn pressure_file_reads_meminfo_and_plain_bytes() {
+        let dir = std::env::temp_dir()
+            .join(format!("awf_pressure_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("meminfo");
+        std::fs::write(
+            &p,
+            "MemTotal:       8000000 kB\nMemFree:         100000 kB\n\
+             MemAvailable:    200000 kB\nBuffers:          50000 kB\n",
+        )
+        .unwrap();
+        assert_eq!(read_pressure_file(&p).unwrap(), 200_000 * 1024);
+        // MemFree fallback when MemAvailable is absent
+        std::fs::write(&p, "MemTotal: 8000000 kB\nMemFree: 100000 kB\n")
+            .unwrap();
+        assert_eq!(read_pressure_file(&p).unwrap(), 100_000 * 1024);
+        // plain byte figures (mock files, cgroup-style limits)
+        std::fs::write(&p, "1536mb\n").unwrap();
+        assert_eq!(read_pressure_file(&p).unwrap(), 1536 << 20);
+        std::fs::write(&p, "402653184").unwrap();
+        assert_eq!(read_pressure_file(&p).unwrap(), 402653184);
+        // garbage and missing files error instead of panicking the worker
+        std::fs::write(&p, "not a size").unwrap();
+        assert!(read_pressure_file(&p).is_err());
+        assert!(read_pressure_file(&dir.join("missing")).is_err());
     }
 
     #[test]

@@ -1,0 +1,551 @@
+//! Paged KV pool: block-granular KV allocation (vLLM-style) shared by
+//! every live sequence of one engine.
+//!
+//! The monolithic KV path allocated one `[max_seq, d_kv]` K and V buffer
+//! per layer per sequence up front, so a sequence that decoded 12 tokens
+//! still stranded a full `max_seq` window of DRAM — memory the governor
+//! could have handed to the weight cache or the preload slabs. The pool
+//! replaces that with fixed-size **blocks** of `block_tokens` tokens'
+//! worth of KV across *all* layers:
+//!
+//! ```text
+//!   block bytes = block_tokens × kv_bytes_per_token
+//!   kv_bytes_per_token = 2 (K+V) × n_layers × d_kv × 4
+//!
+//!   block data layout (one contiguous Vec<f32>):
+//!     [layer 0 | K rows 0..bt | V rows 0..bt] [layer 1 | ...] ...
+//! ```
+//!
+//! A sequence owns a [`SeqKv`]: a block table (`Vec` of block ids) plus
+//! its token position. The table grows **on demand** as decode advances —
+//! one block every `block_tokens` tokens — and releases every block back
+//! to the free list when the sequence ends. Occupancy (`in_use_bytes`,
+//! blocks held by live sequences) drives admission; the governor's
+//! compute-pool ledger charges `resident_bytes` — occupancy plus freed
+//! blocks parked for reuse, i.e. the DRAM the pool physically holds —
+//! and a governor capacity shrink trims the parked storage so the
+//! budget really comes back (ISSUE / ROADMAP "paged/partial KV").
+//!
+//! **Bit-safety.** The `attn_core` artifact takes a contiguous
+//! `[max_seq, d_kv]` window, so the engine materializes one layer's K/V
+//! from the block table into a reusable scratch buffer before the call
+//! ([`SeqKv::gather_layer`]: written rows copied block-by-block, the tail
+//! zero-filled exactly like the monolithic zero-initialized buffer) and
+//! scatters the one newly written row back after it
+//! ([`SeqKv::scatter_row`] — rows `0..pos` pass through the artifact
+//! unchanged, so they never need re-writing).
+//! Rows round-trip bit-identically — `tests/sched_bitsafety.rs` proves a
+//! small-block decode token-identical to a whole-window-block decode, and
+//! the property test below proves gather/scatter equal to a plain-buffer
+//! reference for random traffic. Recycled blocks are *not* re-zeroed:
+//! gather only reads rows the owning sequence has scattered, and
+//! zero-fills the rest of the scratch itself.
+//!
+//! The pool is single-threaded by construction: the engine owns it and
+//! decode is serialized through `&mut SwapEngine` — no locks.
+
+/// Live/peak usage snapshot of the pool (server `stats`, benches).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    /// Admission ceiling in blocks (`usize::MAX` = unbounded).
+    pub capacity_blocks: usize,
+    /// Blocks currently held by live sequences.
+    pub in_use_blocks: usize,
+    /// Blocks free for allocation (`capacity - in_use`).
+    pub free_blocks: usize,
+    /// High-water mark of `in_use_blocks`.
+    pub peak_blocks: usize,
+    /// Allocation attempts refused because the pool was at capacity.
+    pub alloc_failures: u64,
+}
+
+/// The shared block store: a free list over lazily allocated fixed-size
+/// blocks, bounded by a governor-set capacity.
+pub struct KvPool {
+    block_tokens: usize,
+    n_layers: usize,
+    d_kv: usize,
+    /// Block storage; index = block id. Grows lazily up to the capacity
+    /// high-water mark and never shrinks (freed blocks are recycled via
+    /// `free` — shrinking the *ceiling* is `set_capacity_blocks`).
+    blocks: Vec<Vec<f32>>,
+    free: Vec<u32>,
+    capacity_blocks: usize,
+    peak_in_use: usize,
+    alloc_failures: u64,
+}
+
+impl KvPool {
+    /// Unbounded pool (legacy single-sequence paths allocate whatever a
+    /// full window needs); the governor sets a finite capacity via
+    /// [`KvPool::set_capacity_blocks`].
+    pub fn new(block_tokens: usize, n_layers: usize, d_kv: usize) -> KvPool {
+        KvPool {
+            block_tokens: block_tokens.max(1),
+            n_layers,
+            d_kv,
+            blocks: Vec::new(),
+            free: Vec::new(),
+            capacity_blocks: usize::MAX,
+            peak_in_use: 0,
+            alloc_failures: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Floats one block holds: all layers × (K+V) × block_tokens × d_kv.
+    fn block_floats(&self) -> usize {
+        self.n_layers * 2 * self.block_tokens * self.d_kv
+    }
+
+    /// Bytes one block costs (the pool's accounting unit).
+    pub fn block_bytes(&self) -> u64 {
+        (self.block_floats() * 4) as u64
+    }
+
+    /// Blocks a sequence of `tokens` tokens occupies.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Set the admission ceiling. Shrinking below the in-use count does
+    /// not reclaim held blocks — allocations simply fail until sequences
+    /// release (the scheduler's preemption paths drive that). Free-listed
+    /// **storage** above the new ceiling is dropped though: the ledger
+    /// charges resident bytes, so a governor shrink must genuinely hand
+    /// the DRAM back, not just stop future growth.
+    pub fn set_capacity_blocks(&mut self, n: usize) {
+        self.capacity_blocks = n.max(1);
+        let mut resident = self.resident_blocks();
+        if resident > self.capacity_blocks {
+            for i in 0..self.free.len() {
+                if resident <= self.capacity_blocks {
+                    break;
+                }
+                let b = &mut self.blocks[self.free[i] as usize];
+                if !b.is_empty() {
+                    *b = Vec::new();
+                    resident -= 1;
+                }
+            }
+        }
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity_blocks
+    }
+
+    pub fn in_use_blocks(&self) -> usize {
+        self.blocks.len() - self.free.len()
+    }
+
+    /// Blocks still allocatable under the ceiling.
+    pub fn free_blocks(&self) -> usize {
+        self.capacity_blocks.saturating_sub(self.in_use_blocks())
+    }
+
+    /// Bytes held by live block tables (occupancy — what sequences have
+    /// actually written).
+    pub fn in_use_bytes(&self) -> u64 {
+        self.in_use_blocks() as u64 * self.block_bytes()
+    }
+
+    /// Blocks whose storage is physically allocated: in-use blocks plus
+    /// free-listed blocks parked for reuse (released storage is emptied
+    /// lazily by [`KvPool::set_capacity_blocks`] shrinks).
+    fn resident_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| !b.is_empty()).count()
+    }
+
+    /// Resident DRAM of the pool — the **ledger's** KV term. Freed
+    /// blocks stay resident for recycling (within the capacity ceiling),
+    /// so this only snaps down when the governor shrinks the ceiling;
+    /// charging mere occupancy here would let the governor re-budget
+    /// DRAM the pool still physically holds.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_blocks() as u64 * self.block_bytes()
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        KvPoolStats {
+            capacity_blocks: self.capacity_blocks,
+            in_use_blocks: self.in_use_blocks(),
+            free_blocks: self.free_blocks(),
+            peak_blocks: self.peak_in_use,
+            alloc_failures: self.alloc_failures,
+        }
+    }
+
+    /// Allocate one block (recycled first, fresh storage otherwise).
+    /// `None` = pool dry — the ceiling binds recycled and fresh blocks
+    /// alike, so a governor shrink below the in-use count really does
+    /// stop growth until sequences release. The caller decides between
+    /// queueing, preemption and truncation.
+    pub fn alloc(&mut self) -> Option<u32> {
+        if self.in_use_blocks() >= self.capacity_blocks {
+            self.alloc_failures += 1;
+            return None;
+        }
+        let id = match self.free.pop() {
+            Some(id) => {
+                // storage may have been dropped by a capacity shrink —
+                // re-materialize (zeroed, like any fresh block)
+                if self.blocks[id as usize].is_empty() {
+                    self.blocks[id as usize] =
+                        vec![0.0; self.block_floats()];
+                }
+                id
+            }
+            None => {
+                self.blocks.push(vec![0.0; self.block_floats()]);
+                (self.blocks.len() - 1) as u32
+            }
+        };
+        self.peak_in_use = self.peak_in_use.max(self.in_use_blocks());
+        Some(id)
+    }
+
+    /// Return a block to the free list. Contents are left stale on
+    /// purpose (see module docs — gather never reads unwritten rows).
+    pub fn release(&mut self, id: u32) {
+        debug_assert!((id as usize) < self.blocks.len());
+        debug_assert!(!self.free.contains(&id), "double release of block {id}");
+        self.free.push(id);
+    }
+
+    /// One layer's K rows `[r0, r1)` of a block, contiguous.
+    fn k_rows(&self, id: u32, layer: usize, r0: usize, r1: usize) -> &[f32] {
+        let base = (layer * 2) * self.block_tokens * self.d_kv;
+        &self.blocks[id as usize][base + r0 * self.d_kv..base + r1 * self.d_kv]
+    }
+
+    fn v_rows(&self, id: u32, layer: usize, r0: usize, r1: usize) -> &[f32] {
+        let base = (layer * 2 + 1) * self.block_tokens * self.d_kv;
+        &self.blocks[id as usize][base + r0 * self.d_kv..base + r1 * self.d_kv]
+    }
+
+    fn k_rows_mut(
+        &mut self,
+        id: u32,
+        layer: usize,
+        r0: usize,
+        r1: usize,
+    ) -> &mut [f32] {
+        let base = (layer * 2) * self.block_tokens * self.d_kv;
+        &mut self.blocks[id as usize]
+            [base + r0 * self.d_kv..base + r1 * self.d_kv]
+    }
+
+    fn v_rows_mut(
+        &mut self,
+        id: u32,
+        layer: usize,
+        r0: usize,
+        r1: usize,
+    ) -> &mut [f32] {
+        let base = (layer * 2 + 1) * self.block_tokens * self.d_kv;
+        &mut self.blocks[id as usize]
+            [base + r0 * self.d_kv..base + r1 * self.d_kv]
+    }
+}
+
+/// One sequence's KV: the block table plus its token position. Created
+/// empty (zero blocks — nothing is reserved that isn't written yet),
+/// grown via [`SeqKv::ensure_tokens`], released via [`SeqKv::release`].
+#[derive(Default)]
+pub struct SeqKv {
+    table: Vec<u32>,
+    /// Tokens decoded so far (the KV position).
+    pub pos: usize,
+}
+
+impl SeqKv {
+    pub fn new() -> SeqKv {
+        SeqKv::default()
+    }
+
+    pub fn blocks_held(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Bytes this sequence's table holds (blocks-held × block size — the
+    /// per-sequence share of the ledger's KV term).
+    pub fn bytes(&self, pool: &KvPool) -> u64 {
+        self.table.len() as u64 * pool.block_bytes()
+    }
+
+    /// Grow the table so it can hold `tokens` tokens. False = the pool
+    /// ran dry; blocks already acquired stay held (the table is still
+    /// consistent, the caller retries after preemption or gives up).
+    pub fn ensure_tokens(&mut self, pool: &mut KvPool, tokens: usize) -> bool {
+        let need = pool.blocks_for(tokens);
+        while self.table.len() < need {
+            match pool.alloc() {
+                Some(id) => self.table.push(id),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Would [`SeqKv::ensure_tokens`]`(pos + 1)` need a fresh block?
+    pub fn needs_block_for_next(&self, pool: &KvPool) -> bool {
+        pool.blocks_for(self.pos + 1) > self.table.len()
+    }
+
+    /// Release every block back to the pool and reset the position (end
+    /// of sequence, or the legacy solo-sequence reset).
+    pub fn release(&mut self, pool: &mut KvPool) {
+        for id in self.table.drain(..) {
+            pool.release(id);
+        }
+        self.pos = 0;
+    }
+
+    /// Materialize one layer's contiguous `[max_seq, d_kv]` K/V window
+    /// for the attention artifact: rows `0..pos` copied out of the block
+    /// table (block-contiguous runs, one `copy_from_slice` per block per
+    /// side), the tail zero-filled — bit-identical to the monolithic
+    /// zero-initialized buffer the artifact used to receive.
+    pub fn gather_layer(
+        &self,
+        pool: &KvPool,
+        layer: usize,
+        pos: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let d = pool.d_kv;
+        let bt = pool.block_tokens;
+        debug_assert!(self.table.len() >= pool.blocks_for(pos));
+        let mut t = 0usize;
+        for &id in &self.table {
+            if t >= pos {
+                break;
+            }
+            let n = bt.min(pos - t);
+            k_out[t * d..(t + n) * d]
+                .copy_from_slice(pool.k_rows(id, layer, 0, n));
+            v_out[t * d..(t + n) * d]
+                .copy_from_slice(pool.v_rows(id, layer, 0, n));
+            t += n;
+        }
+        k_out[pos * d..].fill(0.0);
+        v_out[pos * d..].fill(0.0);
+    }
+
+    /// Scatter the single row the attention artifact wrote — position
+    /// `pos` of one layer — back into its owning block. Rows `0..pos`
+    /// were *sourced from the table* by the preceding gather and pass
+    /// through `attn_core` unchanged, so writing only the new row keeps
+    /// the table bit-identical to the old store-the-whole-buffer path at
+    /// O(d_kv) per layer instead of O(pos · d_kv). The table must
+    /// already cover `pos + 1` tokens (`ensure_tokens`).
+    pub fn scatter_row(
+        &self,
+        pool: &mut KvPool,
+        layer: usize,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        let d = pool.d_kv;
+        let bt = pool.block_tokens;
+        debug_assert!(self.table.len() >= pool.blocks_for(pos + 1));
+        let id = self.table[pos / bt];
+        let r = pos % bt;
+        pool.k_rows_mut(id, layer, r, r + 1)
+            .copy_from_slice(&k[pos * d..(pos + 1) * d]);
+        pool.v_rows_mut(id, layer, r, r + 1)
+            .copy_from_slice(&v[pos * d..(pos + 1) * d]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, GenExt};
+
+    fn pool() -> KvPool {
+        // 2 layers, d_kv 4, 3 tokens per block
+        KvPool::new(3, 2, 4)
+    }
+
+    #[test]
+    fn block_geometry() {
+        let p = pool();
+        assert_eq!(p.block_bytes(), (2 * 2 * 3 * 4 * 4) as u64);
+        assert_eq!(p.blocks_for(0), 0);
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(3), 1);
+        assert_eq!(p.blocks_for(4), 2);
+        assert_eq!(p.blocks_for(6), 2);
+        assert_eq!(p.blocks_for(7), 3);
+    }
+
+    #[test]
+    fn alloc_release_recycles_and_respects_capacity() {
+        let mut p = pool();
+        p.set_capacity_blocks(2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.free_blocks(), 0);
+        assert!(p.alloc().is_none(), "ceiling must refuse the third block");
+        assert_eq!(p.stats().alloc_failures, 1);
+        p.release(a);
+        assert_eq!(p.free_blocks(), 1);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "freed block is recycled, not re-allocated");
+        assert_eq!(p.in_use_blocks(), 2);
+        assert_eq!(p.stats().peak_blocks, 2);
+        assert_eq!(p.in_use_bytes(), 2 * p.block_bytes());
+    }
+
+    #[test]
+    fn capacity_shrink_below_in_use_blocks_allocs_only() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        p.set_capacity_blocks(1);
+        assert_eq!(p.in_use_blocks(), 2, "held blocks survive the shrink");
+        assert_eq!(p.free_blocks(), 0);
+        assert!(p.alloc().is_none());
+        p.release(a);
+        // still AT the shrunk ceiling (1 in use = capacity 1): recycled
+        // storage must not sneak past the governor's new budget
+        assert_eq!(p.in_use_blocks(), 1);
+        assert!(p.alloc().is_none(), "ceiling binds recycled blocks too");
+        p.release(b);
+        let c = p.alloc().expect("under the ceiling again");
+        assert!(c == a || c == b, "served from the free list");
+        assert_eq!(p.in_use_blocks(), 1);
+    }
+
+    #[test]
+    fn ledger_counts_resident_storage_and_shrink_releases_it() {
+        // Freed blocks stay resident (recycling) and the ledger must say
+        // so; a governor capacity shrink is what actually returns DRAM.
+        let mut p = pool();
+        let mut s = SeqKv::new();
+        assert!(s.ensure_tokens(&mut p, 9)); // 3 blocks
+        assert_eq!(p.resident_bytes(), 3 * p.block_bytes());
+        s.release(&mut p);
+        assert_eq!(p.in_use_blocks(), 0);
+        assert_eq!(
+            p.resident_bytes(),
+            3 * p.block_bytes(),
+            "freed storage parks for reuse — still resident DRAM"
+        );
+        p.set_capacity_blocks(1); // governor shrink
+        assert_eq!(
+            p.resident_bytes(),
+            p.block_bytes(),
+            "shrink trims parked storage down to the new ceiling"
+        );
+        // the surviving parked block still serves, the ceiling holds,
+        // and growing the ceiling back re-materializes storage lazily
+        let mut s2 = SeqKv::new();
+        assert!(s2.ensure_tokens(&mut p, 3));
+        assert!(!s2.ensure_tokens(&mut p, 4), "ceiling holds at 1 block");
+        p.set_capacity_blocks(3);
+        assert!(s2.ensure_tokens(&mut p, 9), "emptied blocks re-materialize");
+        assert_eq!(p.resident_bytes(), 3 * p.block_bytes());
+        // a re-materialized block reads as zeros through gather
+        let mut k = vec![1f32; 12 * 4];
+        let mut v = vec![1f32; 12 * 4];
+        s2.gather_layer(&p, 0, 0, &mut k, &mut v);
+        assert!(k.iter().all(|&x| x == 0.0));
+        s2.release(&mut p);
+    }
+
+    #[test]
+    fn seq_grows_on_demand_and_releases_everything() {
+        let mut p = pool();
+        p.set_capacity_blocks(3);
+        let mut s = SeqKv::new();
+        assert_eq!(s.blocks_held(), 0, "nothing reserved up front");
+        assert!(s.ensure_tokens(&mut p, 1));
+        assert_eq!(s.blocks_held(), 1);
+        assert!(s.ensure_tokens(&mut p, 3), "same block covers 3 tokens");
+        assert_eq!(s.blocks_held(), 1);
+        assert!(!s.needs_block_for_next(&p), "block 1 covers token 1");
+        s.pos = 3;
+        assert!(s.needs_block_for_next(&p), "token 4 needs block 2");
+        assert!(s.ensure_tokens(&mut p, 9));
+        assert_eq!(s.blocks_held(), 3);
+        assert_eq!(s.bytes(&p), 3 * p.block_bytes());
+        assert!(!s.ensure_tokens(&mut p, 10), "pool dry at the ceiling");
+        assert_eq!(s.blocks_held(), 3, "failed grow keeps the table intact");
+        s.release(&mut p);
+        assert_eq!(s.blocks_held(), 0);
+        assert_eq!(s.pos, 0);
+        assert_eq!(p.in_use_blocks(), 0, "free-count invariant");
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_matches_plain_buffer_reference() {
+        // The bit-safety core: for random step traffic, the block-table
+        // materialization must equal a plain monolithic [max_seq, d_kv]
+        // buffer driven by the same writes.
+        check("kvpool-gather-scatter", |g| {
+            let bt = g.usize_in(1, 5);
+            let n_layers = g.usize_in(1, 3);
+            let d = g.usize_in(1, 6);
+            let max_seq = g.usize_in(4, 12);
+            let mut pool = KvPool::new(bt, n_layers, d);
+            let mut seq = SeqKv::new();
+            // reference per layer: K and V monolithic buffers
+            let mut ref_k = vec![vec![0f32; max_seq * d]; n_layers];
+            let mut ref_v = vec![vec![0f32; max_seq * d]; n_layers];
+            let mut k_scr = vec![0f32; max_seq * d];
+            let mut v_scr = vec![0f32; max_seq * d];
+            let steps = g.usize_in(1, max_seq);
+            for pos in 0..steps {
+                if !seq.ensure_tokens(&mut pool, pos + 1) {
+                    return Err("unbounded pool refused a block".into());
+                }
+                for l in 0..n_layers {
+                    seq.gather_layer(&pool, l, pos, &mut k_scr, &mut v_scr);
+                    if k_scr != ref_k[l] || v_scr != ref_v[l] {
+                        return Err(format!(
+                            "gather diverged at pos {pos} layer {l}"
+                        ));
+                    }
+                    // the "artifact": write row pos with fresh values (and
+                    // leave earlier rows as-is, like attn_core)
+                    for j in 0..d {
+                        let kv = (pos * 131 + l * 17 + j) as f32;
+                        k_scr[pos * d + j] = kv;
+                        v_scr[pos * d + j] = -kv;
+                    }
+                    ref_k[l][..(pos + 1) * d]
+                        .copy_from_slice(&k_scr[..(pos + 1) * d]);
+                    ref_v[l][..(pos + 1) * d]
+                        .copy_from_slice(&v_scr[..(pos + 1) * d]);
+                    seq.scatter_row(&mut pool, l, pos, &k_scr, &v_scr);
+                }
+                seq.pos = pos + 1;
+            }
+            // a second sequence reusing released blocks must not see
+            // stale data through its own gather
+            let held = seq.blocks_held();
+            seq.release(&mut pool);
+            if pool.in_use_blocks() != 0 {
+                return Err("release leaked blocks".into());
+            }
+            let mut s2 = SeqKv::new();
+            if !s2.ensure_tokens(&mut pool, held.max(1) * bt) {
+                return Err("re-alloc failed".into());
+            }
+            s2.gather_layer(&pool, 0, 0, &mut k_scr, &mut v_scr);
+            if k_scr.iter().any(|&x| x != 0.0) {
+                return Err("gather of an unwritten seq must be zeros".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -22,6 +22,7 @@ pub mod cache;
 pub mod preload;
 pub mod pipeline;
 pub mod costmodel;
+pub mod kvpool;
 pub mod runtime;
 pub mod model;
 pub mod engine;

@@ -5,7 +5,8 @@
 //! activeflow eval     --sp 0.6 --windows 4
 //! activeflow serve    --addr 127.0.0.1:7071 --sp 0.6 [--budget-mb N]
 //!                     [--rebudget-hysteresis F] [--pressure SIZE@TOK,..]
-//!                     [--max-seqs N] [--sched-queue-cap N]
+//!                     [--pressure-file PATH] [--max-seqs N]
+//!                     [--sched-queue-cap N] [--kv-block-tokens N]
 //! activeflow search   --device pixel6 --budget-mb 1500 --geometry llama7b
 //! activeflow inspect  devices|artifacts|weights
 //! activeflow bench    <pareto|e2e|ablation|flash|preload-tradeoff|
@@ -83,6 +84,9 @@ pub fn engine_options(args: &Args) -> Result<EngineOptions> {
         },
         // 0 = the device profile's modeled queue depth
         io_queue_depth: args.opt_usize("io-depth", 0)?,
+        // paged KV: tokens per block (a sequence holds ceil(pos/bt)
+        // blocks instead of a whole max_seq window)
+        kv_block_tokens: args.opt_usize("kv-block-tokens", 16)?.max(1),
     })
 }
 
@@ -210,9 +214,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     rc.rebudget_hysteresis =
         args.opt_f64("rebudget-hysteresis", rc.rebudget_hysteresis)?;
     rc.pressure_schedule = args.opt("pressure").map(String::from);
+    rc.pressure_file = args.opt("pressure-file").map(PathBuf::from);
     rc.max_seqs = args.opt_usize("max-seqs", rc.max_seqs)?.max(1);
     rc.sched_queue_cap =
         args.opt_usize("sched-queue-cap", rc.sched_queue_cap)?;
+    rc.kv_block_tokens = opts.kv_block_tokens;
     let cfg = ServerConfig {
         addr: args.opt_or("addr", "127.0.0.1:7071"),
         artifact_dir: artifact_dir(args),
@@ -220,6 +226,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         governor: GovernorConfig::from_runtime(&rc),
         initial_budget,
         pressure_schedule: rc.pressure_schedule.clone(),
+        pressure_file: rc.pressure_file.clone(),
         max_seqs: rc.max_seqs,
         sched_queue_cap: rc.sched_queue_cap,
     };

@@ -93,6 +93,14 @@ pub struct DecodeMetrics {
     /// boundaries (interleaved decode keeps the flash queue saturated
     /// with these).
     pub cross_token_preloads: u64,
+    // ---- paged KV pool counters (kvpool module)
+    /// High-water mark of KV blocks in use across all live sequences
+    /// (the realized M_kv peak in blocks).
+    pub kv_blocks_peak: u64,
+    /// Sequences preempted because the KV block pool ran dry mid-wave
+    /// (newest-first; distinct from budget-ceiling preemptions, which
+    /// count only under `seqs_preempted`).
+    pub kv_preemptions_oom: u64,
 }
 
 impl DecodeMetrics {
@@ -159,6 +167,8 @@ impl DecodeMetrics {
         self.seqs_preempted += other.seqs_preempted;
         self.seqs_completed += other.seqs_completed;
         self.cross_token_preloads += other.cross_token_preloads;
+        self.kv_blocks_peak = self.kv_blocks_peak.max(other.kv_blocks_peak);
+        self.kv_preemptions_oom += other.kv_preemptions_oom;
     }
 
     /// Total reaper wait (both classes) — the old single `io_wait`.
@@ -290,6 +300,9 @@ mod tests {
         b.rebudget_rows_evicted = 7;
         b.level_switches = 1;
         b.rebudget_settle = Duration::from_millis(3);
+        a.kv_blocks_peak = 7;
+        b.kv_blocks_peak = 5;
+        b.kv_preemptions_oom = 2;
         a.merge(&b);
         assert_eq!(a.cache_lock_acquires, 10);
         assert_eq!(a.cache_locks_avoided, 15);
@@ -315,6 +328,8 @@ mod tests {
         assert_eq!(a.rebudget_rows_evicted, 7);
         assert_eq!(a.level_switches, 1);
         assert_eq!(a.rebudget_settle, Duration::from_millis(3));
+        assert_eq!(a.kv_blocks_peak, 7, "block peak is a max, not a sum");
+        assert_eq!(a.kv_preemptions_oom, 2);
     }
 
     #[test]

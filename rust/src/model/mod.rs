@@ -56,6 +56,11 @@ impl DenseTensors {
 
 /// Static-shape KV cache for one layer ([max_seq, d_kv] each for K and V),
 /// kept on the host and round-tripped through the attn_core artifact.
+///
+/// Used by the dense/TEAL **baselines** only: the swap engine moved to
+/// block-granular paged KV ([`crate::kvpool`]) — baselines keep the
+/// monolithic window so their memory accounting matches what the
+/// systems they stand in for actually allocate.
 pub struct KvLayer {
     pub k: Vec<f32>,
     pub v: Vec<f32>,

@@ -211,11 +211,45 @@ impl PartSlab {
         self.d_out
     }
 
-    /// Slab payload bytes (the live M_cl component of this part).
+    /// Slab payload bytes (the live M_cl component of this part — the
+    /// row count the admission reservation was priced from).
     pub fn bytes(&self) -> u64 {
         (self.data.len() * 4) as u64
     }
+
+    /// Real allocation size (≥ `bytes()` after a shrinking `reset`) —
+    /// what a parked slab in the reuse pool actually costs.
+    pub fn capacity_bytes(&self) -> u64 {
+        (self.data.capacity() * 4) as u64
+    }
+
+    /// Re-arm a retired slab for a new request of the **same op** (same
+    /// `d_out` by construction), reusing its data and fill-bitmap
+    /// allocations — the loader's steady-state slab traffic stops
+    /// allocating once the reuse pool warms up (ROADMAP "slab reuse
+    /// pool"). `channels` must arrive sorted + deduplicated, like
+    /// [`PartSlab::from_sorted`]'s.
+    pub fn reset(&mut self, layers: Arc<[usize]>, channels: Vec<usize>) {
+        debug_assert!(channels.windows(2).all(|w| w[0] < w[1]));
+        let rows = channels.len() * layers.len();
+        self.layers = layers;
+        self.channels = channels;
+        self.filled.clear();
+        self.filled.resize(rows, false);
+        self.data.clear();
+        self.data.resize(rows * self.d_out, 0.0);
+        // drop capacity slack from a larger previous life: the live
+        // reservation (and the M_cl ledger) price this slab at its row
+        // count, so retained extra capacity would be unaccounted DRAM.
+        // Same-shape recycling — the steady state — never shrinks.
+        self.data.shrink_to(rows * self.d_out);
+        self.filled.shrink_to(rows);
+    }
 }
+
+/// Reuse-pool bound: retired slabs past it are simply freed (the pool
+/// must cap steady-state memory, not become a second store).
+const SLAB_POOL_CAP: usize = 16;
 
 /// Retired-group bookkeeping. Groups used to retire strictly in seq order,
 /// so a single high-water mark sufficed; interleaved sequences retire out
@@ -266,6 +300,11 @@ struct SharedState {
     slab_cap: AtomicU64,
     /// Loader-side statistics.
     stats: Mutex<LoaderStats>,
+    /// Retired `PartSlab`s awaiting reuse (sole-owner slabs reclaimed by
+    /// `retire_group` and the loader's own drop paths). Keyed by nothing:
+    /// the loader searches for a same-op entry and `reset`s it. Locked
+    /// standalone — never while another pipeline lock is held.
+    slab_pool: Mutex<Vec<PartSlab>>,
 }
 
 impl Default for SharedState {
@@ -276,6 +315,35 @@ impl Default for SharedState {
             retired: Mutex::new(RetiredState::default()),
             slab_cap: AtomicU64::new(u64::MAX),
             stats: Mutex::new(LoaderStats::default()),
+            slab_pool: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl SharedState {
+    /// Offer a retired slab to the reuse pool. Pooled bytes are REAL
+    /// DRAM, so they are (a) accounted in `LoaderStats::slab_pool_bytes`
+    /// (and through it in the ledger's M_cl via `stored_bytes`) and (b)
+    /// admitted only while live + pooled + incoming bytes fit the
+    /// governor's slab cap — the pool lives in the cap's slack, never
+    /// past it. Bounded by count too; overflow simply drops the slab.
+    /// (Lock order here and in the loader's take path: stats →
+    /// slab_pool.)
+    fn pool_slab(&self, slab: PartSlab) {
+        let cap = self.slab_cap.load(Ordering::Relaxed);
+        let bytes = slab.capacity_bytes();
+        let mut st = self.stats.lock().unwrap();
+        if st.slab_bytes
+            .saturating_add(st.slab_pool_bytes)
+            .saturating_add(bytes)
+            > cap
+        {
+            return;
+        }
+        let mut pool = self.slab_pool.lock().unwrap();
+        if pool.len() < SLAB_POOL_CAP {
+            st.slab_pool_bytes += bytes;
+            pool.push(slab);
         }
     }
 }
@@ -302,6 +370,13 @@ pub struct LoaderStats {
     /// Parts dropped unpublished because the slab store hit the
     /// governor's byte ceiling; their waiters fell back to on-demand.
     pub slabs_dropped_budget: u64,
+    /// Parts whose slab came from the reuse pool (a retired same-op slab
+    /// `reset` in place) instead of a fresh allocation.
+    pub slabs_recycled: u64,
+    /// Bytes parked in the slab reuse pool — real DRAM the ledger's M_cl
+    /// term must see (`stored_bytes` adds it to the live slabs) and the
+    /// slab-cap admission counts against the ceiling.
+    pub slab_pool_bytes: u64,
     /// Parts whose flash reads (or request planning) failed: no slab was
     /// published, waiters fell back to on-demand. Surfaced by the server
     /// as `parts_failed` so loader trouble is visible beyond stderr.
@@ -416,11 +491,13 @@ impl Pipeline {
         let mut retired = self.shared.retired.lock().unwrap();
         retired.retire(seq);
         let mut freed = 0u64;
+        let mut reclaimed: Vec<Arc<PartSlab>> = Vec::new();
         {
             let mut slabs = self.shared.slabs.lock().unwrap();
             slabs.retain(|(s, _), slab| {
                 if retired.is_retired(*s) {
                     freed += slab.bytes();
+                    reclaimed.push(slab.clone());
                     false
                 } else {
                     true
@@ -436,12 +513,27 @@ impl Pipeline {
             .lock()
             .unwrap()
             .retain(|(s, _)| !retired.is_retired(*s));
+        drop(retired);
+        // slabs nobody else still borrows go to the reuse pool — the
+        // loader resets them for later same-op parts instead of
+        // allocating (an engine still holding a fetch-time Arc clone
+        // just means this one is freed normally)
+        for arc in reclaimed {
+            if let Ok(slab) = Arc::try_unwrap(arc) {
+                self.shared.pool_slab(slab);
+            }
+        }
     }
 
-    /// Bytes currently held in preload slabs (the live M_cl component).
+    /// Bytes currently held in preload slabs — live published parts PLUS
+    /// the reuse pool's parked slabs (the full M_cl the ledger must see:
+    /// pooled allocations are real DRAM even though no part owns them).
     pub fn stored_bytes(&self) -> u64 {
-        let slabs = self.shared.slabs.lock().unwrap();
-        slabs.values().map(|s| s.bytes()).sum()
+        let live: u64 = {
+            let slabs = self.shared.slabs.lock().unwrap();
+            slabs.values().map(|s| s.bytes()).sum()
+        };
+        live + self.shared.stats.lock().unwrap().slab_pool_bytes
     }
 
     pub fn loader_stats(&self) -> LoaderStats {
@@ -570,10 +662,22 @@ impl LoaderWorker {
             // reservation: parts of a batch load concurrently now, so an
             // admitted part must reserve its bytes at check time — two
             // in-flight parts checking against unreserved `slab_bytes`
-            // would both pass and jointly overshoot the ceiling.
+            // would both pass and jointly overshoot the ceiling. The
+            // ceiling covers live + POOLED bytes; expendable pooled
+            // slabs are evicted before real work is throttled.
             let mut st = self.shared.stats.lock().unwrap();
             st.channels_skipped_cached += part.skipped_cached;
-            if st.slab_bytes.saturating_add(prospective) > cap {
+            let mut held =
+                st.slab_bytes.saturating_add(st.slab_pool_bytes);
+            if held.saturating_add(prospective) > cap
+                && st.slab_pool_bytes > 0
+            {
+                let mut pool = self.shared.slab_pool.lock().unwrap();
+                pool.clear();
+                st.slab_pool_bytes = 0;
+                held = st.slab_bytes;
+            }
+            if held.saturating_add(prospective) > cap {
                 return PartPlan::Throttled;
             }
             st.slab_bytes += prospective;
@@ -626,7 +730,37 @@ impl LoaderWorker {
         // the union over-allocates the unfilled rows; bytes() reports the
         // real allocation, so the governor ledger stays truthful.
         // Per-span sub-slabs would remove the waste (ROADMAP).
-        let slab = PartSlab::from_sorted(part.op, layers.clone(), union, dout);
+        //
+        // A retired same-op slab from the reuse pool is reset in place
+        // when one is available — steady-state preload traffic cycles
+        // the same buffers instead of allocating per part.
+        let recycled = {
+            // stats → slab_pool, like pool_slab: the take moves the
+            // slab's bytes from the pool's account to the part's live
+            // reservation (already made at admission) atomically
+            let mut st = self.shared.stats.lock().unwrap();
+            let mut pool = self.shared.slab_pool.lock().unwrap();
+            match pool.iter().position(|s| s.op == part.op) {
+                Some(i) => {
+                    let s = pool.swap_remove(i);
+                    st.slab_pool_bytes = st
+                        .slab_pool_bytes
+                        .saturating_sub(s.capacity_bytes());
+                    st.slabs_recycled += 1;
+                    Some(s)
+                }
+                None => None,
+            }
+        };
+        let slab = match recycled {
+            Some(mut s) => {
+                s.reset(layers.clone(), union);
+                s
+            }
+            None => {
+                PartSlab::from_sorted(part.op, layers.clone(), union, dout)
+            }
+        };
         let mut runs: Vec<PlannedRun> = Vec::new();
         let mut reqs: Vec<(u64, usize)> = Vec::new();
 
@@ -800,6 +934,9 @@ impl LoaderWorker {
                 // reserved at admission — publishing adds nothing, every
                 // non-publish path releases. (Lock order everywhere:
                 // retired → slabs → stats → done, same as retire_group.)
+                // Unpublished slabs are sole-owned here, so they feed the
+                // reuse pool directly.
+                let mut slab_opt = Some(slab);
                 let retired = self.shared.retired.lock().unwrap();
                 match failed {
                     Some(e) => {
@@ -813,11 +950,10 @@ impl LoaderWorker {
                         }
                     }
                     None if !retired.is_retired(seq) => {
-                        self.shared
-                            .slabs
-                            .lock()
-                            .unwrap()
-                            .insert((seq, op), Arc::new(slab));
+                        self.shared.slabs.lock().unwrap().insert(
+                            (seq, op),
+                            Arc::new(slab_opt.take().expect("unpublished")),
+                        );
                         self.shared.stats.lock().unwrap().parts_loaded += 1;
                         self.shared.done.lock().unwrap().insert((seq, op));
                     }
@@ -828,6 +964,10 @@ impl LoaderWorker {
                         st.slab_bytes =
                             st.slab_bytes.saturating_sub(reserved);
                     }
+                }
+                drop(retired);
+                if let Some(slab) = slab_opt {
+                    self.shared.pool_slab(slab);
                 }
             }
         }
@@ -1239,15 +1379,59 @@ mod tests {
     }
 
     #[test]
-    fn retire_group_frees_store() {
+    fn retired_slabs_are_recycled_for_same_op_parts() {
+        // ROADMAP "slab reuse pool": a retired part's slab is reset for
+        // the next same-op part instead of being reallocated — and the
+        // reset must not leak the old request's rows into the new one.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf, flash);
+        pipe.request(job(1, &[0, 1], &[1, 2]));
+        assert!(pipe.wait_part((1, OpKind::Wq)));
+        {
+            let slab = pipe.part((1, OpKind::Wq)).unwrap();
+            assert!(slab.row(0, 1).is_some());
+        } // fetch-time Arc dropped — the store holds the sole reference
+        pipe.retire_group(1);
+        let parked = pipe.loader_stats();
+        assert_eq!(parked.slabs_recycled, 0);
+        assert!(parked.slab_pool_bytes > 0, "retired slab parked in the pool");
+        pipe.request(job(2, &[2, 3], &[5, 6, 7]));
+        assert!(pipe.wait_part((2, OpKind::Wq)));
+        let st = pipe.loader_stats();
+        assert_eq!(
+            st.slabs_recycled, 1,
+            "retired Wq slab must be reset in place, not reallocated"
+        );
+        assert_eq!(st.slab_pool_bytes, 0,
+                   "the take moved the pooled bytes back to a live part");
+        let slab = pipe.part((2, OpKind::Wq)).unwrap();
+        assert_eq!(slab.channels(), &[5, 6, 7]);
+        assert_eq!(slab.layers(), &[2, 3]);
+        let r = slab.row(2, 5).expect("new row loaded")[0];
+        let want = (5 * 2 + 2) as f32; // synth encodes (c*2+l)
+        assert!((r - want).abs() <= want / 127.0 + 1e-2, "got {r}");
+        assert!(
+            slab.row(0, 1).is_none() && slab.row(2, 1).is_none(),
+            "old request's rows must not survive the reset"
+        );
+    }
+
+    #[test]
+    fn retire_group_frees_live_bytes_and_parks_the_slab() {
         let (awgf, flash, _p) = setup();
         let pipe = Pipeline::spawn(awgf, flash);
         pipe.request(job(3, &[0, 1], &[0, 1]));
         pipe.wait_part((3, OpKind::Wq));
-        assert!(pipe.stored_bytes() > 0);
+        let before = pipe.stored_bytes();
+        assert!(before > 0);
         pipe.retire_group(3);
-        assert_eq!(pipe.stored_bytes(), 0);
-        assert_eq!(pipe.loader_stats().slab_bytes, 0);
+        // the part is gone from the live store; its allocation parks in
+        // the reuse pool and STAYS on the M_cl ledger (real DRAM)
+        let st = pipe.loader_stats();
+        assert_eq!(st.slab_bytes, 0, "live reservation released");
+        assert_eq!(st.slab_pool_bytes, before, "allocation parked, not hidden");
+        assert_eq!(pipe.stored_bytes(), before,
+                   "ledger keeps seeing the pooled bytes");
         assert!(!pipe.part_ready((3, OpKind::Wq)));
         assert!(pipe.part((3, OpKind::Wq)).is_none());
     }
@@ -1298,10 +1482,12 @@ mod tests {
             assert!(pipe.part((5, op)).is_none(), "late {op:?} slab dropped");
         }
         let bytes6 = pipe.part((6, OpKind::Wq)).unwrap().bytes();
-        assert_eq!(pipe.stored_bytes(), bytes6);
-        assert_eq!(pipe.loader_stats().slab_bytes, bytes6,
-                   "accounting excludes the dropped slabs' reservations");
-        assert_eq!(pipe.loader_stats().parts_loaded, 1,
+        let st = pipe.loader_stats();
+        assert_eq!(st.slab_bytes, bytes6,
+                   "live accounting excludes the dropped slabs' reservations");
+        assert_eq!(pipe.stored_bytes(), bytes6 + st.slab_pool_bytes,
+                   "late slabs moved to the reuse pool, still on the ledger");
+        assert_eq!(st.parts_loaded, 1,
                    "late parts must not count as loaded");
     }
 
@@ -1325,8 +1511,10 @@ mod tests {
         assert!(pipe.part((2, OpKind::Wq)).is_none());
         pipe.retire_group(1);
         assert!(pipe.part((1, OpKind::Wq)).is_none());
-        assert_eq!(pipe.stored_bytes(), 0);
-        assert_eq!(pipe.loader_stats().slab_bytes, 0);
+        let st = pipe.loader_stats();
+        assert_eq!(st.slab_bytes, 0, "no live parts remain");
+        assert_eq!(pipe.stored_bytes(), st.slab_pool_bytes,
+                   "only reuse-pool allocations remain on the ledger");
     }
 
     #[test]

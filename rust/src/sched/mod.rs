@@ -29,14 +29,22 @@
 //!   there — including mid-sequence sparsity-level switches (KV is
 //!   level-independent; only the k-targets of later tokens change) —
 //!   instead of deferring them to end-of-request.
-//! * **KV pool admission.** The governor plans `max_seqs` from the budget
-//!   (`kv_per_seq × active_seqs` is the ledger's KV term); the scheduler
-//!   enforces it. When a falling budget shrinks the ceiling below the
-//!   live count, the newest sequences are **preempted**: their KV is
-//!   freed, their progress (prompt + tokens so far) parks at the front of
-//!   the wait queue, and on resume they rebuild KV by teacher-forced
-//!   recompute — deterministic, so the resumed stream continues exactly
-//!   where it stopped (vLLM-style recompute preemption).
+//! * **Block-granular KV admission.** KV is paged ([`crate::kvpool`]):
+//!   a sequence is charged only the blocks it has written, not a whole
+//!   `max_seq` window. Admission checks the pool's **free-block
+//!   headroom** — the candidate's replay blocks plus a one-block-per-
+//!   live-peer growth reserve — so short sequences admit multiplicatively
+//!   more concurrency under the same budget. The governor still plans a
+//!   `max_seqs` ceiling from expected occupancy; the scheduler enforces
+//!   both. When a falling budget shrinks the ceiling below the live
+//!   count — or the pool runs **dry mid-wave** (sequences grew past the
+//!   expected occupancy) — the newest sequences are **preempted**: their
+//!   blocks are freed immediately, their progress (prompt + tokens so
+//!   far) parks at the front of the wait queue, and on resume they
+//!   rebuild KV by teacher-forced recompute — deterministic, so the
+//!   resumed stream continues exactly where it stopped (vLLM-style
+//!   recompute preemption). A lone sequence the whole pool cannot hold
+//!   retires truncated instead of live-locking.
 //!
 //! The scheduler is generic over [`DecodeBackend`] so its queueing,
 //! fairness, admission, and preemption logic is unit-tested with a mock
@@ -76,10 +84,47 @@ pub trait DecodeBackend {
     fn max_seq_len(&self) -> usize;
     /// Release per-sequence state (KV ledger bytes, preload chains).
     fn end_seq(&mut self, seq: Self::Seq);
+    /// Release a **preempted** sequence's state (it will be replayed and
+    /// ended again): same resource release, but backends that learn from
+    /// finished-sequence lengths (expected KV occupancy) must not count
+    /// this partial progress. Defaults to `end_seq`.
+    fn end_seq_preempted(&mut self, seq: Self::Seq) {
+        self.end_seq(seq)
+    }
     /// Where scheduler counters should be mirrored (engines expose their
     /// `DecodeMetrics`; mocks may return `None`).
     fn metrics_sink(&mut self) -> Option<&mut DecodeMetrics> {
         None
+    }
+
+    // ---- paged-KV hooks (defaults = unpaged backend: admission falls
+    //      back to the `max_seqs` ceiling alone and steps never run dry)
+
+    /// Grow `seq`'s KV so its next token has a home; `false` = the block
+    /// pool ran dry. The scheduler calls this *before* stepping, so an
+    /// out-of-blocks condition is handled by preemption instead of a
+    /// failed step.
+    fn seq_try_grow(&mut self, _seq: &mut Self::Seq) -> bool {
+        true
+    }
+
+    /// Free blocks in the paged KV pool; `None` when the backend is
+    /// unpaged (no block-headroom admission).
+    fn kv_free_blocks(&self) -> Option<usize> {
+        None
+    }
+
+    /// Total pool capacity in blocks; `None` when unpaged. A request
+    /// whose replay needs more than this can NEVER be admitted — the
+    /// scheduler rejects it instead of parking it at the head of the
+    /// wait queue forever.
+    fn kv_total_blocks(&self) -> Option<usize> {
+        None
+    }
+
+    /// Blocks a sequence of `tokens` tokens occupies (0 when unpaged).
+    fn kv_blocks_for(&self, _tokens: usize) -> usize {
+        0
     }
 }
 
@@ -116,8 +161,28 @@ impl DecodeBackend for SwapEngine {
         SwapEngine::end_seq(self, seq)
     }
 
+    fn end_seq_preempted(&mut self, seq: SeqState) {
+        SwapEngine::end_seq_preempted(self, seq)
+    }
+
     fn metrics_sink(&mut self) -> Option<&mut DecodeMetrics> {
         Some(&mut self.metrics)
+    }
+
+    fn seq_try_grow(&mut self, seq: &mut SeqState) -> bool {
+        SwapEngine::seq_try_grow(self, seq)
+    }
+
+    fn kv_free_blocks(&self) -> Option<usize> {
+        Some(SwapEngine::kv_free_blocks(self))
+    }
+
+    fn kv_blocks_for(&self, tokens: usize) -> usize {
+        SwapEngine::kv_blocks_for(self, tokens)
+    }
+
+    fn kv_total_blocks(&self) -> Option<usize> {
+        Some(SwapEngine::kv_capacity_blocks(self))
     }
 }
 
@@ -197,6 +262,13 @@ pub struct SchedStats {
     pub wave_time: Duration,
     /// Generated tokens delivered (prompt prefill steps excluded).
     pub tokens_out: u64,
+    /// Preemptions forced by the KV block pool running dry mid-wave
+    /// (newest-first; a subset-like companion of `seqs_preempted`, which
+    /// counts these too).
+    pub kv_preempted_oom: u64,
+    /// High-water mark of concurrently live sequences — the realized
+    /// admitted concurrency (the paged-KV bench's acceptance metric).
+    pub peak_active: u64,
 }
 
 impl SchedStats {
@@ -232,6 +304,17 @@ struct Live<S> {
     started: Instant,
     prior_decode: Duration,
     waves: u64,
+}
+
+/// Verdict of the pre-step KV headroom check (see
+/// `Scheduler::ensure_kv_headroom`).
+enum KvHeadroom {
+    /// Entry `i` can take one more token.
+    Ready,
+    /// Entry `i` was itself the newest live sequence and got parked.
+    ParkedSelf,
+    /// A lone sequence the pool cannot hold retired truncated.
+    Truncated(FinishedSeq),
 }
 
 /// A sequence waiting for admission — fresh, or preempted with progress.
@@ -317,6 +400,17 @@ impl<B: DecodeBackend> Scheduler<B> {
                 reason: "empty prompt",
             };
         }
+        // a prompt the WHOLE pool cannot hold can never be admitted —
+        // queueing it would wedge the wait-queue head forever
+        if let Some(cap) = self.backend.kv_total_blocks() {
+            if self.backend.kv_blocks_for(req.prompt.len()) > cap {
+                self.stats.seqs_rejected += 1;
+                self.mirror(|m| m.seqs_rejected += 1);
+                return SubmitOutcome::Rejected {
+                    reason: "prompt exceeds the kv pool",
+                };
+            }
+        }
         self.next_id += 1;
         let id = self.next_id;
         let pending = Pending {
@@ -330,8 +424,12 @@ impl<B: DecodeBackend> Scheduler<B> {
         };
         // fast-path admission only when nobody is already waiting —
         // fresh submissions must not jump queued (or preempted)
-        // sequences that have FIFO/resume-first priority
-        if self.run.len() < self.max_active && self.waitq.is_empty() {
+        // sequences that have FIFO/resume-first priority — and only when
+        // the KV pool has block headroom for it
+        if self.run.len() < self.max_active
+            && self.waitq.is_empty()
+            && self.kv_admittable(&pending)
+        {
             match self.activate(pending) {
                 Ok(()) => SubmitOutcome::Admitted { id },
                 Err((_, reason)) => {
@@ -378,7 +476,9 @@ impl<B: DecodeBackend> Scheduler<B> {
                 waves,
                 ..
             } = live;
-            self.backend.end_seq(seq); // frees kv_per_seq in the ledger
+            // frees the sequence's KV blocks; preempted partial progress
+            // stays out of the backend's expected-occupancy stats
+            self.backend.end_seq_preempted(seq);
             self.waitq.push_front(Pending {
                 id,
                 req,
@@ -406,9 +506,29 @@ impl<B: DecodeBackend> Scheduler<B> {
         let t0 = Instant::now();
         let mut finished = Vec::new();
         // admit-on-arrival: fill freed slots in FIFO order (preempted
-        // sequences sit at the front and resume first)
+        // sequences sit at the front and resume first). Admission is
+        // block-granular: the candidate's replay (prompt + recorded
+        // progress) must fit the pool's free blocks next to a one-block-
+        // per-live-peer growth reserve for this wave — NOT a whole
+        // `max_seq` window, which is what multiplies short-sequence
+        // concurrency under the same budget.
         while self.run.len() < self.max_active {
             let Some(p) = self.waitq.pop_front() else { break };
+            if self.kv_never_fits(&p) {
+                // the pool (possibly shrunk since this request queued)
+                // can never hold its replay: retire it now — parking it
+                // back would wedge the queue head forever. A preempted
+                // sequence keeps its partial output (truncated); a fresh
+                // one is an error the client can size down.
+                finished.push(self.retire_unfittable(p));
+                continue;
+            }
+            if !self.kv_admittable(&p) {
+                // head-of-line blocks: keep FIFO/resume-first order and
+                // retry next wave when retirements have freed blocks
+                self.waitq.push_front(p);
+                break;
+            }
             if let Err((p, reason)) = self.activate(p) {
                 // backend refused the sequence: retire it with an error
                 // outcome so its waiting client is answered, and count
@@ -426,8 +546,35 @@ impl<B: DecodeBackend> Scheduler<B> {
                 });
             }
         }
+        self.stats.peak_active =
+            self.stats.peak_active.max(self.run.len() as u64);
         let mut i = 0;
         while i < self.run.len() {
+            // paged KV: secure this token's block BEFORE stepping, so an
+            // out-of-blocks pool is handled by newest-first preemption
+            // (or truncation, for a lone over-sized sequence) instead of
+            // a failed step mid-token. Sequences step_live retires
+            // WITHOUT stepping (budget already met / KV window full)
+            // must not grow — that would mint a block past the window
+            // or preempt peers for a sequence about to leave.
+            let will_step = {
+                let live = &self.run[i];
+                live.out.len() < live.req.n_tokens
+                    && self.backend.seq_pos(&live.seq)
+                        < self.backend.max_seq_len()
+            };
+            if will_step {
+                match self.ensure_kv_headroom(i) {
+                    KvHeadroom::Ready => {}
+                    // run[i] itself was the newest and got parked — the
+                    // slot now holds the next entry (or nothing)
+                    KvHeadroom::ParkedSelf => continue,
+                    KvHeadroom::Truncated(f) => {
+                        finished.push(f);
+                        continue;
+                    }
+                }
+            }
             let verdict = self.step_live(i);
             match verdict {
                 None => i += 1,
@@ -467,6 +614,137 @@ impl<B: DecodeBackend> Scheduler<B> {
     }
 
     // ---------------------------------------------------------- internals
+
+    /// Can this pending request's replay EVER fit the pool? False for
+    /// unpaged backends and fittable requests; true only when its replay
+    /// blocks exceed the pool's total capacity (free blocks can never
+    /// reach that, so waiting is pointless).
+    fn kv_never_fits(&self, p: &Pending) -> bool {
+        match self.backend.kv_total_blocks() {
+            None => false,
+            Some(cap) => {
+                self.backend
+                    .kv_blocks_for(p.req.prompt.len() + p.out.len())
+                    > cap
+            }
+        }
+    }
+
+    /// Retire a pending request the pool can never hold: a preempted
+    /// sequence delivers its partial output (truncated, like the KV-limit
+    /// retirement); a fresh one is rejected with an error.
+    fn retire_unfittable(&mut self, p: Pending) -> FinishedSeq {
+        let fresh = p.out.is_empty();
+        if fresh {
+            self.stats.seqs_rejected += 1;
+            self.mirror(|m| m.seqs_rejected += 1);
+        } else {
+            self.stats.seqs_completed += 1;
+            self.mirror(|m| m.seqs_completed += 1);
+        }
+        FinishedSeq {
+            id: p.id,
+            outcome: if fresh {
+                Err("request exceeds the kv pool".into())
+            } else {
+                Ok(p.out)
+            },
+            queue_wait: p.queue_wait + p.parked.elapsed(),
+            decode: p.prior_decode,
+            waves: p.waves,
+            truncated: !fresh,
+        }
+    }
+
+    /// Block-headroom admission: the candidate's replay (prompt + tokens
+    /// already generated before a preemption) must fit the pool's free
+    /// blocks next to a one-block-per-live-peer growth reserve for the
+    /// coming wave. Unpaged backends always pass.
+    fn kv_admittable(&self, p: &Pending) -> bool {
+        match self.backend.kv_free_blocks() {
+            None => true,
+            Some(free) => {
+                let need = self
+                    .backend
+                    .kv_blocks_for(p.req.prompt.len() + p.out.len());
+                free >= need.saturating_add(self.run.len())
+            }
+        }
+    }
+
+    /// Make sure run-queue entry `i` can take one more token's KV. When
+    /// the pool runs dry mid-wave, live sequences are preempted
+    /// **newest-first** (their blocks released, progress parked at the
+    /// waitq front) until `i` fits; a lone sequence the whole pool cannot
+    /// hold retires truncated with its partial output.
+    fn ensure_kv_headroom(&mut self, i: usize) -> KvHeadroom {
+        loop {
+            if self.backend.seq_try_grow(&mut self.run[i].seq) {
+                return KvHeadroom::Ready;
+            }
+            if self.run.len() == 1 {
+                let mut live = self.run.remove(0).expect("len checked");
+                let f = Self::finish(&mut live, None, true);
+                self.backend.end_seq(live.seq);
+                self.stats.seqs_completed += 1;
+                self.mirror(|m| m.seqs_completed += 1);
+                return KvHeadroom::Truncated(f);
+            }
+            let newest = self.run.len() - 1;
+            self.park_newest_oom();
+            if newest == i {
+                return KvHeadroom::ParkedSelf;
+            }
+        }
+    }
+
+    /// Out-of-blocks preemption: end the newest live sequence (releasing
+    /// its KV blocks immediately) and park its progress at the front of
+    /// the wait queue for deterministic replay-resume — the same
+    /// mechanics as a budget-ceiling preemption, counted separately.
+    ///
+    /// "Newest" is the run queue's back, which is the latest *arrival*
+    /// by construction: preempted sequences park at the waitq FRONT and
+    /// admission is FIFO, so a resumed sequence re-enters ahead of every
+    /// fresher arrival and the run queue stays id-sorted — a resumed old
+    /// sequence is never the next victim while fresher peers live.
+    fn park_newest_oom(&mut self) {
+        debug_assert!(
+            self.run
+                .iter()
+                .zip(self.run.iter().skip(1))
+                .all(|(a, b)| a.id < b.id),
+            "run queue must stay arrival-ordered (resume-first admission)"
+        );
+        let live = self.run.pop_back().expect("caller checked len");
+        let Live {
+            id,
+            req,
+            seq,
+            out,
+            queue_wait,
+            started,
+            prior_decode,
+            waves,
+            ..
+        } = live;
+        self.backend.end_seq_preempted(seq);
+        self.waitq.push_front(Pending {
+            id,
+            req,
+            out,
+            parked: Instant::now(),
+            queue_wait,
+            prior_decode: prior_decode + started.elapsed(),
+            waves,
+        });
+        self.stats.seqs_preempted += 1;
+        self.stats.kv_preempted_oom += 1;
+        self.mirror(|m| {
+            m.seqs_preempted += 1;
+            m.kv_preemptions_oom += 1;
+        });
+    }
 
     fn mirror(&mut self, f: impl FnOnce(&mut DecodeMetrics)) {
         if let Some(m) = self.backend.metrics_sink() {
@@ -901,6 +1179,277 @@ mod tests {
         assert!(by_id[&1].outcome.is_ok());
         assert!(by_id[&2].outcome.is_err(), "failed seq reports its error");
         assert_eq!(s.backend().live, 0, "failed seq's KV released too");
+    }
+
+    /// Paged-KV mock: a block pool in front of the deterministic Mock
+    /// stream (same next-token formula, so preemption/replay equality
+    /// can be asserted across pool sizes). `step_seq` errors if the
+    /// scheduler ever steps a sequence without first securing its block —
+    /// the pre-step `seq_try_grow` contract.
+    struct PagedMock {
+        log: Vec<(u64, usize)>,
+        live: usize,
+        max_seq: usize,
+        metrics: DecodeMetrics,
+        fail_on_pos: Option<usize>,
+        block_tokens: usize,
+        total_blocks: usize,
+        in_use: usize,
+        peak_blocks: usize,
+    }
+
+    struct PagedSeq {
+        seed: u64,
+        pos: usize,
+        blocks: usize,
+    }
+
+    impl PagedMock {
+        fn new(max_seq: usize, block_tokens: usize, total: usize) -> PagedMock {
+            PagedMock {
+                log: Vec::new(),
+                live: 0,
+                max_seq,
+                metrics: DecodeMetrics::default(),
+                fail_on_pos: None,
+                block_tokens,
+                total_blocks: total,
+                in_use: 0,
+                peak_blocks: 0,
+            }
+        }
+    }
+
+    impl DecodeBackend for PagedMock {
+        type Seq = PagedSeq;
+
+        fn begin_seq(&mut self, _temp: f32, seed: u64) -> Result<PagedSeq> {
+            self.live += 1;
+            Ok(PagedSeq {
+                seed,
+                pos: 0,
+                blocks: 0,
+            })
+        }
+
+        fn step_seq(
+            &mut self,
+            s: &mut PagedSeq,
+            token: u32,
+            sample: bool,
+        ) -> Result<Option<u32>> {
+            if self.fail_on_pos == Some(s.pos) {
+                anyhow::bail!("injected step failure");
+            }
+            let need = (s.pos + 1).div_ceil(self.block_tokens);
+            anyhow::ensure!(
+                s.blocks >= need,
+                "stepped without KV headroom: {} blocks held, {need} needed",
+                s.blocks
+            );
+            self.log.push((s.seed, s.pos));
+            s.pos += 1;
+            Ok(sample.then(|| {
+                (token.wrapping_mul(31) ^ (s.seed as u32) ^ (s.pos as u32))
+                    % 251
+            }))
+        }
+
+        fn seq_pos(&self, s: &PagedSeq) -> usize {
+            s.pos
+        }
+
+        fn max_seq_len(&self) -> usize {
+            self.max_seq
+        }
+
+        fn end_seq(&mut self, s: PagedSeq) {
+            self.in_use -= s.blocks;
+            self.live -= 1;
+        }
+
+        fn metrics_sink(&mut self) -> Option<&mut DecodeMetrics> {
+            Some(&mut self.metrics)
+        }
+
+        fn seq_try_grow(&mut self, s: &mut PagedSeq) -> bool {
+            let need = (s.pos + 1).div_ceil(self.block_tokens);
+            while s.blocks < need {
+                if self.in_use >= self.total_blocks {
+                    return false;
+                }
+                self.in_use += 1;
+                s.blocks += 1;
+                self.peak_blocks = self.peak_blocks.max(self.in_use);
+            }
+            true
+        }
+
+        fn kv_free_blocks(&self) -> Option<usize> {
+            Some(self.total_blocks - self.in_use)
+        }
+
+        fn kv_blocks_for(&self, tokens: usize) -> usize {
+            tokens.div_ceil(self.block_tokens)
+        }
+
+        fn kv_total_blocks(&self) -> Option<usize> {
+            Some(self.total_blocks)
+        }
+    }
+
+    #[test]
+    fn never_fittable_requests_are_rejected_not_wedged() {
+        let mut s = Scheduler::new(PagedMock::new(256, 2, 2), SchedConfig {
+            max_seqs: 2,
+            queue_cap: 4,
+        });
+        // submit-time: a prompt the WHOLE pool cannot hold is rejected
+        // outright instead of queueing forever
+        let r = s.submit(req(&[1, 2, 3, 4, 5, 6], 4));
+        assert!(
+            matches!(r, SubmitOutcome::Rejected { reason }
+                     if reason == "prompt exceeds the kv pool"),
+            "{r:?}"
+        );
+        // wave-time: a request that WAS fittable when it queued but no
+        // longer is (the pool shrank) must retire with an error — not
+        // wedge the wait-queue head and everything behind it
+        s.submit(req(&[1, 2], 2)); // admitted
+        let q = s.submit(req(&[3, 4, 5, 6], 2)); // queued (2 blocks + reserve)
+        assert!(matches!(q, SubmitOutcome::Queued { .. }), "{q:?}");
+        s.backend.total_blocks = 1; // governor shrank the pool
+        let fin = drain(&mut s); // drain's guard panics on a wedge
+        assert_eq!(fin.len(), 2, "no request may hang");
+        let by_id: std::collections::HashMap<u64, &FinishedSeq> =
+            fin.iter().map(|f| (f.id, f)).collect();
+        assert!(
+            by_id[&2].outcome.is_err(),
+            "unfittable fresh request answers with an error"
+        );
+        assert!(
+            by_id[&1].truncated,
+            "live sequence the shrunk pool can't finish truncates"
+        );
+        assert_eq!(s.backend().in_use, 0, "free-count invariant");
+    }
+
+    #[test]
+    fn paged_admission_refuses_at_the_exact_block_boundary() {
+        // A needs 1 block of replay headroom, B needs 2 + a one-block
+        // growth reserve for the live peer = 3: a 2-block pool must queue
+        // B, a 3-block pool must admit it — exact boundary, both sides.
+        let submit_ab = |total| {
+            let mut s = Scheduler::new(
+                PagedMock::new(256, 4, total),
+                SchedConfig {
+                    max_seqs: 4,
+                    queue_cap: 8,
+                },
+            );
+            let a = s.submit(req(&[1, 2, 3, 4], 1));
+            let b = s.submit(req(&[5, 6, 7, 8, 9, 1, 2, 3], 1));
+            (s, a, b)
+        };
+        let (mut s, a, b) = submit_ab(2);
+        assert!(matches!(a, SubmitOutcome::Admitted { .. }), "{a:?}");
+        assert!(
+            matches!(b, SubmitOutcome::Queued { .. }),
+            "free 2 < need 2 + reserve 1: {b:?}"
+        );
+        let fin = drain(&mut s);
+        assert_eq!(fin.len(), 2, "queued sequence runs after blocks free");
+        assert!(fin.iter().all(|f| f.outcome.is_ok() && !f.truncated));
+        assert_eq!(s.backend().in_use, 0, "free-count invariant");
+
+        let (mut s, a, b) = submit_ab(3);
+        assert!(matches!(a, SubmitOutcome::Admitted { .. }));
+        assert!(
+            matches!(b, SubmitOutcome::Admitted { .. }),
+            "free 3 == need 2 + reserve 1 admits: {b:?}"
+        );
+        drain(&mut s);
+        assert_eq!(s.backend().in_use, 0, "free-count invariant");
+    }
+
+    #[test]
+    fn oom_preempts_newest_first_and_resume_reproduces_streams() {
+        // Two growing sequences jointly exceed a 4-block pool mid-wave:
+        // the NEWEST must be preempted (blocks released immediately),
+        // the older one finishes, and the preempted one resumes through
+        // replay to the exact unpreempted stream.
+        let submit2 = |total| {
+            let mut s = Scheduler::new(
+                PagedMock::new(256, 2, total),
+                SchedConfig {
+                    max_seqs: 2,
+                    queue_cap: 8,
+                },
+            );
+            s.submit(req(&[5, 6], 4));
+            s.submit(req(&[7, 8], 4));
+            s
+        };
+        let mut reference = submit2(usize::MAX >> 1); // effectively unbounded
+        let mut want: Vec<_> = drain(&mut reference)
+            .into_iter()
+            .map(|f| (f.id, f.outcome.unwrap()))
+            .collect();
+        want.sort();
+        assert_eq!(reference.stats().kv_preempted_oom, 0);
+
+        let mut s = submit2(4);
+        let mut got: Vec<_> = drain(&mut s)
+            .into_iter()
+            .map(|f| (f.id, f.outcome.unwrap()))
+            .collect();
+        got.sort();
+        assert_eq!(got, want, "OOM preemption must not change any stream");
+        let st = s.stats();
+        assert!(
+            st.kv_preempted_oom >= 1,
+            "4 blocks cannot hold both streams: {st:?}"
+        );
+        assert_eq!(st.seqs_preempted, st.kv_preempted_oom,
+                   "only OOM preemptions in this run");
+        assert_eq!(st.peak_active, 2);
+        assert_eq!(s.backend().in_use, 0, "free-count invariant");
+        assert_eq!(s.backend().metrics.kv_preemptions_oom,
+                   st.kv_preempted_oom, "mirrored into DecodeMetrics");
+    }
+
+    #[test]
+    fn paged_step_errors_release_blocks() {
+        let mut mock = PagedMock::new(256, 2, 8);
+        mock.fail_on_pos = Some(2);
+        let mut s = Scheduler::new(mock, SchedConfig {
+            max_seqs: 2,
+            queue_cap: 4,
+        });
+        s.submit(req(&[3, 4], 8)); // dies at its third step
+        let fin = drain(&mut s);
+        assert!(fin[0].outcome.is_err());
+        assert_eq!(s.backend().in_use, 0,
+                   "failed sequence's blocks must be released");
+        assert_eq!(s.backend().live, 0);
+    }
+
+    #[test]
+    fn lone_oversized_sequence_truncates_with_partial_output() {
+        // A 2-block pool holds 4 tokens; a lone request for more retires
+        // truncated (partial output delivered) instead of wedging the
+        // wave loop in a preempt-readmit cycle.
+        let mut s = Scheduler::new(PagedMock::new(256, 2, 2), SchedConfig {
+            max_seqs: 2,
+            queue_cap: 4,
+        });
+        s.submit(req(&[1, 2], 10));
+        let fin = drain(&mut s);
+        assert_eq!(fin.len(), 1);
+        assert!(fin[0].truncated, "pool-exceeding retirement is truncation");
+        let got = fin[0].outcome.as_ref().unwrap().len();
+        assert!(got > 0 && got < 10, "partial output delivered: {got}");
+        assert_eq!(s.backend().in_use, 0, "free-count invariant");
     }
 
     #[test]

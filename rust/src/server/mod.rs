@@ -64,6 +64,12 @@ pub struct ServerConfig {
     /// each step between waves once the decoded-token count passes it —
     /// the same path a `set_budget` command takes.
     pub pressure_schedule: Option<String>,
+    /// Available-DRAM file (`--pressure-file`): polled on the worker
+    /// between waves; a *changed* figure is fed to the governor as a
+    /// `pressure` trigger — the OS memory-pressure source next to
+    /// `command`/`schedule`. `/proc/meminfo` format or a plain byte
+    /// count (mockable in tests).
+    pub pressure_file: Option<PathBuf>,
     /// Scheduler: hard cap on concurrently decoding sequences
     /// (`--max-seqs`); the governor lowers the effective ceiling under
     /// tight budgets.
@@ -71,6 +77,10 @@ pub struct ServerConfig {
     /// Scheduler wait-queue bound (submissions past it are rejected).
     pub sched_queue_cap: usize,
 }
+
+/// How often the worker re-reads the `--pressure-file` between waves
+/// (the file mirrors a slow OS signal; per-wave reads would be noise).
+const PRESSURE_POLL_EVERY: Duration = Duration::from_millis(250);
 
 struct Request {
     prompt: Vec<u32>,
@@ -139,6 +149,12 @@ struct ServerStats {
     sched_wave_us: AtomicU64,
     max_active_seqs: AtomicU64,
     kv_per_seq_bytes: AtomicU64,
+    // paged KV pool mirror (block-granular M_kv)
+    kv_block_bytes: AtomicU64,
+    kv_blocks_total: AtomicU64,
+    kv_blocks_free: AtomicU64,
+    kv_blocks_peak: AtomicU64,
+    kv_preemptions_oom: AtomicU64,
 }
 
 impl ServerStats {
@@ -187,6 +203,7 @@ impl ServerStats {
         w(&self.sched_waves, st.waves);
         w(&self.sched_wave_us, st.wave_time.as_micros() as u64);
         w(&self.max_active_seqs, max_active as u64);
+        w(&self.kv_preemptions_oom, st.kv_preempted_oom);
         self.decode_ns
             .store(st.wave_time.as_nanos() as u64, Ordering::Relaxed);
     }
@@ -197,6 +214,23 @@ impl ServerStats {
         self.budget_bytes.store(gov.budget(), Ordering::Relaxed);
         self.kv_per_seq_bytes
             .store(gov.kv_per_seq(), Ordering::Relaxed);
+        let kv = engine.kv_pool_stats();
+        self.kv_block_bytes
+            .store(engine.kv_block_bytes(), Ordering::Relaxed);
+        // an unthrottled pool reports 0 total/free rather than usize::MAX
+        // noise — "total" is meaningful only once the governor set one
+        let total = if kv.capacity_blocks == usize::MAX {
+            0
+        } else {
+            kv.capacity_blocks as u64
+        };
+        self.kv_blocks_total.store(total, Ordering::Relaxed);
+        self.kv_blocks_free.store(
+            if total == 0 { 0 } else { kv.free_blocks as u64 },
+            Ordering::Relaxed,
+        );
+        self.kv_blocks_peak
+            .store(kv.peak_blocks as u64, Ordering::Relaxed);
         self.ledger_cache_bytes
             .store(ledger.cache_bytes, Ordering::Relaxed);
         self.ledger_preload_bytes
@@ -245,6 +279,7 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
         Some(spec) => Some(PressureSchedule::parse(spec)?),
         None => None,
     };
+    let pressure_file = cfg.pressure_file.clone();
     let worker = std::thread::spawn(move || -> Result<()> {
         let mut engine = SwapEngine::open(&artifact_dir, cfg.opts)?;
         // interleaved decode: every sequence's next-token group-0 chain
@@ -281,6 +316,14 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
             HashMap::new();
         let mut seed_counter = 0u64;
         let mut last_parts_failed = 0u64;
+        // available-DRAM file source: throttled poll state (dedupe on the
+        // read value — only a *change* reaches the governor; its
+        // hysteresis gate then filters wiggle below the threshold)
+        let mut pressure_last_bytes: Option<u64> = None;
+        let mut pressure_last_poll = Instant::now()
+            .checked_sub(PRESSURE_POLL_EVERY)
+            .unwrap_or_else(Instant::now);
+        let mut pressure_err_logged = false;
         'outer: loop {
             // drain every pending job at this wave boundary — the safe
             // point where re-budgets (level switches, ceiling shrinks)
@@ -413,6 +456,58 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
                 }
             }
 
+            // OS memory-pressure source: poll the available-DRAM file
+            // between waves (throttled) and feed a CHANGED figure to the
+            // governor — the third trigger next to command/schedule
+            if let Some(pf) = &pressure_file {
+                if pressure_last_poll.elapsed() >= PRESSURE_POLL_EVERY {
+                    pressure_last_poll = Instant::now();
+                    match crate::governor::read_pressure_file(pf) {
+                        Ok(bytes)
+                            if pressure_last_bytes != Some(bytes) =>
+                        {
+                            pressure_last_bytes = Some(bytes);
+                            pressure_err_logged = false;
+                            match gov.set_budget(
+                                sched.backend_mut(),
+                                bytes,
+                                RebudgetTrigger::Pressure,
+                            ) {
+                                Ok(d) => {
+                                    sched.set_max_active(d.max_seqs);
+                                    eprintln!(
+                                        "[server] pressure file -> {} \
+                                         ({}): sp={:.2} N={} cache={} \
+                                         max_seqs={}",
+                                        bytes, d.note, d.new_sp,
+                                        d.new_group, d.cache_target,
+                                        d.max_seqs
+                                    );
+                                }
+                                Err(e) => eprintln!(
+                                    "[server] pressure rebudget failed: \
+                                     {e:#}"
+                                ),
+                            }
+                            worker_stats
+                                .publish_governor(sched.backend(), &gov);
+                        }
+                        Ok(_) => {} // unchanged — deduped
+                        Err(e) => {
+                            // an unreadable file must not spam stderr or
+                            // take down serving
+                            if !pressure_err_logged {
+                                pressure_err_logged = true;
+                                eprintln!(
+                                    "[server] pressure file unreadable: \
+                                     {e:#}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+
             // refresh the stats mirror — `stats` connections never touch
             // the engine. The lock-free mirrors (engine counters, sched
             // atomics) refresh every wave; the mutex-guarded ones (pool
@@ -493,6 +588,15 @@ fn apply_rebudget(
                 ("cache_bytes", num(d.cache_target as f64)),
                 ("slab_cap_bytes", num(d.slab_cap as f64)),
                 ("max_seqs", num(d.max_seqs as f64)),
+                (
+                    // 0 = unthrottled (no finite ceiling planned yet)
+                    "kv_pool_blocks",
+                    num(if d.kv_pool_blocks == usize::MAX {
+                        0.0
+                    } else {
+                        d.kv_pool_blocks as f64
+                    }),
+                ),
                 ("seqs_preempted", num(preempted as f64)),
                 ("evicted_rows", num(d.evicted_rows as f64)),
                 ("settle_ms", num(d.settle.as_secs_f64() * 1e3)),
@@ -640,6 +744,15 @@ fn handle_conn(
                         ),
                         ("max_active_seqs", g(&stats.max_active_seqs)),
                         ("kv_per_seq_bytes", g(&stats.kv_per_seq_bytes)),
+                        // paged KV pool (block-granular M_kv)
+                        ("kv_block_bytes", g(&stats.kv_block_bytes)),
+                        ("kv_blocks_total", g(&stats.kv_blocks_total)),
+                        ("kv_blocks_free", g(&stats.kv_blocks_free)),
+                        ("kv_blocks_peak", g(&stats.kv_blocks_peak)),
+                        (
+                            "kv_preemptions_oom",
+                            g(&stats.kv_preemptions_oom),
+                        ),
                     ]),
                 )?;
             }

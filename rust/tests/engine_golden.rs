@@ -75,6 +75,7 @@ fn opts(sp: f64, mode: SwapMode, cache_kb: u64) -> EngineOptions {
         bw_scale: 1.0,
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
+        kv_block_tokens: 16,
     }
 }
 

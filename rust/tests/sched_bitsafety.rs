@@ -3,8 +3,9 @@
 //! run solo, including across a mid-sequence sparsity-level switch at an
 //! inter-token safe point (KV is level-independent; weight rows are
 //! bit-identical whichever source — cache, preload slab, flash — served
-//! them). Also pins the governor's KV ledger accounting to
-//! `kv_per_seq × active_seqs` on a live engine.
+//! them). Also proves block-tabled decode (paged KV) token-identical to
+//! the monolithic whole-window configuration, and pins the governor's
+//! KV ledger accounting to resident KV blocks on a live engine.
 //!
 //! Requires `make artifacts`; self-skips otherwise.
 
@@ -45,6 +46,7 @@ fn opts() -> EngineOptions {
         bw_scale: 1.0,
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
+        kv_block_tokens: 16,
     }
 }
 
@@ -58,6 +60,7 @@ fn switch_plan(dir: &Path) -> Option<RebudgetPlan> {
         group_size: 4,
         cache_bytes: 256 * 1024,
         slab_cap_bytes: u64::MAX,
+        kv_capacity_blocks: usize::MAX,
     })
 }
 
@@ -69,7 +72,16 @@ fn run_solo(
     prompt: &[u32],
     plan: Option<&RebudgetPlan>,
 ) -> Vec<u32> {
-    let mut eng = SwapEngine::open(dir, opts()).unwrap();
+    run_solo_with(dir, prompt, plan, opts())
+}
+
+fn run_solo_with(
+    dir: &Path,
+    prompt: &[u32],
+    plan: Option<&RebudgetPlan>,
+    o: EngineOptions,
+) -> Vec<u32> {
+    let mut eng = SwapEngine::open(dir, o).unwrap();
     let mut seq = eng.begin_seq(0.0, 7);
     let mut out = Vec::new();
     let mut last = prompt[0];
@@ -164,25 +176,85 @@ fn interleaved_sequence_matches_solo_across_level_switch() {
 }
 
 #[test]
-fn kv_ledger_tracks_active_seqs() {
+fn block_tabled_decode_matches_monolithic_whole_window_blocks() {
+    // The paged-KV bit-safety bar: decoding through a small-block table
+    // (many gather/scatter round-trips per token) must be token-for-token
+    // identical to the monolithic configuration — one whole-`max_seq`
+    // window per block, the direct analogue of the pre-paging per-seq
+    // buffers. Two very different block geometries triangulate.
+    let Some(dir) = artifacts() else { return };
+    let max_seq = ArtifactConfig::load(&dir).unwrap().model.max_seq;
+    let prompt = tokenizer::encode("the sparse model swaps ");
+    let bt = |n: usize| EngineOptions {
+        kv_block_tokens: n,
+        ..opts()
+    };
+    let mono = run_solo_with(&dir, &prompt, None, bt(max_seq));
+    assert_eq!(mono.len(), N_GEN);
+    for blocks in [4usize, 16] {
+        let paged = run_solo_with(&dir, &prompt, None, bt(blocks));
+        assert_eq!(
+            paged, mono,
+            "block_tokens={blocks} decode diverged from the monolithic \
+             whole-window configuration — gather/scatter broke KV \
+             bit-safety"
+        );
+    }
+}
+
+#[test]
+fn kv_ledger_tracks_resident_blocks() {
     let Some(dir) = artifacts() else { return };
     let mut eng = SwapEngine::open(&dir, opts()).unwrap();
-    let kv = eng.kv_per_seq_bytes();
-    assert!(kv > 0);
+    let blk = eng.kv_block_bytes();
+    assert!(blk > 0);
+    assert!(
+        eng.kv_per_seq_bytes() >= blk,
+        "full window is at least one block"
+    );
+    // warm the decode scratch so compute_bytes deltas below are pure
+    // KV-block movement; the warmup's freed block stays RESIDENT (the
+    // ledger counts real DRAM, and freed storage parks for reuse)
+    let mut warm = eng.begin_seq(0.0, 9);
+    eng.step(&mut warm, 1).unwrap();
+    eng.end_seq(warm);
     let base = eng.pool_ledger().compute_bytes;
-    assert_eq!(eng.active_seqs(), 0, "no KV before the first sequence");
+    assert_eq!(eng.active_seqs(), 0);
+    assert_eq!(eng.kv_pool_stats().in_use_blocks, 0);
 
-    let s1 = eng.begin_seq(0.0, 1);
-    let s2 = eng.begin_seq(0.0, 2);
+    let mut s1 = eng.begin_seq(0.0, 1);
+    let mut s2 = eng.begin_seq(0.0, 2);
     assert_eq!(eng.active_seqs(), 2);
     assert_eq!(
         eng.pool_ledger().compute_bytes,
-        base + 2 * kv,
-        "ledger must charge kv_per_seq × active_seqs"
+        base,
+        "an unstepped sequence reserves NO KV — blocks are charged only \
+         as decode writes them (the whole point of paging)"
+    );
+    eng.step(&mut s1, 3).unwrap();
+    assert_eq!(eng.kv_pool_stats().in_use_blocks, 1);
+    assert_eq!(
+        eng.pool_ledger().compute_bytes,
+        base,
+        "the first block recycles the warmup's parked storage — no new \
+         resident DRAM"
+    );
+    eng.step(&mut s2, 4).unwrap();
+    assert_eq!(eng.kv_pool_stats().in_use_blocks, 2);
+    assert_eq!(
+        eng.pool_ledger().compute_bytes,
+        base + blk,
+        "a second concurrent sequence materializes exactly one more block"
     );
     eng.end_seq(s1);
-    assert_eq!(eng.pool_ledger().compute_bytes, base + kv);
     eng.end_seq(s2);
-    assert_eq!(eng.pool_ledger().compute_bytes, base);
     assert_eq!(eng.active_seqs(), 0);
+    let st = eng.kv_pool_stats();
+    assert_eq!(st.in_use_blocks, 0, "free-count invariant");
+    assert!(st.peak_blocks >= 2);
+    assert_eq!(
+        eng.pool_ledger().compute_bytes,
+        base + blk,
+        "freed blocks stay resident for reuse until a capacity shrink"
+    );
 }

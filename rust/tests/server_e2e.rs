@@ -39,10 +39,12 @@ fn serve_generate_stats_shutdown() {
             bw_scale: 1.0,
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
+            kv_block_tokens: 16,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
         pressure_schedule: None,
+        pressure_file: None,
         max_seqs: 2,
         sched_queue_cap: 16,
     };
@@ -130,9 +132,23 @@ fn serve_generate_stats_shutdown() {
         "sched_wave_avg_us",
         "max_active_seqs",
         "kv_per_seq_bytes",
+        // paged KV pool (block-granular M_kv)
+        "kv_block_bytes",
+        "kv_blocks_total",
+        "kv_blocks_free",
+        "kv_blocks_peak",
+        "kv_preemptions_oom",
     ] {
         assert!(stats.get(key).is_some(), "stats missing {key}");
     }
+    assert!(
+        stats.get("kv_block_bytes").unwrap().as_f64().unwrap() > 0.0,
+        "paged KV pool must report its block size"
+    );
+    assert!(
+        stats.get("kv_blocks_peak").unwrap().as_f64().unwrap() > 0.0,
+        "served decodes must have written at least one KV block"
+    );
     let rate = stats.get("cache_hit_rate").unwrap().as_f64().unwrap();
     assert!((0.0..=1.0).contains(&rate));
 
@@ -178,10 +194,12 @@ fn two_concurrent_clients_decode_interleaved() {
             bw_scale: 1.0,
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
+            kv_block_tokens: 16,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
         pressure_schedule: None,
+        pressure_file: None,
         max_seqs: 2,
         sched_queue_cap: 16,
     };
@@ -274,10 +292,12 @@ fn set_budget_is_not_starved_behind_a_long_generation() {
             bw_scale: 0.01,
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
+            kv_block_tokens: 16,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
         pressure_schedule: None,
+        pressure_file: None,
         max_seqs: 2,
         sched_queue_cap: 16,
     };
@@ -366,10 +386,12 @@ fn set_budget_rebudgets_live_engine_mid_session() {
             bw_scale: 1.0,
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
+            kv_block_tokens: 16,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
         pressure_schedule: None,
+        pressure_file: None,
         max_seqs: 2,
         sched_queue_cap: 16,
     };

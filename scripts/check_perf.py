@@ -1,13 +1,16 @@
 #!/usr/bin/env python3
 """Perf-trajectory gate: diff two BENCH_decode.json points and fail on a
 >5% tokens/sec regression; optionally also diff two BENCH_governor.json
-points (fail on a >5% settle-time regression) and two BENCH_sched.json
-points (fail on a >5% aggregate interleaved tokens/sec regression)
-(ROADMAP items; see PERF.md methodology).
+points (fail on a >5% settle-time regression), two BENCH_sched.json
+points (fail on a >5% aggregate interleaved tokens/sec regression), and
+two BENCH_kv.json points (fail on a >5% regression of either admitted
+concurrency or aggregate tokens/sec for the paged-KV mixed-length
+workload) (ROADMAP items; see PERF.md methodology).
 
 Usage: check_perf.py PREV.json CURR.json [--threshold 0.05]
                      [--governor GOV_PREV.json GOV_CURR.json]
                      [--sched SCHED_PREV.json SCHED_CURR.json]
+                     [--kv KV_PREV.json KV_CURR.json]
 
 Exit codes: 0 = ok (or no previous point to compare), 1 = regression,
 2 = malformed input.
@@ -131,6 +134,51 @@ def check_sched(prev_path, curr_path, threshold):
     return 0
 
 
+def check_kv(prev_path, curr_path, threshold):
+    """Paged-KV gate over BENCH_kv.json: the mixed-length workload's
+    admitted concurrency AND its aggregate tokens/sec must not regress
+    >5% (the bench itself already asserts concurrency strictly beats the
+    whole-window ceiling)."""
+    if not os.path.exists(curr_path):
+        print(f"check-perf: {curr_path} missing — run `make bench-kv`"
+              " (kv gate skipped)")
+        return 0
+    try:
+        pair = load_pair(prev_path, curr_path, "kv")
+        if pair is None:
+            return 0
+        prev, curr = pair
+        gated = [("admitted_concurrency",
+                  float(prev["admitted_concurrency"]),
+                  float(curr["admitted_concurrency"])),
+                 ("aggregate_tokens_per_sec",
+                  float(prev["aggregate_tokens_per_sec"]),
+                  float(curr["aggregate_tokens_per_sec"]))]
+    except (json.JSONDecodeError, KeyError, ValueError) as e:
+        print(f"check-perf: malformed kv bench point: {e}")
+        return 2
+
+    rc = 0
+    for key, p, c in gated:
+        if p <= 0:
+            print(f"check-perf: previous kv {key} is 0 — skipping diff")
+            continue
+        delta = (c - p) / p
+        print(f"check-perf: kv {key} {p:.2f} -> {c:.2f} "
+              f"({delta:+.1%}, threshold -{threshold:.0%})")
+        if delta < -threshold:
+            print(f"check-perf: FAIL — paged-KV {key} regressed past "
+                  f"the {threshold:.0%} gate")
+            rc = 1
+    for key in ("speedup_vs_whole_window", "kv_preemptions_oom"):
+        if key in prev and key in curr and float(prev[key]) > 0:
+            d = (float(curr[key]) - float(prev[key])) / float(prev[key])
+            if abs(d) >= threshold:
+                print(f"check-perf:   note: {key} {prev[key]} -> "
+                      f"{curr[key]} ({d:+.1%})")
+    return rc
+
+
 def main(argv):
     argv = list(argv)
     governor = None
@@ -149,6 +197,15 @@ def main(argv):
             sched = (argv[i + 1], argv[i + 2])
         except IndexError:
             print("check-perf: --sched expects PREV.json CURR.json")
+            return 2
+        del argv[i:i + 3]
+    kv = None
+    if "--kv" in argv:
+        i = argv.index("--kv")
+        try:
+            kv = (argv[i + 1], argv[i + 2])
+        except IndexError:
+            print("check-perf: --kv expects PREV.json CURR.json")
             return 2
         del argv[i:i + 3]
     threshold = THRESHOLD
@@ -205,6 +262,10 @@ def main(argv):
     if sched is not None:
         src = check_sched(sched[0], sched[1], threshold)
         rc = max(rc, src)
+
+    if kv is not None:
+        krc = check_kv(kv[0], kv[1], threshold)
+        rc = max(rc, krc)
 
     if rc == 0:
         print("check-perf: ok")
