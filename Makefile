@@ -2,7 +2,7 @@
 # python side (L2/L1) only runs at artifact-build time.
 
 .PHONY: build test artifacts bench-smoke bench-governor bench-sched \
-        bench-kv check-perf ci
+        bench-kv check-perf chaos ci
 
 build:
 	cd rust && cargo build --release
@@ -80,8 +80,20 @@ check-perf:
 		--sched BENCH_sched.prev.json BENCH_sched.json \
 		--kv BENCH_kv.prev.json BENCH_kv.json
 
-# One-shot CI entry point: build → test → perf smoke (decode + scheduler
-# + paged-KV points) → regression gates. Needs `make artifacts` to have
-# run once; the benches self-skip without artifacts, leaving the gates
-# inert. Runs on GitHub Actions via .github/workflows/ci.yml.
-ci: build test bench-smoke bench-sched bench-kv check-perf
+# Chaos suite (rust/tests/chaos.rs) under three seeded fault schedules:
+# transient faults must be token-bit-identical to fault-free, permanent
+# faults must complete every request via on-demand fallback, and
+# deadlines must return partials. Self-skips without artifacts.
+chaos:
+	@for seed in 1 2 3; do \
+		echo "chaos: fault schedule seed $$seed"; \
+		(cd rust && CHAOS_SEED=$$seed cargo test -q --test chaos) \
+			|| exit 1; \
+	done
+
+# One-shot CI entry point: build → test → chaos schedules → perf smoke
+# (decode + scheduler + paged-KV points) → regression gates. Needs
+# `make artifacts` to have run once; the benches and the chaos suite
+# self-skip without artifacts, leaving the gates inert. Runs on GitHub
+# Actions via .github/workflows/ci.yml.
+ci: build test chaos bench-smoke bench-sched bench-kv check-perf

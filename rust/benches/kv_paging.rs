@@ -68,6 +68,7 @@ fn req(prompt: &[u32], n: usize, seed: u64) -> SeqRequest {
         temp: 0.0,
         seed,
         eos: None,
+        deadline_waves: None,
     }
 }
 

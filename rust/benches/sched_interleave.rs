@@ -76,6 +76,7 @@ fn req(prompt: &[u32], seed: u64) -> SeqRequest {
         temp: 0.0,
         seed,
         eos: None,
+        deadline_waves: None,
     }
 }
 

@@ -572,6 +572,12 @@ pub fn bench_smoke(args: &Args) -> Result<()> {
         ("loader_chunks_read", num(loader.chunks_read as f64)),
         ("loader_bytes_read", num(loader.bytes_read as f64)),
         ("loader_parts_failed", num(loader.parts_failed as f64)),
+        // fault-injection / recovery ladder: all zero on a healthy run —
+        // check_perf watches them so a regression that silently starts
+        // retrying or falling back is visible in the trajectory
+        ("faults_injected", num(m.faults_injected as f64)),
+        ("retries", num(m.io_retries as f64)),
+        ("fallback_rows", num(m.fallback_rows as f64)),
         ("dram_total_bytes", num(mem.dram_total() as f64)),
         ("energy_per_token_j", num(e.energy_per_token_j)),
     ]);

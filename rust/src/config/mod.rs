@@ -193,6 +193,10 @@ pub struct RuntimeConfig {
     /// byte count) and fed to `set_budget` as a third trigger next to
     /// `command`/`schedule`.
     pub pressure_file: Option<std::path::PathBuf>,
+    /// Deterministic fault-injection plan (`--faults`, see
+    /// [`crate::flash::FaultPlan::parse`]) armed on the flash device —
+    /// drives the chaos suite's transient/permanent/stall schedules.
+    pub fault_spec: Option<String>,
 }
 
 impl Default for RuntimeConfig {
@@ -212,6 +216,7 @@ impl Default for RuntimeConfig {
             sched_queue_cap: 64,
             kv_block_tokens: 16,
             pressure_file: None,
+            fault_spec: None,
         }
     }
 }
@@ -258,6 +263,7 @@ mod tests {
         assert_eq!(rc.sched_queue_cap, 64);
         assert_eq!(rc.kv_block_tokens, 16);
         assert!(rc.pressure_file.is_none());
+        assert!(rc.fault_spec.is_none(), "faults are strictly opt-in");
     }
 
     #[test]

@@ -380,6 +380,22 @@ impl SwapEngine {
         })
     }
 
+    /// Arm a deterministic fault schedule on the engine's flash device
+    /// (CLI `--faults`, server `fault_spec`). `EngineOptions` stays
+    /// fault-free on purpose — the plan is injected into the live shared
+    /// device, so it also covers reads already in flight structures
+    /// (loader, on-demand path) without replumbing every options literal.
+    pub fn inject_faults(&self, plan: crate::flash::FaultPlan) {
+        self.flash.inject_faults(plan);
+    }
+
+    /// Parse-and-arm convenience for spec strings (see
+    /// [`crate::flash::FaultPlan::parse`]).
+    pub fn inject_fault_spec(&self, spec: &str) -> Result<()> {
+        self.flash.inject_faults(crate::flash::FaultPlan::parse(spec)?);
+        Ok(())
+    }
+
     /// Begin a new decode sequence: an **empty** KV block table (blocks
     /// are charged to the compute-pool ledger only as decode writes them)
     /// and a deterministic per-sequence sampler. The caller owns the
@@ -994,6 +1010,11 @@ impl SwapEngine {
         );
         self.metrics.io_buffers_recycled +=
             io1.buffers_recycled - io0.buffers_recycled;
+        self.metrics.io_retries += io1.retries - io0.retries;
+        self.metrics.faults_injected +=
+            io1.faults_injected - io0.faults_injected;
+        self.metrics.wedged_recoveries +=
+            io1.wedged_recoveries - io0.wedged_recoveries;
         self.metrics.io_inflight_peak =
             self.metrics.io_inflight_peak.max(io1.inflight_peak);
         let loader = self.pipe.loader_stats();
@@ -1409,6 +1430,7 @@ fn fill_from_slabs(
     staged: &mut Vec<(usize, usize, usize)>,
     m: &mut DecodeMetrics,
 ) {
+    let mut degraded = [false; 3];
     let mut w = 0usize;
     for r in 0..ondemand.len() {
         let (oi, slot, ch) = ondemand[r];
@@ -1422,11 +1444,22 @@ fn fill_from_slabs(
                 staged.push((oi, slot, ch));
                 continue;
             }
+            // Degraded mode: the part completed but this row is not
+            // served (failed/dropped preload published no slab, or the
+            // slab lacks the row). The decode is NOT failed — the row
+            // falls through to the urgent on-demand fetch below, at a
+            // latency cost the counters make visible to the governor.
+            m.fallback_rows += 1;
+            if slabs[oi].is_none() {
+                degraded[oi] = true;
+            }
         }
         ondemand[w] = (oi, slot, ch);
         w += 1;
     }
     ondemand.truncate(w);
+    m.degraded_fallbacks +=
+        degraded.iter().filter(|&&d| d).count() as u64;
 }
 
 /// One batched `insert_rows` per op for the slab rows just copied into
@@ -1585,7 +1618,7 @@ fn fetch_ondemand_rows(
         if run.coalesce {
             match queue.wait_as(tags[run.req0], IoClass::Engine) {
                 Err(e) => {
-                    first_err = Some(e);
+                    first_err = Some(e.into());
                     continue;
                 }
                 Ok(c) => {
@@ -1614,7 +1647,7 @@ fn fetch_ondemand_rows(
                 let (_, slot, _) = ondemand[run.i + r];
                 match queue.wait_as(tags[run.req0 + r], IoClass::Engine) {
                     Err(e) => {
-                        first_err = Some(e);
+                        first_err = Some(e.into());
                         failed = true;
                     }
                     Ok(c) => {
@@ -1838,5 +1871,29 @@ mod tests {
         assert_eq!(m.preload_total, 2);
         assert_eq!(m.preload_hits, 0);
         assert_eq!(ondemand.len(), 2, "rows fall through to on-demand");
+        // degraded mode is COUNTED: one op degraded (completed, no
+        // slab), both of its rows recovered via on-demand fallback
+        assert_eq!(m.degraded_fallbacks, 1);
+        assert_eq!(m.fallback_rows, 2);
+    }
+
+    #[test]
+    fn partial_slab_counts_fallback_rows_but_not_degraded_ops() {
+        // a published slab that simply lacks a row (span filtering) is a
+        // preload miss + fallback row, but NOT a degraded part — the
+        // degraded counter is reserved for failed/dropped parts
+        let dout = 4;
+        let slab = filled_slab(OpKind::Wq, &[2], dout);
+        let mut bufs = [vec![0f32; 12], Vec::new(), Vec::new()];
+        let mut ondemand = vec![(0usize, 1usize, 2usize), (0, 2, 7)];
+        let mut staged = Vec::new();
+        let mut m = DecodeMetrics::default();
+        fill_from_slabs(0, [Some(&slab), None, None],
+                        [true, false, false], &mut bufs, &mut ondemand,
+                        &mut staged, &mut m);
+        assert_eq!(m.preload_hits, 1);
+        assert_eq!(m.fallback_rows, 1, "the uncovered row fell back");
+        assert_eq!(m.degraded_fallbacks, 0, "slab was published");
+        assert_eq!(ondemand, vec![(0, 2, 7)]);
     }
 }

@@ -25,6 +25,21 @@
 //! completions are reaped by tag in any order with `wait`. Reads submitted
 //! together — chunk runs of one preload part, runs across sibling parts,
 //! an on-demand fetch's coalesced misses — genuinely overlap.
+//!
+//! **Fault injection.** On a phone, flash stalls, transient EIOs and
+//! thermal latency spikes are the normal case. A seeded [`FaultPlan`]
+//! (injected via [`FlashDevice::inject_faults`], reachable from the CLI's
+//! `--faults` spec) deterministically degrades reads: transient errors
+//! that clear after a bounded number of attempts, permanent bad ranges
+//! (preload reads only — urgent reads model controller ECC recovery at a
+//! latency cost, so the on-demand fallback always lands), latency spikes,
+//! and a one-shot stall for wedging a worker on purpose. All injected
+//! latency is charged through the timing model (`busy_ns`, slept out in
+//! Timed mode) so benches under faults stay honest. The queue answers
+//! with a recovery ladder: typed [`IoError`] classification, bounded
+//! exponential-backoff retries of transients, and a watchdog that fails a
+//! wedged worker's wave over to its reapers and spawns a replacement
+//! instead of letting every reaper time out.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::fs::File;
@@ -45,6 +60,179 @@ pub enum ClockMode {
     Modeled,
 }
 
+/// Typed I/O failure classification, carried through the queue's `done`
+/// map and the loader/engine reap paths (it used to be a stringly error,
+/// so "wedged" and "bad media" were indistinguishable to recovery code).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IoError {
+    /// Recoverable device hiccup (injected transient, momentary EIO):
+    /// worth a bounded retry with backoff.
+    Transient(String),
+    /// The read can never succeed (bad media range, pread failure):
+    /// retries are wasted device time — fail over immediately.
+    Permanent(String),
+    /// The worker servicing the read wedged and its wave was failed over
+    /// by the watchdog (or the reaper's own backstop timeout fired).
+    Wedged(String),
+}
+
+impl IoError {
+    pub fn is_transient(&self) -> bool {
+        matches!(self, IoError::Transient(_))
+    }
+
+    /// Stable lowercase tag for logs / health summaries.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            IoError::Transient(_) => "transient",
+            IoError::Permanent(_) => "permanent",
+            IoError::Wedged(_) => "wedged",
+        }
+    }
+}
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IoError::Transient(m) => write!(f, "transient io error: {m}"),
+            IoError::Permanent(m) => write!(f, "permanent io error: {m}"),
+            IoError::Wedged(m) => write!(f, "wedged io worker: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for IoError {}
+
+/// Deterministic, seeded fault schedule for a [`FlashDevice`]. Every
+/// verdict is a pure function of `(seed, offset)` plus a per-offset
+/// attempt count, so a chaos run is exactly reproducible — and a retried
+/// transient read returns the same bytes the fault-free run saw, which is
+/// what makes the chaos suite's bit-identity check possible.
+///
+/// Spec-string form (CLI `--faults`, config `fault_spec`), comma-joined:
+///
+/// ```text
+/// seed=N                 RNG seed (default 1)
+/// transient=R[:D]        rate R in [0,1); affected reads fail their
+///                        first D attempts (default 1, must stay below
+///                        the queue's attempt bound to be recoverable)
+/// bad=OFF+LEN[/OFF+LEN]  permanent bad byte ranges (preload reads only)
+/// spike=R:NS             rate R latency spikes of NS nanoseconds
+/// stall=NTH:NS           one-shot: the NTH fault check stalls NS
+///                        nanoseconds (wedges that worker; watchdog bait)
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Fraction of reads (by offset hash) that fail transiently.
+    pub transient_rate: f64,
+    /// Consecutive failures an affected offset serves before recovering.
+    pub transient_depth: u32,
+    /// Byte ranges `(offset, len)` that permanently fail non-urgent
+    /// (preload) reads. Urgent reads crossing them still succeed — the
+    /// model is controller-side ECC/retry recovery, paid in latency —
+    /// so the engine's on-demand fallback can always land.
+    pub bad_ranges: Vec<(u64, u64)>,
+    /// Fraction of reads (by offset hash) hit by a latency spike.
+    pub spike_rate: f64,
+    /// Added nanoseconds per spike.
+    pub spike_ns: u64,
+    /// One-shot stall: the nth fault consultation sleeps `stall_ns`.
+    pub stall_after: Option<u64>,
+    pub stall_ns: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 1,
+            transient_rate: 0.0,
+            transient_depth: 1,
+            bad_ranges: Vec::new(),
+            spike_rate: 0.0,
+            spike_ns: 0,
+            stall_after: None,
+            stall_ns: 0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse the comma-joined `key=value` spec (see the type docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for kv in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let (k, v) = kv.split_once('=').ok_or_else(|| {
+                anyhow!("fault spec entry `{kv}` is not key=value")
+            })?;
+            let v = v.trim();
+            match k.trim() {
+                "seed" => plan.seed = v.parse()?,
+                "transient" => match v.split_once(':') {
+                    Some((r, d)) => {
+                        plan.transient_rate = r.parse()?;
+                        plan.transient_depth = d.parse()?;
+                    }
+                    None => plan.transient_rate = v.parse()?,
+                },
+                "bad" => {
+                    for range in v.split('/') {
+                        let (o, l) =
+                            range.split_once('+').ok_or_else(|| {
+                                anyhow!("bad range `{range}` must be OFF+LEN")
+                            })?;
+                        plan.bad_ranges.push((o.parse()?, l.parse()?));
+                    }
+                }
+                "spike" => {
+                    let (r, ns) = v.split_once(':').ok_or_else(|| {
+                        anyhow!("spike `{v}` must be RATE:NS")
+                    })?;
+                    plan.spike_rate = r.parse()?;
+                    plan.spike_ns = ns.parse()?;
+                }
+                "stall" => {
+                    let (n, ns) = v.split_once(':').ok_or_else(|| {
+                        anyhow!("stall `{v}` must be NTH:NS")
+                    })?;
+                    plan.stall_after = Some(n.parse()?);
+                    plan.stall_ns = ns.parse()?;
+                }
+                other => {
+                    return Err(anyhow!("unknown fault knob `{other}`"))
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Live fault bookkeeping behind the plan: per-offset attempt counts (so
+/// transients deterministically clear) and the consultation counter that
+/// drives the one-shot stall.
+struct FaultState {
+    plan: FaultPlan,
+    attempts: HashMap<u64, u32>,
+    checks: u64,
+}
+
+/// splitmix64 — cheap, well-mixed, and stable across runs.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Uniform [0,1) roll keyed by (seed, offset, salt) — same read, same
+/// verdict, every run.
+fn fault_roll(seed: u64, offset: u64, salt: u64) -> f64 {
+    (mix64(seed ^ mix64(offset ^ salt)) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+const SALT_TRANSIENT: u64 = 0x7261_6e73;
+const SALT_SPIKE: u64 = 0x7370_696b;
+
 /// Read statistics (drives the Fig 7 bench and the energy model).
 #[derive(Debug, Default)]
 pub struct FlashStats {
@@ -52,6 +240,9 @@ pub struct FlashStats {
     pub bytes: AtomicU64,
     /// Modeled busy nanoseconds of the flash device.
     pub busy_ns: AtomicU64,
+    /// Faults the device's [`FaultPlan`] actually injected (transient
+    /// verdicts, bad-range hits, latency spikes — not clean reads).
+    pub faults_injected: AtomicU64,
     /// Histogram of chunk sizes: [<16K, <64K, <256K, <1M, >=1M].
     pub size_hist: [AtomicU64; 5],
 }
@@ -106,6 +297,13 @@ pub struct FlashDevice {
     /// Serializes the (single) flash channel in Timed mode — concurrent
     /// submitters queue behind each other like a real UFS device.
     channel: Mutex<()>,
+    /// Active fault schedule (None = healthy device). Interior-mutable so
+    /// faults can be armed on an already-shared device (the engine owns
+    /// it behind an `Arc` by the time a CLI spec arrives).
+    faults: Mutex<Option<FaultState>>,
+    /// Fast-path flag mirroring `faults.is_some()` — the hot read paths
+    /// skip the mutex entirely on a healthy device.
+    has_faults: std::sync::atomic::AtomicBool,
 }
 
 impl FlashDevice {
@@ -124,7 +322,102 @@ impl FlashDevice {
             bw_scale,
             stats: FlashStats::default(),
             channel: Mutex::new(()),
+            faults: Mutex::new(None),
+            has_faults: std::sync::atomic::AtomicBool::new(false),
         }))
+    }
+
+    /// Arm (or replace) the device's fault schedule. Safe on a shared,
+    /// live device; takes effect for the next read.
+    pub fn inject_faults(&self, plan: FaultPlan) {
+        *self.faults.lock().unwrap() = Some(FaultState {
+            plan,
+            attempts: HashMap::new(),
+            checks: 0,
+        });
+        self.has_faults
+            .store(true, std::sync::atomic::Ordering::Release);
+    }
+
+    pub fn faults_active(&self) -> bool {
+        self.has_faults.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    /// Consult the fault plan for one read. Returns the injected extra
+    /// latency (charge via [`FlashDevice::charge_fault_ns`]) and the
+    /// verdict. `urgent` reads never hit permanent bad ranges — the model
+    /// is controller-side ECC/retry recovery at a latency cost — so the
+    /// decode-critical fallback path can always land.
+    fn fault_check(
+        &self,
+        offset: u64,
+        len: usize,
+        urgent: bool,
+    ) -> (u64, Option<IoError>) {
+        let mut guard = self.faults.lock().unwrap();
+        let Some(st) = guard.as_mut() else {
+            return (0, None);
+        };
+        st.checks += 1;
+        let mut extra = 0u64;
+        if st.plan.stall_after == Some(st.checks) {
+            extra += st.plan.stall_ns;
+            self.stats.faults_injected.fetch_add(1, Ordering::Relaxed);
+        }
+        if st.plan.spike_rate > 0.0
+            && fault_roll(st.plan.seed, offset, SALT_SPIKE)
+                < st.plan.spike_rate
+        {
+            extra += st.plan.spike_ns;
+            self.stats.faults_injected.fetch_add(1, Ordering::Relaxed);
+        }
+        let end = offset + len as u64;
+        if !urgent
+            && st
+                .plan
+                .bad_ranges
+                .iter()
+                .any(|&(o, l)| offset < o + l && o < end)
+        {
+            self.stats.faults_injected.fetch_add(1, Ordering::Relaxed);
+            return (
+                extra,
+                Some(IoError::Permanent(format!(
+                    "flash bad range under read at offset {offset}"
+                ))),
+            );
+        }
+        if st.plan.transient_rate > 0.0
+            && fault_roll(st.plan.seed, offset, SALT_TRANSIENT)
+                < st.plan.transient_rate
+        {
+            let seen = st.attempts.entry(offset).or_insert(0);
+            if *seen < st.plan.transient_depth {
+                *seen += 1;
+                self.stats.faults_injected.fetch_add(1, Ordering::Relaxed);
+                return (
+                    extra,
+                    Some(IoError::Transient(format!(
+                        "injected transient read error at offset {offset}"
+                    ))),
+                );
+            }
+        }
+        (extra, None)
+    }
+
+    /// Charge injected fault latency through the timing model: always
+    /// accounted as device busy time; in Timed mode genuinely slept out —
+    /// **outside** the channel mutex, so a stall wedges only the worker
+    /// it hit, never the whole device.
+    fn charge_fault_ns(&self, ns: u64) {
+        if ns == 0 {
+            return;
+        }
+        self.stats.busy_ns.fetch_add(ns, Ordering::Relaxed);
+        if self.mode == ClockMode::Timed {
+            std::thread::sleep(Duration::from_nanos(ns));
+        }
     }
 
     /// Modeled duration of one read of `len` bytes.
@@ -166,7 +459,26 @@ impl FlashDevice {
     }
 
     /// Read into a caller-provided buffer (hot path: no allocation).
+    /// Synchronous reads are decode-critical (urgent class): under an
+    /// armed fault plan they absorb transient verdicts with inline
+    /// retries and recover bad ranges — callers see added latency, never
+    /// an injected failure.
     pub fn read_into(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        if self.faults_active() {
+            let mut fault_ns = 0u64;
+            for attempt in 0..MAX_IO_ATTEMPTS {
+                let (extra, err) = self.fault_check(offset, buf.len(), true);
+                fault_ns += extra;
+                match err {
+                    None => break,
+                    Some(_) if attempt + 1 < MAX_IO_ATTEMPTS => {
+                        fault_ns += RETRY_BACKOFF_NS << attempt;
+                    }
+                    Some(_) => {} // urgent reads must land: proceed anyway
+                }
+            }
+            self.charge_fault_ns(fault_ns);
+        }
         let model_ns = self.model_read_ns(buf.len() as u64);
         match self.mode {
             ClockMode::Timed => {
@@ -306,15 +618,39 @@ pub struct IoSnapshot {
     /// allocation (ROADMAP: the queue used to allocate one `Vec<u8>` per
     /// read).
     pub buffers_recycled: u64,
+    /// Transient-faulted reads re-enqueued for another attempt (bounded
+    /// exponential-backoff retry ladder).
+    pub retries: u64,
+    /// Faults the device's plan injected (device-level counter, mirrored
+    /// here so one snapshot covers the whole I/O failure picture).
+    pub faults_injected: u64,
+    /// Wedged workers the watchdog detected and replaced.
+    pub wedged_recoveries: u64,
+}
+
+/// One worker's watchdog-visible state, living INSIDE `QueueInner` so
+/// watchdog scans and worker updates share the queue's single lock (no
+/// second lock order to get wrong). `generation` is the recovery token: a
+/// worker whose slot generation moved on while it was out executing a
+/// wave has been replaced — it must drop its results and exit instead of
+/// double-completing tags the watchdog already failed over.
+struct WorkerSlot {
+    generation: u64,
+    /// Set while the worker is out of the lock executing a wave.
+    busy_since: Option<Instant>,
+    /// The wave's tags (what the watchdog fails over on a wedge).
+    tags: Vec<u64>,
+    /// Whether the wave was urgent-class (for in-flight accounting).
+    urgent: bool,
 }
 
 struct QueueInner {
     /// Submitted, not yet picked up by a worker:
-    /// (tag, offset, len, urgent).
-    pending: VecDeque<(u64, u64, usize, bool)>,
-    /// Completed, not yet reaped. Errors carried as strings (anyhow errors
-    /// don't clone across the wave's reads).
-    done: HashMap<u64, Result<Completion, String>>,
+    /// (tag, offset, len, urgent, attempt).
+    pending: VecDeque<(u64, u64, usize, bool, u32)>,
+    /// Completed, not yet reaped. Errors are typed [`IoError`]s (Clone,
+    /// so one failure fans out across its wave's reads).
+    done: HashMap<u64, Result<Completion, IoError>>,
     /// Tags abandoned while in flight (reaper gave up / caller no longer
     /// wants them): workers drop their completions instead of parking
     /// them in `done` forever.
@@ -325,6 +661,8 @@ struct QueueInner {
     /// full depth so an urgent arrival always finds device budget within
     /// at most one *partial* wave (see `worker_loop`).
     inflight_nonurgent: usize,
+    /// Per-worker watchdog slots, indexed by worker id.
+    slots: Vec<WorkerSlot>,
     next_tag: u64,
     stop: bool,
 }
@@ -340,12 +678,24 @@ struct QueueShared {
     /// Retired read buffers awaiting reuse (never locked while `inner` is
     /// wanted by the same thread *after* it — lock order is inner → free).
     free: Mutex<Vec<Vec<u8>>>,
+    /// Live worker join handles keyed by slot id (current generation
+    /// only — a replaced worker's handle is dropped, detaching the zombie
+    /// thread, which exits on its own once its stale generation is seen).
+    /// Locked standalone, never while `inner` is held.
+    handles: Mutex<HashMap<usize, JoinHandle<()>>>,
+    /// Watchdog wedge threshold in nanoseconds (settable for tests; the
+    /// 30s reaper timeout stays as the backstop behind it).
+    wedge_timeout_ns: AtomicU64,
     submitted: AtomicU64,
     batches: AtomicU64,
     inflight_peak: AtomicU64,
     wait_loader_ns: AtomicU64,
     wait_engine_ns: AtomicU64,
     buffers_recycled: AtomicU64,
+    /// Transient reads re-enqueued for another attempt.
+    retries: AtomicU64,
+    /// Wedged workers detected and replaced by the watchdog.
+    wedged_recoveries: AtomicU64,
 }
 
 impl QueueShared {
@@ -378,7 +728,7 @@ const BUF_POOL_CAP: usize = 64;
 /// amortized across the wave.
 pub struct ReadQueue {
     shared: Arc<QueueShared>,
-    workers: Vec<JoinHandle<()>>,
+    watchdog: Option<JoinHandle<()>>,
 }
 
 /// Above this the extra threads only add context switches: a single worker
@@ -387,8 +737,22 @@ const MAX_QUEUE_WORKERS: usize = 4;
 
 /// A reaper blocked longer than this has hit a wedged worker (device error
 /// loop, dead thread) — bail out so the decode falls back instead of
-/// hanging forever.
+/// hanging forever. Backstop only: the watchdog usually fails a wedged
+/// wave over long before this.
 const REAP_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Watchdog default: a worker out on one wave this long is wedged. Well
+/// above any legitimate Timed-mode wave (milliseconds), well below the
+/// reaper backstop.
+const DEFAULT_WEDGE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Bounded retry: total attempts per read (first try + retries) before a
+/// transient fault is surfaced as an error.
+const MAX_IO_ATTEMPTS: u32 = 3;
+
+/// Exponential backoff charged per retry (doubled each attempt) — device
+/// time in the model, a real sleep in Timed mode.
+const RETRY_BACKOFF_NS: u64 = 200_000;
 
 impl ReadQueue {
     /// `depth` bounds the reads in flight (0 → the device profile's
@@ -401,6 +765,7 @@ impl ReadQueue {
         } else {
             depth
         };
+        let n_workers = depth.min(MAX_QUEUE_WORKERS).max(1);
         let shared = Arc::new(QueueShared {
             dev,
             depth,
@@ -410,34 +775,63 @@ impl ReadQueue {
                 abandoned: HashSet::new(),
                 inflight: 0,
                 inflight_nonurgent: 0,
+                slots: (0..n_workers)
+                    .map(|_| WorkerSlot {
+                        generation: 0,
+                        busy_since: None,
+                        tags: Vec::new(),
+                        urgent: false,
+                    })
+                    .collect(),
                 next_tag: 0,
                 stop: false,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             free: Mutex::new(Vec::new()),
+            handles: Mutex::new(HashMap::new()),
+            wedge_timeout_ns: AtomicU64::new(
+                DEFAULT_WEDGE_TIMEOUT.as_nanos() as u64
+            ),
             submitted: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             inflight_peak: AtomicU64::new(0),
             wait_loader_ns: AtomicU64::new(0),
             wait_engine_ns: AtomicU64::new(0),
             buffers_recycled: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            wedged_recoveries: AtomicU64::new(0),
         });
-        let n_workers = depth.min(MAX_QUEUE_WORKERS).max(1);
-        let workers = (0..n_workers)
-            .map(|i| {
-                let sh = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("awf-io-{i}"))
-                    .spawn(move || worker_loop(sh))
-                    .expect("spawn io worker")
-            })
-            .collect();
-        Arc::new(ReadQueue { shared, workers })
+        {
+            let mut handles = shared.handles.lock().unwrap();
+            for i in 0..n_workers {
+                handles.insert(i, spawn_worker(&shared, i, 0));
+            }
+        }
+        let watchdog = {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name("awf-io-watchdog".into())
+                .spawn(move || watchdog_loop(sh))
+                .expect("spawn io watchdog")
+        };
+        Arc::new(ReadQueue {
+            shared,
+            watchdog: Some(watchdog),
+        })
     }
 
     pub fn depth(&self) -> usize {
         self.shared.depth
+    }
+
+    /// Lower (or raise) the watchdog's wedge threshold — chaos tests use
+    /// a short one so recovery is observable without waiting out the
+    /// 10s default.
+    pub fn set_wedge_timeout(&self, timeout: Duration) {
+        self.shared
+            .wedge_timeout_ns
+            .store(timeout.as_nanos() as u64, Ordering::Relaxed);
     }
 
     /// Enqueue one read; returns its reap tag. Never blocks on I/O.
@@ -473,7 +867,7 @@ impl ReadQueue {
                 let tag = q.next_tag;
                 q.next_tag += 1;
                 if !urgent {
-                    q.pending.push_back((tag, off, len, false));
+                    q.pending.push_back((tag, off, len, false, 0));
                 }
                 tag
             })
@@ -481,7 +875,7 @@ impl ReadQueue {
         if urgent {
             // front-insert in reverse so the group's own order survives
             for (&tag, &(off, len)) in tags.iter().zip(reqs).rev() {
-                q.pending.push_front((tag, off, len, true));
+                q.pending.push_front((tag, off, len, true, 0));
             }
         }
         self.shared
@@ -501,7 +895,7 @@ impl ReadQueue {
         let reclaimed = {
             let mut q = self.shared.inner.lock().unwrap();
             let before = q.pending.len();
-            q.pending.retain(|&(t, _, _, _)| t != tag);
+            q.pending.retain(|&(t, _, _, _, _)| t != tag);
             if q.pending.len() != before {
                 return; // never started; nothing will ever complete
             }
@@ -529,33 +923,39 @@ impl ReadQueue {
 
     /// Reap one completion by tag, blocking until its wave lands —
     /// engine-class attribution (see [`ReadQueue::wait_as`]).
-    pub fn wait(&self, tag: u64) -> Result<Completion> {
+    pub fn wait(&self, tag: u64) -> Result<Completion, IoError> {
         self.wait_as(tag, IoClass::Engine)
     }
 
     /// Reap one completion by tag, blocking until its wave lands, and
     /// attribute any blocked time to `class` (`io_wait_loader_ns` vs
     /// `io_wait_engine_ns`). Completions are reaped at most once; tags
-    /// may be waited in any order (out-of-order reap).
-    pub fn wait_as(&self, tag: u64, class: IoClass) -> Result<Completion> {
+    /// may be waited in any order (out-of-order reap). Failures are typed
+    /// [`IoError`]s so callers can tell recoverable from hopeless.
+    pub fn wait_as(
+        &self,
+        tag: u64,
+        class: IoClass,
+    ) -> Result<Completion, IoError> {
         let deadline = Instant::now() + REAP_TIMEOUT;
         let mut waited = Duration::ZERO;
         let mut q = self.shared.inner.lock().unwrap();
         let out = loop {
             if let Some(res) = q.done.remove(&tag) {
-                break res.map_err(|e| anyhow!("{e}"));
+                break res;
             }
             let now = Instant::now();
             if now >= deadline {
                 // orphan the tag wherever it is — a completion landing
                 // after this must not park in the done map forever
                 let before = q.pending.len();
-                q.pending.retain(|&(t, _, _, _)| t != tag);
+                q.pending.retain(|&(t, _, _, _, _)| t != tag);
                 if q.pending.len() == before {
                     q.abandoned.insert(tag);
                 }
-                break Err(anyhow!("read queue wedged: tag {tag} never \
-                                   completed"));
+                break Err(IoError::Wedged(format!(
+                    "read queue wedged: tag {tag} never completed"
+                )));
             }
             let t0 = Instant::now();
             let (guard, _) = self
@@ -597,6 +997,17 @@ impl ReadQueue {
                 .shared
                 .buffers_recycled
                 .load(Ordering::Relaxed),
+            retries: self.shared.retries.load(Ordering::Relaxed),
+            faults_injected: self
+                .shared
+                .dev
+                .stats
+                .faults_injected
+                .load(Ordering::Relaxed),
+            wedged_recoveries: self
+                .shared
+                .wedged_recoveries
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -605,7 +1016,15 @@ impl Drop for ReadQueue {
     fn drop(&mut self) {
         self.shared.inner.lock().unwrap().stop = true;
         self.shared.work_cv.notify_all();
-        for h in self.workers.drain(..) {
+        // watchdog first, so no replacement spawns while we join workers
+        if let Some(h) = self.watchdog.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut map = self.shared.handles.lock().unwrap();
+            map.drain().map(|(_, h)| h).collect()
+        };
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -622,7 +1041,19 @@ fn urgent_reserve(depth: usize) -> usize {
     }
 }
 
-fn worker_loop(sh: Arc<QueueShared>) {
+fn spawn_worker(
+    sh: &Arc<QueueShared>,
+    slot: usize,
+    generation: u64,
+) -> JoinHandle<()> {
+    let shared = sh.clone();
+    std::thread::Builder::new()
+        .name(format!("awf-io-{slot}"))
+        .spawn(move || worker_loop(shared, slot, generation))
+        .expect("spawn io worker")
+}
+
+fn worker_loop(sh: Arc<QueueShared>, slot: usize, generation: u64) {
     loop {
         // Claim a wave: a contiguous same-class run from the front of
         // the pending queue, up to the remaining in-flight budget.
@@ -632,12 +1063,15 @@ fn worker_loop(sh: Arc<QueueShared>) {
         // submission arriving mid-wavefront lands within at most one
         // *partial* wave instead of draining behind a full-depth preload
         // wave (ROADMAP "I/O wave preemption").
-        let (wave, wave_urgent): (Vec<(u64, u64, usize, bool)>, bool) = {
+        let (wave, wave_urgent): (Vec<(u64, u64, usize, bool, u32)>, bool) = {
             let mut q = sh.inner.lock().unwrap();
             loop {
+                if q.slots[slot].generation != generation {
+                    return; // replaced by the watchdog — stale worker
+                }
                 let budget = sh.depth.saturating_sub(q.inflight);
                 let front_urgent =
-                    q.pending.front().map(|&(_, _, _, u)| u);
+                    q.pending.front().map(|&(_, _, _, u, _)| u);
                 if let (Some(urgent), true) = (front_urgent, budget > 0) {
                     let cap = if urgent {
                         budget
@@ -652,7 +1086,7 @@ fn worker_loop(sh: Arc<QueueShared>) {
                         while take < cap
                             && q.pending
                                 .get(take)
-                                .is_some_and(|&(_, _, _, u)| u == urgent)
+                                .is_some_and(|&(_, _, _, u, _)| u == urgent)
                         {
                             take += 1;
                         }
@@ -666,6 +1100,12 @@ fn worker_loop(sh: Arc<QueueShared>) {
                             q.inflight as u64,
                             Ordering::Relaxed,
                         );
+                        // watchdog-visible: this worker is now out
+                        // executing these tags
+                        let s = &mut q.slots[slot];
+                        s.busy_since = Some(Instant::now());
+                        s.tags = wave.iter().map(|&(t, ..)| t).collect();
+                        s.urgent = urgent;
                         break (wave, urgent);
                     }
                 }
@@ -675,8 +1115,38 @@ fn worker_loop(sh: Arc<QueueShared>) {
                 q = sh.work_cv.wait(q).unwrap();
             }
         };
-        let reqs: Vec<(u64, usize)> =
-            wave.iter().map(|&(_, off, len, _)| (off, len)).collect();
+        // Fault consultation, one verdict per read. Injected latency
+        // (spikes, stalls) is charged and slept OUTSIDE the device
+        // channel mutex, so a stall wedges this worker only — exactly
+        // what the watchdog is built to recover.
+        let mut verdicts: Vec<Option<IoError>> = Vec::new();
+        if sh.dev.faults_active() {
+            let mut extra_ns = 0u64;
+            for &(_, off, len, urgent, _) in &wave {
+                let (ns, err) = sh.dev.fault_check(off, len, urgent);
+                extra_ns += ns;
+                verdicts.push(err);
+            }
+            sh.dev.charge_fault_ns(extra_ns);
+            if extra_ns > 0 {
+                // a stall long enough for the watchdog to replace us
+                // means our tags are already answered — bail before
+                // touching the device channel
+                let q = sh.inner.lock().unwrap();
+                if q.slots[slot].generation != generation {
+                    return;
+                }
+            }
+        } else {
+            verdicts.resize_with(wave.len(), || None);
+        }
+        let healthy: Vec<usize> = (0..wave.len())
+            .filter(|&i| verdicts[i].is_none())
+            .collect();
+        let reqs: Vec<(u64, usize)> = healthy
+            .iter()
+            .map(|&i| (wave[i].1, wave[i].2))
+            .collect();
         // buffers come from the recycle pool when it has any — the queue
         // used to allocate one fresh Vec per read
         let mut bufs: Vec<Vec<u8>> = {
@@ -692,19 +1162,46 @@ fn worker_loop(sh: Arc<QueueShared>) {
                 .collect()
         };
         let batch_ns = sh.dev.model_batch_ns(&reqs);
-        let share = batch_ns / wave.len() as u64;
-        let result = sh.dev.read_batch_into(&reqs, &mut bufs);
-        sh.batches.fetch_add(1, Ordering::Relaxed);
+        let share = if healthy.is_empty() {
+            0
+        } else {
+            batch_ns / healthy.len() as u64
+        };
+        let result = if reqs.is_empty() {
+            Ok(())
+        } else {
+            sh.batches.fetch_add(1, Ordering::Relaxed);
+            sh.dev.read_batch_into(&reqs, &mut bufs)
+        };
         let mut reclaimed: Vec<Vec<u8>> = Vec::new();
+        let mut backoff_ns = 0u64;
         {
             let mut q = sh.inner.lock().unwrap();
+            if q.slots[slot].generation != generation {
+                // the watchdog failed this wave over while we were out:
+                // every tag is already answered — drop the results and
+                // retire quietly
+                drop(q);
+                for buf in bufs {
+                    sh.push_free(buf);
+                }
+                return;
+            }
+            {
+                let s = &mut q.slots[slot];
+                s.busy_since = None;
+                s.tags.clear();
+            }
             q.inflight -= wave.len();
             if !wave_urgent {
                 q.inflight_nonurgent -= wave.len();
             }
+            let mut bufs_it = bufs.into_iter();
             match result {
                 Ok(()) => {
-                    for (&(tag, _, _, _), data) in wave.iter().zip(bufs) {
+                    for &i in &healthy {
+                        let tag = wave[i].0;
+                        let data = bufs_it.next().expect("buf per read");
                         if q.abandoned.remove(&tag) {
                             reclaimed.push(data); // reaper gave up
                             continue;
@@ -719,22 +1216,125 @@ fn worker_loop(sh: Arc<QueueShared>) {
                     }
                 }
                 Err(e) => {
-                    let msg = format!("{e:#}");
-                    reclaimed.extend(bufs);
-                    for &(tag, _, _, _) in &wave {
+                    // a real pread failure can never succeed on retry
+                    let err = IoError::Permanent(format!("{e:#}"));
+                    reclaimed.extend(bufs_it);
+                    for &i in &healthy {
+                        let tag = wave[i].0;
                         if q.abandoned.remove(&tag) {
                             continue;
                         }
-                        q.done.insert(tag, Err(msg.clone()));
+                        q.done.insert(tag, Err(err.clone()));
                     }
+                }
+            }
+            // Faulted reads: transients get a bounded retry ladder —
+            // re-enqueued (keeping their urgency class) with exponential
+            // backoff charged to the device; exhausted transients and
+            // permanent faults surface their typed error to the reaper.
+            for (i, verdict) in verdicts.into_iter().enumerate() {
+                let Some(err) = verdict else { continue };
+                let (tag, off, len, urgent, attempt) = wave[i];
+                if q.abandoned.remove(&tag) {
+                    continue;
+                }
+                if err.is_transient() && attempt + 1 < MAX_IO_ATTEMPTS {
+                    backoff_ns += RETRY_BACKOFF_NS << attempt;
+                    sh.retries.fetch_add(1, Ordering::Relaxed);
+                    if urgent {
+                        q.pending
+                            .push_front((tag, off, len, true, attempt + 1));
+                    } else {
+                        q.pending
+                            .push_back((tag, off, len, false, attempt + 1));
+                    }
+                } else {
+                    q.done.insert(tag, Err(err));
                 }
             }
         }
         for buf in reclaimed {
             sh.push_free(buf);
         }
+        sh.dev.charge_fault_ns(backoff_ns);
         sh.done_cv.notify_all();
-        sh.work_cv.notify_all(); // in-flight budget freed
+        sh.work_cv.notify_all(); // in-flight budget freed / retries queued
+    }
+}
+
+/// Watchdog: scans worker slots for one stuck out on a single wave past
+/// the wedge threshold. Recovery replaces the worker instead of letting
+/// every reaper time out: the wave's tags are failed over as
+/// [`IoError::Wedged`] (reapers unblock immediately and fall back), the
+/// slot's generation is bumped (turning the stuck thread into a zombie
+/// that exits on its own without touching shared state), and a fresh
+/// worker takes the slot.
+fn watchdog_loop(sh: Arc<QueueShared>) {
+    loop {
+        let timeout = Duration::from_nanos(
+            sh.wedge_timeout_ns.load(Ordering::Relaxed),
+        );
+        let poll = (timeout / 4)
+            .clamp(Duration::from_millis(10), Duration::from_secs(1));
+        let mut replace: Vec<(usize, u64)> = Vec::new();
+        {
+            let mut q = sh.inner.lock().unwrap();
+            if q.stop {
+                return;
+            }
+            let (guard, _) = sh.work_cv.wait_timeout(q, poll).unwrap();
+            q = guard;
+            if q.stop {
+                return;
+            }
+            let now = Instant::now();
+            let wedged: Vec<usize> = q
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| {
+                    s.busy_since
+                        .is_some_and(|t0| now.duration_since(t0) >= timeout)
+                })
+                .map(|(i, _)| i)
+                .collect();
+            for slot in wedged {
+                let (tags, urgent, new_gen) = {
+                    let s = &mut q.slots[slot];
+                    s.generation += 1;
+                    s.busy_since = None;
+                    (std::mem::take(&mut s.tags), s.urgent, s.generation)
+                };
+                q.inflight -= tags.len();
+                if !urgent {
+                    q.inflight_nonurgent -= tags.len();
+                }
+                for tag in tags {
+                    if q.abandoned.remove(&tag) {
+                        continue;
+                    }
+                    q.done.insert(
+                        tag,
+                        Err(IoError::Wedged(format!(
+                            "io worker {slot} wedged; wave failed over"
+                        ))),
+                    );
+                }
+                sh.wedged_recoveries.fetch_add(1, Ordering::Relaxed);
+                replace.push((slot, new_gen));
+            }
+        }
+        if replace.is_empty() {
+            continue;
+        }
+        for (slot, gen) in replace {
+            let fresh = spawn_worker(&sh, slot, gen);
+            // dropping the old handle detaches the zombie; it exits once
+            // it observes its stale generation
+            let _ = sh.handles.lock().unwrap().insert(slot, fresh);
+        }
+        sh.done_cv.notify_all();
+        sh.work_cv.notify_all();
     }
 }
 
@@ -1126,6 +1726,148 @@ mod tests {
         let q = ReadQueue::new(dev, 4);
         let _ = q.submit(0, 16); // unreaped on purpose
         drop(q); // must not deadlock
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn fault_spec_parses_every_knob() {
+        let plan = FaultPlan::parse(
+            "seed=7,transient=0.25:2,bad=4096+8192/65536+512,\
+             spike=0.5:2000000,stall=3:50000000",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert!((plan.transient_rate - 0.25).abs() < 1e-12);
+        assert_eq!(plan.transient_depth, 2);
+        assert_eq!(plan.bad_ranges, vec![(4096, 8192), (65536, 512)]);
+        assert!((plan.spike_rate - 0.5).abs() < 1e-12);
+        assert_eq!(plan.spike_ns, 2_000_000);
+        assert_eq!(plan.stall_after, Some(3));
+        assert_eq!(plan.stall_ns, 50_000_000);
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("transient").is_err());
+    }
+
+    #[test]
+    fn transient_faults_are_retried_to_identical_bytes() {
+        // rate 1.0: every read faults once (depth 1); the retry ladder
+        // must absorb it — the reaper sees clean, correct bytes, and the
+        // retry/fault counters record what happened underneath
+        let (dev, path) = temp_flash(8192, ClockMode::Modeled);
+        dev.inject_faults(FaultPlan {
+            transient_rate: 1.0,
+            ..FaultPlan::default()
+        });
+        let q = ReadQueue::new(dev, 4);
+        let tag = q.submit(100, 64);
+        let c = q.wait(tag).unwrap();
+        let want: Vec<u8> = (100..164).map(|i| (i % 251) as u8).collect();
+        assert_eq!(c.data, want);
+        let st = q.io_stats();
+        assert!(st.retries >= 1, "transient fault was not retried");
+        assert!(st.faults_injected >= 1);
+        assert_eq!(st.wedged_recoveries, 0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn exhausted_transients_surface_a_typed_transient_error() {
+        // depth 10 > the 3-attempt bound: the ladder gives up and the
+        // reaper gets the typed Transient error, not a stringly mess
+        let (dev, path) = temp_flash(8192, ClockMode::Modeled);
+        dev.inject_faults(FaultPlan {
+            transient_rate: 1.0,
+            transient_depth: 10,
+            ..FaultPlan::default()
+        });
+        let q = ReadQueue::new(dev, 4);
+        let tag = q.submit(0, 64);
+        match q.wait(tag) {
+            Err(IoError::Transient(_)) => {}
+            other => panic!("want Transient error, got {other:?}"),
+        }
+        assert_eq!(q.io_stats().retries, (MAX_IO_ATTEMPTS - 1) as u64);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn permanent_bad_range_fails_preload_but_urgent_recovers() {
+        let (dev, path) = temp_flash(8192, ClockMode::Modeled);
+        dev.inject_faults(FaultPlan {
+            bad_ranges: vec![(0, 1024)],
+            ..FaultPlan::default()
+        });
+        let q = ReadQueue::new(dev, 4);
+        // non-urgent (preload-class) read across the bad range: permanent
+        // failure, no retries wasted
+        let tag = q.submit(512, 64);
+        match q.wait_as(tag, IoClass::Loader) {
+            Err(IoError::Permanent(_)) => {}
+            other => panic!("want Permanent error, got {other:?}"),
+        }
+        assert_eq!(q.io_stats().retries, 0);
+        // urgent read of the SAME range recovers (modeled controller ECC
+        // retry) — this is what keeps the on-demand fallback viable
+        let tags = q.submit_many_urgent(&[(512, 64)]);
+        let c = q.wait(tags[0]).unwrap();
+        assert_eq!(c.data[0], (512 % 251) as u8);
+        // reads outside the range are untouched
+        let tag = q.submit(4096, 64);
+        assert!(q.wait_as(tag, IoClass::Loader).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn spikes_charge_the_timing_model() {
+        let (dev, path) = temp_flash(8192, ClockMode::Modeled);
+        dev.inject_faults(FaultPlan {
+            spike_rate: 1.0,
+            spike_ns: 5_000_000,
+            ..FaultPlan::default()
+        });
+        let (_, _, busy0) = dev.stats.snapshot();
+        let mut buf = [0u8; 64];
+        dev.read_into(0, &mut buf).unwrap();
+        let (_, _, busy1) = dev.stats.snapshot();
+        assert!(
+            busy1 - busy0 >= 5_000_000 + dev.model_read_ns(64),
+            "spike latency not charged to busy_ns"
+        );
+        assert!(dev.stats.faults_injected.load(Ordering::Relaxed) >= 1);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn watchdog_replaces_a_wedged_worker() {
+        // Timed mode so the injected stall genuinely blocks the worker.
+        // depth 1 → one worker; the one-shot stall wedges it mid-wave,
+        // the watchdog (armed with a short threshold) must fail the wave
+        // over as Wedged, count the recovery, and leave a fresh worker
+        // serving the queue.
+        let (dev, path) = temp_flash(8192, ClockMode::Timed);
+        dev.inject_faults(FaultPlan {
+            stall_after: Some(1),
+            stall_ns: 700_000_000, // 0.7s — far past the wedge threshold
+            ..FaultPlan::default()
+        });
+        let q = ReadQueue::new(dev, 1);
+        q.set_wedge_timeout(Duration::from_millis(50));
+        let tag = q.submit(0, 64);
+        let t0 = Instant::now();
+        match q.wait(tag) {
+            Err(IoError::Wedged(_)) => {}
+            other => panic!("want Wedged error, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "wedged wave failed over via the watchdog, not a long timeout"
+        );
+        let st = q.io_stats();
+        assert_eq!(st.wedged_recoveries, 1);
+        // the replacement worker serves the queue (stall was one-shot)
+        let tag = q.submit(100, 16);
+        let c = q.wait(tag).unwrap();
+        assert_eq!(c.data[0], (100 % 251) as u8);
         std::fs::remove_file(path).ok();
     }
 

@@ -7,6 +7,7 @@
 //!                     [--rebudget-hysteresis F] [--pressure SIZE@TOK,..]
 //!                     [--pressure-file PATH] [--max-seqs N]
 //!                     [--sched-queue-cap N] [--kv-block-tokens N]
+//!                     [--faults seed=1,transient=0.01:2,bad=OFF+LEN,...]
 //! activeflow search   --device pixel6 --budget-mb 1500 --geometry llama7b
 //! activeflow inspect  devices|artifacts|weights
 //! activeflow bench    <pareto|e2e|ablation|flash|preload-tradeoff|
@@ -135,6 +136,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
     }
 
     let mut eng = SwapEngine::open(&artifact_dir(args), opts)?;
+    if let Some(spec) = args.opt("faults") {
+        eng.inject_fault_spec(&spec)?;
+        eprintln!("[generate] fault injection armed: {spec}");
+    }
     let out = eng.generate(&toks, n, temp)?;
     println!("{}", tokenizer::decode(&out));
     let mem = eng.memory_report();
@@ -219,6 +224,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     rc.sched_queue_cap =
         args.opt_usize("sched-queue-cap", rc.sched_queue_cap)?;
     rc.kv_block_tokens = opts.kv_block_tokens;
+    rc.fault_spec = args.opt("faults").map(String::from);
+    if let Some(spec) = &rc.fault_spec {
+        // fail fast on a bad spec — before the engine worker spawns
+        activeflow::flash::FaultPlan::parse(spec)?;
+    }
     let cfg = ServerConfig {
         addr: args.opt_or("addr", "127.0.0.1:7071"),
         artifact_dir: artifact_dir(args),
@@ -229,6 +239,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         pressure_file: rc.pressure_file.clone(),
         max_seqs: rc.max_seqs,
         sched_queue_cap: rc.sched_queue_cap,
+        fault_spec: rc.fault_spec.clone(),
     };
     let served = serve(cfg)?;
     println!("[server] shut down after {served} requests");

@@ -59,6 +59,22 @@ pub struct DecodeMetrics {
     /// Read buffers served from the queue's recycle pool instead of a
     /// fresh allocation.
     pub io_buffers_recycled: u64,
+    // ---- fault-injection / recovery-ladder counters (flash + engine)
+    /// Faults the injection layer fired (transient + permanent + spikes
+    /// + stalls), from the flash device's counter.
+    pub faults_injected: u64,
+    /// Transient read errors retried inside the ReadQueue (invisible to
+    /// callers unless the retry budget is exhausted).
+    pub io_retries: u64,
+    /// Wedged ReadQueue workers detected and replaced by the watchdog.
+    pub wedged_recoveries: u64,
+    /// Rows the engine expected from a preload slab but had to fetch
+    /// via urgent on-demand reads instead (the degraded-mode row count).
+    pub fallback_rows: u64,
+    /// Op-family fetches where a preload part completed but published no
+    /// slab at all (failed/throttled part) — each is one degraded-mode
+    /// event, coarser than `fallback_rows`.
+    pub degraded_fallbacks: u64,
     // ---- runtime DRAM governor counters (governor module)
     /// Re-budget decisions applied to the live engine.
     pub rebudgets_applied: u64,
@@ -154,6 +170,11 @@ impl DecodeMetrics {
         self.io_wait_loader += other.io_wait_loader;
         self.io_wait_engine += other.io_wait_engine;
         self.io_buffers_recycled += other.io_buffers_recycled;
+        self.faults_injected += other.faults_injected;
+        self.io_retries += other.io_retries;
+        self.wedged_recoveries += other.wedged_recoveries;
+        self.fallback_rows += other.fallback_rows;
+        self.degraded_fallbacks += other.degraded_fallbacks;
         self.rebudgets_applied += other.rebudgets_applied;
         self.rebudgets_skipped += other.rebudgets_skipped;
         self.rebudget_rows_evicted += other.rebudget_rows_evicted;
@@ -288,6 +309,14 @@ mod tests {
         b.io_wait_loader = Duration::from_millis(1);
         b.io_wait_engine = Duration::from_millis(2);
         b.io_buffers_recycled = 3;
+        a.faults_injected = 2;
+        a.io_retries = 1;
+        a.fallback_rows = 4;
+        b.faults_injected = 3;
+        b.io_retries = 2;
+        b.wedged_recoveries = 1;
+        b.fallback_rows = 2;
+        b.degraded_fallbacks = 1;
         b.sched_waves = 4;
         b.sched_wave_time = Duration::from_millis(8);
         b.seqs_admitted = 3;
@@ -316,6 +345,11 @@ mod tests {
         assert_eq!(a.io_wait_engine, Duration::from_millis(6));
         assert_eq!(a.io_wait_total(), Duration::from_millis(9));
         assert_eq!(a.io_buffers_recycled, 8);
+        assert_eq!(a.faults_injected, 5);
+        assert_eq!(a.io_retries, 3);
+        assert_eq!(a.wedged_recoveries, 1);
+        assert_eq!(a.fallback_rows, 6);
+        assert_eq!(a.degraded_fallbacks, 1);
         assert_eq!(a.sched_waves, 4);
         assert_eq!(a.sched_wave_time, Duration::from_millis(8));
         assert_eq!(a.seqs_admitted, 3);

@@ -890,7 +890,11 @@ impl LoaderWorker {
                         continue;
                     }
                     match self.queue.wait_as(run.tag, IoClass::Loader) {
-                        Err(e) => failed = Some(e),
+                        // typed IoError: transients were already retried
+                        // inside the queue, so anything surfacing here
+                        // (permanent, exhausted, wedged) fails the part —
+                        // waiters fall back to on-demand loading
+                        Err(e) => failed = Some(e.into()),
                         Ok(c) => {
                             // loaded-I/O accounting happens here, per
                             // landed read — a failed part must not count

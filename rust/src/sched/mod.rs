@@ -218,6 +218,11 @@ pub struct SeqRequest {
     pub seed: u64,
     /// Optional stop token: generation retires early when sampled.
     pub eos: Option<u32>,
+    /// Per-request deadline in scheduler waves: when the sequence has
+    /// lived through this many stepped waves without finishing, it
+    /// retires with its **partial** stream (`timed_out` set) instead of
+    /// hanging its client behind slower peers. `None` = no deadline.
+    pub deadline_waves: Option<u64>,
 }
 
 /// `submit` verdict.
@@ -247,6 +252,10 @@ pub struct FinishedSeq {
     /// True when the sequence hit the KV capacity before its token
     /// budget (output truncated, not an error).
     pub truncated: bool,
+    /// True when the sequence's per-request deadline expired — the
+    /// outcome holds the partial stream generated so far (the server
+    /// reports `"status": "timeout"` for these).
+    pub timed_out: bool,
 }
 
 /// Cumulative scheduler counters (mirrored into [`DecodeMetrics`] and the
@@ -269,6 +278,13 @@ pub struct SchedStats {
     /// High-water mark of concurrently live sequences — the realized
     /// admitted concurrency (the paged-KV bench's acceptance metric).
     pub peak_active: u64,
+    /// Sequences retired by their per-request deadline (partial stream
+    /// delivered with `timed_out` set).
+    pub seqs_timed_out: u64,
+    /// Sequences whose step panicked: the panic was caught, the
+    /// sequence retired with an error, and the wave (and every peer
+    /// sequence) kept running.
+    pub seqs_panicked: u64,
 }
 
 impl SchedStats {
@@ -543,6 +559,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                     decode: p.prior_decode,
                     waves: p.waves,
                     truncated: false,
+                    timed_out: false,
                 });
             }
         }
@@ -559,7 +576,12 @@ impl<B: DecodeBackend> Scheduler<B> {
             // or preempt peers for a sequence about to leave.
             let will_step = {
                 let live = &self.run[i];
+                let deadline_hit = live
+                    .req
+                    .deadline_waves
+                    .is_some_and(|d| live.waves >= d);
                 live.out.len() < live.req.n_tokens
+                    && !deadline_hit
                     && self.backend.seq_pos(&live.seq)
                         < self.backend.max_seq_len()
             };
@@ -653,6 +675,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             decode: p.prior_decode,
             waves: p.waves,
             truncated: !fresh,
+            timed_out: false,
         }
     }
 
@@ -792,6 +815,15 @@ impl<B: DecodeBackend> Scheduler<B> {
         if live.out.len() >= live.req.n_tokens {
             return Some(Self::finish(live, None, false));
         }
+        // per-request deadline: the wave budget ran out — deliver the
+        // partial stream instead of letting a slow request hang its
+        // client behind faster peers
+        if live.req.deadline_waves.is_some_and(|d| live.waves >= d) {
+            let mut f = Self::finish(live, None, false);
+            f.timed_out = true;
+            self.stats.seqs_timed_out += 1;
+            return Some(f);
+        }
         // KV capacity: retire truncated rather than erroring the stream
         if self.backend.seq_pos(&live.seq) >= self.backend.max_seq_len() {
             return Some(Self::finish(live, None, true));
@@ -807,13 +839,37 @@ impl<B: DecodeBackend> Scheduler<B> {
         // steps must (sampling pattern is a function of fed alone, so
         // replay reproduces the original sampler stream exactly)
         let emit = live.fed + 1 >= p;
-        let sampled = match self.backend.step_seq(&mut live.seq, token, emit)
-        {
-            Ok(t) => t,
-            Err(e) => {
+        // catch_unwind: one sequence's panic (poisoned weights, a bug in
+        // an op kernel) retires THAT sequence with an error — the wave,
+        // its peer sequences, and the server worker all keep running.
+        // AssertUnwindSafe: a panicking backend may hold inconsistent
+        // per-sequence state, but we retire and `end_seq` that sequence
+        // immediately, never stepping it again.
+        let backend = &mut self.backend;
+        let stepped = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                backend.step_seq(&mut live.seq, token, emit)
+            }),
+        );
+        let sampled = match stepped {
+            Ok(Ok(t)) => t,
+            Ok(Err(e)) => {
                 return Some(Self::finish(
                     live,
                     Some(format!("{e:#}")),
+                    false,
+                ));
+            }
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic payload".into());
+                self.stats.seqs_panicked += 1;
+                return Some(Self::finish(
+                    live,
+                    Some(format!("sequence panicked: {msg}")),
                     false,
                 ));
             }
@@ -855,6 +911,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             decode: live.prior_decode + live.started.elapsed(),
             waves: live.waves,
             truncated,
+            timed_out: false,
         }
     }
 }
@@ -874,6 +931,7 @@ mod tests {
         max_seq: usize,
         metrics: DecodeMetrics,
         fail_on_pos: Option<usize>,
+        panic_on_pos: Option<usize>,
     }
 
     struct MockSeq {
@@ -908,6 +966,9 @@ mod tests {
             if self.fail_on_pos == Some(s.pos) {
                 anyhow::bail!("injected step failure");
             }
+            if self.panic_on_pos == Some(s.pos) {
+                panic!("injected step panic");
+            }
             self.log.push((s.seed, s.pos));
             s.pos += 1;
             Ok(sample.then(|| {
@@ -940,6 +1001,7 @@ mod tests {
             temp: 0.0,
             seed: prompt.first().copied().unwrap_or(0) as u64,
             eos: None,
+            deadline_waves: None,
         }
     }
 
@@ -1179,6 +1241,73 @@ mod tests {
         assert!(by_id[&1].outcome.is_ok());
         assert!(by_id[&2].outcome.is_err(), "failed seq reports its error");
         assert_eq!(s.backend().live, 0, "failed seq's KV released too");
+    }
+
+    #[test]
+    fn deadline_returns_partial_stream_within_budget() {
+        // the deadlined sequence retires with the PREFIX of the stream
+        // the same request produces without a deadline, inside its wave
+        // budget; an undeadlined peer is unaffected
+        let mut reference = Scheduler::new(Mock::new(256), SchedConfig::default());
+        reference.submit(req(&[1, 2], 50));
+        let full = drain(&mut reference)
+            .pop()
+            .unwrap()
+            .outcome
+            .unwrap();
+
+        let mut s = Scheduler::new(Mock::new(256), SchedConfig {
+            max_seqs: 2,
+            queue_cap: 4,
+        });
+        let mut deadlined = req(&[1, 2], 50);
+        deadlined.deadline_waves = Some(3);
+        s.submit(deadlined);
+        s.submit(req(&[2, 3], 5)); // peer without a deadline
+        let fin = drain(&mut s);
+        assert_eq!(fin.len(), 2);
+        let by_id: std::collections::HashMap<u64, &FinishedSeq> =
+            fin.iter().map(|f| (f.id, f)).collect();
+        let t = by_id[&1];
+        assert!(t.timed_out, "deadline expiry must be marked");
+        assert!(!t.truncated);
+        assert!(t.waves <= 3, "retired within the wave budget: {}", t.waves);
+        let partial = t.outcome.as_ref().unwrap();
+        assert!(!partial.is_empty(), "partial stream delivered");
+        assert_eq!(
+            partial[..],
+            full[..partial.len()],
+            "partial stream is a prefix of the undeadlined stream"
+        );
+        let peer = by_id[&2];
+        assert!(!peer.timed_out);
+        assert_eq!(peer.outcome.as_ref().unwrap().len(), 5);
+        assert_eq!(s.stats().seqs_timed_out, 1);
+        assert_eq!(s.backend().live, 0, "timed-out seq's KV released");
+    }
+
+    #[test]
+    fn panicking_step_retires_only_that_sequence() {
+        let mut mock = Mock::new(256);
+        mock.panic_on_pos = Some(2); // third step of any sequence panics
+        let mut s = Scheduler::new(mock, SchedConfig {
+            max_seqs: 2,
+            queue_cap: 4,
+        });
+        s.submit(req(&[1, 2], 1)); // 2 steps — never reaches the panic
+        s.submit(req(&[3, 4], 8)); // panics at its third step
+        let fin = drain(&mut s);
+        assert_eq!(fin.len(), 2, "both sequences answered");
+        let by_id: std::collections::HashMap<u64, &FinishedSeq> =
+            fin.iter().map(|f| (f.id, f)).collect();
+        assert!(by_id[&1].outcome.is_ok(), "peer survived the panic");
+        let err = by_id[&2].outcome.as_ref().unwrap_err();
+        assert!(
+            err.contains("injected step panic"),
+            "panic payload surfaced in the outcome: {err}"
+        );
+        assert_eq!(s.stats().seqs_panicked, 1);
+        assert_eq!(s.backend().live, 0, "panicked seq's KV released");
     }
 
     /// Paged-KV mock: a block pool in front of the deterministic Mock

@@ -76,6 +76,10 @@ pub struct ServerConfig {
     pub max_seqs: usize,
     /// Scheduler wait-queue bound (submissions past it are rejected).
     pub sched_queue_cap: usize,
+    /// Deterministic fault plan (`--faults`, [`crate::flash::FaultPlan`]
+    /// spec) armed on the engine's flash device at startup — the chaos
+    /// suite drives the whole recovery ladder through this knob.
+    pub fault_spec: Option<String>,
 }
 
 /// How often the worker re-reads the `--pressure-file` between waves
@@ -86,6 +90,9 @@ struct Request {
     prompt: Vec<u32>,
     n_tokens: usize,
     temp: f32,
+    /// Per-request deadline in scheduler waves (`"deadline_waves"`):
+    /// expiry returns the partial stream with `"status": "timeout"`.
+    deadline_waves: Option<u64>,
     enqueued: Instant,
     resp: Sender<Value>,
 }
@@ -127,6 +134,15 @@ struct ServerStats {
     /// fell back to on-demand. Non-zero here means the flash file or the
     /// preload requests are broken — previously only visible on stderr.
     parts_failed: AtomicU64,
+    // fault-injection / recovery-ladder mirror (flash + engine + sched):
+    // the `health` command summarizes these
+    faults_injected: AtomicU64,
+    io_retries: AtomicU64,
+    wedged_recoveries: AtomicU64,
+    fallback_rows: AtomicU64,
+    degraded_fallbacks: AtomicU64,
+    seqs_timed_out: AtomicU64,
+    seqs_panicked: AtomicU64,
     // runtime DRAM governor mirror: budget, pool ledger, decision counters
     budget_bytes: AtomicU64,
     ledger_cache_bytes: AtomicU64,
@@ -182,6 +198,11 @@ impl ServerStats {
         );
         st(&self.io_buffers_recycled, m.io_buffers_recycled);
         st(&self.parts_failed, parts_failed);
+        st(&self.faults_injected, m.faults_injected);
+        st(&self.io_retries, m.io_retries);
+        st(&self.wedged_recoveries, m.wedged_recoveries);
+        st(&self.fallback_rows, m.fallback_rows);
+        st(&self.degraded_fallbacks, m.degraded_fallbacks);
     }
 
     /// Refresh the scheduler mirror.
@@ -204,6 +225,8 @@ impl ServerStats {
         w(&self.sched_wave_us, st.wave_time.as_micros() as u64);
         w(&self.max_active_seqs, max_active as u64);
         w(&self.kv_preemptions_oom, st.kv_preempted_oom);
+        w(&self.seqs_timed_out, st.seqs_timed_out);
+        w(&self.seqs_panicked, st.seqs_panicked);
         self.decode_ns
             .store(st.wave_time.as_nanos() as u64, Ordering::Relaxed);
     }
@@ -280,8 +303,13 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
         None => None,
     };
     let pressure_file = cfg.pressure_file.clone();
+    let fault_spec = cfg.fault_spec.clone();
     let worker = std::thread::spawn(move || -> Result<()> {
         let mut engine = SwapEngine::open(&artifact_dir, cfg.opts)?;
+        if let Some(spec) = &fault_spec {
+            engine.inject_fault_spec(spec)?;
+            eprintln!("[server] fault injection armed: {spec}");
+        }
         // interleaved decode: every sequence's next-token group-0 chain
         // loads while its peers compute
         engine.set_cross_token_preload(true);
@@ -311,9 +339,19 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
         let mut sched = Scheduler::new(engine, sched_cfg);
         sched.set_max_active(gov.max_seqs());
         // response routing: sched seq id → (reply channel, time already
-        // spent queueing before the scheduler saw the request)
-        let mut waiting: HashMap<u64, (Sender<Value>, Duration)> =
-            HashMap::new();
+        // spent queueing before the scheduler saw the request, and the
+        // engine's failure counters at submit time — the finish path
+        // diffs against them for per-request failure detail. The
+        // counters are engine-global, so a delta attributes every
+        // failure that happened DURING the request's lifetime (peers
+        // included): best-effort attribution, exact when serial.
+        struct Waiter {
+            resp: Sender<Value>,
+            pre_queue: Duration,
+            parts_failed0: u64,
+            degraded0: u64,
+        }
+        let mut waiting: HashMap<u64, Waiter> = HashMap::new();
         let mut seed_counter = 0u64;
         let mut last_parts_failed = 0u64;
         // available-DRAM file source: throttled poll state (dedupe on the
@@ -353,17 +391,27 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
                     Job::Decode(r) => {
                         seed_counter += 1;
                         let pre_queue = r.enqueued.elapsed();
+                        let parts_failed0 =
+                            sched.backend().loader_stats().parts_failed;
+                        let degraded0 =
+                            sched.backend().metrics.degraded_fallbacks;
                         let outcome = sched.submit(SeqRequest {
                             prompt: r.prompt,
                             n_tokens: r.n_tokens,
                             temp: r.temp,
                             seed: seed_counter,
                             eos: None,
+                            deadline_waves: r.deadline_waves,
                         });
                         match outcome {
                             SubmitOutcome::Admitted { id }
                             | SubmitOutcome::Queued { id, .. } => {
-                                waiting.insert(id, (r.resp, pre_queue));
+                                waiting.insert(id, Waiter {
+                                    resp: r.resp,
+                                    pre_queue,
+                                    parts_failed0,
+                                    degraded0,
+                                });
                             }
                             SubmitOutcome::Rejected { reason } => {
                                 let _ = r.resp.send(obj(vec![(
@@ -383,9 +431,20 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
             let finished = sched.wave();
             let any_finished = !finished.is_empty();
             for f in finished {
-                let Some((resp, pre_queue)) = waiting.remove(&f.id) else {
+                let Some(w) = waiting.remove(&f.id) else {
                     continue;
                 };
+                let (resp, pre_queue) = (w.resp, w.pre_queue);
+                let parts_failed_delta = sched
+                    .backend()
+                    .loader_stats()
+                    .parts_failed
+                    .saturating_sub(w.parts_failed0);
+                let degraded_delta = sched
+                    .backend()
+                    .metrics
+                    .degraded_fallbacks
+                    .saturating_sub(w.degraded0);
                 let queue_t = pre_queue + f.queue_wait;
                 let v = match f.outcome {
                     Err(e) => obj(vec![("error", s(&e))]),
@@ -414,6 +473,21 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
                             ),
                             ("waves", num(f.waves as f64)),
                             ("truncated", Value::Bool(f.truncated)),
+                            (
+                                "status",
+                                s(if f.timed_out { "timeout" } else { "ok" }),
+                            ),
+                            // per-request failure detail: preload parts
+                            // that failed and degraded-mode fetches the
+                            // engine absorbed while this request was live
+                            (
+                                "parts_failed_delta",
+                                num(parts_failed_delta as f64),
+                            ),
+                            (
+                                "degraded_fallbacks",
+                                num(degraded_delta as f64),
+                            ),
                             (
                                 "toks_per_sec",
                                 num(toks.len() as f64
@@ -617,6 +691,11 @@ fn apply_rebudget(
     }
 }
 
+/// Input hardening: a request line larger than this answers with an
+/// error (and the rest of the line is drained in bounded chunks) instead
+/// of buffering unbounded client input.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
 fn handle_conn(
     conn: TcpStream,
     job_tx: Sender<Job>,
@@ -624,9 +703,55 @@ fn handle_conn(
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
     let mut writer = conn.try_clone()?;
-    let reader = BufReader::new(conn);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(conn);
+    loop {
+        let mut line = String::new();
+        // read at most MAX+1 bytes of the line: enough to detect the
+        // overflow without storing an attacker-sized buffer
+        match (&mut reader)
+            .take(MAX_LINE_BYTES as u64 + 1)
+            .read_line(&mut line)
+        {
+            Ok(0) => break, // EOF — client disconnected
+            Ok(_) => {}
+            Err(e) => {
+                // invalid UTF-8 or a mid-line disconnect: this client is
+                // done, but the failure stays on this connection thread
+                respond(
+                    &mut writer,
+                    &obj(vec![("error", s(&format!("bad line: {e}")))]),
+                )
+                .ok();
+                break;
+            }
+        }
+        if line.len() > MAX_LINE_BYTES {
+            // drain the rest of the oversized line in bounded chunks so
+            // the NEXT line on this connection still parses (a line that
+            // hit the cap but still ends in '\n' is already complete —
+            // draining would eat the following request)
+            while !line.ends_with('\n') {
+                let buf = reader.fill_buf()?;
+                if buf.is_empty() {
+                    break;
+                }
+                match buf.iter().position(|&b| b == b'\n') {
+                    Some(i) => {
+                        reader.consume(i + 1);
+                        break;
+                    }
+                    None => {
+                        let n = buf.len();
+                        reader.consume(n);
+                    }
+                }
+            }
+            respond(
+                &mut writer,
+                &obj(vec![("error", s("request line too long"))]),
+            )?;
+            continue;
+        }
         if line.trim().is_empty() {
             continue;
         }
@@ -708,6 +833,14 @@ fn handle_conn(
                             g(&stats.io_buffers_recycled),
                         ),
                         ("parts_failed", g(&stats.parts_failed)),
+                        // fault injection & recovery ladder
+                        ("faults_injected", g(&stats.faults_injected)),
+                        ("io_retries", g(&stats.io_retries)),
+                        ("wedged_recoveries", g(&stats.wedged_recoveries)),
+                        ("fallback_rows", g(&stats.fallback_rows)),
+                        ("degraded_fallbacks", g(&stats.degraded_fallbacks)),
+                        ("seqs_timed_out", g(&stats.seqs_timed_out)),
+                        ("seqs_panicked", g(&stats.seqs_panicked)),
                         // runtime DRAM governor: budget, pools, decisions
                         ("budget_bytes", g(&stats.budget_bytes)),
                         ("ledger_cache_bytes", g(&stats.ledger_cache_bytes)),
@@ -756,6 +889,36 @@ fn handle_conn(
                     ]),
                 )?;
             }
+            Some("health") => {
+                // recovery-ladder summary: is the engine absorbing
+                // faults, and at what cost? `degraded` flips when any
+                // rung of the ladder has fired — preload parts failed,
+                // a worker was replaced, or the engine served rows via
+                // urgent fallback.
+                let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+                let degraded = g(&stats.parts_failed) > 0
+                    || g(&stats.wedged_recoveries) > 0
+                    || g(&stats.degraded_fallbacks) > 0
+                    || g(&stats.seqs_panicked) > 0;
+                let n = |a: &AtomicU64| num(g(a) as f64);
+                respond(
+                    &mut writer,
+                    &obj(vec![
+                        ("ok", Value::Bool(true)),
+                        ("degraded", Value::Bool(degraded)),
+                        ("faults_injected", n(&stats.faults_injected)),
+                        ("io_retries", n(&stats.io_retries)),
+                        ("wedged_recoveries", n(&stats.wedged_recoveries)),
+                        ("parts_failed", n(&stats.parts_failed)),
+                        ("fallback_rows", n(&stats.fallback_rows)),
+                        ("degraded_fallbacks", n(&stats.degraded_fallbacks)),
+                        ("seqs_timed_out", n(&stats.seqs_timed_out)),
+                        ("seqs_panicked", n(&stats.seqs_panicked)),
+                        ("seqs_active", n(&stats.seqs_active)),
+                        ("seqs_waiting", n(&stats.seqs_waiting)),
+                    ]),
+                )?;
+            }
             Some("set_budget") => {
                 // Elastic memory, live: the worker re-runs the §4.1
                 // search under the new M_max and applies the result to
@@ -795,11 +958,17 @@ fn handle_conn(
                     .get("temp")
                     .and_then(Value::as_f64)
                     .unwrap_or(0.0) as f32;
+                let deadline_waves = req
+                    .get("deadline_waves")
+                    .and_then(Value::as_f64)
+                    .filter(|&d| d >= 1.0)
+                    .map(|d| d as u64);
                 let (tx, rx) = channel();
                 let _ = job_tx.send(Job::Decode(Request {
                     prompt,
                     n_tokens,
                     temp,
+                    deadline_waves,
                     enqueued: Instant::now(),
                     resp: tx,
                 }));

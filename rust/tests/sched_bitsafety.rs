@@ -140,6 +140,7 @@ fn interleaved_sequence_matches_solo_across_level_switch() {
         temp: 0.0,
         seed: 7,
         eos: None,
+        deadline_waves: None,
     };
     assert!(matches!(
         sched.submit(mk(&prompt_a)),

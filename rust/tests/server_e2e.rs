@@ -47,6 +47,7 @@ fn serve_generate_stats_shutdown() {
         pressure_file: None,
         max_seqs: 2,
         sched_queue_cap: 16,
+        fault_spec: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     // wait for bind
@@ -202,6 +203,7 @@ fn two_concurrent_clients_decode_interleaved() {
         pressure_file: None,
         max_seqs: 2,
         sched_queue_cap: 16,
+        fault_spec: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![
@@ -300,6 +302,7 @@ fn set_budget_is_not_starved_behind_a_long_generation() {
         pressure_file: None,
         max_seqs: 2,
         sched_queue_cap: 16,
+        fault_spec: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let warm = obj(vec![
@@ -394,6 +397,7 @@ fn set_budget_rebudgets_live_engine_mid_session() {
         pressure_file: None,
         max_seqs: 2,
         sched_queue_cap: 16,
+        fault_spec: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![
@@ -469,6 +473,140 @@ fn set_budget_rebudgets_live_engine_mid_session() {
         stats.get("ledger_compute_bytes").unwrap().as_f64().unwrap() > 0.0,
         "compute pool must be non-empty"
     );
+
+    let bye =
+        client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();
+    assert_eq!(bye.get("ok"), Some(&Value::Bool(true)));
+    server.join().unwrap();
+}
+
+#[test]
+fn hostile_input_leaves_the_worker_serving() {
+    // Input hardening: a malformed JSON line, an oversized request line,
+    // and a client that disconnects mid-response must each leave the
+    // server able to serve the next (well-behaved) client.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let Some(dir) = artifacts() else { return };
+    let addr = "127.0.0.1:17075";
+    let cfg = ServerConfig {
+        addr: addr.into(),
+        artifact_dir: dir,
+        opts: EngineOptions {
+            sparsity: 0.6,
+            group_size: 4,
+            swap_mode: SwapMode::Preload,
+            cache_bytes: 256 * 1024,
+            cache_policy: CachePolicy::Contextual,
+            device: &PIXEL6,
+            clock: ClockMode::Modeled,
+            bw_scale: 1.0,
+            trigger: PreloadTrigger::FirstLayer,
+            io_queue_depth: 0,
+            kv_block_tokens: 16,
+        },
+        governor: GovernorConfig::default(),
+        initial_budget: None,
+        pressure_schedule: None,
+        pressure_file: None,
+        max_seqs: 2,
+        sched_queue_cap: 16,
+        fault_spec: None,
+    };
+    let server = std::thread::spawn(move || serve(cfg).unwrap());
+    let req = obj(vec![
+        ("prompt", s("the sparse model ")),
+        ("n_tokens", num(4.0)),
+        ("temp", num(0.0)),
+    ]);
+    let mut up = false;
+    for _ in 0..60 {
+        if client_roundtrip(addr, &req).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    assert!(up, "server never came up");
+
+    // 1) malformed JSON: an error response on the SAME connection, and
+    //    the next line on that connection still parses
+    {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"{not json at all\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = activeflow::util::json::parse(line.trim()).unwrap();
+        assert!(
+            v.get("error").unwrap().as_str().unwrap().contains("bad json"),
+            "{v:?}"
+        );
+        let mut good = req.to_string();
+        good.push('\n');
+        conn.write_all(good.as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let v = activeflow::util::json::parse(line.trim()).unwrap();
+        assert!(
+            v.get("tokens").is_some(),
+            "connection must survive a bad line: {v:?}"
+        );
+    }
+
+    // 2) oversized request line: bounded rejection, same connection
+    //    keeps working afterwards
+    {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let huge = vec![b'x'; (1 << 20) + 4096];
+        conn.write_all(&huge).unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = activeflow::util::json::parse(line.trim()).unwrap();
+        assert!(
+            v.get("error")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .contains("too long"),
+            "{v:?}"
+        );
+        let mut good = req.to_string();
+        good.push('\n');
+        conn.write_all(good.as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let v = activeflow::util::json::parse(line.trim()).unwrap();
+        assert!(
+            v.get("tokens").is_some(),
+            "connection must survive an oversized line: {v:?}"
+        );
+    }
+
+    // 3) client disconnects mid-response: fire a decode and drop the
+    //    socket without reading the answer
+    {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut line = req.to_string();
+        line.push('\n');
+        conn.write_all(line.as_bytes()).unwrap();
+        drop(conn); // gone before the response is written
+    }
+    // the worker must still answer the next client
+    let r = client_roundtrip(addr, &req).unwrap();
+    assert!(r.get("error").is_none(), "post-disconnect decode: {r:?}");
+    assert_eq!(r.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok");
+
+    // health endpoint: fault-free serving reports !degraded
+    let h = client_roundtrip(addr, &obj(vec![("cmd", s("health"))])).unwrap();
+    assert_eq!(h.get("ok"), Some(&Value::Bool(true)));
+    assert_eq!(h.get("degraded"), Some(&Value::Bool(false)), "{h:?}");
+    assert_eq!(h.get("faults_injected").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(h.get("wedged_recoveries").unwrap().as_f64().unwrap(), 0.0);
 
     let bye =
         client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();

@@ -34,6 +34,9 @@ WATCHED = [
     "io_wait_loader_us",
     "io_wait_engine_us",
     "io_buffers_recycled",
+    "faults_injected",
+    "retries",
+    "fallback_rows",
 ]
 
 
