@@ -2,7 +2,7 @@
 # python side (L2/L1) only runs at artifact-build time.
 
 .PHONY: build test artifacts bench-smoke bench-governor bench-sched \
-        bench-kv check-perf chaos ci
+        bench-kv check-perf trace-smoke chaos ci
 
 build:
 	cd rust && cargo build --release
@@ -80,6 +80,23 @@ check-perf:
 		--sched BENCH_sched.prev.json BENCH_sched.json \
 		--kv BENCH_kv.prev.json BENCH_kv.json
 
+# Flight-recorder smoke (PERF.md §Observability): validate the committed
+# trace fixtures (no toolchain needed), then produce a real Chrome trace
+# from the interleaved-scheduler bench and validate it — including the
+# "≥1 preload_part span overlaps a compute span" pipeline proof. The
+# bench self-skips without artifacts, in which case no trace is written
+# and only the fixture self-test gates.
+trace-smoke:
+	@python3 scripts/check_trace.py --self-test
+	cd rust && cargo bench --bench sched_interleave -- \
+		--out ../BENCH_sched.trace.json --trace-out ../trace_sched.json
+	@rm -f BENCH_sched.trace.json
+	@if [ -f trace_sched.json ]; then \
+		python3 scripts/check_trace.py trace_sched.json \
+			--require-overlap; \
+	else \
+		echo "trace-smoke: no trace written (artifacts missing?)"; fi
+
 # Chaos suite (rust/tests/chaos.rs) under three seeded fault schedules:
 # transient faults must be token-bit-identical to fault-free, permanent
 # faults must complete every request via on-demand fallback, and
@@ -92,8 +109,9 @@ chaos:
 	done
 
 # One-shot CI entry point: build → test → chaos schedules → perf smoke
-# (decode + scheduler + paged-KV points) → regression gates. Needs
-# `make artifacts` to have run once; the benches and the chaos suite
-# self-skip without artifacts, leaving the gates inert. Runs on GitHub
-# Actions via .github/workflows/ci.yml.
-ci: build test chaos bench-smoke bench-sched bench-kv check-perf
+# (decode + scheduler + paged-KV points) → regression gates → trace
+# smoke. Needs `make artifacts` to have run once; the benches and the
+# chaos suite self-skip without artifacts, leaving the gates inert.
+# Runs on GitHub Actions via .github/workflows/ci.yml.
+ci: build test chaos bench-smoke bench-sched bench-kv check-perf \
+    trace-smoke

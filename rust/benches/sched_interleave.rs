@@ -16,10 +16,16 @@
 //!      serial-baseline aggregate;
 //!   2. a `set_budget` issued mid-generation is applied within one
 //!      scheduler wave (engine reconfigured while the sequence is still
-//!      live — not deferred to end-of-request).
+//!      live — not deferred to end-of-request);
+//!   3. the flight-recorder trace of the interleaved run contains at
+//!      least one loader `preload_part` span that overlaps an engine
+//!      compute span (`step`/`layer_fetch`) on the shared trace clock —
+//!      the observable form of "I/O rides under compute".
 //!
 //! Writes `BENCH_sched.json` (`--out PATH`) for the `check-perf --sched`
-//! trajectory gate. Requires `make artifacts`; self-skips otherwise.
+//! trajectory gate, and a Chrome trace-event JSON (`--trace-out PATH`)
+//! for `scripts/check_trace.py` / `make trace-smoke`. Requires
+//! `make artifacts`; self-skips otherwise.
 
 mod support;
 
@@ -36,6 +42,7 @@ use activeflow::governor::{DramGovernor, GovernorConfig, RebudgetTrigger};
 use activeflow::layout::AwgfFile;
 use activeflow::sched::{SchedConfig, Scheduler, SeqRequest, SubmitOutcome};
 use activeflow::tokenizer;
+use activeflow::trace::SpanKind;
 use activeflow::util::json::{num, obj, s, Value};
 
 const N_SEQS: usize = 3;
@@ -61,12 +68,20 @@ fn opts() -> EngineOptions {
     }
 }
 
-fn out_path() -> String {
+fn flag_path(flag: &str, default: &str) -> String {
     let args: Vec<String> = std::env::args().collect();
     args.iter()
-        .position(|a| a == "--out")
+        .position(|a| a == flag)
         .and_then(|i| args.get(i + 1).cloned())
-        .unwrap_or_else(|| "../BENCH_sched.json".into())
+        .unwrap_or_else(|| default.into())
+}
+
+fn out_path() -> String {
+    flag_path("--out", "../BENCH_sched.json")
+}
+
+fn trace_out_path() -> String {
+    flag_path("--trace-out", "../trace_sched.json")
 }
 
 fn req(prompt: &[u32], seed: u64) -> SeqRequest {
@@ -103,6 +118,10 @@ fn main() {
     let mut engine = SwapEngine::open(&dir, opts()).unwrap();
     engine.set_cross_token_preload(true);
     engine.generate(&prompt, 4, 0.0).unwrap(); // same warmup
+    // flight recorder on for the measured run only (warmup spans would
+    // muddy the overlap check below)
+    engine.trace_handle().set_enabled(true);
+    engine.trace_handle().clear();
     let mut sched = Scheduler::new(engine, SchedConfig {
         max_seqs: N_SEQS,
         queue_cap: 8,
@@ -128,6 +147,49 @@ fn main() {
     let inter_io_wait = sched.backend().metrics.io_wait_engine;
     let ct_preloads = sched.backend().metrics.cross_token_preloads;
     assert!(ct_preloads > 0, "cross-token preload chains never issued");
+    let itl_p99_us = sched.backend().metrics.h_itl_us.p99();
+
+    // ---- flight recorder: dump the trace and prove I/O-under-compute
+    let trace = sched.backend().trace_handle().clone();
+    trace.set_enabled(false);
+    let spans = trace.snapshot_spans();
+    let (_len, _cap, dropped) = trace.ring_stats();
+    assert_eq!(dropped, 0, "trace ring overflowed during the bench run");
+    let preloads: Vec<_> = spans
+        .iter()
+        .filter(|e| e.kind == SpanKind::PreloadPart)
+        .collect();
+    let computes: Vec<_> = spans
+        .iter()
+        .filter(|e| {
+            e.kind == SpanKind::Step || e.kind == SpanKind::LayerFetch
+        })
+        .collect();
+    assert!(!preloads.is_empty(), "no preload_part spans recorded");
+    assert!(!computes.is_empty(), "no compute spans recorded");
+    let overlaps = preloads.iter().any(|p| {
+        computes.iter().any(|c| {
+            p.t0_us < c.t0_us + c.dur_us && c.t0_us < p.t0_us + p.dur_us
+        })
+    });
+    assert!(
+        overlaps,
+        "no preload_part span overlaps a compute span — the loader is \
+         not running under compute ({} preload spans, {} compute spans)",
+        preloads.len(),
+        computes.len()
+    );
+    let tpath = trace_out_path();
+    let mut ttext = activeflow::trace::chrome_trace(&trace).to_string();
+    ttext.push('\n');
+    std::fs::write(&tpath, &ttext).unwrap();
+    println!(
+        "trace: {} spans ({} preload, {} compute), overlap verified; \
+         wrote {tpath}",
+        spans.len(),
+        preloads.len(),
+        computes.len()
+    );
 
     println!(
         "aggregate decode ({N_SEQS} seqs x {TOKENS} toks, bw_scale \
@@ -231,6 +293,7 @@ fn main() {
             num(st.avg_wave().as_secs_f64() * 1e6),
         ),
         ("cross_token_preloads", num(ct_preloads as f64)),
+        ("itl_p99_us", num(itl_p99_us as f64)),
         (
             "io_wait_engine_us_serial",
             num(serial_io_wait.as_secs_f64() * 1e6),

@@ -528,6 +528,7 @@ pub fn bench_smoke(args: &Args) -> Result<()> {
     let m = eng.metrics.clone();
     let mem = eng.memory_report();
     let loader = eng.loader_stats();
+    let (_io_loader, io_engine) = eng.io_wait_histos();
     let e = metrics::energy(dev, &m);
 
     let v = obj(vec![
@@ -569,6 +570,12 @@ pub fn bench_smoke(args: &Args) -> Result<()> {
             num(m.io_wait_engine.as_secs_f64() * 1e6),
         ),
         ("io_buffers_recycled", num(m.io_buffers_recycled as f64)),
+        // flight-recorder percentiles (log2-bucket histograms; PERF.md
+        // §Observability) — check-perf gates the ITL tail
+        ("itl_p50_us", num(m.h_itl_us.p50() as f64)),
+        ("itl_p95_us", num(m.h_itl_us.p95() as f64)),
+        ("itl_p99_us", num(m.h_itl_us.p99() as f64)),
+        ("io_wait_engine_p99_us", num(io_engine.p99() as f64)),
         ("loader_chunks_read", num(loader.chunks_read as f64)),
         ("loader_bytes_read", num(loader.bytes_read as f64)),
         ("loader_parts_failed", num(loader.parts_failed as f64)),

@@ -49,7 +49,7 @@ use crate::config::{ArtifactConfig, RuntimeConfig, SparsityLevel};
 use crate::costmodel::Geometry;
 use crate::device;
 use crate::flash::{ClockMode, FlashDevice, IoClass, ReadQueue};
-use crate::governor::PoolLedger;
+use crate::governor::{PoolLedger, RebudgetDecision};
 use crate::kvpool::{KvPool, KvPoolStats, SeqKv};
 use crate::layout::{quant, AwgfFile, OpKind, TensorId};
 use crate::metrics::DecodeMetrics;
@@ -60,6 +60,10 @@ use crate::pipeline::{
 use crate::preload::{ActSite, SimilarityTracker};
 use crate::runtime::{lit_f32, lit_i32_scalar, lit_to_f32, Runtime};
 use crate::sparsity;
+use crate::trace::{
+    Histo, JournalEntry, SpanEvent, SpanKind, TraceBuf, TraceHandle,
+    TraceShared, DEFAULT_RING_CAP, TID_ENGINE, TID_GOVERNOR,
+};
 use crate::util::rng::Xorshift;
 
 /// How the engine schedules weight movement.
@@ -246,10 +250,18 @@ pub struct SwapEngine {
     /// including freed ones parked for reuse), never `max_seq`-window
     /// reservations.
     kvpool: KvPool,
-    /// Token-length samples of ended sequences (the governor's
-    /// expected-occupancy input: mean tokens per sequence, block-rounded).
-    kv_seq_tokens_sum: u64,
-    kv_seqs_ended: u64,
+    /// Token-length distribution of ended sequences (the governor's
+    /// expected-occupancy input: p90 tokens per sequence, block-rounded
+    /// — a mean here underestimates the long mode of bimodal traffic
+    /// and triggers OOM-preemption churn).
+    kv_len_histo: Histo,
+    /// Flight-recorder shared state: span ring + governor journal. Always
+    /// constructed (handles are threaded into the loader and I/O workers
+    /// at spawn time); recording is off until [`TraceShared::set_enabled`].
+    trace: TraceHandle,
+    /// The engine thread's local span buffer (lock-free push on the
+    /// decode hot path, drained into the shared ring at step boundaries).
+    tbuf: TraceBuf,
     seq_id_counter: u64,
     /// Issue a group-0 preload for each sequence's next token at the end
     /// of every step (scheduler mode: the chain overlaps with *other*
@@ -328,10 +340,22 @@ impl SwapEngine {
             rt.load(&name)?;
         }
 
+        // one flight recorder for the whole decode stack: the loader and
+        // I/O workers get handles at spawn so their spans land in the
+        // same ring (and on the same clock) as the engine's
+        let trace = TraceShared::new(DEFAULT_RING_CAP);
         // one queue for both read paths: loader preloads and the engine's
         // on-demand misses share waves and the in-flight bound
-        let queue = ReadQueue::new(flash.clone(), opts.io_queue_depth);
-        let pipe = Pipeline::spawn_with_queue(awgf.clone(), queue.clone());
+        let queue = ReadQueue::new_traced(
+            flash.clone(),
+            opts.io_queue_depth,
+            Some(trace.clone()),
+        );
+        let pipe = Pipeline::spawn_with_queue_traced(
+            awgf.clone(),
+            queue.clone(),
+            Some(trace.clone()),
+        );
         let d = m.d_model;
         let dff = m.d_ff;
         let lm_head_lit =
@@ -343,8 +367,9 @@ impl SwapEngine {
             solo: None,
             active_seqs: 0,
             kvpool,
-            kv_seq_tokens_sum: 0,
-            kv_seqs_ended: 0,
+            kv_len_histo: Histo::new(),
+            tbuf: TraceBuf::new(trace.clone(), TID_ENGINE),
+            trace,
             seq_id_counter: 0,
             cross_token: false,
             lm_head_lit,
@@ -439,8 +464,7 @@ impl SwapEngine {
             self.pipe.retire_group(p);
         }
         if record_len && seq.kv.pos > 0 {
-            self.kv_seq_tokens_sum += seq.kv.pos as u64;
-            self.kv_seqs_ended += 1;
+            self.kv_len_histo.record(seq.kv.pos as u64);
         }
         seq.kv.release(&mut self.kvpool);
         self.active_seqs = self.active_seqs.saturating_sub(1);
@@ -462,19 +486,20 @@ impl SwapEngine {
             * self.kvpool.block_bytes()
     }
 
-    /// Expected KV bytes per sequence under observed traffic: the running
-    /// mean token length of ended sequences, block-rounded — `max_seq`
-    /// until the first sequence ends. The governor prices `M_kv` with
-    /// this, so `max_seqs` reflects *expected* occupancy and short-request
+    /// Expected KV bytes per sequence under observed traffic: the **p90**
+    /// token length of ended sequences, block-rounded — `max_seq` until
+    /// the first sequence ends. The governor prices `M_kv` with this, so
+    /// `max_seqs` reflects *expected* occupancy and short-request
     /// workloads admit multiplicatively more concurrency than the
-    /// whole-window charge allowed.
+    /// whole-window charge allowed. p90 (not the mean): under bimodal
+    /// traffic — many short chats, a few long documents — the mean sits
+    /// between the modes and prices the pool for sequences that do not
+    /// exist, so every long arrival lands in OOM preemption; p90 prices
+    /// for the long mode as soon as it is a ≥10% minority, while a
+    /// mostly-short mix still collapses to the short mode.
     pub fn kv_expected_seq_bytes(&self) -> u64 {
-        let expected = if self.kv_seqs_ended > 0 {
-            ((self.kv_seq_tokens_sum / self.kv_seqs_ended) as usize)
-                .clamp(1, self.cfg.model.max_seq)
-        } else {
-            self.cfg.model.max_seq
-        };
+        let expected =
+            expected_tokens_p90(&self.kv_len_histo, self.cfg.model.max_seq);
         self.kvpool.blocks_for(expected) as u64 * self.kvpool.block_bytes()
     }
 
@@ -737,6 +762,9 @@ impl SwapEngine {
             ));
         }
         let t_start = Instant::now();
+        // trace-clock step start; None (no call, no allocation) when the
+        // recorder is off — the default — keeping the hot path untouched
+        let t_step = self.tbuf.enabled().then(|| self.tbuf.now_us());
         let busy0 = self.rt.total_busy();
         let (_, _, flash_ns0) = self.flash.stats.snapshot();
         let io0 = self.queue.io_stats();
@@ -768,6 +796,8 @@ impl SwapEngine {
                 (l_hi..((g + 2) * n).min(m.n_layers)).collect();
 
             for l in l_lo..l_hi {
+                let t_layer =
+                    self.tbuf.enabled().then(|| self.tbuf.now_us());
                 let first = match self.opts.trigger {
                     PreloadTrigger::FirstLayer => l == l_lo,
                     PreloadTrigger::LastLayer => l + 1 == l_hi,
@@ -951,6 +981,13 @@ impl SwapEngine {
                 self.tmp = ffv;
                 lit_to_f32(&down[0], &mut self.rowf32)?;
                 model::add_inplace(&mut x, &self.rowf32[..m.d_model]);
+
+                if let Some(t0) = t_layer {
+                    // one span per layer: fetch + compute of all four
+                    // sites (a = layer, b = sequence id)
+                    self.tbuf.span(SpanKind::LayerFetch, t0, l as u64,
+                                   seq.id);
+                }
             }
 
             // (peak M_cl is folded in once per token from the loader's
@@ -996,6 +1033,15 @@ impl SwapEngine {
         seq.kv.pos += 1;
         self.metrics.tokens += 1;
         self.metrics.wall += t_start.elapsed();
+        self.metrics
+            .h_itl_us
+            .record(t_start.elapsed().as_micros() as u64);
+        if let Some(t0) = t_step {
+            self.tbuf.span(SpanKind::Step, t0, seq.id, pos as u64);
+        }
+        // step boundary: drain the engine's local span buffer into the
+        // shared ring (no-op when tracing is off — the buffer is empty)
+        self.tbuf.flush();
         self.metrics.compute_busy += self.rt.total_busy() - busy0;
         let (_, _, flash_ns1) = self.flash.stats.snapshot();
         self.metrics.flash_busy +=
@@ -1231,6 +1277,9 @@ impl SwapEngine {
 
             // phase 3: on-demand small reads for whatever remains (~5%)
             if !self.ondemand.is_empty() {
+                let t_od = Instant::now();
+                let t_od_us =
+                    self.tbuf.enabled().then(|| self.tbuf.now_us());
                 fetch_ondemand_rows(
                     &self.awgf,
                     &self.flash,
@@ -1242,6 +1291,19 @@ impl SwapEngine {
                     &mut bufs,
                     &mut self.metrics,
                 )?;
+                self.metrics
+                    .h_ondemand_us
+                    .record(t_od.elapsed().as_micros() as u64);
+                if let Some(t0) = t_od_us {
+                    // buffer-local push: no lock, no cache interaction —
+                    // the single-lock fetch invariant is untouched
+                    self.tbuf.span(
+                        SpanKind::OndemandRead,
+                        t0,
+                        layer as u64,
+                        self.ondemand.len() as u64,
+                    );
+                }
             }
         }
 
@@ -1381,6 +1443,66 @@ impl SwapEngine {
     pub fn runtime_profile(&self) -> Vec<(String, u64, Duration)> {
         self.rt.call_counts()
     }
+
+    /// The engine's flight recorder (shared with the loader and I/O
+    /// workers). Enable with `trace_handle().set_enabled(true)`; export
+    /// with [`crate::trace::chrome_trace`].
+    pub fn trace_handle(&self) -> &TraceHandle {
+        &self.trace
+    }
+
+    /// Queue-wait latency distributions of the shared [`ReadQueue`], in
+    /// µs: `(loader preload waits, engine on-demand waits)`.
+    pub fn io_wait_histos(&self) -> (Histo, Histo) {
+        self.queue.wait_histos()
+    }
+
+    /// Zero the queue-wait histograms (server `stats_reset`).
+    pub fn reset_io_wait_histos(&self) {
+        self.queue.reset_wait_histos()
+    }
+
+    /// Record one governor decision into the flight recorder: always
+    /// journaled (the journal is the governor's black box, independent of
+    /// span tracing), plus a `rebudget` span and ledger counter track when
+    /// tracing is enabled.
+    pub fn trace_rebudget(&self, d: &RebudgetDecision) {
+        let now = self.trace.now_us();
+        let settle_us = d.settle.as_micros() as u64;
+        self.trace.record_journal(JournalEntry {
+            t_us: now,
+            trigger: d.trigger.name(),
+            applied: d.applied,
+            note: d.note.to_string(),
+            old_budget: d.old_budget,
+            new_budget: d.new_budget,
+            cache_bytes: d.new_pools.cache_bytes,
+            preload_bytes: d.new_pools.preload_bytes,
+            compute_bytes: d.new_pools.compute_bytes,
+            max_seqs: d.max_seqs,
+            settle_us,
+        });
+        // the settle work just finished; back-date the span over it
+        let dur = settle_us.max(1);
+        self.trace.push_one(SpanEvent {
+            kind: SpanKind::Rebudget,
+            t0_us: now.saturating_sub(dur),
+            dur_us: dur,
+            tid: TID_GOVERNOR,
+            a: d.new_budget,
+            b: d.applied as u64,
+        });
+    }
+}
+
+/// p90 token length under observed ended-sequence traffic — the
+/// governor's expected-occupancy input (`max_seq` before any sequence
+/// has ended, clamped to `[1, max_seq]` after).
+fn expected_tokens_p90(h: &Histo, max_seq: usize) -> usize {
+    if h.count() == 0 {
+        return max_seq;
+    }
+    (h.p90() as usize).clamp(1, max_seq)
 }
 
 /// Phase 1 of the single-lock family fetch: copy one op's cache hits into
@@ -1895,5 +2017,45 @@ mod tests {
         assert_eq!(m.fallback_rows, 1, "the uncovered row fell back");
         assert_eq!(m.degraded_fallbacks, 0, "slab was published");
         assert_eq!(ondemand, vec![(0, 2, 7)]);
+    }
+
+    #[test]
+    fn expected_occupancy_p90_prices_bimodal_long_mode() {
+        let max_seq = 1024;
+        // no traffic yet: conservative max_seq
+        assert_eq!(expected_tokens_p90(&Histo::new(), max_seq), max_seq);
+
+        // bimodal mix with a ≥10% long mode: 85 short chats (8 tokens),
+        // 15 long documents (500 tokens). The mean sits between the
+        // modes (~81) — a pool priced there OOM-preempts on every long
+        // arrival; p90 lands in the long mode.
+        let mut h = Histo::new();
+        for _ in 0..85 {
+            h.record(8);
+        }
+        for _ in 0..15 {
+            h.record(500);
+        }
+        let mean = (h.sum() / h.count()) as usize;
+        let p90 = expected_tokens_p90(&h, max_seq);
+        assert!(mean < 100, "mean dilutes the long mode: {mean}");
+        assert_eq!(p90, 500, "p90 prices for the long mode");
+
+        // mostly-short mix (long mode < 10%): p90 collapses to the
+        // short mode and concurrency stays high
+        let mut h = Histo::new();
+        for _ in 0..95 {
+            h.record(8);
+        }
+        for _ in 0..5 {
+            h.record(500);
+        }
+        let p90 = expected_tokens_p90(&h, max_seq);
+        assert!(p90 < 16, "short mode bucket edge, got {p90}");
+
+        // clamped to max_seq even when the histogram saw longer
+        let mut h = Histo::new();
+        h.record(1 << 20);
+        assert_eq!(expected_tokens_p90(&h, max_seq), max_seq);
     }
 }

@@ -53,6 +53,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::device::DeviceProfile;
+use crate::trace::{Histo, SpanEvent, SpanKind, TraceHandle, TID_IO_BASE};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ClockMode {
@@ -696,6 +697,14 @@ struct QueueShared {
     retries: AtomicU64,
     /// Wedged workers detected and replaced by the watchdog.
     wedged_recoveries: AtomicU64,
+    /// Per-class reap-wait latency histograms (µs), recorded only when a
+    /// reaper actually blocked — the zero-wait fast path takes no lock.
+    wait_histo_loader: Mutex<Histo>,
+    wait_histo_engine: Mutex<Histo>,
+    /// Flight recorder (io-batch spans, one per device wave). Lives in
+    /// the shared state so watchdog-spawned replacement workers inherit
+    /// it. `None` when the queue's owner never attached one.
+    trace: Option<TraceHandle>,
 }
 
 impl QueueShared {
@@ -760,6 +769,17 @@ impl ReadQueue {
     /// software depth above the device's still submits bigger waves, but
     /// `read_batch` charges one latency per *device* wave inside them.
     pub fn new(dev: Arc<FlashDevice>, depth: usize) -> Arc<ReadQueue> {
+        ReadQueue::new_traced(dev, depth, None)
+    }
+
+    /// [`ReadQueue::new`] with a flight recorder attached: workers record
+    /// one [`SpanKind::IoBatch`] span per device wave (no-op while
+    /// tracing is disabled).
+    pub fn new_traced(
+        dev: Arc<FlashDevice>,
+        depth: usize,
+        trace: Option<TraceHandle>,
+    ) -> Arc<ReadQueue> {
         let depth = if depth == 0 {
             dev.profile.queue_depth.max(1)
         } else {
@@ -801,6 +821,9 @@ impl ReadQueue {
             buffers_recycled: AtomicU64::new(0),
             retries: AtomicU64::new(0),
             wedged_recoveries: AtomicU64::new(0),
+            wait_histo_loader: Mutex::new(Histo::new()),
+            wait_histo_engine: Mutex::new(Histo::new()),
+            trace,
         });
         {
             let mut handles = shared.handles.lock().unwrap();
@@ -968,13 +991,39 @@ impl ReadQueue {
         };
         drop(q);
         if !waited.is_zero() {
-            let ctr = match class {
-                IoClass::Loader => &self.shared.wait_loader_ns,
-                IoClass::Engine => &self.shared.wait_engine_ns,
+            let (ctr, histo) = match class {
+                IoClass::Loader => (
+                    &self.shared.wait_loader_ns,
+                    &self.shared.wait_histo_loader,
+                ),
+                IoClass::Engine => (
+                    &self.shared.wait_engine_ns,
+                    &self.shared.wait_histo_engine,
+                ),
             };
             ctr.fetch_add(waited.as_nanos() as u64, Ordering::Relaxed);
+            histo
+                .lock()
+                .unwrap()
+                .record(waited.as_micros() as u64);
         }
         out
+    }
+
+    /// Per-class reap-wait latency histograms (µs): `(loader, engine)`.
+    /// Only blocked reaps are recorded — a completion already landed
+    /// costs no wait and no sample.
+    pub fn wait_histos(&self) -> (Histo, Histo) {
+        (
+            *self.shared.wait_histo_loader.lock().unwrap(),
+            *self.shared.wait_histo_engine.lock().unwrap(),
+        )
+    }
+
+    /// Zero the wait histograms (`stats_reset`).
+    pub fn reset_wait_histos(&self) {
+        *self.shared.wait_histo_loader.lock().unwrap() = Histo::new();
+        *self.shared.wait_histo_engine.lock().unwrap() = Histo::new();
     }
 
     /// Reads neither reaped nor yet picked up (tests/diagnostics).
@@ -1115,6 +1164,13 @@ fn worker_loop(sh: Arc<QueueShared>, slot: usize, generation: u64) {
                 q = sh.work_cv.wait(q).unwrap();
             }
         };
+        // flight recorder: one io_batch span per device wave (enabled
+        // check only — disabled tracing costs one relaxed load here)
+        let t_io = sh
+            .trace
+            .as_ref()
+            .filter(|t| t.enabled())
+            .map(|t| t.now_us());
         // Fault consultation, one verdict per read. Injected latency
         // (spikes, stalls) is charged and slept OUTSIDE the device
         // channel mutex, so a stall wedges this worker only — exactly
@@ -1173,6 +1229,16 @@ fn worker_loop(sh: Arc<QueueShared>, slot: usize, generation: u64) {
             sh.batches.fetch_add(1, Ordering::Relaxed);
             sh.dev.read_batch_into(&reqs, &mut bufs)
         };
+        if let (Some(t0), Some(trace)) = (t_io, sh.trace.as_ref()) {
+            trace.push_one(SpanEvent {
+                kind: SpanKind::IoBatch,
+                t0_us: t0,
+                dur_us: trace.now_us().saturating_sub(t0),
+                tid: TID_IO_BASE + slot as u32,
+                a: wave.len() as u64,
+                b: wave_urgent as u64,
+            });
+        }
         let mut reclaimed: Vec<Vec<u8>> = Vec::new();
         let mut backoff_ns = 0u64;
         {

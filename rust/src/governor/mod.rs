@@ -110,7 +110,7 @@ pub struct RebudgetDecision {
     pub evicted_rows: u64,
     /// Concurrent-sequence ceiling under the new budget: the planner
     /// prices `M_kv` as `kv_per_seq × seqs` where `kv_per_seq` is the
-    /// **expected** per-sequence occupancy in whole KV blocks (mean ended
+    /// **expected** per-sequence occupancy in whole KV blocks (p90 ended
     /// -sequence length, block-rounded — `max_seq` before any traffic),
     /// and admits as many sequences as the budget fits (≤ the configured
     /// `max_seqs`, ≥ 1). The scheduler's block-headroom admission and
@@ -335,6 +335,7 @@ impl DramGovernor {
         if self.applied_once && rel < self.cfg.hysteresis {
             d.note = "hysteresis";
             engine.metrics.rebudgets_skipped += 1;
+            engine.trace_rebudget(&d);
             self.decisions.push(d.clone());
             return Ok(d);
         }
@@ -353,6 +354,7 @@ impl DramGovernor {
             // max sparsity) and record the refusal.
             d.note = "infeasible";
             engine.metrics.rebudgets_skipped += 1;
+            engine.trace_rebudget(&d);
             self.decisions.push(d.clone());
             return Ok(d);
         };
@@ -397,6 +399,7 @@ impl DramGovernor {
         self.applied_once = true;
         engine.metrics.rebudgets_applied += 1;
         engine.metrics.rebudget_settle += outcome.settle;
+        engine.trace_rebudget(&d);
         self.decisions.push(d.clone());
         Ok(d)
     }

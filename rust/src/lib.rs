@@ -32,4 +32,5 @@ pub mod baselines;
 pub mod bench;
 pub mod server;
 pub mod metrics;
+pub mod trace;
 pub mod tokenizer;

@@ -2,12 +2,14 @@
 //!
 //! ```text
 //! activeflow generate --prompt "..." --n 32 --sp 0.6 --group 4
+//!                     [--trace-out trace.json]
 //! activeflow eval     --sp 0.6 --windows 4
 //! activeflow serve    --addr 127.0.0.1:7071 --sp 0.6 [--budget-mb N]
 //!                     [--rebudget-hysteresis F] [--pressure SIZE@TOK,..]
 //!                     [--pressure-file PATH] [--max-seqs N]
 //!                     [--sched-queue-cap N] [--kv-block-tokens N]
 //!                     [--faults seed=1,transient=0.01:2,bad=OFF+LEN,...]
+//!                     [--trace-out trace.json]
 //! activeflow search   --device pixel6 --budget-mb 1500 --geometry llama7b
 //! activeflow inspect  devices|artifacts|weights
 //! activeflow bench    <pareto|e2e|ablation|flash|preload-tradeoff|
@@ -140,7 +142,18 @@ fn cmd_generate(args: &Args) -> Result<()> {
         eng.inject_fault_spec(&spec)?;
         eprintln!("[generate] fault injection armed: {spec}");
     }
+    // --trace-out: record the whole generation in the flight recorder and
+    // dump it as Chrome trace-event JSON (Perfetto-loadable)
+    let trace_out = args.opt("trace-out").map(PathBuf::from);
+    if trace_out.is_some() {
+        eng.trace_handle().set_enabled(true);
+    }
     let out = eng.generate(&toks, n, temp)?;
+    if let Some(path) = &trace_out {
+        let v = activeflow::trace::chrome_trace(eng.trace_handle());
+        std::fs::write(path, v.to_string())?;
+        eprintln!("[generate] trace written to {}", path.display());
+    }
     println!("{}", tokenizer::decode(&out));
     let mem = eng.memory_report();
     let e = metrics::energy(device, &eng.metrics);
@@ -240,6 +253,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_seqs: rc.max_seqs,
         sched_queue_cap: rc.sched_queue_cap,
         fault_spec: rc.fault_spec.clone(),
+        trace_out: args.opt("trace-out").map(PathBuf::from),
     };
     let served = serve(cfg)?;
     println!("[server] shut down after {served} requests");

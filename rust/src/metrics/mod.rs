@@ -5,6 +5,7 @@
 use std::time::Duration;
 
 use crate::device::DeviceProfile;
+use crate::trace::Histo;
 
 /// Per-decode aggregate counters, filled by the engine.
 #[derive(Debug, Default, Clone)]
@@ -117,6 +118,18 @@ pub struct DecodeMetrics {
     /// (newest-first; distinct from budget-ceiling preemptions, which
     /// count only under `seqs_preempted`).
     pub kv_preemptions_oom: u64,
+    // ---- latency histograms (trace module; always on — fixed-size,
+    //      allocation-free, so the hot path records unconditionally)
+    /// Inter-token latency in µs: per-step wall time on the solo path,
+    /// per-sequence inter-token gaps on the scheduler path.
+    pub h_itl_us: Histo,
+    /// Scheduler wave wall time in µs.
+    pub h_wave_us: Histo,
+    /// Admission queue wait in µs (recorded when a sequence activates).
+    pub h_admission_wait_us: Histo,
+    /// On-demand flash fill latency in µs (the miss path inside a
+    /// family fetch — always on the token's critical path).
+    pub h_ondemand_us: Histo,
 }
 
 impl DecodeMetrics {
@@ -190,6 +203,10 @@ impl DecodeMetrics {
         self.cross_token_preloads += other.cross_token_preloads;
         self.kv_blocks_peak = self.kv_blocks_peak.max(other.kv_blocks_peak);
         self.kv_preemptions_oom += other.kv_preemptions_oom;
+        self.h_itl_us.merge(&other.h_itl_us);
+        self.h_wave_us.merge(&other.h_wave_us);
+        self.h_admission_wait_us.merge(&other.h_admission_wait_us);
+        self.h_ondemand_us.merge(&other.h_ondemand_us);
     }
 
     /// Total reaper wait (both classes) — the old single `io_wait`.
@@ -364,6 +381,23 @@ mod tests {
         assert_eq!(a.rebudget_settle, Duration::from_millis(3));
         assert_eq!(a.kv_blocks_peak, 7, "block peak is a max, not a sum");
         assert_eq!(a.kv_preemptions_oom, 2);
+    }
+
+    #[test]
+    fn merge_accumulates_histograms() {
+        let mut a = m(1, 100, 0, 0);
+        a.h_itl_us.record(100);
+        a.h_itl_us.record(200);
+        a.h_wave_us.record(50);
+        let mut b = m(1, 100, 0, 0);
+        b.h_itl_us.record(4000);
+        b.h_admission_wait_us.record(7);
+        a.merge(&b);
+        assert_eq!(a.h_itl_us.count(), 3);
+        assert_eq!(a.h_itl_us.max(), 4000);
+        assert_eq!(a.h_wave_us.count(), 1);
+        assert_eq!(a.h_admission_wait_us.count(), 1);
+        assert!(a.h_itl_us.p50() <= a.h_itl_us.p99());
     }
 
     #[test]

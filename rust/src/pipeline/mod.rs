@@ -43,6 +43,7 @@ use anyhow::Result;
 
 use crate::flash::{FlashDevice, IoClass, ReadQueue};
 use crate::layout::{quant, AwgfFile, OpKind};
+use crate::trace::{SpanEvent, SpanKind, TraceHandle, TID_LOADER};
 
 /// Key of a preload part: (monotonic group sequence number, op family).
 pub type PartKey = (u64, OpKind);
@@ -407,6 +408,17 @@ impl Pipeline {
         awgf: Arc<AwgfFile>,
         queue: Arc<ReadQueue>,
     ) -> Pipeline {
+        Pipeline::spawn_with_queue_traced(awgf, queue, None)
+    }
+
+    /// [`Pipeline::spawn_with_queue`] with a flight recorder attached:
+    /// the loader records one [`SpanKind::PreloadPart`] span per part
+    /// (batch receipt → slab publish) while tracing is enabled.
+    pub fn spawn_with_queue_traced(
+        awgf: Arc<AwgfFile>,
+        queue: Arc<ReadQueue>,
+        trace: Option<TraceHandle>,
+    ) -> Pipeline {
         let (tx, rx) = channel();
         let shared = Arc::new(SharedState::default());
         let cv = Arc::new(Condvar::new());
@@ -417,6 +429,7 @@ impl Pipeline {
             shared: shared.clone(),
             cv: cv.clone(),
             cv_guard: cv_guard.clone(),
+            trace,
         };
         let handle = std::thread::Builder::new()
             .name("awf-loader".into())
@@ -556,6 +569,8 @@ struct LoaderWorker {
     shared: Arc<SharedState>,
     cv: Arc<Condvar>,
     cv_guard: Arc<Mutex<u64>>,
+    /// Flight recorder (preload-part spans); `None` when untraced.
+    trace: Option<TraceHandle>,
 }
 
 /// One planned chunk read of a part: the reap tag plus everything needed
@@ -605,6 +620,13 @@ impl LoaderWorker {
     /// across them instead of paying it once per chunk.
     fn handle_batch(&self, batch: PreloadBatch) {
         self.shared.stats.lock().unwrap().batch_msgs += 1;
+        // flight recorder: each part's span runs batch receipt → its own
+        // publish (enabled check only while tracing is off)
+        let t0_us = self
+            .trace
+            .as_ref()
+            .filter(|t| t.enabled())
+            .map(|t| t.now_us());
         // phase 1: plan (cap admission + run layout); no I/O yet
         let mut reqs: Vec<(u64, usize)> = Vec::new();
         let mut plans: Vec<PartPlan> = batch
@@ -626,6 +648,16 @@ impl LoaderWorker {
         // reads are still streaming
         for (part, plan) in batch.parts.iter().zip(plans) {
             self.complete_part(batch.seq, part.op, plan);
+            if let (Some(t0), Some(trace)) = (t0_us, self.trace.as_ref()) {
+                trace.push_one(SpanEvent {
+                    kind: SpanKind::PreloadPart,
+                    t0_us: t0,
+                    dur_us: trace.now_us().saturating_sub(t0),
+                    tid: TID_LOADER,
+                    a: batch.seq,
+                    b: part.op as u64,
+                });
+            }
         }
     }
 

@@ -58,6 +58,7 @@ use anyhow::Result;
 
 use crate::engine::{SeqState, SwapEngine};
 use crate::metrics::DecodeMetrics;
+use crate::trace::{Histo, SpanEvent, SpanKind, TraceHandle, TID_SCHED};
 
 /// What the scheduler needs from a decode engine. One call = one token;
 /// the backend samples internally (deterministically per sequence) and
@@ -94,6 +95,13 @@ pub trait DecodeBackend {
     /// Where scheduler counters should be mirrored (engines expose their
     /// `DecodeMetrics`; mocks may return `None`).
     fn metrics_sink(&mut self) -> Option<&mut DecodeMetrics> {
+        None
+    }
+
+    /// The backend's flight recorder, when it has one (mocks: `None`).
+    /// The scheduler emits its wave spans into the same ring as the
+    /// engine's step spans, on the same clock.
+    fn trace(&self) -> Option<&TraceHandle> {
         None
     }
 
@@ -167,6 +175,10 @@ impl DecodeBackend for SwapEngine {
 
     fn metrics_sink(&mut self) -> Option<&mut DecodeMetrics> {
         Some(&mut self.metrics)
+    }
+
+    fn trace(&self) -> Option<&TraceHandle> {
+        Some(self.trace_handle())
     }
 
     fn seq_try_grow(&mut self, seq: &mut SeqState) -> bool {
@@ -256,6 +268,10 @@ pub struct FinishedSeq {
     /// outcome holds the partial stream generated so far (the server
     /// reports `"status": "timeout"` for these).
     pub timed_out: bool,
+    /// Per-request inter-token latency distribution (µs between emitted
+    /// tokens; survives preemption/resume cycles). Empty for sequences
+    /// that emitted fewer than two tokens.
+    pub itl: Histo,
 }
 
 /// Cumulative scheduler counters (mirrored into [`DecodeMetrics`] and the
@@ -320,6 +336,12 @@ struct Live<S> {
     started: Instant,
     prior_decode: Duration,
     waves: u64,
+    /// Wall clock of the last emitted token (None until the first emit of
+    /// this activation — a park/resume gap is queueing, not ITL).
+    last_token: Option<Instant>,
+    /// Inter-token gaps of this request so far (carried across
+    /// preemptions via [`Pending`]).
+    itl: Histo,
 }
 
 /// Verdict of the pre-step KV headroom check (see
@@ -343,6 +365,8 @@ struct Pending {
     queue_wait: Duration,
     prior_decode: Duration,
     waves: u64,
+    /// Inter-token gaps recorded before preemption (empty when fresh).
+    itl: Histo,
 }
 
 /// The continuous-batching scheduler. Owns the backend; the server worker
@@ -437,6 +461,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             queue_wait: Duration::ZERO,
             prior_decode: Duration::ZERO,
             waves: 0,
+            itl: Histo::new(),
         };
         // fast-path admission only when nobody is already waiting —
         // fresh submissions must not jump queued (or preempted)
@@ -490,6 +515,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                 started,
                 prior_decode,
                 waves,
+                itl,
                 ..
             } = live;
             // frees the sequence's KV blocks; preempted partial progress
@@ -503,6 +529,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                 queue_wait,
                 prior_decode: prior_decode + started.elapsed(),
                 waves,
+                itl,
             });
             preempted += 1;
         }
@@ -520,6 +547,12 @@ impl<B: DecodeBackend> Scheduler<B> {
     /// sequence.
     pub fn wave(&mut self) -> Vec<FinishedSeq> {
         let t0 = Instant::now();
+        // trace-clock wave start; None when no recorder / recording off
+        let t_wave = self
+            .backend
+            .trace()
+            .filter(|t| t.enabled())
+            .map(|t| t.now_us());
         let mut finished = Vec::new();
         // admit-on-arrival: fill freed slots in FIFO order (preempted
         // sequences sit at the front and resume first). Admission is
@@ -560,6 +593,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                     waves: p.waves,
                     truncated: false,
                     timed_out: false,
+                    itl: p.itl,
                 });
             }
         }
@@ -616,8 +650,28 @@ impl<B: DecodeBackend> Scheduler<B> {
         self.mirror(|m| {
             m.sched_waves += 1;
             m.sched_wave_time += dt;
+            m.h_wave_us.record(dt.as_micros() as u64);
         });
+        if let Some(t0_us) = t_wave {
+            if let Some(t) = self.backend.trace() {
+                t.push_one(SpanEvent {
+                    kind: SpanKind::Wave,
+                    t0_us,
+                    dur_us: t.now_us().saturating_sub(t0_us),
+                    tid: TID_SCHED,
+                    a: self.run.len() as u64,
+                    b: finished.len() as u64,
+                });
+            }
+        }
         finished
+    }
+
+    /// Zero the cumulative counters (server `stats_reset`). Live and
+    /// queued sequences — and their in-flight per-request histograms —
+    /// are untouched.
+    pub fn reset_stats(&mut self) {
+        self.stats = SchedStats::default();
     }
 
     /// Tear down: end every live sequence without completing it (server
@@ -676,6 +730,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             waves: p.waves,
             truncated: !fresh,
             timed_out: false,
+            itl: p.itl,
         }
     }
 
@@ -749,6 +804,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             started,
             prior_decode,
             waves,
+            itl,
             ..
         } = live;
         self.backend.end_seq_preempted(seq);
@@ -760,6 +816,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             queue_wait,
             prior_decode: prior_decode + started.elapsed(),
             waves,
+            itl,
         });
         self.stats.seqs_preempted += 1;
         self.stats.kv_preempted_oom += 1;
@@ -787,19 +844,25 @@ impl<B: DecodeBackend> Scheduler<B> {
             Ok(s) => s,
             Err(_) => return Err((p, "backend begin_seq failed")),
         };
+        let queue_wait = p.queue_wait + p.parked.elapsed();
         self.run.push_back(Live {
             id: p.id,
             req: p.req,
             seq,
             fed: 0,
             out: p.out,
-            queue_wait: p.queue_wait + p.parked.elapsed(),
+            queue_wait,
             started: Instant::now(),
             prior_decode: p.prior_decode,
             waves: p.waves,
+            last_token: None,
+            itl: p.itl,
         });
         self.stats.seqs_admitted += 1;
-        self.mirror(|m| m.seqs_admitted += 1);
+        self.mirror(|m| {
+            m.seqs_admitted += 1;
+            m.h_admission_wait_us.record(queue_wait.as_micros() as u64);
+        });
         Ok(())
     }
 
@@ -885,6 +948,13 @@ impl<B: DecodeBackend> Scheduler<B> {
                 live.out
                     .push(sampled.expect("emitting step requested a sample"));
                 self.stats.tokens_out += 1;
+                // per-request ITL: gap since this activation's previous
+                // emit (the first emit only arms the clock — a resume's
+                // park time is queue wait, not inter-token latency)
+                if let Some(prev) = live.last_token.replace(Instant::now())
+                {
+                    live.itl.record(prev.elapsed().as_micros() as u64);
+                }
             }
             let done_budget = live.out.len() >= live.req.n_tokens;
             let done_eos = oi + 1 == live.out.len()
@@ -912,6 +982,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             waves: live.waves,
             truncated,
             timed_out: false,
+            itl: std::mem::take(&mut live.itl),
         }
     }
 }

@@ -23,8 +23,15 @@
 //!
 //! Protocol: one JSON object per line.
 //!   {"prompt": "...", "n_tokens": 32, "temp": 0.0}
-//!   {"cmd": "stats"}
+//!   {"cmd": "stats"}            — counters + p50/p95/p99 latency keys
+//!   {"cmd": "stats_reset"}      — zero the cumulative counters/histograms
 //!   {"cmd": "set_budget", "bytes": 1200000000}
+//!   {"cmd": "trace", "enable": true, "out": "trace.json"}
+//!       — flight recorder control: toggle span recording and/or export
+//!         the ring as Chrome trace-event JSON (`--trace-out` records
+//!         from startup and writes at shutdown). See PERF.md
+//!         §Observability.
+//!   {"cmd": "journal"}          — the governor's re-budget decision log
 //!   {"cmd": "shutdown"}
 
 use std::collections::HashMap;
@@ -80,6 +87,10 @@ pub struct ServerConfig {
     /// spec) armed on the engine's flash device at startup — the chaos
     /// suite drives the whole recovery ladder through this knob.
     pub fault_spec: Option<String>,
+    /// Enable the flight recorder from startup and write the span ring as
+    /// Chrome trace-event JSON to this path at shutdown (`--trace-out`).
+    /// `{"cmd":"trace"}` can toggle/export at any time regardless.
+    pub trace_out: Option<PathBuf>,
 }
 
 /// How often the worker re-reads the `--pressure-file` between waves
@@ -102,6 +113,21 @@ enum Job {
     /// Live re-budget: the worker runs the governor against its engine at
     /// the next wave boundary and answers with the decision.
     Rebudget { bytes: u64, resp: Sender<Value> },
+    /// Flight-recorder control: toggle span recording and/or export the
+    /// ring as Chrome trace-event JSON. Runs on the worker at a wave
+    /// boundary — the export walks the shared ring under its mutex, which
+    /// must not race a wave mid-flush.
+    Trace {
+        enable: Option<bool>,
+        out: Option<PathBuf>,
+        resp: Sender<Value>,
+    },
+    /// Snapshot the governor's decision journal.
+    Journal { resp: Sender<Value> },
+    /// Zero the cumulative counters and histograms (engine metrics,
+    /// scheduler stats, queue-wait histograms, request totals). The trace
+    /// ring and journal survive — they have their own `trace` control.
+    StatsReset { resp: Sender<Value> },
     Stop,
 }
 
@@ -171,6 +197,28 @@ struct ServerStats {
     kv_blocks_free: AtomicU64,
     kv_blocks_peak: AtomicU64,
     kv_preemptions_oom: AtomicU64,
+    // latency percentiles (log2-bucket histograms, µs) — refreshed per
+    // wave like the other hot mirrors, so `stats` connections never walk
+    // a histogram themselves
+    itl_p50_us: AtomicU64,
+    itl_p95_us: AtomicU64,
+    itl_p99_us: AtomicU64,
+    wave_p50_us: AtomicU64,
+    wave_p99_us: AtomicU64,
+    ondemand_p99_us: AtomicU64,
+    admission_wait_p99_us: AtomicU64,
+    io_wait_loader_p99_us: AtomicU64,
+    io_wait_engine_p50_us: AtomicU64,
+    io_wait_engine_p95_us: AtomicU64,
+    io_wait_engine_p99_us: AtomicU64,
+    // flight-recorder ring health (overhead bound: capacity + drops are
+    // always visible, so a saturated ring is a reported condition)
+    trace_enabled: AtomicU64,
+    trace_events: AtomicU64,
+    trace_capacity: AtomicU64,
+    trace_dropped: AtomicU64,
+    journal_entries: AtomicU64,
+    journal_dropped: AtomicU64,
 }
 
 impl ServerStats {
@@ -203,6 +251,42 @@ impl ServerStats {
         st(&self.wedged_recoveries, m.wedged_recoveries);
         st(&self.fallback_rows, m.fallback_rows);
         st(&self.degraded_fallbacks, m.degraded_fallbacks);
+        st(&self.itl_p50_us, m.h_itl_us.p50());
+        st(&self.itl_p95_us, m.h_itl_us.p95());
+        st(&self.itl_p99_us, m.h_itl_us.p99());
+        st(&self.wave_p50_us, m.h_wave_us.p50());
+        st(&self.wave_p99_us, m.h_wave_us.p99());
+        st(&self.ondemand_p99_us, m.h_ondemand_us.p99());
+        st(&self.admission_wait_p99_us, m.h_admission_wait_us.p99());
+    }
+
+    /// Refresh the queue-wait percentile and flight-recorder mirrors
+    /// (small mutex reads on the worker, once per wave).
+    fn publish_trace(&self, engine: &SwapEngine) {
+        let st = |a: &AtomicU64, v: u64| a.store(v, Ordering::Relaxed);
+        let (h_loader, h_engine) = engine.io_wait_histos();
+        st(&self.io_wait_loader_p99_us, h_loader.p99());
+        st(&self.io_wait_engine_p50_us, h_engine.p50());
+        st(&self.io_wait_engine_p95_us, h_engine.p95());
+        st(&self.io_wait_engine_p99_us, h_engine.p99());
+        let t = engine.trace_handle();
+        let (len, cap, dropped) = t.ring_stats();
+        st(&self.trace_enabled, t.enabled() as u64);
+        st(&self.trace_events, len as u64);
+        st(&self.trace_capacity, cap as u64);
+        st(&self.trace_dropped, dropped);
+        let (jlen, jdropped) = t.journal_stats();
+        st(&self.journal_entries, jlen as u64);
+        st(&self.journal_dropped, jdropped);
+    }
+
+    /// Zero the request totals (`stats_reset`; the per-wave mirrors are
+    /// re-published right after from the freshly zeroed sources).
+    fn reset_request_totals(&self) {
+        self.served.store(0, Ordering::Relaxed);
+        self.tokens.store(0, Ordering::Relaxed);
+        self.queue_ns.store(0, Ordering::Relaxed);
+        self.decode_ns.store(0, Ordering::Relaxed);
     }
 
     /// Refresh the scheduler mirror.
@@ -304,11 +388,19 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
     };
     let pressure_file = cfg.pressure_file.clone();
     let fault_spec = cfg.fault_spec.clone();
+    let trace_out = cfg.trace_out.clone();
     let worker = std::thread::spawn(move || -> Result<()> {
         let mut engine = SwapEngine::open(&artifact_dir, cfg.opts)?;
         if let Some(spec) = &fault_spec {
             engine.inject_fault_spec(spec)?;
             eprintln!("[server] fault injection armed: {spec}");
+        }
+        if let Some(path) = &trace_out {
+            engine.trace_handle().set_enabled(true);
+            eprintln!(
+                "[server] flight recorder on, writes {} at shutdown",
+                path.display()
+            );
         }
         // interleaved decode: every sequence's next-token group-0 chain
         // loads while its peers compute
@@ -387,6 +479,78 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
                         worker_stats
                             .publish_governor(sched.backend(), &gov);
                         let _ = resp.send(v);
+                    }
+                    Job::Trace { enable, out, resp } => {
+                        let h = sched.backend().trace_handle().clone();
+                        if let Some(on) = enable {
+                            h.set_enabled(on);
+                        }
+                        let (len, cap, dropped) = h.ring_stats();
+                        let mut fields = vec![
+                            ("enabled", Value::Bool(h.enabled())),
+                            ("events", num(len as f64)),
+                            ("capacity", num(cap as f64)),
+                            ("dropped", num(dropped as f64)),
+                        ];
+                        if let Some(path) = out {
+                            match write_trace(&path, &h) {
+                                Ok(()) => fields.push((
+                                    "written",
+                                    s(&path.display().to_string()),
+                                )),
+                                Err(e) => fields.push((
+                                    "error",
+                                    s(&format!("{e:#}")),
+                                )),
+                            }
+                        }
+                        worker_stats.publish_trace(sched.backend());
+                        let _ = resp.send(obj(fields));
+                    }
+                    Job::Journal { resp } => {
+                        let h = sched.backend().trace_handle();
+                        let (len, dropped) = h.journal_stats();
+                        let entries: Vec<Value> = h
+                            .snapshot_journal()
+                            .iter()
+                            .map(|e| e.to_json())
+                            .collect();
+                        let _ = resp.send(obj(vec![
+                            ("entries", arr(entries)),
+                            ("len", num(len as f64)),
+                            ("dropped", num(dropped as f64)),
+                        ]));
+                    }
+                    Job::StatsReset { resp } => {
+                        // zero every cumulative source, then re-publish
+                        // the absolute mirrors from the zeroed state so
+                        // `stats` is consistent immediately (not at the
+                        // next wave)
+                        let engine = sched.backend_mut();
+                        engine.metrics = DecodeMetrics::default();
+                        engine.reset_io_wait_histos();
+                        sched.reset_stats();
+                        worker_stats.reset_request_totals();
+                        worker_stats.publish_hot(
+                            &sched.backend().metrics,
+                            last_parts_failed,
+                        );
+                        worker_stats.publish_trace(sched.backend());
+                        let (active, queued, max_active) = (
+                            sched.active(),
+                            sched.queued(),
+                            sched.max_active(),
+                        );
+                        worker_stats.publish_sched(
+                            &sched.stats(),
+                            active,
+                            queued,
+                            max_active,
+                        );
+                        worker_stats
+                            .publish_governor(sched.backend(), &gov);
+                        let _ = resp
+                            .send(obj(vec![("ok", Value::Bool(true))]));
                     }
                     Job::Decode(r) => {
                         seed_counter += 1;
@@ -497,6 +661,12 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
                                 "cache_hit_rate",
                                 num(sched.backend().cache_hit_rate()),
                             ),
+                            // per-request inter-token latency (µs; the
+                            // log2-bucket percentile is the bucket upper
+                            // edge clamped to the observed max)
+                            ("itl_p50_us", num(f.itl.p50() as f64)),
+                            ("itl_p95_us", num(f.itl.p95() as f64)),
+                            ("itl_p99_us", num(f.itl.p99() as f64)),
                         ])
                     }
                 };
@@ -596,6 +766,7 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
             }
             worker_stats
                 .publish_hot(&sched.backend().metrics, last_parts_failed);
+            worker_stats.publish_trace(sched.backend());
             let (active, queued, max_active) =
                 (sched.active(), sched.queued(), sched.max_active());
             worker_stats.publish_sched(
@@ -606,6 +777,17 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
             );
         }
         sched.shutdown();
+        if let Some(path) = &trace_out {
+            match write_trace(path, sched.backend().trace_handle()) {
+                Ok(()) => eprintln!(
+                    "[server] trace written to {}",
+                    path.display()
+                ),
+                Err(e) => {
+                    eprintln!("[server] trace write failed: {e:#}")
+                }
+            }
+        }
         Ok(())
     });
 
@@ -689,6 +871,19 @@ fn apply_rebudget(
             ])
         }
     }
+}
+
+/// Export the flight-recorder ring as Chrome trace-event JSON
+/// (Perfetto / `chrome://tracing` loadable; `scripts/check_trace.py`
+/// validates the schema).
+fn write_trace(
+    path: &std::path::Path,
+    h: &crate::trace::TraceHandle,
+) -> Result<()> {
+    let v = crate::trace::chrome_trace(h);
+    std::fs::write(path, v.to_string())
+        .with_context(|| format!("writing trace {}", path.display()))?;
+    Ok(())
 }
 
 /// Input hardening: a request line larger than this answers with an
@@ -886,8 +1081,81 @@ fn handle_conn(
                             "kv_preemptions_oom",
                             g(&stats.kv_preemptions_oom),
                         ),
+                        // latency percentiles (log2-bucket, µs) — see
+                        // PERF.md §Observability
+                        ("itl_p50_us", g(&stats.itl_p50_us)),
+                        ("itl_p95_us", g(&stats.itl_p95_us)),
+                        ("itl_p99_us", g(&stats.itl_p99_us)),
+                        ("wave_p50_us", g(&stats.wave_p50_us)),
+                        ("wave_p99_us", g(&stats.wave_p99_us)),
+                        ("ondemand_p99_us", g(&stats.ondemand_p99_us)),
+                        (
+                            "admission_wait_p99_us",
+                            g(&stats.admission_wait_p99_us),
+                        ),
+                        (
+                            "io_wait_loader_p99_us",
+                            g(&stats.io_wait_loader_p99_us),
+                        ),
+                        (
+                            "io_wait_engine_p50_us",
+                            g(&stats.io_wait_engine_p50_us),
+                        ),
+                        (
+                            "io_wait_engine_p95_us",
+                            g(&stats.io_wait_engine_p95_us),
+                        ),
+                        (
+                            "io_wait_engine_p99_us",
+                            g(&stats.io_wait_engine_p99_us),
+                        ),
+                        // flight recorder ring health
+                        ("trace_enabled", g(&stats.trace_enabled)),
+                        ("trace_events", g(&stats.trace_events)),
+                        ("trace_capacity", g(&stats.trace_capacity)),
+                        ("trace_dropped", g(&stats.trace_dropped)),
+                        ("journal_entries", g(&stats.journal_entries)),
+                        ("journal_dropped", g(&stats.journal_dropped)),
                     ]),
                 )?;
+            }
+            Some("stats_reset") => {
+                let (tx, rx) = channel();
+                let _ = job_tx.send(Job::StatsReset { resp: tx });
+                match rx.recv() {
+                    Ok(v) => respond(&mut writer, &v)?,
+                    Err(_) => respond(
+                        &mut writer,
+                        &obj(vec![("error", s("engine gone"))]),
+                    )?,
+                }
+            }
+            Some("trace") => {
+                let enable = req.get("enable").and_then(Value::as_bool);
+                let out = req
+                    .get("out")
+                    .and_then(Value::as_str)
+                    .map(PathBuf::from);
+                let (tx, rx) = channel();
+                let _ = job_tx.send(Job::Trace { enable, out, resp: tx });
+                match rx.recv() {
+                    Ok(v) => respond(&mut writer, &v)?,
+                    Err(_) => respond(
+                        &mut writer,
+                        &obj(vec![("error", s("engine gone"))]),
+                    )?,
+                }
+            }
+            Some("journal") => {
+                let (tx, rx) = channel();
+                let _ = job_tx.send(Job::Journal { resp: tx });
+                match rx.recv() {
+                    Ok(v) => respond(&mut writer, &v)?,
+                    Err(_) => respond(
+                        &mut writer,
+                        &obj(vec![("error", s("engine gone"))]),
+                    )?,
+                }
             }
             Some("health") => {
                 // recovery-ladder summary: is the engine absorbing

@@ -1,0 +1,932 @@
+//! Flight recorder: structured trace spans, log2-bucket latency
+//! histograms, and the governor's decision journal (PERF.md
+//! §Observability).
+//!
+//! Three cooperating pieces, all zero-dependency:
+//!
+//! 1. **[`Histo`]** — a fixed-size log2-bucket histogram (64 buckets,
+//!    allocation-free, `Copy`) with `merge` and conservative p50/p95/p99.
+//!    Always on: the engine, scheduler, and read queue record into these
+//!    unconditionally, so `stats` has percentiles even with span tracing
+//!    off.
+//!
+//! 2. **Span recorder** — a bounded, drop-counted ring of
+//!    [`SpanEvent`]s behind one [`TraceHandle`]. Producers (engine,
+//!    loader, I/O workers, scheduler, governor) each own a
+//!    [`TraceBuf`]: a private `Vec` they push into without locking,
+//!    drained into the shared ring at wave/step/batch boundaries.
+//!    Tracing is **off by default**; disabled, `span()` is one relaxed
+//!    atomic load and no allocation — the per-token hot path's
+//!    single-lock invariant (`engine_golden`) is untouched.
+//!    [`chrome_trace`] exports the ring as Chrome trace-event JSON
+//!    (load in Perfetto / `chrome://tracing`), with balanced `B`/`E`
+//!    duration events per thread track, so preload-part spans are
+//!    *visible* overlapping step/layer-fetch compute spans.
+//!
+//! 3. **Decision journal** — every governor [`RebudgetDecision`]'s
+//!    trigger, ledger snapshot, and settle time as a bounded
+//!    [`JournalEntry`] ring, queryable via the server's
+//!    `{"cmd":"journal"}` and rendered as counter-track (`"C"`) events
+//!    in the same trace. Journaled regardless of span tracing — it is
+//!    tiny and re-budgets are rare.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Value};
+
+// ------------------------------------------------------------------ Histo
+
+/// Log2-bucket histogram: bucket 0 holds the value 0, bucket `i ≥ 1`
+/// holds `[2^(i-1), 2^i)`. 64 buckets cover the full `u64` range, so
+/// `record` is branch-light (`leading_zeros` + a few adds), the struct
+/// is `Copy` (no allocation, mergeable across threads by value), and a
+/// percentile query walks at most 64 counters.
+///
+/// Percentiles are **conservative**: the reported quantile is the upper
+/// edge of the bucket the target rank falls in (clamped to the observed
+/// max), so `p99()` never under-reports. Bucket order makes
+/// `p50 ≤ p95 ≤ p99` structural.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Histo {
+    counts: [u64; 64],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histo {
+    fn default() -> Histo {
+        Histo {
+            counts: [0; 64],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl Histo {
+    pub fn new() -> Histo {
+        Histo::default()
+    }
+
+    /// Bucket index of `v`: 0 for 0, else `64 - leading_zeros`, clamped
+    /// to 63 (bucket 63 absorbs everything ≥ 2^62).
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(63)
+        }
+    }
+
+    /// Inclusive upper edge of bucket `i` (what percentiles report).
+    #[inline]
+    pub fn bucket_upper_edge(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 63 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Histo) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Value at quantile `p` in `(0, 1]` — the upper edge of the bucket
+    /// holding the target rank, clamped to the observed max (so `p=1.0`
+    /// reports exactly `max`). 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target =
+            ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_upper_edge(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.percentile(0.90)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+}
+
+// ------------------------------------------------------------- span events
+
+/// What a span measured. `name()` is the Chrome-trace event name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One scheduler wave (all live sequences stepped once).
+    Wave,
+    /// One engine `step` (one token of one sequence).
+    Step,
+    /// One transformer layer's four family fetches inside a step.
+    LayerFetch,
+    /// One preload part: loader receipt → slab publish.
+    PreloadPart,
+    /// One read-queue device wave (`read_batch` call).
+    IoBatch,
+    /// One on-demand flash fill inside a family fetch (miss path).
+    OndemandRead,
+    /// One governor re-budget settling against the live engine.
+    Rebudget,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Wave => "wave",
+            SpanKind::Step => "step",
+            SpanKind::LayerFetch => "layer_fetch",
+            SpanKind::PreloadPart => "preload_part",
+            SpanKind::IoBatch => "io_batch",
+            SpanKind::OndemandRead => "ondemand_read",
+            SpanKind::Rebudget => "rebudget",
+        }
+    }
+}
+
+/// One recorded span. `a`/`b` are kind-specific labels (sequence id,
+/// layer index, op, read count …) surfaced as Chrome-trace args.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    /// Start, µs since the recorder's epoch.
+    pub t0_us: u64,
+    pub dur_us: u64,
+    /// Thread track (the `TID_*` constants).
+    pub tid: u32,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Thread-track ids: stable across runs so traces diff cleanly.
+pub const TID_SCHED: u32 = 1;
+pub const TID_ENGINE: u32 = 2;
+pub const TID_LOADER: u32 = 3;
+pub const TID_GOVERNOR: u32 = 9;
+/// I/O workers take `TID_IO_BASE + slot`.
+pub const TID_IO_BASE: u32 = 10;
+
+fn tid_name(tid: u32) -> String {
+    match tid {
+        TID_SCHED => "scheduler".into(),
+        TID_ENGINE => "engine".into(),
+        TID_LOADER => "loader".into(),
+        TID_GOVERNOR => "governor".into(),
+        t if t >= TID_IO_BASE => format!("io-{}", t - TID_IO_BASE),
+        t => format!("track-{t}"),
+    }
+}
+
+// ---------------------------------------------------------------- journal
+
+/// One governor re-budget, as journaled: the decision's trigger, the
+/// applied ledger, and how long the engine took to settle.
+#[derive(Debug, Clone)]
+pub struct JournalEntry {
+    /// µs since the recorder's epoch.
+    pub t_us: u64,
+    /// `RebudgetTrigger::name()`.
+    pub trigger: &'static str,
+    /// False = gated off (hysteresis) or infeasible; ledger fields then
+    /// reflect the still-standing previous plan.
+    pub applied: bool,
+    pub note: String,
+    pub old_budget: u64,
+    pub new_budget: u64,
+    pub cache_bytes: u64,
+    pub preload_bytes: u64,
+    pub compute_bytes: u64,
+    pub max_seqs: usize,
+    pub settle_us: u64,
+}
+
+impl JournalEntry {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("t_us", num(self.t_us as f64)),
+            ("trigger", s(self.trigger)),
+            ("applied", Value::Bool(self.applied)),
+            ("note", s(&self.note)),
+            ("old_budget", num(self.old_budget as f64)),
+            ("new_budget", num(self.new_budget as f64)),
+            ("cache_bytes", num(self.cache_bytes as f64)),
+            ("preload_bytes", num(self.preload_bytes as f64)),
+            ("compute_bytes", num(self.compute_bytes as f64)),
+            ("max_seqs", num(self.max_seqs as f64)),
+            ("settle_us", num(self.settle_us as f64)),
+        ])
+    }
+}
+
+// ----------------------------------------------------------- the recorder
+
+/// Default span-ring capacity (bounded DRAM: 65536 × 40 B ≈ 2.5 MiB).
+pub const DEFAULT_RING_CAP: usize = 65536;
+/// Journal ring capacity (re-budgets are rare; 256 is hours of history).
+pub const JOURNAL_CAP: usize = 256;
+/// A producer's local buffer flushes itself past this many spans even
+/// between wave boundaries, bounding per-producer memory.
+const LOCAL_BUF_CAP: usize = 4096;
+
+struct TraceInner {
+    ring: VecDeque<SpanEvent>,
+    dropped: u64,
+    journal: VecDeque<JournalEntry>,
+    journal_dropped: u64,
+}
+
+/// The shared recorder. Clone the `Arc` ([`TraceHandle`]) into every
+/// producer; span recording goes through per-producer [`TraceBuf`]s so
+/// the one mutex here is taken only at flush boundaries (and for rare
+/// directly-pushed events: waves, re-budgets).
+pub struct TraceShared {
+    enabled: AtomicBool,
+    epoch: Instant,
+    cap: usize,
+    inner: Mutex<TraceInner>,
+}
+
+pub type TraceHandle = Arc<TraceShared>;
+
+impl TraceShared {
+    pub fn new(cap: usize) -> TraceHandle {
+        Arc::new(TraceShared {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            cap: cap.max(16),
+            inner: Mutex::new(TraceInner {
+                ring: VecDeque::new(),
+                dropped: 0,
+                journal: VecDeque::new(),
+                journal_dropped: 0,
+            }),
+        })
+    }
+
+    /// The disabled-path cost of every producer check: one relaxed load.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// µs since the recorder's epoch (every span's clock).
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Push one span directly (rare events — wave, rebudget). Producers
+    /// with per-event volume use a [`TraceBuf`] instead.
+    pub fn push_one(&self, ev: SpanEvent) {
+        if !self.enabled() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        Self::push_locked(&mut g, self.cap, ev);
+    }
+
+    fn push_locked(g: &mut TraceInner, cap: usize, ev: SpanEvent) {
+        if g.ring.len() >= cap {
+            g.ring.pop_front();
+            g.dropped += 1;
+        }
+        g.ring.push_back(ev);
+    }
+
+    /// Drain a producer's local buffer into the ring (one lock per
+    /// flush). Oldest events are dropped (and counted) past `cap` — a
+    /// flight recorder keeps the most recent window.
+    fn push_batch(&self, buf: &mut Vec<SpanEvent>) {
+        let mut g = self.inner.lock().unwrap();
+        for ev in buf.drain(..) {
+            Self::push_locked(&mut g, self.cap, ev);
+        }
+    }
+
+    /// Journal a governor decision (recorded even with span tracing
+    /// off — bounded, rare, and `{"cmd":"journal"}` must always work).
+    pub fn record_journal(&self, e: JournalEntry) {
+        let mut g = self.inner.lock().unwrap();
+        if g.journal.len() >= JOURNAL_CAP {
+            g.journal.pop_front();
+            g.journal_dropped += 1;
+        }
+        g.journal.push_back(e);
+    }
+
+    /// `(events_held, ring_capacity, events_dropped)` for `stats`.
+    pub fn ring_stats(&self) -> (usize, usize, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.ring.len(), self.cap, g.dropped)
+    }
+
+    /// `(entries_held, entries_dropped)`.
+    pub fn journal_stats(&self) -> (usize, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.journal.len(), g.journal_dropped)
+    }
+
+    pub fn snapshot_spans(&self) -> Vec<SpanEvent> {
+        let g = self.inner.lock().unwrap();
+        g.ring.iter().copied().collect()
+    }
+
+    pub fn snapshot_journal(&self) -> Vec<JournalEntry> {
+        let g = self.inner.lock().unwrap();
+        g.journal.iter().cloned().collect()
+    }
+
+    /// Zero the rings and drop counters (`stats_reset`). Leaves
+    /// `enabled` as is.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.ring.clear();
+        g.dropped = 0;
+        g.journal.clear();
+        g.journal_dropped = 0;
+    }
+}
+
+/// A producer's private span buffer: push without locking, flush at the
+/// producer's natural boundary (wave end, step end, batch end). With
+/// tracing disabled `span()` allocates nothing — the `Vec` only ever
+/// grows while enabled.
+pub struct TraceBuf {
+    shared: TraceHandle,
+    tid: u32,
+    buf: Vec<SpanEvent>,
+}
+
+impl TraceBuf {
+    pub fn new(shared: TraceHandle, tid: u32) -> TraceBuf {
+        TraceBuf {
+            shared,
+            tid,
+            buf: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.shared.enabled()
+    }
+
+    /// µs since the shared epoch. Producers bracket work with
+    /// `let t0 = buf.now_us(); ...; buf.span(kind, t0, a, b)`.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.shared.now_us()
+    }
+
+    pub fn handle(&self) -> &TraceHandle {
+        &self.shared
+    }
+
+    /// Record a span ending now. No-op (no allocation) when disabled.
+    #[inline]
+    pub fn span(&mut self, kind: SpanKind, t0_us: u64, a: u64, b: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let now = self.shared.now_us();
+        self.span_at(kind, t0_us, now.saturating_sub(t0_us), a, b);
+    }
+
+    /// Record a span with an explicit duration.
+    #[inline]
+    pub fn span_at(
+        &mut self,
+        kind: SpanKind,
+        t0_us: u64,
+        dur_us: u64,
+        a: u64,
+        b: u64,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        if self.buf.len() >= LOCAL_BUF_CAP {
+            self.flush();
+        }
+        self.buf.push(SpanEvent {
+            kind,
+            t0_us,
+            dur_us,
+            tid: self.tid,
+            a,
+            b,
+        });
+    }
+
+    /// Drain into the shared ring (call at wave/step/batch boundaries).
+    pub fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        self.shared.push_batch(&mut self.buf);
+    }
+}
+
+// ------------------------------------------------------------ trace export
+
+/// Export the recorder as a Chrome trace-event JSON object
+/// (`{"traceEvents": [...], "otherData": {...}}`) — loadable in Perfetto
+/// or `chrome://tracing`. Spans become balanced `B`/`E` duration-event
+/// pairs per thread track (per-tid sort by start, longest-first at ties,
+/// children clamped into their parents so the nesting is always valid);
+/// journal entries become `"C"` counter events on the governor track;
+/// thread names ride as `"M"` metadata events.
+pub fn chrome_trace(h: &TraceHandle) -> Value {
+    let spans = h.snapshot_spans();
+    let journal = h.snapshot_journal();
+    let (_, cap, dropped) = h.ring_stats();
+
+    let mut events: Vec<Value> = Vec::new();
+
+    // thread-name metadata, one per track present
+    let mut tids: Vec<u32> = spans.iter().map(|e| e.tid).collect();
+    if !journal.is_empty() {
+        tids.push(TID_GOVERNOR);
+    }
+    tids.sort_unstable();
+    tids.dedup();
+    for tid in &tids {
+        events.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("thread_name")),
+            ("pid", num(1.0)),
+            ("tid", num(*tid as f64)),
+            ("args", obj(vec![("name", s(&tid_name(*tid)))])),
+        ]));
+    }
+
+    // duration events, balanced per tid
+    let mut by_tid: Vec<(u32, Vec<SpanEvent>)> = Vec::new();
+    for tid in &tids {
+        let mut evs: Vec<SpanEvent> =
+            spans.iter().filter(|e| e.tid == *tid).copied().collect();
+        // start ascending; at equal starts the longest span is the parent
+        evs.sort_by(|x, y| {
+            x.t0_us.cmp(&y.t0_us).then(y.dur_us.cmp(&x.dur_us))
+        });
+        if !evs.is_empty() {
+            by_tid.push((*tid, evs));
+        }
+    }
+    for (tid, evs) in by_tid {
+        // stack of (end_us, name) — emit E on pop
+        let mut stack: Vec<(u64, &'static str)> = Vec::new();
+        let emit_e = |events: &mut Vec<Value>, end: u64, name: &str| {
+            events.push(obj(vec![
+                ("ph", s("E")),
+                ("name", s(name)),
+                ("pid", num(1.0)),
+                ("tid", num(tid as f64)),
+                ("ts", num(end as f64)),
+            ]));
+        };
+        for ev in evs {
+            while let Some(&(end, name)) = stack.last() {
+                if end <= ev.t0_us {
+                    emit_e(&mut events, end, name);
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            // clamp into the open parent: recorded durations come off
+            // concurrent clocks, so a child overrunning its parent by a
+            // few µs is measurement noise, not structure
+            let mut end = ev.t0_us.saturating_add(ev.dur_us);
+            if let Some(&(pend, _)) = stack.last() {
+                end = end.min(pend);
+            }
+            events.push(obj(vec![
+                ("ph", s("B")),
+                ("name", s(ev.kind.name())),
+                ("pid", num(1.0)),
+                ("tid", num(tid as f64)),
+                ("ts", num(ev.t0_us as f64)),
+                (
+                    "args",
+                    obj(vec![
+                        ("a", num(ev.a as f64)),
+                        ("b", num(ev.b as f64)),
+                    ]),
+                ),
+            ]));
+            stack.push((end, ev.kind.name()));
+        }
+        while let Some((end, name)) = stack.pop() {
+            emit_e(&mut events, end, name);
+        }
+    }
+
+    // governor counter track from the journal
+    for e in &journal {
+        events.push(obj(vec![
+            ("ph", s("C")),
+            ("name", s("governor_ledger")),
+            ("pid", num(1.0)),
+            ("tid", num(TID_GOVERNOR as f64)),
+            ("ts", num(e.t_us as f64)),
+            (
+                "args",
+                obj(vec![
+                    ("budget", num(e.new_budget as f64)),
+                    ("cache", num(e.cache_bytes as f64)),
+                    ("preload", num(e.preload_bytes as f64)),
+                    ("compute", num(e.compute_bytes as f64)),
+                    ("max_seqs", num(e.max_seqs as f64)),
+                ]),
+            ),
+        ]));
+    }
+
+    obj(vec![
+        ("traceEvents", arr(events)),
+        (
+            "otherData",
+            obj(vec![
+                ("ring_capacity", num(cap as f64)),
+                ("dropped", num(dropped as f64)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ------------------------------------------------------------ Histo
+
+    #[test]
+    fn histo_bucket_boundaries_exact() {
+        // bucket 0 = {0}; bucket i ≥ 1 = [2^(i-1), 2^i)
+        assert_eq!(Histo::bucket_of(0), 0);
+        assert_eq!(Histo::bucket_of(1), 1);
+        assert_eq!(Histo::bucket_of(2), 2);
+        assert_eq!(Histo::bucket_of(3), 2);
+        assert_eq!(Histo::bucket_of(4), 3);
+        assert_eq!(Histo::bucket_of(7), 3);
+        assert_eq!(Histo::bucket_of(8), 4);
+        for i in 1..63usize {
+            let lo = 1u64 << (i - 1);
+            let hi = (1u64 << i) - 1;
+            assert_eq!(Histo::bucket_of(lo), i, "lower edge of bucket {i}");
+            assert_eq!(Histo::bucket_of(hi), i, "upper edge of bucket {i}");
+            assert_eq!(Histo::bucket_upper_edge(i), hi);
+        }
+        assert_eq!(Histo::bucket_of(u64::MAX), 63);
+        assert_eq!(Histo::bucket_upper_edge(63), u64::MAX);
+    }
+
+    #[test]
+    fn histo_records_and_reports() {
+        let mut h = Histo::new();
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.min(), 0);
+        for v in [3u64, 5, 9, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1117);
+        assert_eq!(h.min(), 3);
+        assert_eq!(h.max(), 1000);
+        // p100 clamps to the exact observed max
+        assert_eq!(h.percentile(1.0), 1000);
+    }
+
+    #[test]
+    fn histo_merge_associative_and_commutative() {
+        let mk = |vals: &[u64]| {
+            let mut h = Histo::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        let a = mk(&[1, 2, 3, 1000]);
+        let b = mk(&[7, 7, 7]);
+        let c = mk(&[0, 50_000, u64::MAX]);
+
+        // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)
+        let mut left = a;
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b;
+        bc.merge(&c);
+        let mut right = a;
+        right.merge(&bc);
+        assert_eq!(left, right);
+
+        // a ⊕ b == b ⊕ a
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+    }
+
+    #[test]
+    fn histo_percentiles_monotone() {
+        // several shapes, incl. heavily skewed ones
+        let shapes: Vec<Vec<u64>> = vec![
+            (1..=100u64).collect(),
+            vec![1; 99].into_iter().chain([1_000_000]).collect(),
+            vec![0, 0, 0, 1, 2, 4, 8, 16, 1 << 40],
+            vec![42],
+        ];
+        for vals in shapes {
+            let mut h = Histo::new();
+            for &v in &vals {
+                h.record(v);
+            }
+            assert!(
+                h.p50() <= h.p95() && h.p95() <= h.p99(),
+                "p50={} p95={} p99={} for {vals:?}",
+                h.p50(),
+                h.p95(),
+                h.p99()
+            );
+            assert!(h.p99() <= h.max());
+        }
+    }
+
+    #[test]
+    fn histo_percentile_is_conservative_upper_edge() {
+        let mut h = Histo::new();
+        for _ in 0..100 {
+            h.record(5); // bucket 3 = [4, 8)
+        }
+        // upper edge of bucket 3 is 7, but the observed max clamps it
+        assert_eq!(h.p50(), 5);
+        h.record(7);
+        assert_eq!(h.p99(), 7);
+    }
+
+    // ------------------------------------------------------------- ring
+
+    fn ev(t0: u64, dur: u64, tid: u32) -> SpanEvent {
+        SpanEvent {
+            kind: SpanKind::Step,
+            t0_us: t0,
+            dur_us: dur,
+            tid,
+            a: 0,
+            b: 0,
+        }
+    }
+
+    #[test]
+    fn ring_overflow_counts_drops() {
+        let h = TraceShared::new(16);
+        h.set_enabled(true);
+        let mut buf = TraceBuf::new(h.clone(), TID_ENGINE);
+        for i in 0..24u64 {
+            buf.span_at(SpanKind::Step, i * 10, 5, i, 0);
+        }
+        buf.flush();
+        let (len, cap, dropped) = h.ring_stats();
+        assert_eq!(cap, 16);
+        assert_eq!(len, 16);
+        assert_eq!(dropped, 8);
+        // the ring kept the NEWEST window
+        let spans = h.snapshot_spans();
+        assert_eq!(spans.first().unwrap().t0_us, 80);
+        assert_eq!(spans.last().unwrap().t0_us, 230);
+    }
+
+    #[test]
+    fn disabled_recorder_stores_nothing() {
+        let h = TraceShared::new(64);
+        let mut buf = TraceBuf::new(h.clone(), TID_ENGINE);
+        buf.span_at(SpanKind::Step, 0, 5, 0, 0);
+        buf.flush();
+        h.push_one(ev(0, 1, TID_SCHED));
+        let (len, _, dropped) = h.ring_stats();
+        assert_eq!((len, dropped), (0, 0));
+    }
+
+    #[test]
+    fn clear_resets_rings_and_drop_counters() {
+        let h = TraceShared::new(4);
+        h.set_enabled(true);
+        for i in 0..9u64 {
+            h.push_one(ev(i, 1, TID_SCHED));
+        }
+        h.record_journal(JournalEntry {
+            t_us: 1,
+            trigger: "command",
+            applied: true,
+            note: String::new(),
+            old_budget: 2,
+            new_budget: 1,
+            cache_bytes: 1,
+            preload_bytes: 0,
+            compute_bytes: 0,
+            max_seqs: 4,
+            settle_us: 10,
+        });
+        h.clear();
+        assert_eq!(h.ring_stats(), (0, 4, 0));
+        assert_eq!(h.journal_stats(), (0, 0));
+        assert!(h.enabled(), "clear must not flip the enable switch");
+    }
+
+    // ----------------------------------------------------------- export
+
+    /// Walk exported events checking balance + per-tid ts monotonicity
+    /// (the Rust-side mirror of scripts/check_trace.py).
+    fn check_exported(v: &Value) {
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        use std::collections::HashMap;
+        let mut stacks: HashMap<u64, Vec<String>> = HashMap::new();
+        let mut last_ts: HashMap<u64, f64> = HashMap::new();
+        for e in events {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            if ph == "M" {
+                continue;
+            }
+            let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            let prev = last_ts.entry(tid).or_insert(f64::MIN);
+            assert!(ts >= *prev, "ts must be monotone per tid");
+            *prev = ts;
+            match ph {
+                "B" => stacks
+                    .entry(tid)
+                    .or_default()
+                    .push(e.get("name").unwrap().as_str().unwrap().into()),
+                "E" => {
+                    let name = e.get("name").unwrap().as_str().unwrap();
+                    let top = stacks
+                        .get_mut(&tid)
+                        .and_then(|s| s.pop())
+                        .expect("E without open B");
+                    assert_eq!(top, name, "E name must match open B");
+                }
+                "C" => {}
+                other => panic!("unexpected ph {other}"),
+            }
+        }
+        for (tid, st) in stacks {
+            assert!(st.is_empty(), "unclosed B events on tid {tid}");
+        }
+    }
+
+    #[test]
+    fn export_is_balanced_and_monotone() {
+        let h = TraceShared::new(256);
+        h.set_enabled(true);
+        let mut eng = TraceBuf::new(h.clone(), TID_ENGINE);
+        let mut load = TraceBuf::new(h.clone(), TID_LOADER);
+        // nested: step containing two layer fetches, one overrunning
+        eng.span_at(SpanKind::Step, 100, 100, 1, 0);
+        eng.span_at(SpanKind::LayerFetch, 110, 20, 0, 0);
+        eng.span_at(SpanKind::LayerFetch, 150, 80, 1, 0); // overruns parent
+        // loader: preload part overlapping the step in wall time
+        load.span_at(SpanKind::PreloadPart, 120, 60, 7, 2);
+        eng.flush();
+        load.flush();
+        h.push_one(SpanEvent {
+            kind: SpanKind::Wave,
+            t0_us: 90,
+            dur_us: 130,
+            tid: TID_SCHED,
+            a: 1,
+            b: 0,
+        });
+        h.record_journal(JournalEntry {
+            t_us: 210,
+            trigger: "pressure",
+            applied: true,
+            note: "test".into(),
+            old_budget: 100,
+            new_budget: 80,
+            cache_bytes: 40,
+            preload_bytes: 20,
+            compute_bytes: 20,
+            max_seqs: 2,
+            settle_us: 300,
+        });
+        let v = chrome_trace(&h);
+        check_exported(&v);
+        let other = v.get("otherData").unwrap();
+        assert_eq!(other.get("dropped").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(
+            other.get("ring_capacity").unwrap().as_f64().unwrap(),
+            256.0
+        );
+        // the journal produced a counter event
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.iter().any(|e| e
+            .get("ph")
+            .map(|p| p.as_str() == Some("C"))
+            .unwrap_or(false)));
+        // and the trace round-trips through the json module
+        let parsed = crate::util::json::parse(&v.to_string()).unwrap();
+        check_exported(&parsed);
+    }
+
+    #[test]
+    fn journal_ring_bounded() {
+        let h = TraceShared::new(16);
+        for i in 0..(JOURNAL_CAP + 10) {
+            h.record_journal(JournalEntry {
+                t_us: i as u64,
+                trigger: "schedule",
+                applied: false,
+                note: String::new(),
+                old_budget: 0,
+                new_budget: 0,
+                cache_bytes: 0,
+                preload_bytes: 0,
+                compute_bytes: 0,
+                max_seqs: 1,
+                settle_us: 0,
+            });
+        }
+        let (len, dropped) = h.journal_stats();
+        assert_eq!(len, JOURNAL_CAP);
+        assert_eq!(dropped, 10);
+    }
+}

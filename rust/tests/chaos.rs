@@ -145,6 +145,7 @@ fn server_survives_permanent_faults_with_zero_failed_requests() {
         max_seqs: 2,
         sched_queue_cap: 16,
         fault_spec: Some(format!("seed={seed},bad=0+1048576")),
+        trace_out: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![
@@ -233,6 +234,7 @@ fn deadline_returns_partial_with_timeout_status() {
         max_seqs: 2,
         sched_queue_cap: 16,
         fault_spec: None,
+        trace_out: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let warm = obj(vec![

@@ -48,6 +48,7 @@ fn serve_generate_stats_shutdown() {
         max_seqs: 2,
         sched_queue_cap: 16,
         fault_spec: None,
+        trace_out: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     // wait for bind
@@ -74,6 +75,15 @@ fn serve_generate_stats_shutdown() {
     assert_eq!(toks.len(), 8);
     assert!(resp.get("toks_per_sec").unwrap().as_f64().unwrap() > 0.0);
     assert!(resp.get("text").unwrap().as_str().is_some());
+    // per-request inter-token latency percentiles (flight recorder)
+    let r_p50 = resp.get("itl_p50_us").unwrap().as_f64().unwrap();
+    let r_p95 = resp.get("itl_p95_us").unwrap().as_f64().unwrap();
+    let r_p99 = resp.get("itl_p99_us").unwrap().as_f64().unwrap();
+    assert!(
+        r_p50 <= r_p95 && r_p95 <= r_p99,
+        "per-request ITL percentiles must be monotone: \
+         p50={r_p50} p95={r_p95} p99={r_p99}"
+    );
 
     // a second request exercises queue accounting
     let r2 = client_roundtrip(addr, &req).unwrap();
@@ -112,6 +122,44 @@ fn serve_generate_stats_shutdown() {
     assert!(stats.get("io_wait_loader_us").is_some());
     assert!(stats.get("io_wait_engine_us").is_some());
     assert!(stats.get("io_buffers_recycled").is_some());
+    // flight-recorder latency percentiles (PERF.md §Observability):
+    // log2-bucket histograms over per-step ITL and engine io-wait,
+    // monotone within each family
+    for key in [
+        "itl_p50_us",
+        "itl_p95_us",
+        "itl_p99_us",
+        "wave_p50_us",
+        "wave_p99_us",
+        "ondemand_p99_us",
+        "admission_wait_p99_us",
+        "io_wait_loader_p99_us",
+        "io_wait_engine_p50_us",
+        "io_wait_engine_p95_us",
+        "io_wait_engine_p99_us",
+        "trace_enabled",
+        "trace_events",
+        "trace_capacity",
+        "trace_dropped",
+        "journal_entries",
+        "journal_dropped",
+    ] {
+        assert!(stats.get(key).is_some(), "stats missing {key}");
+    }
+    let p50 = stats.get("itl_p50_us").unwrap().as_f64().unwrap();
+    let p95 = stats.get("itl_p95_us").unwrap().as_f64().unwrap();
+    let p99 = stats.get("itl_p99_us").unwrap().as_f64().unwrap();
+    assert!(p50 > 0.0, "served decodes must populate the ITL histogram");
+    assert!(
+        p50 <= p95 && p95 <= p99,
+        "ITL percentiles must be monotone: p50={p50} p95={p95} p99={p99}"
+    );
+    let e50 = stats.get("io_wait_engine_p50_us").unwrap().as_f64().unwrap();
+    let e99 = stats.get("io_wait_engine_p99_us").unwrap().as_f64().unwrap();
+    assert!(
+        e50 <= e99,
+        "engine io-wait percentiles must be monotone: p50={e50} p99={e99}"
+    );
     assert_eq!(
         stats.get("parts_failed").unwrap().as_f64().unwrap(),
         0.0,
@@ -175,6 +223,124 @@ fn serve_generate_stats_shutdown() {
 }
 
 #[test]
+fn stats_reset_zeroes_windows_and_trace_captures_spans() {
+    // Flight recorder end-to-end: percentile keys populate after traffic,
+    // `stats_reset` opens a fresh measurement window (request totals and
+    // histograms back to zero), and the trace/journal commands answer with
+    // ring contents once tracing is switched on at runtime.
+    let Some(dir) = artifacts() else { return };
+    let addr = "127.0.0.1:17076";
+    let cfg = ServerConfig {
+        addr: addr.into(),
+        artifact_dir: dir,
+        opts: EngineOptions {
+            sparsity: 0.6,
+            group_size: 4,
+            swap_mode: SwapMode::Preload,
+            cache_bytes: 256 * 1024,
+            cache_policy: CachePolicy::Contextual,
+            device: &PIXEL6,
+            clock: ClockMode::Modeled,
+            bw_scale: 1.0,
+            trigger: PreloadTrigger::FirstLayer,
+            io_queue_depth: 0,
+            kv_block_tokens: 16,
+        },
+        governor: GovernorConfig::default(),
+        initial_budget: None,
+        pressure_schedule: None,
+        pressure_file: None,
+        max_seqs: 2,
+        sched_queue_cap: 16,
+        fault_spec: None,
+        trace_out: None,
+    };
+    let server = std::thread::spawn(move || serve(cfg).unwrap());
+    let req = obj(vec![
+        ("prompt", s("the sparse model ")),
+        ("n_tokens", num(8.0)),
+        ("temp", num(0.0)),
+    ]);
+    let mut up = false;
+    for _ in 0..60 {
+        if client_roundtrip(addr, &req).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    assert!(up, "server never came up");
+
+    // traffic populates the percentile window
+    let stats =
+        client_roundtrip(addr, &obj(vec![("cmd", s("stats"))])).unwrap();
+    assert!(stats.get("served").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(
+        stats.get("itl_p50_us").unwrap().as_f64().unwrap() > 0.0,
+        "decodes must populate the ITL histogram: {stats:?}"
+    );
+    // tracing is off by default
+    assert_eq!(
+        stats.get("trace_enabled").unwrap().as_f64().unwrap(),
+        0.0,
+        "tracing must default off: {stats:?}"
+    );
+
+    // reset opens a fresh window
+    let rr = client_roundtrip(addr, &obj(vec![("cmd", s("stats_reset"))]))
+        .unwrap();
+    assert_eq!(rr.get("ok"), Some(&Value::Bool(true)), "{rr:?}");
+    let stats =
+        client_roundtrip(addr, &obj(vec![("cmd", s("stats"))])).unwrap();
+    assert_eq!(
+        stats.get("served").unwrap().as_f64().unwrap(),
+        0.0,
+        "stats_reset must zero the request totals: {stats:?}"
+    );
+    assert_eq!(
+        stats.get("itl_p50_us").unwrap().as_f64().unwrap(),
+        0.0,
+        "stats_reset must clear the latency histograms: {stats:?}"
+    );
+
+    // runtime trace enable → decode → ring has span events
+    let t = client_roundtrip(
+        addr,
+        &obj(vec![("cmd", s("trace")), ("enable", Value::Bool(true))]),
+    )
+    .unwrap();
+    assert_eq!(t.get("enabled"), Some(&Value::Bool(true)), "{t:?}");
+    let r = client_roundtrip(addr, &req).unwrap();
+    assert!(r.get("error").is_none(), "{r:?}");
+    let t = client_roundtrip(addr, &obj(vec![("cmd", s("trace"))])).unwrap();
+    assert!(
+        t.get("events").unwrap().as_f64().unwrap() > 0.0,
+        "a traced decode must leave span events in the ring: {t:?}"
+    );
+
+    // the governor journal answers (may be empty without a rebudget)
+    let j =
+        client_roundtrip(addr, &obj(vec![("cmd", s("journal"))])).unwrap();
+    assert!(
+        j.get("entries").unwrap().as_arr().is_some(),
+        "journal must answer with an entries array: {j:?}"
+    );
+
+    // the window keeps accumulating after the reset
+    let stats =
+        client_roundtrip(addr, &obj(vec![("cmd", s("stats"))])).unwrap();
+    assert!(
+        stats.get("served").unwrap().as_f64().unwrap() >= 1.0,
+        "post-reset traffic must count from zero: {stats:?}"
+    );
+
+    let bye =
+        client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();
+    assert_eq!(bye.get("ok"), Some(&Value::Bool(true)));
+    server.join().unwrap();
+}
+
+#[test]
 fn two_concurrent_clients_decode_interleaved() {
     // Continuous batching end-to-end: two clients generate at the same
     // time; both must complete, and the scheduler counters must show two
@@ -204,6 +370,7 @@ fn two_concurrent_clients_decode_interleaved() {
         max_seqs: 2,
         sched_queue_cap: 16,
         fault_spec: None,
+        trace_out: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![
@@ -303,6 +470,7 @@ fn set_budget_is_not_starved_behind_a_long_generation() {
         max_seqs: 2,
         sched_queue_cap: 16,
         fault_spec: None,
+        trace_out: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let warm = obj(vec![
@@ -398,6 +566,7 @@ fn set_budget_rebudgets_live_engine_mid_session() {
         max_seqs: 2,
         sched_queue_cap: 16,
         fault_spec: None,
+        trace_out: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![
@@ -513,6 +682,7 @@ fn hostile_input_leaves_the_worker_serving() {
         max_seqs: 2,
         sched_queue_cap: 16,
         fault_spec: None,
+        trace_out: None,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![

@@ -1,6 +1,9 @@
 #!/usr/bin/env python3
 """Perf-trajectory gate: diff two BENCH_decode.json points and fail on a
->5% tokens/sec regression; optionally also diff two BENCH_governor.json
+>5% tokens/sec regression or a >5% p99 inter-token-latency regression
+(the `itl_p99_us` tail from the flight-recorder histograms — skipped
+gracefully when the previous point predates it); optionally also diff
+two BENCH_governor.json
 points (fail on a >5% settle-time regression), two BENCH_sched.json
 points (fail on a >5% aggregate interleaved tokens/sec regression), and
 two BENCH_kv.json points (fail on a >5% regression of either admitted
@@ -37,7 +40,36 @@ WATCHED = [
     "faults_injected",
     "retries",
     "fallback_rows",
+    "itl_p50_us",
+    "itl_p95_us",
+    "io_wait_engine_p99_us",
 ]
+
+
+def check_itl_tail(prev, curr, threshold):
+    """p99 inter-token-latency gate over the decode pair: the tail must
+    not regress >threshold. Skips gracefully when either point predates
+    the flight-recorder percentiles. Returns an exit code."""
+    if "itl_p99_us" not in prev or "itl_p99_us" not in curr:
+        print("check-perf: no itl_p99_us in one of the decode points — "
+              "ITL tail gate skipped (pre-flight-recorder baseline)")
+        return 0
+    try:
+        p, c = float(prev["itl_p99_us"]), float(curr["itl_p99_us"])
+    except (TypeError, ValueError) as e:
+        print(f"check-perf: malformed itl_p99_us: {e}")
+        return 2
+    if p <= 0:
+        print("check-perf: previous itl_p99_us is 0 — skipping ITL diff")
+        return 0
+    delta = (c - p) / p
+    print(f"check-perf: itl p99 {p:.0f}us -> {c:.0f}us "
+          f"({delta:+.1%}, threshold +{threshold:.0%})")
+    if delta > threshold:
+        print("check-perf: FAIL — p99 inter-token latency regressed "
+              f"past the {threshold:.0%} gate")
+        return 1
+    return 0
 
 
 def load_pair(prev_path, curr_path, what):
@@ -254,6 +286,7 @@ def main(argv):
                     print("check-perf: FAIL — tokens/sec regressed past "
                           f"the {threshold:.0%} gate")
                     rc = 1
+            rc = max(rc, check_itl_tail(prev, curr, threshold))
     except (json.JSONDecodeError, KeyError, ValueError) as e:
         print(f"check-perf: malformed bench point: {e}")
         return 2

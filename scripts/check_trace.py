@@ -1,0 +1,204 @@
+#!/usr/bin/env python3
+"""Flight-recorder trace gate: validate a Chrome trace-event JSON file
+(as written by `--trace-out`, the server `trace` command, or the
+sched_interleave bench) without needing the Rust toolchain.
+
+Checks:
+  * top level is either a bare event array or
+    {"traceEvents": [...], "otherData": {...}};
+  * every event's "ph" is one of B/E/C/M/X and carries pid/tid
+    (metadata "M" events are exempt from ts checks);
+  * per (pid, tid) track: "B"/"E" pairs balance as a stack and each
+    "E" closes a "B" of the same name;
+  * per (pid, tid) track: "ts" is monotone non-decreasing;
+  * the ring drop counter in otherData is reported (a dropped-events
+    trace is still *valid* — the ring is bounded by design — but the
+    count must be surfaced, and --max-dropped can gate it).
+
+With --require-overlap the trace must additionally contain at least one
+`preload_part` span that overlaps a compute span (`step` or
+`layer_fetch`) in wall time — the observable form of the paper's
+I/O-under-compute pipeline (PERF.md §Observability).
+
+Usage: check_trace.py TRACE.json [--require-overlap] [--max-dropped N]
+       check_trace.py --self-test
+
+Exit codes: 0 = valid, 1 = invalid trace, 2 = unreadable/malformed input.
+"""
+
+import json
+import os
+import sys
+
+PHASES = {"B", "E", "C", "M", "X"}
+COMPUTE_NAMES = {"step", "layer_fetch"}
+
+
+def fail(msg):
+    print(f"check-trace: FAIL — {msg}")
+    return 1
+
+
+def load_events(path):
+    """Returns (events, other_data) or raises ValueError."""
+    with open(path) as f:
+        v = json.load(f)
+    if isinstance(v, list):
+        return v, {}
+    if isinstance(v, dict):
+        events = v.get("traceEvents")
+        if not isinstance(events, list):
+            raise ValueError("object form needs a traceEvents array")
+        other = v.get("otherData", {})
+        if not isinstance(other, dict):
+            raise ValueError("otherData must be an object")
+        return events, other
+    raise ValueError("top level must be an array or an object")
+
+
+def validate(path, require_overlap=False, max_dropped=None):
+    """Validate one trace file. Returns an exit code."""
+    try:
+        events, other = load_events(path)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"check-trace: cannot read {path}: {e}")
+        return 2
+
+    stacks = {}   # (pid, tid) -> [(name, ts)]
+    last_ts = {}  # (pid, tid) -> ts
+    spans = []    # (name, t0, t1) closed durations, all tracks
+    counters = 0
+
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            return fail(f"event #{i} is not an object")
+        ph = e.get("ph")
+        if ph not in PHASES:
+            return fail(f"event #{i}: ph {ph!r} not in {sorted(PHASES)}")
+        if "pid" not in e or "tid" not in e:
+            return fail(f"event #{i} ({ph}): missing pid/tid")
+        if ph == "M":
+            continue
+        track = (e["pid"], e["tid"])
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            return fail(f"event #{i} ({ph}): bad ts {ts!r}")
+        prev = last_ts.get(track)
+        if prev is not None and ts < prev:
+            return fail(
+                f"event #{i} ({ph} {e.get('name')!r}): ts {ts} goes "
+                f"backwards on track {track} (previous {prev})")
+        last_ts[track] = ts
+
+        name = e.get("name")
+        if ph == "B":
+            stacks.setdefault(track, []).append((name, ts))
+        elif ph == "E":
+            stack = stacks.get(track) or []
+            if not stack:
+                return fail(
+                    f"event #{i}: E {name!r} on track {track} without "
+                    "an open B")
+            open_name, t0 = stack.pop()
+            if name is not None and name != open_name:
+                return fail(
+                    f"event #{i}: E {name!r} closes B {open_name!r} on "
+                    f"track {track}")
+            spans.append((open_name, t0, ts))
+        elif ph == "X":
+            dur = e.get("dur", 0)
+            if not isinstance(dur, (int, float)) or dur < 0:
+                return fail(f"event #{i} (X): bad dur {dur!r}")
+            spans.append((name, ts, ts + dur))
+        elif ph == "C":
+            counters += 1
+
+    for track, stack in stacks.items():
+        if stack:
+            names = [n for n, _ in stack]
+            return fail(f"unclosed B events on track {track}: {names}")
+
+    dropped = other.get("dropped", 0)
+    if not isinstance(dropped, (int, float)) or dropped < 0:
+        return fail(f"otherData.dropped must be a non-negative number, "
+                    f"got {dropped!r}")
+    print(f"check-trace: {path}: {len(events)} events, {len(spans)} "
+          f"spans, {counters} counter samples, {int(dropped)} dropped")
+    if dropped:
+        print(f"check-trace: note — the ring dropped {int(dropped)} "
+              "events (bounded buffer); raise the capacity or shorten "
+              "the capture for a gapless trace")
+    if max_dropped is not None and dropped > max_dropped:
+        return fail(f"{int(dropped)} dropped events exceeds the "
+                    f"--max-dropped {max_dropped} gate")
+
+    if require_overlap:
+        preloads = [sp for sp in spans if sp[0] == "preload_part"]
+        computes = [sp for sp in spans if sp[0] in COMPUTE_NAMES]
+        if not preloads:
+            return fail("no preload_part spans (is the loader traced?)")
+        if not computes:
+            return fail("no step/layer_fetch spans (is the engine "
+                        "traced?)")
+        hit = any(p[1] < c[2] and c[1] < p[2]
+                  for p in preloads for c in computes)
+        if not hit:
+            return fail(
+                f"no preload_part span overlaps a compute span "
+                f"({len(preloads)} preload, {len(computes)} compute) — "
+                "I/O is not riding under compute")
+        print(f"check-trace: overlap ok ({len(preloads)} preload_part, "
+              f"{len(computes)} compute spans)")
+
+    return 0
+
+
+def self_test():
+    """Validate the committed fixtures: the valid one must pass (with
+    --require-overlap), the two invalid ones must be rejected."""
+    fixtures = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "fixtures")
+    cases = [
+        ("trace_valid.json", True, 0),
+        ("trace_invalid_unbalanced.json", False, 1),
+        ("trace_invalid_ts.json", False, 1),
+    ]
+    rc = 0
+    for name, overlap, want in cases:
+        path = os.path.join(fixtures, name)
+        got = validate(path, require_overlap=overlap)
+        if got != want:
+            print(f"check-trace: SELF-TEST FAIL — {name}: exit {got}, "
+                  f"wanted {want}")
+            rc = 1
+        else:
+            print(f"check-trace: self-test {name}: ok (exit {got})")
+    if rc == 0:
+        print("check-trace: self-test ok")
+    return rc
+
+
+def main(argv):
+    argv = list(argv[1:])
+    if "--self-test" in argv:
+        return self_test()
+    require_overlap = "--require-overlap" in argv
+    argv = [a for a in argv if a != "--require-overlap"]
+    max_dropped = None
+    if "--max-dropped" in argv:
+        i = argv.index("--max-dropped")
+        try:
+            max_dropped = float(argv[i + 1])
+        except (IndexError, ValueError):
+            print("check-trace: --max-dropped expects a number")
+            return 2
+        del argv[i:i + 2]
+    if len(argv) != 1:
+        print(__doc__.strip())
+        return 2
+    return validate(argv[0], require_overlap=require_overlap,
+                    max_dropped=max_dropped)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
