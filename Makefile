@@ -2,7 +2,7 @@
 # python side (L2/L1) only runs at artifact-build time.
 
 .PHONY: build test artifacts bench-smoke bench-governor bench-sched \
-        bench-kv check-perf trace-smoke chaos ci
+        bench-kv check-perf trace-smoke chaos lint lint-self-test ci
 
 build:
 	cd rust && cargo build --release
@@ -108,10 +108,24 @@ chaos:
 			|| exit 1; \
 	done
 
-# One-shot CI entry point: build → test → chaos schedules → perf smoke
-# (decode + scheduler + paged-KV points) → regression gates → trace
-# smoke. Needs `make artifacts` to have run once; the benches and the
-# chaos suite self-skip without artifacts, leaving the gates inert.
-# Runs on GitHub Actions via .github/workflows/ci.yml.
-ci: build test chaos bench-smoke bench-sched bench-kv check-perf \
-    trace-smoke
+# Toolchain-free invariant checker (LINT.md): lock discipline, counter
+# registry, construction-site exhaustiveness, hot-path hygiene, and
+# structural sanity over rust/, driven by lint.toml. Needs only the
+# python3 stdlib, so it gates every environment — including the ones
+# where cargo never runs.
+lint:
+	@python3 scripts/pallas_lint --root .
+
+# The linter's own fixture battery: every pass is exercised against
+# committed good/bad snippets with exact expected-finding assertions.
+lint-self-test:
+	@python3 scripts/pallas_lint --root . --self-test
+
+# One-shot CI entry point: lint (always-on, toolchain-free) → build →
+# test → chaos schedules → perf smoke (decode + scheduler + paged-KV
+# points) → regression gates → trace smoke. Needs `make artifacts` to
+# have run once; the benches and the chaos suite self-skip without
+# artifacts, leaving the gates inert. Runs on GitHub Actions via
+# .github/workflows/ci.yml.
+ci: lint lint-self-test build test chaos bench-smoke bench-sched \
+    bench-kv check-perf trace-smoke

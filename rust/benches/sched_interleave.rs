@@ -288,6 +288,16 @@ fn main() {
         ("aggregate_tokens_per_sec", num(inter_tps)),
         ("speedup", num(inter_tps / serial_tps)),
         ("sched_waves", num(st.waves as f64)),
+        // admission-control ledger: constant for this fixed workload, but
+        // carried so the perf trajectory sees a scheduler that starts
+        // rejecting or preempting (check_perf notes any swing)
+        ("seqs_admitted", num(st.seqs_admitted as f64)),
+        ("seqs_queued", num(st.seqs_queued as f64)),
+        ("seqs_rejected", num(st.seqs_rejected as f64)),
+        ("seqs_preempted", num(st.seqs_preempted as f64)),
+        ("seqs_completed", num(st.seqs_completed as f64)),
+        ("seqs_timed_out", num(st.seqs_timed_out as f64)),
+        ("seqs_panicked", num(st.seqs_panicked as f64)),
         (
             "wave_avg_us",
             num(st.avg_wave().as_secs_f64() * 1e6),

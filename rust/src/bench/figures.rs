@@ -545,6 +545,10 @@ pub fn bench_smoke(args: &Args) -> Result<()> {
         ("compute_busy_ms", num(m.compute_busy.as_secs_f64() * 1e3)),
         ("flash_busy_ms", num(m.flash_busy.as_secs_f64() * 1e3)),
         ("flash_bytes", num(m.flash_bytes as f64)),
+        // swap-volume companions of flash_bytes: cache-served bytes and
+        // compute DRAM traffic (the energy model's activity inputs)
+        ("cache_bytes", num(m.cache_bytes as f64)),
+        ("dram_bytes", num(m.dram_bytes as f64)),
         ("cache_hit_rate", num(eng.cache_hit_rate())),
         ("preload_precision", num(m.preload_precision())),
         ("cache_lock_acquires", num(m.cache_lock_acquires as f64)),
@@ -575,6 +579,12 @@ pub fn bench_smoke(args: &Args) -> Result<()> {
         ("itl_p50_us", num(m.h_itl_us.p50() as f64)),
         ("itl_p95_us", num(m.h_itl_us.p95() as f64)),
         ("itl_p99_us", num(m.h_itl_us.p99() as f64)),
+        ("wave_p99_us", num(m.h_wave_us.p99() as f64)),
+        ("ondemand_p99_us", num(m.h_ondemand_us.p99() as f64)),
+        (
+            "admission_wait_p99_us",
+            num(m.h_admission_wait_us.p99() as f64),
+        ),
         ("io_wait_engine_p99_us", num(io_engine.p99() as f64)),
         ("loader_chunks_read", num(loader.chunks_read as f64)),
         ("loader_bytes_read", num(loader.bytes_read as f64)),
@@ -584,7 +594,10 @@ pub fn bench_smoke(args: &Args) -> Result<()> {
         // retrying or falling back is visible in the trajectory
         ("faults_injected", num(m.faults_injected as f64)),
         ("retries", num(m.io_retries as f64)),
+        ("wedged_recoveries", num(m.wedged_recoveries as f64)),
         ("fallback_rows", num(m.fallback_rows as f64)),
+        ("degraded_fallbacks", num(m.degraded_fallbacks as f64)),
+        ("kv_blocks_peak", num(m.kv_blocks_peak as f64)),
         ("dram_total_bytes", num(mem.dram_total() as f64)),
         ("energy_per_token_j", num(e.energy_per_token_j)),
     ]);

@@ -718,6 +718,7 @@ impl SwapEngine {
     /// preload chain, and retires its preload groups exactly (the
     /// pipeline's exact-retirement bookkeeping is what makes chains of
     /// one sequence survive the interleaved retirements of another).
+    // pallas-lint: hot-path
     pub fn step(&mut self, seq: &mut SeqState, token: u32) -> Result<&[f32]> {
         self.step_inner(seq, token)?;
         Ok(&self.logits)
@@ -1197,6 +1198,7 @@ impl SwapEngine {
     /// wait cannot deadlock or even contend: the loader takes no cache
     /// lock at all (its jobs arrive pre-filtered), so holding the guard
     /// for the wait costs the loader nothing.
+    // pallas-lint: hot-path
     fn fetch_packed(
         &mut self,
         layer: usize,

@@ -1102,6 +1102,7 @@ fn spawn_worker(
         .expect("spawn io worker")
 }
 
+// pallas-lint: hot-path
 fn worker_loop(sh: Arc<QueueShared>, slot: usize, generation: u64) {
     loop {
         // Claim a wave: a contiguous same-class run from the front of

@@ -310,6 +310,7 @@ impl SeqKv {
     /// table (block-contiguous runs, one `copy_from_slice` per block per
     /// side), the tail zero-filled — bit-identical to the monolithic
     /// zero-initialized buffer the artifact used to receive.
+    // pallas-lint: hot-path
     pub fn gather_layer(
         &self,
         pool: &KvPool,

@@ -144,6 +144,16 @@ struct ServerStats {
     // atomics instead of poking the engine
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
+    /// Bytes loaded from flash / served from compute DRAM traffic —
+    /// the swap-volume pair the bench points carry; mirrored so `stats`
+    /// tracks the same counters the perf gate watches.
+    flash_bytes: AtomicU64,
+    dram_bytes: AtomicU64,
+    /// Preload precision inputs (correctly preloaded / total needed).
+    preload_hits: AtomicU64,
+    preload_total: AtomicU64,
+    /// Cross-token group-0 preload chains issued at token boundaries.
+    cross_token_preloads: AtomicU64,
     lock_acquires: AtomicU64,
     locks_avoided: AtomicU64,
     batched_inserts: AtomicU64,
@@ -187,6 +197,9 @@ struct ServerStats {
     seqs_rejected: AtomicU64,
     seqs_preempted: AtomicU64,
     seqs_completed: AtomicU64,
+    /// High-water mark of concurrently live sequences (realized admitted
+    /// concurrency — the paged-KV bench's acceptance metric).
+    seqs_active_peak: AtomicU64,
     sched_waves: AtomicU64,
     sched_wave_us: AtomicU64,
     max_active_seqs: AtomicU64,
@@ -228,6 +241,11 @@ impl ServerStats {
         let st = |a: &AtomicU64, v: u64| a.store(v, Ordering::Relaxed);
         st(&self.cache_hits, m.cache_hits);
         st(&self.cache_misses, m.cache_misses);
+        st(&self.flash_bytes, m.flash_bytes);
+        st(&self.dram_bytes, m.dram_bytes);
+        st(&self.preload_hits, m.preload_hits);
+        st(&self.preload_total, m.preload_total);
+        st(&self.cross_token_preloads, m.cross_token_preloads);
         st(&self.lock_acquires, m.cache_lock_acquires);
         st(&self.locks_avoided, m.cache_locks_avoided);
         st(&self.batched_inserts, m.batched_inserts);
@@ -305,6 +323,7 @@ impl ServerStats {
         w(&self.seqs_rejected, st.seqs_rejected);
         w(&self.seqs_preempted, st.seqs_preempted);
         w(&self.seqs_completed, st.seqs_completed);
+        w(&self.seqs_active_peak, st.peak_active);
         w(&self.sched_waves, st.waves);
         w(&self.sched_wave_us, st.wave_time.as_micros() as u64);
         w(&self.max_active_seqs, max_active as u64);
@@ -997,6 +1016,26 @@ fn handle_conn(
                                 if h + mi == 0.0 { 0.0 } else { h / (h + mi) }
                             }),
                         ),
+                        ("flash_bytes", g(&stats.flash_bytes)),
+                        ("dram_bytes", g(&stats.dram_bytes)),
+                        (
+                            "preload_precision",
+                            num({
+                                let h = stats
+                                    .preload_hits
+                                    .load(Ordering::Relaxed)
+                                    as f64;
+                                let t = stats
+                                    .preload_total
+                                    .load(Ordering::Relaxed)
+                                    as f64;
+                                if t == 0.0 { 0.0 } else { h / t }
+                            }),
+                        ),
+                        (
+                            "cross_token_preloads",
+                            g(&stats.cross_token_preloads),
+                        ),
                         ("cache_lock_acquires", g(&stats.lock_acquires)),
                         ("cache_locks_avoided", g(&stats.locks_avoided)),
                         ("batched_inserts", g(&stats.batched_inserts)),
@@ -1063,6 +1102,7 @@ fn handle_conn(
                         ("seqs_rejected", g(&stats.seqs_rejected)),
                         ("seqs_preempted", g(&stats.seqs_preempted)),
                         ("seqs_completed", g(&stats.seqs_completed)),
+                        ("seqs_active_peak", g(&stats.seqs_active_peak)),
                         ("sched_waves", g(&stats.sched_waves)),
                         (
                             "sched_wave_avg_us",

@@ -460,6 +460,7 @@ impl TraceBuf {
     }
 
     /// Record a span ending now. No-op (no allocation) when disabled.
+    // pallas-lint: hot-path
     #[inline]
     pub fn span(&mut self, kind: SpanKind, t0_us: u64, a: u64, b: u64) {
         if !self.enabled() {
@@ -470,6 +471,7 @@ impl TraceBuf {
     }
 
     /// Record a span with an explicit duration.
+    // pallas-lint: hot-path
     #[inline]
     pub fn span_at(
         &mut self,

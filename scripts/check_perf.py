@@ -23,6 +23,11 @@ import json
 import os
 import sys
 
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "pallas_lint")
+)
+from jsonutil import load_pair  # noqa: E402  (shared gate helpers)
+
 THRESHOLD = 0.05
 
 # Secondary counters worth flagging (informational, never fatal): these
@@ -39,9 +44,13 @@ WATCHED = [
     "io_buffers_recycled",
     "faults_injected",
     "retries",
+    "wedged_recoveries",
     "fallback_rows",
+    "degraded_fallbacks",
+    "kv_blocks_peak",
     "itl_p50_us",
     "itl_p95_us",
+    "ondemand_p99_us",
     "io_wait_engine_p99_us",
 ]
 
@@ -70,21 +79,6 @@ def check_itl_tail(prev, curr, threshold):
               f"past the {threshold:.0%} gate")
         return 1
     return 0
-
-
-def load_pair(prev_path, curr_path, what):
-    """Returns (prev, curr) dicts, or None when there is nothing to diff
-    (missing previous point is fine; missing current point is fatal only
-    for the primary decode pair — handled by the caller)."""
-    if not os.path.exists(prev_path):
-        print(f"check-perf: no previous {what} point ({prev_path}); "
-              "nothing to diff — baseline recorded")
-        return None
-    with open(prev_path) as f:
-        prev = json.load(f)
-    with open(curr_path) as f:
-        curr = json.load(f)
-    return prev, curr
 
 
 def check_governor(prev_path, curr_path, threshold):

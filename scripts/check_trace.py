@@ -30,6 +30,11 @@ import json
 import os
 import sys
 
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "pallas_lint")
+)
+from jsonutil import load_trace_events as load_events  # noqa: E402
+
 PHASES = {"B", "E", "C", "M", "X"}
 COMPUTE_NAMES = {"step", "layer_fetch"}
 
@@ -37,23 +42,6 @@ COMPUTE_NAMES = {"step", "layer_fetch"}
 def fail(msg):
     print(f"check-trace: FAIL — {msg}")
     return 1
-
-
-def load_events(path):
-    """Returns (events, other_data) or raises ValueError."""
-    with open(path) as f:
-        v = json.load(f)
-    if isinstance(v, list):
-        return v, {}
-    if isinstance(v, dict):
-        events = v.get("traceEvents")
-        if not isinstance(events, list):
-            raise ValueError("object form needs a traceEvents array")
-        other = v.get("otherData", {})
-        if not isinstance(other, dict):
-            raise ValueError("otherData must be an object")
-        return events, other
-    raise ValueError("top level must be an array or an object")
 
 
 def validate(path, require_overlap=False, max_dropped=None):

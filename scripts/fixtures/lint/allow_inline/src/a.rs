@@ -1,0 +1,10 @@
+pub struct Opts {
+    pub alpha: u64,
+    pub beta: u64,
+}
+
+pub fn build() -> Opts {
+    // deliberately short for the fixture
+    // pallas-lint: allow(missing-field)
+    Opts { alpha: 1 }
+}

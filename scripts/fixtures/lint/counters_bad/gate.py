@@ -1,0 +1,1 @@
+WATCHED = ["tokens", "ghost_key"]

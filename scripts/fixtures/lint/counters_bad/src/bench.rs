@@ -1,0 +1,6 @@
+pub fn write_point(m: &Metrics) -> String {
+    obj(vec![
+        ("tokens", num(m.tokens as f64)),
+        ("old_tokens", num(m.old_tokens as f64)),
+    ])
+}

@@ -1,0 +1,4 @@
+pub struct Metrics {
+    pub tokens: u64,
+    pub orphan_counter: u64,
+}

@@ -1,0 +1,3 @@
+pub fn stats(m: &Metrics) -> String {
+    obj(vec![("tokens", num(m.tokens as f64))])
+}

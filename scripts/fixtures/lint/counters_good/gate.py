@@ -1,0 +1,1 @@
+WATCHED = ["flash_bytes", "itl_p50_us", "tokens_per_sec"]

@@ -1,0 +1,8 @@
+pub fn write_point(m: &Metrics) -> String {
+    obj(vec![
+        ("tokens", num(m.tokens as f64)),
+        ("tokens_per_sec", num(m.tokens_per_sec())),
+        ("flash_bytes", num(m.flash_bytes as f64)),
+        ("itl_p50_us", num(m.h_itl_us.p50())),
+    ])
+}

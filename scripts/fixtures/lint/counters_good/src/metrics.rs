@@ -1,0 +1,11 @@
+pub struct Metrics {
+    pub tokens: u64,
+    pub flash_bytes: u64,
+    pub h_itl_us: Histo,
+}
+
+impl Metrics {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64
+    }
+}

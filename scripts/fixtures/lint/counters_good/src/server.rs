@@ -1,0 +1,7 @@
+pub fn stats(m: &Metrics) -> String {
+    obj(vec![
+        ("tokens", num(m.tokens as f64)),
+        ("flash_bytes", num(m.flash_bytes as f64)),
+        ("itl_p99_us", num(m.h_itl_us.p99())),
+    ])
+}

@@ -1,0 +1,12 @@
+// pallas-lint: hot-path
+fn step(rows: &[u64]) -> u64 {
+    let head = rows.first().unwrap();
+    let mut total = 0;
+    for r in rows {
+        let copy: Vec<u64> = Vec::new();
+        total += r + copy.len() as u64 + head;
+    }
+    total
+}
+
+fn fetch() {}

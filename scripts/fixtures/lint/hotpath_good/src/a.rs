@@ -1,0 +1,12 @@
+// pallas-lint: hot-path
+fn step(q: &Mutex<u64>, cv: &Condvar) -> u64 {
+    // poisoning idiom: unwrap directly chained on lock()/wait() is fine
+    let mut g = q.lock().unwrap();
+    g = cv.wait(g).unwrap();
+    // allocation OUTSIDE any loop body is fine
+    let scratch: Vec<u64> = Vec::new();
+    for v in scratch.iter() {
+        let _ = v + *g;
+    }
+    *g
+}

@@ -1,0 +1,21 @@
+pub struct Opts {
+    pub sparsity: f64,
+    pub group: usize,
+    pub cache_bytes: u64,
+}
+
+fn short() -> Opts {
+    Opts {
+        sparsity: 0.6,
+        group: 4,
+    }
+}
+
+fn stale_rename() -> Opts {
+    Opts {
+        sparsity: 0.6,
+        group: 4,
+        cache_bytes: 1,
+        io_depth: 2,
+    }
+}

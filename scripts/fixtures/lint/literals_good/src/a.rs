@@ -1,0 +1,20 @@
+pub struct Opts {
+    pub sparsity: f64,
+    pub group: usize,
+    pub cache_bytes: u64,
+}
+
+fn build() -> Opts {
+    Opts {
+        sparsity: 0.6,
+        group: 4,
+        cache_bytes: 256 << 10,
+    }
+}
+
+fn build_defaulted(base: Opts) -> Opts {
+    Opts {
+        sparsity: 0.9,
+        ..base
+    }
+}

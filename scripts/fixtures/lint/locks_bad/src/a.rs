@@ -1,0 +1,21 @@
+fn nested(cache_handle: &SharedCache, q: &Mutex<u64>) {
+    let cache = cache_handle.lock();
+    let g = q.lock().unwrap();
+    let _ = (cache.len(), g);
+}
+
+fn takes_inner_lock(q: &Mutex<u64>) -> u64 {
+    *q.lock().unwrap()
+}
+
+fn calls_acquirer(cache_handle: &SharedCache, q: &Mutex<u64>) {
+    let cache = cache_handle.lock();
+    let v = takes_inner_lock(q);
+    cache.store(v);
+}
+
+fn publishes_under_guard(cache_handle: &SharedCache, trace: &TraceBuf) {
+    let cache = cache_handle.lock();
+    trace.flush();
+    drop(cache);
+}

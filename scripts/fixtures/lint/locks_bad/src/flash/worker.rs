@@ -1,0 +1,1 @@
+use crate::cache::SharedCache;

@@ -1,0 +1,12 @@
+fn family_fetch(cache_handle: &SharedCache) {
+    let mut cache = cache_handle.lock();
+    cache.insert_rows(1, 2);
+    drop(cache);
+    trace.push_batch(events);
+}
+
+fn std_mutex_ok(q: &Mutex<Vec<u8>>) {
+    // `.lock().unwrap()` is a std mutex, not a cache guard binding
+    let g = q.lock().unwrap();
+    let _ = g.len();
+}

@@ -1,0 +1,5 @@
+#[test]
+fn same_name() {}
+
+#[test]
+fn same_name() {}

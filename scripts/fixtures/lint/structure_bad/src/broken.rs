@@ -1,0 +1,4 @@
+fn oops() {
+    if true {
+        let x = 1;
+}

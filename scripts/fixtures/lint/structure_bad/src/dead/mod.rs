@@ -1,0 +1,1 @@
+pub fn nobody_declares_me() {}

@@ -1,0 +1,2 @@
+pub mod a;
+pub mod missing;

@@ -1,0 +1,14 @@
+pub fn braces_in_strings() -> &'static str {
+    // the lexer must not count delimiters inside strings or comments: }}
+    let s = "}{)(";
+    let c = '{';
+    let r = r#"{{{"#;
+    let _ = (s, c, r);
+    "ok"
+}
+
+#[test]
+fn first_test() {}
+
+#[test]
+fn second_test() {}

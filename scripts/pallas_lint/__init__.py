@@ -1,0 +1,24 @@
+"""pallas-lint: a toolchain-free static invariant checker for the
+ActiveFlow Rust crate.
+
+Seven PRs of concurrency-heavy Rust shipped from containers with no Rust
+toolchain; every safety argument rested on hand desk-checks of the same
+few invariants (single-cache-lock family fetch, cache-free loader, counter
+plumbing from DecodeMetrics to the perf gate, exhaustive config-struct
+literals).  This package turns those desk-checks into a CI gate that runs
+on stdlib Python only — the one correctness tool that can actually arm on
+every push in this container (see LINT.md for the invariant catalogue).
+
+Layout:
+  rustlex.py    comment/string/char-literal-aware Rust lexer
+  items.py      per-item (fn / struct / impl) span extractor
+  config.py     lint.toml loader (mini-TOML subset) + allowlist
+  findings.py   Finding model + suppression matching
+  passes/       the pluggable pass battery (locks, counters, literals,
+                hotpath, structure)
+  cli.py        driver: discovery, pass dispatch, text/--json output,
+                --self-test fixture battery
+  jsonutil.py   JSON-reading helpers shared with check_perf/check_trace
+"""
+
+__version__ = "1.0"

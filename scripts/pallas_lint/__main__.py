@@ -1,0 +1,19 @@
+"""Entry point: `python3 scripts/pallas_lint [...]` (directory
+execution) and `python3 -m pallas_lint [...]` both work — directory
+execution runs this file as a bare script, so fall back to absolute
+imports there."""
+
+import sys
+
+if __package__ in (None, ""):
+    import os
+
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    from pallas_lint.cli import main
+else:
+    from .cli import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

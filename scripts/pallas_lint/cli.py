@@ -1,0 +1,188 @@
+"""pallas-lint driver.
+
+    python3 scripts/pallas_lint [--root DIR] [--config lint.toml]
+                                [--json] [--self-test] [--pass NAME]
+
+Exit codes mirror the other gates: 0 = clean, 1 = findings (or a failed
+self-test case), 2 = config/usage error.  Findings print as
+``file:line: [pass/code] message`` so CI logs are clickable.
+"""
+
+import json
+import os
+import sys
+
+from .config import ConfigError, LintConfig, load_config
+from .findings import Project, apply_suppressions
+from .passes import BY_NAME, PASSES
+
+
+def run_passes(project, only=None):
+    findings = []
+    for p in PASSES:
+        if only and p.NAME not in only:
+            continue
+        findings.extend(p.run(project))
+    findings.sort(key=lambda f: (f.file, f.line, f.passname, f.code))
+    return apply_suppressions(project, findings)
+
+
+def lint_tree(root, config_path, only=None):
+    config = load_config(config_path)
+    project = Project(root, config).load_tree()
+    if not project.files:
+        print(f"pallas-lint: no Rust files under {config.rust_roots} "
+              f"(root {root}) — nothing to lint", file=sys.stderr)
+        return None
+    return run_passes(project, only=only)
+
+
+def print_text(res):
+    for f in res.active:
+        print(f.render())
+    for f in res.stale_allows:
+        print(f.render())
+    n_act = len(res.active) + len(res.stale_allows)
+    n_sup = len(res.suppressed)
+    if n_act:
+        print(f"pallas-lint: FAIL — {n_act} finding(s) "
+              f"({n_sup} suppressed by allowlist)")
+    else:
+        print(f"pallas-lint: ok ({n_sup} finding(s) suppressed by "
+              "allowlist)")
+    return 1 if n_act else 0
+
+
+def print_json(res):
+    out = {
+        "ok": not res.active and not res.stale_allows,
+        "findings": [f.as_json() for f in res.active],
+        "stale_allows": [f.as_json() for f in res.stale_allows],
+        "suppressed": [f.as_json() for f in res.suppressed],
+    }
+    print(json.dumps(out, indent=2, sort_keys=True))
+    return 0 if out["ok"] else 1
+
+
+def self_test(root, only=None):
+    """Run every fixture case under scripts/fixtures/lint/: each case dir
+    carries its own lint.toml plus expect.json with the exact findings
+    (pass/code/file/line) the case must produce. Good cases expect []."""
+    fixdir = os.path.join(root, "scripts", "fixtures", "lint")
+    if not os.path.isdir(fixdir):
+        print(f"pallas-lint: fixture dir {fixdir} missing", file=sys.stderr)
+        return 2
+    cases = sorted(
+        d for d in os.listdir(fixdir)
+        if os.path.isdir(os.path.join(fixdir, d))
+    )
+    if not cases:
+        print("pallas-lint: no fixture cases", file=sys.stderr)
+        return 2
+    failed = 0
+    for case in cases:
+        cdir = os.path.join(fixdir, case)
+        expect_path = os.path.join(cdir, "expect.json")
+        config_path = os.path.join(cdir, "lint.toml")
+        if not os.path.exists(expect_path):
+            print(f"self-test: {case}: missing expect.json")
+            failed += 1
+            continue
+        with open(expect_path) as f:
+            expect = json.load(f)
+        try:
+            if os.path.exists(config_path):
+                config = load_config(config_path)
+            else:
+                config = LintConfig(raw={}, rust_roots=["."])
+            project = Project(cdir, config).load_tree()
+            res = run_passes(project, only=only)
+        except Exception as e:  # a crash on a fixture is a failure too
+            print(f"self-test: {case}: CRASH {type(e).__name__}: {e}")
+            failed += 1
+            continue
+        got = sorted(
+            (f.passname, f.code, f.file, f.line)
+            for f in res.active + res.stale_allows
+        )
+        want = sorted(
+            (e["pass"], e["code"], e["file"], e["line"])
+            for e in expect.get("findings", [])
+        )
+        want_sup = expect.get("suppressed")
+        sup_ok = (
+            want_sup is None or len(res.suppressed) == want_sup
+        )
+        if got == want and sup_ok:
+            n = len(want)
+            print(f"self-test: {case}: ok "
+                  f"({n} expected finding(s), {len(res.suppressed)} "
+                  "suppressed)")
+        else:
+            failed += 1
+            print(f"self-test: {case}: MISMATCH")
+            for t in want:
+                if t not in got:
+                    print(f"  missing  {t[2]}:{t[3]}: [{t[0]}/{t[1]}]")
+            for t in got:
+                if t not in want:
+                    print(f"  unexpected  {t[2]}:{t[3]}: [{t[0]}/{t[1]}]")
+            if not sup_ok:
+                print(f"  suppressed: want {want_sup}, "
+                      f"got {len(res.suppressed)}")
+    print(f"self-test: {len(cases) - failed}/{len(cases)} cases ok")
+    return 1 if failed else 0
+
+
+def main(argv):
+    argv = list(argv)
+    root = "."
+    config_path = None
+    as_json = False
+    do_self_test = False
+    only = None
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--root":
+            i += 1
+            root = argv[i]
+        elif a == "--config":
+            i += 1
+            config_path = argv[i]
+        elif a == "--json":
+            as_json = True
+        elif a == "--self-test":
+            do_self_test = True
+        elif a == "--pass":
+            i += 1
+            if argv[i] not in BY_NAME:
+                print(f"pallas-lint: unknown pass {argv[i]!r} "
+                      f"(have: {', '.join(sorted(BY_NAME))})",
+                      file=sys.stderr)
+                return 2
+            only = {argv[i]}
+        elif a in ("-h", "--help"):
+            print(__doc__.strip())
+            return 0
+        else:
+            print(f"pallas-lint: unknown argument {a!r}", file=sys.stderr)
+            return 2
+        i += 1
+
+    if do_self_test:
+        return self_test(root, only=only)
+
+    if config_path is None:
+        config_path = os.path.join(root, "lint.toml")
+    if not os.path.exists(config_path):
+        print(f"pallas-lint: config {config_path} missing", file=sys.stderr)
+        return 2
+    try:
+        res = lint_tree(root, config_path, only=only)
+    except ConfigError as e:
+        print(f"pallas-lint: config error: {e}", file=sys.stderr)
+        return 2
+    if res is None:
+        return 2
+    return print_json(res) if as_json else print_text(res)

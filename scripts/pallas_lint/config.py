@@ -1,0 +1,203 @@
+"""lint.toml loading.
+
+The container's Python is 3.10 (no tomllib), so this ships a parser for
+the small TOML subset lint.toml actually uses: `[section]` /
+`[section.sub]` tables, `[[array-of-tables]]`, and `key = value` where
+value is a string, int, bool, or a (possibly multi-line) list of
+strings.  Unknown syntax is a hard error — a silently misparsed config
+is worse than no linter.
+"""
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+class ConfigError(Exception):
+    pass
+
+
+_KEY_RE = re.compile(r"^[A-Za-z0-9_-]+$")
+
+
+def parse_toml(text: str, where: str = "lint.toml") -> dict:
+    root: dict = {}
+    current = root
+    lines = text.splitlines()
+    i = 0
+    n = len(lines)
+    while i < n:
+        raw = lines[i]
+        line = _strip_comment(raw).strip()
+        i += 1
+        if not line:
+            continue
+        if line.startswith("[["):
+            if not line.endswith("]]"):
+                raise ConfigError(f"{where}:{i}: malformed table array {raw!r}")
+            path = line[2:-2].strip()
+            parent, leaf = _descend(root, path, where, i)
+            arr = parent.setdefault(leaf, [])
+            if not isinstance(arr, list):
+                raise ConfigError(f"{where}:{i}: {path} is not a table array")
+            current = {}
+            arr.append(current)
+            continue
+        if line.startswith("["):
+            if not line.endswith("]"):
+                raise ConfigError(f"{where}:{i}: malformed table header {raw!r}")
+            path = line[1:-1].strip()
+            parent, leaf = _descend(root, path, where, i)
+            tbl = parent.setdefault(leaf, {})
+            if not isinstance(tbl, dict):
+                raise ConfigError(f"{where}:{i}: {path} is not a table")
+            current = tbl
+            continue
+        if "=" not in line:
+            raise ConfigError(f"{where}:{i}: expected key = value, got {raw!r}")
+        key, _, rest = line.partition("=")
+        key = key.strip().strip('"')
+        if not _KEY_RE.match(key):
+            raise ConfigError(f"{where}:{i}: bad key {key!r}")
+        rest = rest.strip()
+        # multi-line list: keep consuming until brackets balance
+        while rest.count("[") > rest.count("]"):
+            if i >= n:
+                raise ConfigError(f"{where}:{i}: unterminated list for {key}")
+            rest += " " + _strip_comment(lines[i]).strip()
+            i += 1
+        current[key] = _parse_value(rest, where, i)
+    return root
+
+
+def _descend(root, path, where, lineno):
+    parts = [p.strip() for p in path.split(".")]
+    if not all(_KEY_RE.match(p) for p in parts):
+        raise ConfigError(f"{where}:{lineno}: bad table path {path!r}")
+    node = root
+    for p in parts[:-1]:
+        node = node.setdefault(p, {})
+        if not isinstance(node, dict):
+            raise ConfigError(f"{where}:{lineno}: {p} is not a table")
+    return node, parts[-1]
+
+
+def _strip_comment(line: str) -> str:
+    out = []
+    in_str = False
+    i = 0
+    while i < len(line):
+        ch = line[i]
+        if ch == '"' and (i == 0 or line[i - 1] != "\\"):
+            in_str = not in_str
+        if ch == "#" and not in_str:
+            break
+        out.append(ch)
+        i += 1
+    return "".join(out)
+
+
+def _parse_value(v: str, where: str, lineno: int):
+    v = v.strip()
+    if v.startswith('"') and v.endswith('"') and len(v) >= 2:
+        return v[1:-1].replace('\\"', '"').replace("\\\\", "\\")
+    if v in ("true", "false"):
+        return v == "true"
+    if v.startswith("[") and v.endswith("]"):
+        inner = v[1:-1].strip()
+        if not inner:
+            return []
+        items = []
+        for part in _split_list(inner):
+            items.append(_parse_value(part, where, lineno))
+        return items
+    try:
+        return int(v.replace("_", ""))
+    except ValueError:
+        raise ConfigError(f"{where}:{lineno}: unsupported value {v!r}")
+
+
+def _split_list(inner: str) -> List[str]:
+    parts = []
+    buf = []
+    in_str = False
+    for i, ch in enumerate(inner):
+        if ch == '"' and (i == 0 or inner[i - 1] != "\\"):
+            in_str = not in_str
+        if ch == "," and not in_str:
+            parts.append("".join(buf).strip())
+            buf = []
+            continue
+        buf.append(ch)
+    tail = "".join(buf).strip()
+    if tail:
+        parts.append(tail)
+    return parts
+
+
+@dataclass
+class AllowEntry:
+    passname: str
+    code: str
+    file: str                 # path suffix match
+    why: str
+    fn: Optional[str] = None
+    detail: Optional[str] = None   # substring of the finding message
+    used: bool = False
+    origin: str = ""          # "lint.toml#<index>" for stale reporting
+
+    def matches(self, finding) -> bool:
+        if self.passname != finding.passname or self.code != finding.code:
+            return False
+        if not finding.file.endswith(self.file):
+            return False
+        if self.fn is not None and self.fn != (finding.fn or ""):
+            return False
+        if self.detail is not None and self.detail not in finding.message:
+            return False
+        return True
+
+
+@dataclass
+class LintConfig:
+    raw: dict = field(default_factory=dict)
+    rust_roots: List[str] = field(default_factory=list)
+    allow: List[AllowEntry] = field(default_factory=list)
+
+    def section(self, name: str) -> dict:
+        sec = self.raw.get(name, {})
+        return sec if isinstance(sec, dict) else {}
+
+
+def load_config(path: str) -> LintConfig:
+    with open(path) as f:
+        raw = parse_toml(f.read(), where=path)
+    cfg = LintConfig(raw=raw)
+    proj = raw.get("project", {})
+    cfg.rust_roots = list(proj.get("rust_roots", ["rust/src"]))
+    for idx, ent in enumerate(raw.get("allow", [])):
+        if not isinstance(ent, dict):
+            raise ConfigError(f"{path}: [[allow]] #{idx} is not a table")
+        for req in ("pass", "code", "file", "why"):
+            if req not in ent:
+                raise ConfigError(
+                    f"{path}: [[allow]] #{idx} missing required key "
+                    f"{req!r} (every suppression needs a justification)"
+                )
+        if not str(ent["why"]).strip():
+            raise ConfigError(
+                f"{path}: [[allow]] #{idx} has an empty `why` — every "
+                "suppression carries a one-line justification"
+            )
+        cfg.allow.append(
+            AllowEntry(
+                passname=ent["pass"],
+                code=ent["code"],
+                file=ent["file"],
+                why=ent["why"],
+                fn=ent.get("fn"),
+                detail=ent.get("detail"),
+                origin=f"{path}#allow[{idx}]",
+            )
+        )
+    return cfg

@@ -1,0 +1,174 @@
+"""Finding model, the per-run Project container, and suppression logic.
+
+A finding is suppressed either by a `[[allow]]` entry in lint.toml
+(pass+code+file-suffix, optional fn / detail-substring narrowing, `why`
+required) or by an inline `// pallas-lint: allow(code)` comment on the
+finding's line or the line above.  Allow entries that match nothing are
+themselves reported (`stale-allow`) so the allowlist can only shrink as
+violations get fixed, never silently rot.
+"""
+
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .config import LintConfig
+from .items import extract_fns, extract_structs
+from .rustlex import lex
+
+
+@dataclass
+class Finding:
+    passname: str
+    code: str
+    file: str      # repo-relative path
+    line: int
+    message: str
+    fn: Optional[str] = None
+    suppressed_by: Optional[str] = None
+
+    def render(self) -> str:
+        loc = f"{self.file}:{self.line}"
+        return f"{loc}: [{self.passname}/{self.code}] {self.message}"
+
+    def as_json(self) -> dict:
+        d = {
+            "pass": self.passname,
+            "code": self.code,
+            "file": self.file,
+            "line": self.line,
+            "message": self.message,
+        }
+        if self.fn:
+            d["fn"] = self.fn
+        if self.suppressed_by:
+            d["suppressed_by"] = self.suppressed_by
+        return d
+
+
+INLINE_ALLOW_RE = re.compile(r"//\s*pallas-lint:\s*allow\(([a-z0-9_,\s-]+)\)")
+
+
+class SourceFile:
+    """A lexed Rust file plus lazily-extracted items."""
+
+    def __init__(self, relpath: str, text: str):
+        self.relpath = relpath
+        self.lx = lex(relpath, text)
+        self._fns = None
+        self._structs = None
+
+    @property
+    def fns(self):
+        if self._fns is None:
+            self._fns = extract_fns(self.lx)
+        return self._fns
+
+    @property
+    def structs(self):
+        if self._structs is None:
+            self._structs = extract_structs(self.lx)
+        return self._structs
+
+    def enclosing_fn(self, offset: int):
+        for fn in self.fns:
+            if fn.body_start >= 0 and fn.body_start <= offset < fn.body_end:
+                return fn
+        return None
+
+    def inline_allows(self, line: int) -> List[str]:
+        """Codes allowed by an inline comment on `line` or the line
+        directly above."""
+        codes = []
+        for ln in (line, line - 1):
+            txt = self.lx.comment_by_line.get(ln, "")
+            m = INLINE_ALLOW_RE.search(txt)
+            if m:
+                codes.extend(c.strip() for c in m.group(1).split(","))
+        return codes
+
+
+class Project:
+    """Everything a pass needs: the lexed Rust tree, the config, and the
+    repo root for passes that read non-Rust files (check_perf.py,
+    Makefile, ci.yml)."""
+
+    def __init__(self, root: str, config: LintConfig):
+        self.root = root
+        self.config = config
+        self.files: Dict[str, SourceFile] = {}
+
+    def add_file(self, relpath: str, text: str):
+        self.files[relpath] = SourceFile(relpath, text)
+
+    def load_tree(self):
+        for rel_root in self.config.rust_roots:
+            absroot = os.path.join(self.root, rel_root)
+            if not os.path.isdir(absroot):
+                continue
+            for dirpath, _dirnames, filenames in os.walk(absroot):
+                for name in sorted(filenames):
+                    if not name.endswith(".rs"):
+                        continue
+                    ap = os.path.join(dirpath, name)
+                    rel = os.path.relpath(ap, self.root)
+                    with open(ap, encoding="utf-8") as f:
+                        self.add_file(rel, f.read())
+        return self
+
+    def read_text(self, relpath: str) -> Optional[str]:
+        ap = os.path.join(self.root, relpath)
+        if not os.path.exists(ap):
+            return None
+        with open(ap, encoding="utf-8") as f:
+            return f.read()
+
+    def rust_files(self) -> List[SourceFile]:
+        return [self.files[k] for k in sorted(self.files)]
+
+
+@dataclass
+class RunResult:
+    findings: List[Finding] = field(default_factory=list)
+    stale_allows: List[Finding] = field(default_factory=list)
+
+    @property
+    def active(self) -> List[Finding]:
+        return [f for f in self.findings if f.suppressed_by is None]
+
+    @property
+    def suppressed(self) -> List[Finding]:
+        return [f for f in self.findings if f.suppressed_by is not None]
+
+
+def apply_suppressions(project: Project, findings: List[Finding]) -> RunResult:
+    res = RunResult(findings=findings)
+    for f in findings:
+        sf = project.files.get(f.file)
+        if sf is not None and f.code in sf.inline_allows(f.line):
+            f.suppressed_by = f"inline allow at {f.file}:{f.line}"
+            continue
+        for ent in project.config.allow:
+            if ent.matches(f):
+                ent.used = True
+                f.suppressed_by = f"{ent.origin} ({ent.why})"
+                break
+    for ent in project.config.allow:
+        if not ent.used:
+            res.stale_allows.append(
+                Finding(
+                    passname="allowlist",
+                    code="stale-allow",
+                    file="lint.toml",
+                    line=0,
+                    message=(
+                        f"allow entry matches nothing "
+                        f"(pass={ent.passname} code={ent.code} "
+                        f"file={ent.file}"
+                        + (f" fn={ent.fn}" if ent.fn else "")
+                        + f"): {ent.why!r} — delete it"
+                    ),
+                )
+            )
+    return res

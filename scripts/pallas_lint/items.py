@@ -1,0 +1,235 @@
+"""Per-item span extraction over a lexed file.
+
+Works on the *blanked* code view from rustlex, so `fn` inside a comment
+or a format string never registers.  Extraction is regex + brace-match,
+not a grammar: good enough for a single crate written in house style,
+and the structure pass independently verifies every file balances, so a
+mis-extraction here is loud rather than silent.
+"""
+
+import re
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from .rustlex import LexedFile, match_brace
+
+FN_RE = re.compile(r"\bfn\s+([A-Za-z_]\w*)")
+STRUCT_RE = re.compile(r"\bstruct\s+([A-Za-z_]\w*)")
+IMPL_RE = re.compile(r"\bimpl\b[^;{]*?\{")
+
+
+@dataclass
+class FnItem:
+    name: str
+    start: int          # offset of the `fn` keyword
+    body_start: int     # offset of the opening brace (-1: no body)
+    body_end: int       # offset of the closing brace (exclusive, -1: none)
+    line: int
+    impl_of: Optional[str] = None   # enclosing `impl Type` name, if any
+    annotations: List[str] = field(default_factory=list)
+    is_test: bool = False
+
+    def body(self, lx: LexedFile) -> str:
+        if self.body_start < 0:
+            return ""
+        return lx.code[self.body_start : self.body_end]
+
+
+@dataclass
+class StructItem:
+    name: str
+    start: int
+    line: int
+    fields: List[str] = field(default_factory=list)
+
+
+ANNOT_RE = re.compile(r"//\s*pallas-lint:\s*([a-z-]+(?:\([^)]*\))?)")
+
+
+def _annotations_above(lx: LexedFile, fn_start: int) -> List[str]:
+    """Collect `// pallas-lint: X` annotations from the contiguous run of
+    comment/attribute/blank lines directly above the item."""
+    line = lx.line_of(fn_start)
+    out = []
+    # walk upward through attribute lines (#[...]), comments, visibility
+    # spillover; stop at the first line that is real non-attribute code.
+    lines = lx.text.splitlines()
+    i = line - 2  # 0-based index of the line above
+    while i >= 0:
+        raw = lines[i].strip()
+        if raw.startswith("//"):
+            m = ANNOT_RE.search(raw)
+            if m:
+                out.append(m.group(1))
+            i -= 1
+            continue
+        if raw.startswith("#[") or raw == "" or raw.startswith("#!["):
+            i -= 1
+            continue
+        break
+    return out
+
+
+def _is_test_fn(lx: LexedFile, fn_start: int) -> bool:
+    line = lx.line_of(fn_start)
+    lines = lx.text.splitlines()
+    i = line - 2
+    while i >= 0:
+        raw = lines[i].strip()
+        if raw.startswith("//") or raw == "":
+            i -= 1
+            continue
+        if raw.startswith("#["):
+            if "test" in raw:
+                return True
+            i -= 1
+            continue
+        break
+    return False
+
+
+def extract_fns(lx: LexedFile) -> List[FnItem]:
+    out = []
+    impl_spans = []  # (name, body_start, body_end)
+    for m in IMPL_RE.finditer(lx.code):
+        brace = lx.code.index("{", m.start())
+        end = match_brace(lx.code, brace)
+        if end < 0:
+            continue
+        header = lx.code[m.start() : brace]
+        # `impl Foo`, `impl Trait for Foo`, `impl<T> Foo<T>`
+        name = None
+        fm = re.search(r"\bfor\s+([A-Za-z_]\w*)", header)
+        if fm:
+            name = fm.group(1)
+        else:
+            im = re.search(r"\bimpl\s*(?:<[^>]*>)?\s*([A-Za-z_]\w*)", header)
+            if im:
+                name = im.group(1)
+        impl_spans.append((name, brace, end))
+
+    for m in FN_RE.finditer(lx.code):
+        name = m.group(1)
+        # find the body: first `{` at signature depth 0 past the arg list,
+        # stopping at `;` (trait method decl / extern fn)
+        i = m.end()
+        n = len(lx.code)
+        depth = 0
+        body_start = -1
+        while i < n:
+            ch = lx.code[i]
+            if ch in "(<[":
+                depth += 1
+            elif ch in ")>]":
+                # `->` return arrows contain `>`: only count matched pairs
+                if ch == ">" and i > 0 and lx.code[i - 1] == "-":
+                    i += 1
+                    continue
+                depth = max(0, depth - 1)
+            elif ch == "{" and depth == 0:
+                body_start = i
+                break
+            elif ch == ";" and depth == 0:
+                break
+            i += 1
+        body_end = -1
+        if body_start >= 0:
+            e = match_brace(lx.code, body_start)
+            if e >= 0:
+                body_end = e + 1
+        impl_of = None
+        for iname, ib, ie in impl_spans:
+            if ib < m.start() < ie:
+                impl_of = iname
+                break
+        out.append(
+            FnItem(
+                name=name,
+                start=m.start(),
+                body_start=body_start,
+                body_end=body_end,
+                line=lx.line_of(m.start()),
+                impl_of=impl_of,
+                annotations=_annotations_above(lx, m.start()),
+                is_test=_is_test_fn(lx, m.start()),
+            )
+        )
+    return out
+
+
+def extract_structs(lx: LexedFile) -> List[StructItem]:
+    out = []
+    for m in STRUCT_RE.finditer(lx.code):
+        name = m.group(1)
+        # find `{` or `;` (unit/tuple struct) at depth 0 past generics
+        i = m.end()
+        n = len(lx.code)
+        depth = 0
+        brace = -1
+        while i < n:
+            ch = lx.code[i]
+            if ch == "<":
+                depth += 1
+            elif ch == ">":
+                depth = max(0, depth - 1)
+            elif ch == "(" and depth == 0:
+                brace = -1  # tuple struct
+                break
+            elif ch == "{" and depth == 0:
+                brace = i
+                break
+            elif ch == ";" and depth == 0:
+                break
+            i += 1
+        fields = []
+        if brace >= 0:
+            end = match_brace(lx.code, brace)
+            if end > 0:
+                fields = parse_field_names(lx.code[brace + 1 : end])
+        out.append(
+            StructItem(
+                name=name, start=m.start(), line=lx.line_of(m.start()),
+                fields=fields,
+            )
+        )
+    return out
+
+
+FIELD_RE = re.compile(r"([A-Za-z_]\w*)\s*:(?!:)")
+SHORTHAND_RE = re.compile(r"^\s*(?:mut\s+)?([A-Za-z_]\w*)\s*$")
+
+
+def parse_field_names(body: str) -> List[str]:
+    """Field names at depth 0 of a struct body (declaration or literal).
+    Handles `name: value` pairs and literal shorthand (`Foo { x, y }`);
+    nested braces/parens/brackets (fn types, array types, nested literals)
+    are skipped.  `..spread` tails yield nothing (callers check for the
+    spread themselves)."""
+    out = []
+    depth = 0
+    i = 0
+    n = len(body)
+    flat = []
+    while i < n:
+        ch = body[i]
+        # `<`/`>` are deliberately NOT depth brackets: shift expressions
+        # (`256 << 20`) are everywhere in byte-size literal values and
+        # would wedge the depth counter.  A comma inside a generic type
+        # therefore splits a field decl in two, but the name half still
+        # parses and the type tail matches nothing — harmless.
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth = max(0, depth - 1)
+        flat.append(ch if depth == 0 else " ")
+        i += 1
+    flat_s = "".join(flat)
+    for part in flat_s.split(","):
+        if part.lstrip().startswith(".."):
+            continue
+        m = FIELD_RE.search(part)
+        if m is None:
+            m = SHORTHAND_RE.match(part)
+        if m and m.group(1) not in ("pub", "crate"):
+            out.append(m.group(1))
+    return out

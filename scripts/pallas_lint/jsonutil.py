@@ -1,0 +1,65 @@
+"""JSON-reading helpers shared by the three stdlib-Python gates
+(check_perf.py, check_trace.py, pallas-lint) so every gate parses bench
+points and trace files identically.
+
+Import from the gate scripts via:
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "pallas_lint"))
+    import jsonutil
+
+(kept importable both as ``pallas_lint.jsonutil`` and as a top-level
+``jsonutil`` module so the flat gate scripts need no package install).
+"""
+
+import json
+import os
+
+
+def read_json(path):
+    """Parse one JSON file. Propagates OSError / JSONDecodeError — the
+    gates decide whether malformed input is exit-2 fatal."""
+    with open(path) as f:
+        return json.load(f)
+
+
+def load_pair(prev_path, curr_path, what, tag="check-perf"):
+    """Baseline-rotation helper: returns (prev, curr) dicts, or None when
+    there is no previous point yet (first run records the baseline; the
+    caller treats a missing *current* point as its own error)."""
+    if not os.path.exists(prev_path):
+        print(f"{tag}: no previous {what} point ({prev_path}); "
+              "nothing to diff — baseline recorded")
+        return None
+    prev = read_json(prev_path)
+    curr = read_json(curr_path)
+    return prev, curr
+
+
+def load_trace_events(path):
+    """Chrome-trace loader: returns (events, other_data). Accepts both
+    the bare-array form and the object form with a `traceEvents` key.
+    Raises ValueError on anything else."""
+    v = read_json(path)
+    if isinstance(v, list):
+        return v, {}
+    if isinstance(v, dict):
+        events = v.get("traceEvents")
+        if not isinstance(events, list):
+            raise ValueError("object form needs a traceEvents array")
+        other = v.get("otherData", {})
+        if not isinstance(other, dict):
+            raise ValueError("otherData must be an object")
+        return events, other
+    raise ValueError("top level must be an array or an object")
+
+
+def rel_delta(prev, curr):
+    """Relative change curr vs prev, or None when prev is 0/invalid —
+    the shared guard all the perf diffs use before printing a %."""
+    try:
+        p, c = float(prev), float(curr)
+    except (TypeError, ValueError):
+        return None
+    if p <= 0:
+        return None
+    return (c - p) / p

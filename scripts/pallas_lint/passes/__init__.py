@@ -1,0 +1,13 @@
+"""Pass registry.
+
+A pass is a module exposing ``NAME`` (str) and ``run(project) ->
+List[Finding]``.  Adding a pass = write the module, import it here,
+append to PASSES, document the invariant in LINT.md.  Every finding
+carries the pass name so allowlist entries bind to it.
+"""
+
+from . import counters, hotpath, literals, locks, structure
+
+PASSES = [structure, locks, counters, literals, hotpath]
+
+BY_NAME = {p.NAME: p for p in PASSES}

@@ -1,0 +1,282 @@
+"""Pass: counter registry.
+
+Every counter minted in `DecodeMetrics` / `SchedStats` / `IoSnapshot`
+exists to be read somewhere — the server `stats` endpoint, a bench JSON
+writer, or the check_perf.py trajectory gate.  PRs 6 and 7 showed the
+failure mode: a counter lands in the struct and the server, but never
+reaches figures.rs or WATCHED, so the perf gate is blind to it.
+
+  counter-unsurfaced   registry field not emitted by the server stats
+                       JSON (after normalization + aliases)
+  counter-unbenched    registry field reaches neither a bench writer nor
+                       check_perf's WATCHED list
+  watched-unemitted    a WATCHED / gated key in check_perf.py that no
+                       bench writer emits (gate watches a ghost)
+  watched-unminted     a WATCHED key that maps to no registry field
+                       (typo in the gate)
+  stale-field-access   `recv.field` in a bench file where `recv` is a
+                       registry struct (per lint.toml receivers) and
+                       `field` is not a field or method of that struct —
+                       the toolchain-free stand-in for type-checking
+                       counter renames at their emission sites
+
+Key normalization: strip an `h_` prefix, a trailing `_ns`/`_us`/`_ms`
+unit, and `_pNN` percentile segments; IoSnapshot fields also try an
+`io_` prefix.  Residual renames are declared in lint.toml aliases.
+"""
+
+import ast
+import re
+from typing import Dict, List, Set
+
+from ..findings import Finding, Project
+
+NAME = "counters"
+
+UNIT_RE = re.compile(r"_(ns|us|ms)$")
+PCT_RE = re.compile(r"_p\d+")
+
+
+def normalize(key: str) -> str:
+    k = key
+    if k.startswith("h_"):
+        k = k[2:]
+    k = PCT_RE.sub("", k)
+    k = UNIT_RE.sub("", k)
+    return k
+
+
+def _variants(field: str, io_prefixed: bool) -> Set[str]:
+    v = {normalize(field)}
+    if io_prefixed:
+        n = normalize(field)
+        v.add("io_" + n)
+        if n.startswith("io_"):
+            v.add(n[3:])
+    return v
+
+
+def emitted_keys(sf) -> Dict[str, int]:
+    """JSON keys from the `("key", value)` obj-tuple idiom: a string
+    literal whose previous non-space code char is `(` and next is `,`.
+    Returns key -> first line."""
+    out: Dict[str, int] = {}
+    code = sf.lx.code
+    for start, end, line, value in sf.lx.strings:
+        if not re.fullmatch(r"[a-z][a-z0-9_]*", value):
+            continue
+        i = start - 1
+        while i >= 0 and code[i].isspace():
+            i -= 1
+        if i < 0 or code[i] != "(":
+            continue
+        j = end
+        while j < len(code) and code[j].isspace():
+            j += 1
+        if j >= len(code) or code[j] != ",":
+            continue
+        out.setdefault(value, line)
+    return out
+
+
+def parse_watched(py_text: str, path: str) -> List[str]:
+    """WATCHED plus the hard-gated keys out of check_perf.py, via the
+    Python ast — no regexes over Python source."""
+    tree = ast.parse(py_text, filename=path)
+    watched: List[str] = []
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Assign)
+            and any(
+                isinstance(t, ast.Name) and t.id == "WATCHED"
+                for t in node.targets
+            )
+            and isinstance(node.value, ast.List)
+        ):
+            for elt in node.value.elts:
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                    watched.append(elt.value)
+    return watched
+
+
+def parse_gated(py_text: str, path: str) -> List[str]:
+    """Keys check_perf.py indexes out of bench dicts (`prev["key"]` /
+    `curr["key"]`) — these hard-gate or feed diffs, so they must exist
+    in some bench writer."""
+    tree = ast.parse(py_text, filename=path)
+    keys: Set[str] = set()
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Name)
+            and node.value.id in ("prev", "curr")
+            and isinstance(node.slice, ast.Constant)
+            and isinstance(node.slice.value, str)
+        ):
+            keys.add(node.slice.value)
+    return sorted(keys)
+
+
+def _struct_members(project: Project, struct_name: str, relpath: str):
+    """(fields, methods) of a struct, from its declaring file."""
+    sf = project.files.get(relpath)
+    if sf is None:
+        return None, None
+    fields = None
+    for st in sf.structs:
+        if st.name == struct_name:
+            fields = st.fields
+            break
+    methods = {
+        fn.name for fn in sf.fns if fn.impl_of == struct_name
+    }
+    return fields, methods
+
+
+def run(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    cfg = project.config.section("counters")
+    if not cfg:
+        # no [counters] section: nothing is registered, so there is
+        # nothing to cross-check (and no perf gate to look for)
+        return out
+    aliases: Dict[str, List[str]] = {}
+    for ent in cfg.get("aliases", []):
+        field_name, _, key = ent.partition("=")
+        aliases.setdefault(field_name.strip(), []).append(key.strip())
+    skip_fields = set(cfg.get("skip_fields", []))
+
+    # --- registry: struct name -> (file, fields, io_prefixed)
+    registry = []
+    for ent in cfg.get("registry", []):
+        relpath, _, sname = ent.partition(":")
+        io_prefixed = sname.startswith("io:")
+        sname = sname[3:] if io_prefixed else sname
+        fields, _methods = _struct_members(project, sname, relpath)
+        if fields is None:
+            out.append(
+                Finding(
+                    NAME, "registry-missing", relpath, 0,
+                    f"registry struct `{sname}` not found in {relpath} "
+                    "(lint.toml [counters].registry is stale)",
+                )
+            )
+            continue
+        registry.append((relpath, sname, fields, io_prefixed))
+
+    # --- emitted key sets
+    server_keys: Dict[str, int] = {}
+    for relpath in cfg.get("server_files", []):
+        sf = project.files.get(relpath)
+        if sf is None:
+            out.append(Finding(NAME, "registry-missing", relpath, 0,
+                               "server file missing from lint tree"))
+            continue
+        server_keys.update(emitted_keys(sf))
+
+    bench_markers = cfg.get(
+        "bench_markers", ["rust/benches/", "bench/figures.rs"]
+    )
+    bench_keys: Dict[str, int] = {}
+    for relpath, sf in sorted(project.files.items()):
+        if any(mk in relpath for mk in bench_markers):
+            bench_keys.update(emitted_keys(sf))
+
+    perf_rel = cfg.get("perf_gate", "scripts/check_perf.py")
+    perf_text = project.read_text(perf_rel)
+    watched: List[str] = []
+    gated: List[str] = []
+    if perf_text is None:
+        out.append(Finding(NAME, "registry-missing", perf_rel, 0,
+                           "perf gate script missing"))
+    else:
+        watched = parse_watched(perf_text, perf_rel)
+        gated = parse_gated(perf_text, perf_rel)
+
+    server_norm = {normalize(k) for k in server_keys}
+    bench_norm = {normalize(k) for k in bench_keys}
+    watched_norm = {normalize(k) for k in watched}
+
+    # --- R1/R2: every registry field surfaces
+    for relpath, sname, fields, io_prefixed in registry:
+        sf = project.files[relpath]
+        decl_line = next(
+            (st.line for st in sf.structs if st.name == sname), 0
+        )
+        for field_name in fields:
+            if field_name in skip_fields or f"{sname}.{field_name}" in skip_fields:
+                continue
+            variants = _variants(field_name, io_prefixed)
+            for alias in aliases.get(field_name, []):
+                variants.add(normalize(alias))
+            if not variants & server_norm:
+                out.append(
+                    Finding(
+                        NAME, "counter-unsurfaced", relpath, decl_line,
+                        f"{sname}.{field_name} is minted but the server "
+                        "stats JSON never emits it (or an alias of it)",
+                    )
+                )
+            if not variants & (bench_norm | watched_norm):
+                out.append(
+                    Finding(
+                        NAME, "counter-unbenched", relpath, decl_line,
+                        f"{sname}.{field_name} reaches neither a bench "
+                        "JSON writer nor check_perf.py WATCHED — the perf "
+                        "trajectory is blind to it",
+                    )
+                )
+
+    # --- R3/R5: the gate's keys are real
+    all_fields_norm: Set[str] = set()
+    for _rel, _sname, fields, io_prefixed in registry:
+        for field_name in fields:
+            all_fields_norm |= _variants(field_name, io_prefixed)
+            for alias in aliases.get(field_name, []):
+                all_fields_norm.add(normalize(alias))
+    for key in watched + gated:
+        if normalize(key) not in bench_norm:
+            out.append(
+                Finding(
+                    NAME, "watched-unemitted", perf_rel, 0,
+                    f"check_perf.py reads key {key!r} but no bench writer "
+                    "emits it",
+                )
+            )
+    derived_ok = set(cfg.get("derived_keys", []))
+    for key in watched:
+        if key in derived_ok:
+            continue
+        if normalize(key) not in all_fields_norm:
+            out.append(
+                Finding(
+                    NAME, "watched-unminted", perf_rel, 0,
+                    f"WATCHED key {key!r} maps to no registry counter "
+                    "(typo, or declare it in [counters].derived_keys)",
+                )
+            )
+
+    # --- R4: receiver field accesses in bench files resolve
+    for ent in cfg.get("receivers", []):
+        file_suffix, recv, sname, srel = ent.split(":")
+        fields, methods = _struct_members(project, sname, srel)
+        if fields is None:
+            continue
+        members = set(fields) | methods
+        for relpath, sf in sorted(project.files.items()):
+            if not relpath.endswith(file_suffix):
+                continue
+            for m in re.finditer(
+                r"\b" + re.escape(recv) + r"\.([a-z_][a-z0-9_]*)", sf.lx.code
+            ):
+                if m.group(1) not in members:
+                    out.append(
+                        Finding(
+                            NAME, "stale-field-access", relpath,
+                            sf.lx.line_of(m.start()),
+                            f"`{recv}.{m.group(1)}` does not resolve to a "
+                            f"field or method of {sname} — renamed counter "
+                            "with a stale emission site?",
+                        )
+                    )
+    return out

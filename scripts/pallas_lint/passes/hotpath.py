@@ -1,0 +1,131 @@
+"""Pass: hot-path hygiene.
+
+Functions on the per-token decode path are annotated
+`// pallas-lint: hot-path` (comment directly above the fn, attributes in
+between are fine).  Inside an annotated fn:
+
+  hot-unwrap      `.unwrap()` / `.expect(` / `panic!` / `unreachable!` /
+                  `todo!` — a panic on the decode path kills the whole
+                  engine mid-wave.  Built-in idiom allowance: an unwrap
+                  directly chained onto `.lock()` or `.wait(..)` is the
+                  std mutex/condvar poisoning idiom (poisoning only
+                  happens after another thread already panicked) and is
+                  not flagged.
+  hot-alloc       an allocation call (`Vec::new`, `vec![`,
+                  `with_capacity`, `String::new`, `format!`, `.to_vec(`,
+                  `Box::new`, `.collect(`) inside a `for`/`while`/`loop`
+                  body — per-iteration allocation on the per-token path
+                  is the death-by-a-thousand-mallocs the slab recycler
+                  exists to prevent.
+  missing-annotation  a fn listed in lint.toml [hotpath].required lacks
+                  the annotation — the seeded annotation set can only
+                  grow, never silently disappear.
+"""
+
+import re
+from typing import List
+
+from ..findings import Finding, Project
+from ..rustlex import match_brace
+
+NAME = "hotpath"
+
+PANIC_RE = re.compile(
+    r"\.unwrap\s*\(|\.expect\s*\(|\bpanic!\s*[(\[]|\bunreachable!\s*[(\[]"
+    r"|\btodo!\s*[(\[]"
+)
+ALLOW_CHAIN_RE = re.compile(r"(?:\.lock\s*\(\s*\)|\.wait\s*\([^()]*\))\s*$")
+ALLOC_RE = re.compile(
+    r"\bVec\s*::\s*new\s*\(|\bvec!\s*[\[(]|\bwith_capacity\s*\("
+    r"|\bString\s*::\s*new\s*\(|\bformat!\s*\(|\.to_vec\s*\("
+    r"|\bBox\s*::\s*new\s*\(|\.collect\s*[::<(]"
+)
+LOOP_RE = re.compile(r"\b(for|while|loop)\b")
+
+
+def _loop_body_ranges(code: str, start: int, end: int):
+    """Brace ranges of for/while/loop bodies inside [start, end)."""
+    ranges = []
+    for m in LOOP_RE.finditer(code, start, end):
+        # find the body `{` at depth 0 from the keyword (loop: immediate;
+        # for/while: after the header expression)
+        i = m.end()
+        depth = 0
+        while i < end:
+            ch = code[i]
+            if ch in "([":
+                depth += 1
+            elif ch in ")]":
+                depth = max(0, depth - 1)
+            elif ch == "{" and depth == 0:
+                close = match_brace(code, i)
+                if close > 0:
+                    ranges.append((i, close))
+                break
+            elif ch == ";" and depth == 0:
+                break  # `while let` desugars never hit this; labels do
+            i += 1
+    return ranges
+
+
+def run(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    cfg = project.config.section("hotpath")
+
+    annotated = {}  # (relpath, fn_name) -> True
+    for sf in project.rust_files():
+        for fn in sf.fns:
+            if any(a.startswith("hot-path") for a in fn.annotations):
+                annotated[(sf.relpath, fn.name)] = True
+                if fn.body_start < 0:
+                    continue
+                out.extend(_check_body(sf, fn))
+
+    for ent in cfg.get("required", []):
+        relpath, _, fn_name = ent.partition(":")
+        if (relpath, fn_name) not in annotated:
+            out.append(
+                Finding(
+                    NAME, "missing-annotation", relpath, 0,
+                    f"`{fn_name}` is required to carry "
+                    "`// pallas-lint: hot-path` (lint.toml "
+                    "[hotpath].required) but the annotation is missing",
+                    fn=fn_name,
+                )
+            )
+    return out
+
+
+def _check_body(sf, fn) -> List[Finding]:
+    out: List[Finding] = []
+    code = sf.lx.code
+    for m in PANIC_RE.finditer(code, fn.body_start, fn.body_end):
+        before = code[fn.body_start : m.start()]
+        if m.group(0).startswith((".unwrap", ".expect")) and \
+                ALLOW_CHAIN_RE.search(before):
+            continue  # lock/condvar poisoning idiom
+        what = m.group(0).rstrip("([ ")
+        out.append(
+            Finding(
+                NAME, "hot-unwrap", sf.relpath, sf.lx.line_of(m.start()),
+                f"`{what}` inside hot-path fn — a panic here kills the "
+                "decode loop mid-wave; bubble an error instead",
+                fn=fn.name,
+            )
+        )
+    seen_offsets = set()  # nested loops: report each alloc site once
+    for lo, hi in _loop_body_ranges(code, fn.body_start, fn.body_end):
+        for m in ALLOC_RE.finditer(code, lo, hi):
+            if m.start() in seen_offsets:
+                continue
+            seen_offsets.add(m.start())
+            what = m.group(0).rstrip("([:< ")
+            out.append(
+                Finding(
+                    NAME, "hot-alloc", sf.relpath, sf.lx.line_of(m.start()),
+                    f"`{what}` allocates per loop iteration inside a "
+                    "hot-path fn — hoist it or use the slab/recycler",
+                    fn=fn.name,
+                )
+            )
+    return out

@@ -1,0 +1,188 @@
+"""Pass: construction-site exhaustiveness.
+
+Adding a field to a config struct means updating every literal that
+builds one — ~19 `EngineOptions` sites across src, benches, and tests.
+Without a compiler, a missed site silently ships a stale literal in a
+test nobody can run.  This pass re-checks every site on every lint run:
+
+  missing-field   a non-`..`-spread literal of a tracked struct omits a
+                  declared field
+  unknown-field   a literal names a field the declaration lacks
+                  (renamed field with stale sites)
+  struct-missing  lint.toml tracks a struct the tree no longer declares
+  unmapped-flag   a CLI flag string in main.rs absent from the
+                  lint.toml [cli_flags] round-trip map
+  flag-bad-field  a [cli_flags] entry whose target field is not declared
+                  by any tracked struct
+  stale-flag-map  a [cli_flags] entry whose flag no longer appears in
+                  main.rs
+
+Literals with a depth-1 `..spread` tail are exempt by design (that is
+the idiom for "defaults plus overrides").  Match patterns need no
+special casing: a pattern listing fields without `..` that missed one
+would not compile, so any pattern we see is either complete or spread.
+"""
+
+import re
+from typing import Dict, List
+
+from ..findings import Finding, Project
+from ..items import parse_field_names
+from ..rustlex import match_brace
+
+NAME = "literals"
+
+FLAG_RE = re.compile(
+    r"\b(?:opt_or|opt_usize|opt_f64|opt|has_flag)\s*\(\s*$"
+)
+
+
+def _literal_sites(sf, struct_name: str):
+    """(offset_of_open_brace, line) for each `Name {` that is a value
+    (not the declaration, an impl header, or `for Name`)."""
+    sites = []
+    code = sf.lx.code
+    for m in re.finditer(r"\b" + re.escape(struct_name) + r"\s*\{", code):
+        before = code[: m.start()].rstrip()
+        # declaration (`struct Name {`), impl header, trait-impl target,
+        # or return-type position (`-> Name {` opens the fn body, not a
+        # literal) — not construction sites
+        if re.search(r"\b(struct|impl|for|enum|union|trait)\s*$", before):
+            continue
+        if before.endswith("->"):
+            continue
+        brace = code.index("{", m.start())
+        sites.append((brace, sf.lx.line_of(m.start())))
+    return sites
+
+
+def _spread_at_depth1(body: str) -> bool:
+    depth = 0
+    i = 0
+    while i < len(body):
+        ch = body[i]
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "." and depth == 0 and body[i : i + 2] == "..":
+            return True
+        i += 1
+    return False
+
+
+def run(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    cfg = project.config.section("literals")
+    tracked: List[str] = list(cfg.get("structs", []))
+
+    decls: Dict[str, List[str]] = {}
+    decl_where: Dict[str, str] = {}
+    for sf in project.rust_files():
+        for st in sf.structs:
+            if st.name in tracked and st.name not in decls:
+                decls[st.name] = st.fields
+                decl_where[st.name] = f"{sf.relpath}:{st.line}"
+
+    for sname in tracked:
+        if sname not in decls:
+            out.append(
+                Finding(
+                    NAME, "struct-missing", "lint.toml", 0,
+                    f"[literals].structs tracks `{sname}` but no "
+                    "declaration was found in the lint tree",
+                )
+            )
+
+    for sf in project.rust_files():
+        for sname, fields in decls.items():
+            declared = set(fields)
+            for brace, line in _literal_sites(sf, sname):
+                end = match_brace(sf.lx.code, brace)
+                if end < 0:
+                    continue
+                body = sf.lx.code[brace + 1 : end]
+                if _spread_at_depth1(body):
+                    continue
+                present = parse_field_names(body)
+                missing = [f for f in fields if f not in present]
+                extra = [f for f in present if f not in declared]
+                if missing:
+                    out.append(
+                        Finding(
+                            NAME, "missing-field", sf.relpath, line,
+                            f"`{sname}` literal omits "
+                            f"{', '.join(missing)} (declared at "
+                            f"{decl_where[sname]}; add the field or use "
+                            "`..` defaults)",
+                        )
+                    )
+                for f in extra:
+                    out.append(
+                        Finding(
+                            NAME, "unknown-field", sf.relpath, line,
+                            f"`{sname}` literal sets `{f}` which the "
+                            f"declaration at {decl_where[sname]} lacks",
+                        )
+                    )
+
+    out.extend(_check_flags(project, decls))
+    return out
+
+
+def _check_flags(project: Project, decls) -> List[Finding]:
+    out: List[Finding] = []
+    cfg = project.config.section("cli_flags")
+    main_rel = cfg.get("main", "rust/src/main.rs")
+    sf = project.files.get(main_rel)
+    if sf is None:
+        return out
+    mapping: Dict[str, str] = {}
+    for ent in cfg.get("map", []):
+        flag, _, target = ent.partition("=")
+        mapping[flag.strip()] = target.strip()
+
+    # flags actually parsed in main.rs: string literal that is the first
+    # argument of an args.opt*/has_flag call
+    seen_flags: Dict[str, int] = {}
+    code = sf.lx.code
+    for start, _end, line, value in sf.lx.strings:
+        if FLAG_RE.search(code[:start]):
+            seen_flags.setdefault(value, line)
+
+    all_fields = set()
+    for fields in decls.values():
+        all_fields.update(fields)
+
+    for flag, line in sorted(seen_flags.items()):
+        if flag not in mapping:
+            out.append(
+                Finding(
+                    NAME, "unmapped-flag", main_rel, line,
+                    f"CLI flag --{flag} has no [cli_flags] round-trip "
+                    "entry — map it to the config field it feeds (or "
+                    "`special:<why>` if it is not config-backed)",
+                )
+            )
+    for flag, target in sorted(mapping.items()):
+        if flag not in seen_flags:
+            out.append(
+                Finding(
+                    NAME, "stale-flag-map", main_rel, 0,
+                    f"[cli_flags] maps --{flag} but main.rs no longer "
+                    "parses that flag",
+                )
+            )
+            continue
+        if target.startswith("special:"):
+            continue
+        field = target.split(".")[-1]
+        if field not in all_fields:
+            out.append(
+                Finding(
+                    NAME, "flag-bad-field", main_rel, seen_flags[flag],
+                    f"--{flag} maps to `{target}` but no tracked config "
+                    "struct declares that field",
+                )
+            )
+    return out

@@ -1,0 +1,181 @@
+"""Pass: lock discipline.
+
+The crate's deadlock-freedom argument (PR 1/3/7 desk-checks) is a set of
+file-local disciplines this pass mechanizes:
+
+  nested-lock        a second `.lock()` / RwLock `.read()`/`.write()`
+                     acquired while a cache guard is live in the same fn
+  nested-lock-call   a call, while a cache guard is live, to a same-crate
+                     fn whose body itself acquires a lock (call graph one
+                     level deep; ambiguous / common names are skipped)
+  banned-cache-dep   `SharedCache` referenced from a banned module
+                     (flash/, pipeline/ — workers and the loader reap
+                     path must never touch the cache mutex)
+  trace-under-guard  `push_batch(` / `.flush()` reachable while a cache
+                     guard is live (trace producers must drop the guard
+                     before publishing; TraceHandle::push_batch takes the
+                     ring lock)
+
+"Cache guard" detection leans on the one asymmetry in the codebase:
+`SharedCache::lock()` returns the `MutexGuard` directly (so callsites
+read `let g = self.cache.lock();`), while every raw `std::sync::Mutex`
+callsite must unwrap poisoning (`.lock().unwrap()`).  A binding ending
+in `.lock();` with no `.unwrap()` is therefore a cache guard; its
+liveness runs to the end of the enclosing brace block or an explicit
+`drop(name)`.
+"""
+
+import re
+from typing import List
+
+from ..findings import Finding, Project
+from ..rustlex import match_brace
+
+NAME = "locks"
+
+GUARD_RE = re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*=\s*[^;{}]*?\.lock\(\)\s*;")
+ACQUIRE_RE = re.compile(r"\.lock\(|\.write\(\s*\)|\.read\(\s*\)")
+TRACE_RE = re.compile(r"\bpush_batch\s*\(|\.flush\s*\(")
+CALL_RE = re.compile(r"(?<![\w:])([a-z_][a-z0-9_]*)\s*\(")
+
+# Method/fn names too generic to resolve through the one-level call
+# graph without type information.
+COMMON_NAMES = frozenset(
+    "new default insert get remove push pop len clear run main clone "
+    "drop write read lock send recv next iter map filter fold count "
+    "from into build open close flush wait notify_all notify_one".split()
+)
+
+
+def _direct_acquirers(project: Project) -> dict:
+    """fn name -> (file, line) for unambiguous same-crate fns whose body
+    directly acquires a lock."""
+    seen: dict = {}
+    dup = set()
+    for sf in project.rust_files():
+        for fn in sf.fns:
+            if fn.name in COMMON_NAMES or fn.body_start < 0:
+                continue
+            if fn.name in seen or fn.name in dup:
+                dup.add(fn.name)
+                seen.pop(fn.name, None)
+                continue
+            if ACQUIRE_RE.search(fn.body(sf.lx)):
+                seen[fn.name] = (sf.relpath, fn.line)
+    return seen
+
+
+def run(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    cfg = project.config.section("locks")
+    ban_modules = cfg.get("ban_modules", [])
+    acquirers = _direct_acquirers(project)
+
+    for sf in project.rust_files():
+        rel = sf.relpath
+        for mod in ban_modules:
+            if rel.startswith(mod.rstrip("/") + "/") or rel == mod:
+                for m in re.finditer(r"\bSharedCache\b", sf.lx.code):
+                    out.append(
+                        Finding(
+                            NAME,
+                            "banned-cache-dep",
+                            rel,
+                            sf.lx.line_of(m.start()),
+                            f"`SharedCache` referenced under banned module "
+                            f"{mod} (workers/loader must never touch the "
+                            "cache mutex)",
+                        )
+                    )
+        for fn in sf.fns:
+            if fn.body_start < 0:
+                continue
+            out.extend(_check_fn(project, sf, fn, acquirers))
+    return out
+
+
+def _check_fn(project, sf, fn, acquirers) -> List[Finding]:
+    out: List[Finding] = []
+    code = sf.lx.code
+    for gm in GUARD_RE.finditer(code, fn.body_start, fn.body_end):
+        name = gm.group(1)
+        live_start = gm.end()
+        live_end = _liveness_end(code, gm.start(), fn.body_end, name)
+        span = code[live_start:live_end]
+
+        for am in ACQUIRE_RE.finditer(span):
+            off = live_start + am.start()
+            out.append(
+                Finding(
+                    NAME,
+                    "nested-lock",
+                    sf.relpath,
+                    sf.lx.line_of(off),
+                    f"lock acquired while cache guard `{name}` "
+                    f"(bound at line {sf.lx.line_of(gm.start())}) is live",
+                    fn=fn.name,
+                )
+            )
+        for tm in TRACE_RE.finditer(span):
+            off = live_start + tm.start()
+            out.append(
+                Finding(
+                    NAME,
+                    "trace-under-guard",
+                    sf.relpath,
+                    sf.lx.line_of(off),
+                    f"trace publish while cache guard `{name}` is live — "
+                    "drop the guard before push_batch/flush (ring lock "
+                    "nests under the cache mutex otherwise)",
+                    fn=fn.name,
+                )
+            )
+        for cm in CALL_RE.finditer(span):
+            callee = cm.group(1)
+            if callee == fn.name or callee not in acquirers:
+                continue
+            # skip macro invocations: `name!(`
+            off = live_start + cm.start()
+            cfile, cline = acquirers[callee]
+            out.append(
+                Finding(
+                    NAME,
+                    "nested-lock-call",
+                    sf.relpath,
+                    sf.lx.line_of(off),
+                    f"call to `{callee}` ({cfile}:{cline}, acquires a "
+                    f"lock) while cache guard `{name}` is live",
+                    fn=fn.name,
+                )
+            )
+    return out
+
+
+def _liveness_end(code: str, bind_start: int, fn_body_end: int, name: str):
+    """Guard lives from its binding to the close of the innermost
+    enclosing brace block, or an earlier explicit `drop(name)`."""
+    # innermost enclosing `{`: walk back counting closes
+    depth = 0
+    open_idx = -1
+    i = bind_start - 1
+    while i >= 0:
+        ch = code[i]
+        if ch == "}":
+            depth += 1
+        elif ch == "{":
+            if depth == 0:
+                open_idx = i
+                break
+            depth -= 1
+        i -= 1
+    if open_idx < 0:
+        end = fn_body_end
+    else:
+        close = match_brace(code, open_idx)
+        end = close if close > 0 else fn_body_end
+    end = min(end, fn_body_end)
+    dm = re.search(r"\bdrop\s*\(\s*" + re.escape(name) + r"\s*\)",
+                   code[bind_start:end])
+    if dm:
+        end = bind_start + dm.start()
+    return end

@@ -1,0 +1,101 @@
+"""Pass: structural sanity.
+
+The cheap checks that catch a botched merge or hand-edit before any
+deeper pass wastes time on garbled input:
+
+  unbalanced          delimiters don't balance in a file's code view
+                      (strings/comments already excluded)
+  missing-module-file lib.rs declares `mod x;` but neither src/x.rs nor
+                      src/x/mod.rs exists
+  undeclared-module   a src/ subdirectory with a mod.rs that lib.rs
+                      never declares (dead tree shipping in the repo)
+  dup-test-name       two `#[test]` fns with the same name in one file —
+                      the second silently shadows nothing but will not
+                      compile; in a toolchain-less container that means
+                      it ships broken
+"""
+
+import os
+import re
+from collections import Counter
+from typing import List
+
+from ..findings import Finding, Project
+from ..rustlex import check_balance
+
+NAME = "structure"
+
+MOD_RE = re.compile(r"^\s*(?:pub\s+)?mod\s+([a-z_][a-z0-9_]*)\s*;", re.M)
+
+
+def run(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+
+    for sf in project.rust_files():
+        for line, msg in check_balance(sf.lx):
+            out.append(Finding(NAME, "unbalanced", sf.relpath, line, msg))
+
+        tests = [fn for fn in sf.fns if fn.is_test]
+        counts = Counter(fn.name for fn in tests)
+        flagged = set()
+        for fn in tests:
+            if counts[fn.name] > 1 and fn.name not in flagged:
+                flagged.add(fn.name)
+                lines = [str(f.line) for f in tests if f.name == fn.name]
+                out.append(
+                    Finding(
+                        NAME, "dup-test-name", sf.relpath, fn.line,
+                        f"#[test] fn `{fn.name}` defined "
+                        f"{counts[fn.name]}x in this file "
+                        f"(lines {', '.join(lines)}) — will not compile",
+                        fn=fn.name,
+                    )
+                )
+
+    out.extend(_check_lib_wiring(project))
+    return out
+
+
+def _check_lib_wiring(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    cfg = project.config.section("structure")
+    lib_rel = cfg.get("lib", "rust/src/lib.rs")
+    src_rel = os.path.dirname(lib_rel)
+    sf = project.files.get(lib_rel)
+    if sf is None:
+        return out
+
+    declared = {}
+    for m in MOD_RE.finditer(sf.lx.code):
+        declared[m.group(1)] = sf.lx.line_of(m.start())
+
+    src_abs = os.path.join(project.root, src_rel)
+    for name, line in sorted(declared.items()):
+        file_form = os.path.join(src_abs, name + ".rs")
+        dir_form = os.path.join(src_abs, name, "mod.rs")
+        if not (os.path.exists(file_form) or os.path.exists(dir_form)):
+            out.append(
+                Finding(
+                    NAME, "missing-module-file", lib_rel, line,
+                    f"lib.rs declares `mod {name};` but neither "
+                    f"{src_rel}/{name}.rs nor {src_rel}/{name}/mod.rs "
+                    "exists",
+                )
+            )
+
+    if os.path.isdir(src_abs):
+        for entry in sorted(os.listdir(src_abs)):
+            sub = os.path.join(src_abs, entry)
+            if os.path.isdir(sub) and os.path.exists(
+                os.path.join(sub, "mod.rs")
+            ):
+                if entry not in declared:
+                    out.append(
+                        Finding(
+                            NAME, "undeclared-module",
+                            f"{src_rel}/{entry}/mod.rs", 1,
+                            f"module directory `{entry}/` has a mod.rs "
+                            "but lib.rs never declares it — dead tree",
+                        )
+                    )
+    return out

@@ -1,0 +1,278 @@
+r"""Comment/string/char-literal-aware Rust lexer.
+
+The passes never want to see the *inside* of a comment or a string when
+they scan for code patterns (`.lock()`, `EngineOptions {`, ...), but the
+counter-registry pass wants exactly the opposite — the emitted JSON key
+strings.  So one scan produces both views of a file:
+
+  * ``code``     — the source with every comment and every string/char
+                   literal body replaced by spaces.  Char positions and
+                   line numbers are IDENTICAL to the original file, so a
+                   regex hit in ``code`` maps straight back to a
+                   clickable file:line.
+  * ``strings``  — every string literal as (start, end, line, value).
+  * ``comments`` — every comment as (start, line, text), doc comments
+                   included (the hot-path annotations and inline
+                   suppressions live here).
+
+Handles: line comments, nested block comments, ``"..."`` with escapes,
+``r"..."`` / ``r#"..."#`` raw strings (any hash depth), byte strings
+``b"..."`` / ``br#"..."#``, char literals ``'x'`` ``'\n'`` ``'\u{..}'``
+``b'x'``, and tells lifetimes/labels (``'a``, ``'outer:``) apart from
+char literals.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass
+class LexedFile:
+    path: str
+    text: str
+    code: str
+    # (start, end_exclusive, line, value)
+    strings: List[Tuple[int, int, int, str]] = field(default_factory=list)
+    # (start, line, text)
+    comments: List[Tuple[int, int, str]] = field(default_factory=list)
+    # line -> comment text (last comment starting on that line)
+    comment_by_line: dict = field(default_factory=dict)
+
+    def line_of(self, offset: int) -> int:
+        """1-based line number of a char offset (binary search)."""
+        lo, hi = 0, len(self._line_starts) - 1
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if self._line_starts[mid] <= offset:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo + 1
+
+    def finish(self):
+        starts = [0]
+        for i, ch in enumerate(self.text):
+            if ch == "\n":
+                starts.append(i + 1)
+        self._line_starts = starts
+        for off, line, txt in self.comments:
+            self.comment_by_line[line] = txt
+        return self
+
+
+def _is_ident(ch: str) -> bool:
+    return ch.isalnum() or ch == "_"
+
+
+def _blank(span_text: str) -> str:
+    return "".join(c if c == "\n" else " " for c in span_text)
+
+
+def lex(path: str, text: str) -> LexedFile:
+    out = LexedFile(path=path, text=text, code="")
+    code = []
+    i, n = 0, len(text)
+    line = 1
+
+    while i < n:
+        ch = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+
+        # ---- line comment (// /// //!)
+        if ch == "/" and nxt == "/":
+            j = i
+            while j < n and text[j] != "\n":
+                j += 1
+            out.comments.append((i, line, text[i:j]))
+            code.append(_blank(text[i:j]))
+            i = j
+            continue
+
+        # ---- block comment, nested per Rust
+        if ch == "/" and nxt == "*":
+            j = i + 2
+            depth = 1
+            while j < n and depth > 0:
+                if text[j] == "/" and j + 1 < n and text[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif text[j] == "*" and j + 1 < n and text[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            out.comments.append((i, line, text[i:j]))
+            span = text[i:j]
+            code.append(_blank(span))
+            line += span.count("\n")
+            i = j
+            continue
+
+        # ---- raw / byte string prefixes
+        if ch in "rb" and (i == 0 or not _is_ident(text[i - 1])):
+            j = i
+            prefix = ""
+            while j < n and text[j] in "rb" and len(prefix) < 2:
+                prefix += text[j]
+                j += 1
+            hashes = 0
+            k = j
+            while k < n and text[k] == "#":
+                hashes += 1
+                k += 1
+            if k < n and text[k] == '"' and "r" in prefix:
+                # raw string: ends at " + matching hash count
+                end_marker = '"' + "#" * hashes
+                close = text.find(end_marker, k + 1)
+                if close == -1:
+                    close = max(k + 1, n - len(end_marker))
+                end = close + len(end_marker)
+                value = text[k + 1 : close]
+                out.strings.append((i, end, line, value))
+                span = text[i:end]
+                code.append(_blank(span))
+                line += span.count("\n")
+                i = end
+                continue
+            if prefix == "b" and j < n and text[j] == '"':
+                close, value, nl = _scan_plain_string(text, j)
+                out.strings.append((i, close, line, value))
+                span = text[i:close]
+                code.append(_blank(span))
+                line += nl
+                i = close
+                continue
+            if prefix == "b" and j < n and text[j] == "'":
+                close = _scan_char(text, j)
+                code.append(_blank(text[i:close]))
+                i = close
+                continue
+            # plain identifier starting with r/b
+            code.append(text[i])
+            i += 1
+            continue
+
+        # ---- plain string
+        if ch == '"':
+            close, value, nl = _scan_plain_string(text, i)
+            out.strings.append((i, close, line, value))
+            span = text[i:close]
+            code.append(_blank(span))
+            line += nl
+            i = close
+            continue
+
+        # ---- char literal vs lifetime/label
+        if ch == "'":
+            if nxt == "\\":
+                close = _scan_char(text, i)
+                code.append(_blank(text[i:close]))
+                i = close
+                continue
+            if i + 2 < n and text[i + 2] == "'" and nxt != "'":
+                code.append(_blank(text[i : i + 3]))
+                i += 3
+                continue
+            # lifetime or label: keep as code
+            code.append(ch)
+            i += 1
+            continue
+
+        code.append(ch)
+        if ch == "\n":
+            line += 1
+        i += 1
+
+    out.code = "".join(code)
+    assert len(out.code) == len(text), f"lexer desync in {path}"
+    return out.finish()
+
+
+def _scan_plain_string(text: str, start: int):
+    """start points at the opening quote. Returns (end_exclusive, value,
+    newlines_crossed)."""
+    i = start + 1
+    n = len(text)
+    buf = []
+    nl = 0
+    while i < n:
+        ch = text[i]
+        if ch == "\\":
+            if i + 1 < n and text[i + 1] == "\n":
+                nl += 1
+            buf.append(text[i : i + 2])
+            i += 2
+            continue
+        if ch == '"':
+            return i + 1, "".join(buf), nl
+        if ch == "\n":
+            nl += 1
+        buf.append(ch)
+        i += 1
+    return n, "".join(buf), nl
+
+
+def _scan_char(text: str, start: int) -> int:
+    """start points at the opening '. Returns end offset (exclusive)."""
+    i = start + 1
+    n = len(text)
+    while i < n:
+        ch = text[i]
+        if ch == "\\":
+            i += 2
+            continue
+        if ch == "'":
+            return i + 1
+        if ch == "\n":  # malformed; bail
+            return i
+        i += 1
+    return n
+
+
+DELIMS = {"(": ")", "[": "]", "{": "}"}
+CLOSERS = {v: k for k, v in DELIMS.items()}
+
+
+def check_balance(lx: LexedFile):
+    """Returns a list of (line, message) delimiter problems in the file's
+    code view (strings/comments already blanked). Stops at the first
+    problem — everything after a mismatch is noise."""
+    problems = []
+    stack = []
+    for i, ch in enumerate(lx.code):
+        if ch in DELIMS:
+            stack.append((ch, i))
+        elif ch in CLOSERS:
+            if not stack:
+                problems.append((lx.line_of(i), f"unmatched closing '{ch}'"))
+                return problems
+            op, oi = stack.pop()
+            if DELIMS[op] != ch:
+                problems.append(
+                    (
+                        lx.line_of(i),
+                        f"mismatched '{ch}' closes '{op}' opened at "
+                        f"line {lx.line_of(oi)}",
+                    )
+                )
+                return problems
+    for op, oi in stack[:1]:
+        problems.append((lx.line_of(oi), f"unclosed '{op}'"))
+    return problems
+
+
+def match_brace(code: str, open_idx: int) -> int:
+    """Index of the brace matching code[open_idx] (which must be an
+    opener). Returns -1 if unbalanced."""
+    op = code[open_idx]
+    close = DELIMS[op]
+    depth = 0
+    for i in range(open_idx, len(code)):
+        ch = code[i]
+        if ch == op:
+            depth += 1
+        elif ch == close:
+            depth -= 1
+            if depth == 0:
+                return i
+    return -1
