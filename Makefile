@@ -93,7 +93,7 @@ trace-smoke:
 	@rm -f BENCH_sched.trace.json
 	@if [ -f trace_sched.json ]; then \
 		python3 scripts/check_trace.py trace_sched.json \
-			--require-overlap; \
+			--require-overlap --require-flows; \
 	else \
 		echo "trace-smoke: no trace written (artifacts missing?)"; fi
 

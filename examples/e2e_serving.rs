@@ -49,6 +49,9 @@ fn main() -> anyhow::Result<()> {
         // continuous batching: both clients' requests decode interleaved
         max_seqs: N_CLIENTS,
         sched_queue_cap: 16,
+        fault_spec: None,
+        trace_out: None,
+        telemetry_interval_ms: 500,
     };
     let server = std::thread::spawn(move || serve(cfg));
 

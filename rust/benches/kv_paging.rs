@@ -69,6 +69,8 @@ fn req(prompt: &[u32], n: usize, seed: u64) -> SeqRequest {
         seed,
         eos: None,
         deadline_waves: None,
+        req_id: 0,
+        client: None,
     }
 }
 

@@ -61,8 +61,9 @@ use crate::preload::{ActSite, SimilarityTracker};
 use crate::runtime::{lit_f32, lit_i32_scalar, lit_to_f32, Runtime};
 use crate::sparsity;
 use crate::trace::{
-    Histo, JournalEntry, SpanEvent, SpanKind, TraceBuf, TraceHandle,
-    TraceShared, DEFAULT_RING_CAP, TID_ENGINE, TID_GOVERNOR,
+    Histo, JournalEntry, SpanCtx, SpanEvent, SpanKind,
+    TraceBuf, TraceHandle, TraceShared, DEFAULT_RING_CAP, TID_ENGINE,
+    TID_GOVERNOR,
 };
 use crate::util::rng::Xorshift;
 
@@ -202,12 +203,39 @@ pub struct SeqState {
     /// Per-site Top-K snapshot from the last layer of the previous step
     /// (the cross-token prediction input), indexed like `CT_SITES`.
     next_idx: [Vec<usize>; 4],
+    /// Causal trace context (request id + scheduler sequence id) every
+    /// span recorded while stepping this sequence inherits. NONE for
+    /// solo decode and untagged traffic.
+    ctx: SpanCtx,
+    /// Client tag from the submitting request (per-client
+    /// expected-occupancy keying). None = untagged.
+    client: Option<String>,
+    /// Attributed I/O: µs this sequence's steps spent blocked reaping
+    /// flash completions, accumulated across activations (preemption
+    /// carry happens in the scheduler, which snapshots these before
+    /// `end_seq_preempted`).
+    io_wait_us: u64,
+    /// Attributed on-demand rows fetched while stepping this sequence.
+    ondemand_rows: u64,
 }
 
 impl SeqState {
     /// Tokens decoded so far in this sequence (its KV position).
     pub fn pos(&self) -> usize {
         self.kv.pos
+    }
+
+    /// Attach the causal trace context + client tag (scheduler
+    /// activation path; see [`crate::sched::DecodeBackend::seq_set_ctx`]).
+    pub fn set_ctx(&mut self, ctx: SpanCtx, client: Option<&str>) {
+        self.ctx = ctx;
+        self.client = client.map(str::to_owned);
+    }
+
+    /// Attributed `(io_wait_us, ondemand_rows)` accumulated by this
+    /// sequence's steps in its current activation.
+    pub fn io_attr(&self) -> (u64, u64) {
+        (self.io_wait_us, self.ondemand_rows)
     }
 }
 
@@ -223,6 +251,12 @@ const CT_SITES: [ActSite; 4] = [
 /// Seed of the engine-owned legacy sequence (`decode_token` & friends) —
 /// the pre-split engine seeded its sampler with this constant.
 const SOLO_SEED: u64 = 0xAF10;
+
+/// Bound on distinct client tags with their own length histogram: a
+/// `Histo` is ~550 B of `Copy` state, so 16 keyed tenants cost under
+/// 9 KiB; traffic beyond that folds into the global histogram only
+/// (hostile tag cardinality must not grow engine memory unboundedly).
+const MAX_CLIENT_HISTOS: usize = 16;
 
 pub struct SwapEngine {
     pub cfg: ArtifactConfig,
@@ -255,6 +289,11 @@ pub struct SwapEngine {
     /// — a mean here underestimates the long mode of bimodal traffic
     /// and triggers OOM-preemption churn).
     kv_len_histo: Histo,
+    /// The same distribution keyed per client tag (bounded — see
+    /// [`MAX_CLIENT_HISTOS`]): per-client p90 surfaces in `stats` and
+    /// the governor's decision journal so one tenant's long documents
+    /// are visible as *its* occupancy, not ambient noise.
+    client_len_histos: Vec<(String, Histo)>,
     /// Flight-recorder shared state: span ring + governor journal. Always
     /// constructed (handles are threaded into the loader and I/O workers
     /// at spawn time); recording is off until [`TraceShared::set_enabled`].
@@ -262,6 +301,10 @@ pub struct SwapEngine {
     /// The engine thread's local span buffer (lock-free push on the
     /// decode hot path, drained into the shared ring at step boundaries).
     tbuf: TraceBuf,
+    /// Context of the sequence currently inside `step_run` — what
+    /// layer-fetch/on-demand spans and preload submissions inherit
+    /// (plain field, not a parameter: the fetch path is deep).
+    cur_ctx: SpanCtx,
     seq_id_counter: u64,
     /// Issue a group-0 preload for each sequence's next token at the end
     /// of every step (scheduler mode: the chain overlaps with *other*
@@ -368,8 +411,10 @@ impl SwapEngine {
             active_seqs: 0,
             kvpool,
             kv_len_histo: Histo::new(),
+            client_len_histos: Vec::new(),
             tbuf: TraceBuf::new(trace.clone(), TID_ENGINE),
             trace,
+            cur_ctx: SpanCtx::NONE,
             seq_id_counter: 0,
             cross_token: false,
             lm_head_lit,
@@ -436,6 +481,10 @@ impl SwapEngine {
             rng: Xorshift::new(seed),
             pending_preload: None,
             next_idx: Default::default(),
+            ctx: SpanCtx::NONE,
+            client: None,
+            io_wait_us: 0,
+            ondemand_rows: 0,
         }
     }
 
@@ -465,9 +514,41 @@ impl SwapEngine {
         }
         if record_len && seq.kv.pos > 0 {
             self.kv_len_histo.record(seq.kv.pos as u64);
+            if let Some(client) = &seq.client {
+                match self
+                    .client_len_histos
+                    .iter_mut()
+                    .find(|(c, _)| c == client)
+                {
+                    Some((_, h)) => h.record(seq.kv.pos as u64),
+                    None if self.client_len_histos.len()
+                        < MAX_CLIENT_HISTOS =>
+                    {
+                        let mut h = Histo::new();
+                        h.record(seq.kv.pos as u64);
+                        self.client_len_histos.push((client.clone(), h));
+                    }
+                    // table full: the overflow tenant still feeds the
+                    // global histogram, it just gets no keyed row
+                    None => {}
+                }
+            }
         }
         seq.kv.release(&mut self.kvpool);
         self.active_seqs = self.active_seqs.saturating_sub(1);
+    }
+
+    /// Per-client p90 ended-sequence token lengths, sorted by client tag
+    /// (stable output for `stats`, the journal, and tests). Empty until
+    /// a tagged sequence finishes.
+    pub fn client_p90s(&self) -> Vec<(String, u64)> {
+        let mut out: Vec<(String, u64)> = self
+            .client_len_histos
+            .iter()
+            .map(|(c, h)| (c.clone(), h.p90()))
+            .collect();
+        out.sort();
+        out
     }
 
     /// Live sequences (begun, not yet ended) — the `active_seqs` factor
@@ -766,9 +847,13 @@ impl SwapEngine {
         // trace-clock step start; None (no call, no allocation) when the
         // recorder is off — the default — keeping the hot path untouched
         let t_step = self.tbuf.enabled().then(|| self.tbuf.now_us());
+        // this step's spans and preload submissions inherit the
+        // sequence's causal context
+        self.cur_ctx = seq.ctx;
         let busy0 = self.rt.total_busy();
         let (_, _, flash_ns0) = self.flash.stats.snapshot();
         let io0 = self.queue.io_stats();
+        let ondemand_rows0 = self.metrics.ondemand_rows;
 
         let n = self.opts.group_size.max(1);
         let n_groups = m.n_layers.div_ceil(n);
@@ -986,8 +1071,8 @@ impl SwapEngine {
                 if let Some(t0) = t_layer {
                     // one span per layer: fetch + compute of all four
                     // sites (a = layer, b = sequence id)
-                    self.tbuf.span(SpanKind::LayerFetch, t0, l as u64,
-                                   seq.id);
+                    self.tbuf.span(SpanKind::LayerFetch, t0, self.cur_ctx,
+                                   l as u64, seq.id);
                 }
             }
 
@@ -1038,7 +1123,8 @@ impl SwapEngine {
             .h_itl_us
             .record(t_start.elapsed().as_micros() as u64);
         if let Some(t0) = t_step {
-            self.tbuf.span(SpanKind::Step, t0, seq.id, pos as u64);
+            self.tbuf.span(SpanKind::Step, t0, self.cur_ctx, seq.id,
+                           pos as u64);
         }
         // step boundary: drain the engine's local span buffer into the
         // shared ring (no-op when tracing is off — the buffer is empty)
@@ -1048,6 +1134,12 @@ impl SwapEngine {
         self.metrics.flash_busy +=
             Duration::from_nanos(flash_ns1 - flash_ns0);
         let io1 = self.queue.io_stats();
+        // per-request attribution: charge this step's engine-class I/O
+        // stall and on-demand row fetches to the sequence that ran it
+        seq.io_wait_us +=
+            (io1.wait_engine_ns - io0.wait_engine_ns) / 1_000;
+        seq.ondemand_rows +=
+            self.metrics.ondemand_rows - ondemand_rows0;
         self.metrics.io_batches += io1.batches - io0.batches;
         self.metrics.io_wait_loader += Duration::from_nanos(
             io1.wait_loader_ns - io0.wait_loader_ns,
@@ -1182,6 +1274,7 @@ impl SwapEngine {
             seq,
             layers: layers.clone(),
             parts,
+            ctx: self.cur_ctx,
         });
     }
 
@@ -1292,6 +1385,7 @@ impl SwapEngine {
                     &self.ondemand,
                     &mut bufs,
                     &mut self.metrics,
+                    self.cur_ctx,
                 )?;
                 self.metrics
                     .h_ondemand_us
@@ -1302,6 +1396,7 @@ impl SwapEngine {
                     self.tbuf.span(
                         SpanKind::OndemandRead,
                         t0,
+                        self.cur_ctx,
                         layer as u64,
                         self.ondemand.len() as u64,
                     );
@@ -1459,6 +1554,12 @@ impl SwapEngine {
         self.queue.wait_histos()
     }
 
+    /// Cumulative counters of the shared [`ReadQueue`] (metrics
+    /// exposition; benches use the same snapshot via the queue).
+    pub fn io_snapshot(&self) -> crate::flash::IoSnapshot {
+        self.queue.io_stats()
+    }
+
     /// Zero the queue-wait histograms (server `stats_reset`).
     pub fn reset_io_wait_histos(&self) {
         self.queue.reset_wait_histos()
@@ -1483,6 +1584,7 @@ impl SwapEngine {
             compute_bytes: d.new_pools.compute_bytes,
             max_seqs: d.max_seqs,
             settle_us,
+            client_p90s: self.client_p90s(),
         });
         // the settle work just finished; back-date the span over it
         let dur = settle_us.max(1);
@@ -1491,9 +1593,18 @@ impl SwapEngine {
             t0_us: now.saturating_sub(dur),
             dur_us: dur,
             tid: TID_GOVERNOR,
+            ctx: SpanCtx::NONE,
             a: d.new_budget,
             b: d.applied as u64,
         });
+    }
+
+    /// One DRAM-ledger sample of the engine-owned pools: `(kv_bytes,
+    /// slab_bytes)` — resident KV blocks plus the preload store's live
+    /// slab bytes. The server folds these with the governor's pool
+    /// targets into a [`crate::trace::LedgerSample`] each wave.
+    pub fn ledger_probe(&self) -> (u64, u64) {
+        (self.kvpool.resident_bytes(), self.pipe.loader_stats().slab_bytes)
     }
 }
 
@@ -1646,6 +1757,7 @@ fn fetch_ondemand_rows(
     ondemand: &[(usize, usize, usize)],
     bufs: &mut [Vec<f32>; 3],
     m: &mut DecodeMetrics,
+    ctx: SpanCtx,
 ) -> Result<()> {
     let quant = awgf.quant;
 
@@ -1718,7 +1830,7 @@ fn fetch_ondemand_rows(
     // pass 2: one atomic submission for the whole fetch — URGENT: these
     // rows block the current matmul, so they jump ahead of any preload
     // wavefront still pending in the shared queue
-    let tags = queue.submit_many_urgent(&reqs);
+    let tags = queue.submit_many_urgent_ctx(&reqs, ctx);
 
     // pass 3: reap + dequantize + one batched insert per run, under the
     // caller's (single) cache guard. After a failure the fetch is dead:

@@ -53,7 +53,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::device::DeviceProfile;
-use crate::trace::{Histo, SpanEvent, SpanKind, TraceHandle, TID_IO_BASE};
+use crate::trace::{
+    Histo, SpanCtx, SpanEvent, SpanKind, TraceHandle, TID_IO_BASE,
+};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ClockMode {
@@ -647,8 +649,8 @@ struct WorkerSlot {
 
 struct QueueInner {
     /// Submitted, not yet picked up by a worker:
-    /// (tag, offset, len, urgent, attempt).
-    pending: VecDeque<(u64, u64, usize, bool, u32)>,
+    /// (tag, offset, len, urgent, attempt, causal ctx).
+    pending: VecDeque<(u64, u64, usize, bool, u32, SpanCtx)>,
     /// Completed, not yet reaped. Errors are typed [`IoError`]s (Clone,
     /// so one failure fans out across its wave's reads).
     done: HashMap<u64, Result<Completion, IoError>>,
@@ -867,7 +869,17 @@ impl ReadQueue {
     /// to share waves (up to the depth) and amortize their fixed latency.
     /// Returns tags in request order.
     pub fn submit_many(&self, reqs: &[(u64, usize)]) -> Vec<u64> {
-        self.submit_group(reqs, false)
+        self.submit_group(reqs, false, SpanCtx::NONE)
+    }
+
+    /// [`ReadQueue::submit_many`] with a causal context: the group's
+    /// `io_batch` spans record which request paid for the reads.
+    pub fn submit_many_ctx(
+        &self,
+        reqs: &[(u64, usize)],
+        ctx: SpanCtx,
+    ) -> Vec<u64> {
+        self.submit_group(reqs, false, ctx)
     }
 
     /// Like [`ReadQueue::submit_many`], but the group jumps the pending
@@ -879,10 +891,24 @@ impl ReadQueue {
     /// worst-case wait is one *partial* preload wave — not a full-depth
     /// one.
     pub fn submit_many_urgent(&self, reqs: &[(u64, usize)]) -> Vec<u64> {
-        self.submit_group(reqs, true)
+        self.submit_group(reqs, true, SpanCtx::NONE)
     }
 
-    fn submit_group(&self, reqs: &[(u64, usize)], urgent: bool) -> Vec<u64> {
+    /// [`ReadQueue::submit_many_urgent`] with a causal context.
+    pub fn submit_many_urgent_ctx(
+        &self,
+        reqs: &[(u64, usize)],
+        ctx: SpanCtx,
+    ) -> Vec<u64> {
+        self.submit_group(reqs, true, ctx)
+    }
+
+    fn submit_group(
+        &self,
+        reqs: &[(u64, usize)],
+        urgent: bool,
+        ctx: SpanCtx,
+    ) -> Vec<u64> {
         let mut q = self.shared.inner.lock().unwrap();
         let tags: Vec<u64> = reqs
             .iter()
@@ -890,7 +916,7 @@ impl ReadQueue {
                 let tag = q.next_tag;
                 q.next_tag += 1;
                 if !urgent {
-                    q.pending.push_back((tag, off, len, false, 0));
+                    q.pending.push_back((tag, off, len, false, 0, ctx));
                 }
                 tag
             })
@@ -898,7 +924,7 @@ impl ReadQueue {
         if urgent {
             // front-insert in reverse so the group's own order survives
             for (&tag, &(off, len)) in tags.iter().zip(reqs).rev() {
-                q.pending.push_front((tag, off, len, true, 0));
+                q.pending.push_front((tag, off, len, true, 0, ctx));
             }
         }
         self.shared
@@ -918,7 +944,7 @@ impl ReadQueue {
         let reclaimed = {
             let mut q = self.shared.inner.lock().unwrap();
             let before = q.pending.len();
-            q.pending.retain(|&(t, _, _, _, _)| t != tag);
+            q.pending.retain(|&(t, _, _, _, _, _)| t != tag);
             if q.pending.len() != before {
                 return; // never started; nothing will ever complete
             }
@@ -972,7 +998,7 @@ impl ReadQueue {
                 // orphan the tag wherever it is — a completion landing
                 // after this must not park in the done map forever
                 let before = q.pending.len();
-                q.pending.retain(|&(t, _, _, _, _)| t != tag);
+                q.pending.retain(|&(t, _, _, _, _, _)| t != tag);
                 if q.pending.len() == before {
                     q.abandoned.insert(tag);
                 }
@@ -1113,7 +1139,11 @@ fn worker_loop(sh: Arc<QueueShared>, slot: usize, generation: u64) {
         // submission arriving mid-wavefront lands within at most one
         // *partial* wave instead of draining behind a full-depth preload
         // wave (ROADMAP "I/O wave preemption").
-        let (wave, wave_urgent): (Vec<(u64, u64, usize, bool, u32)>, bool) = {
+        #[allow(clippy::type_complexity)]
+        let (wave, wave_urgent): (
+            Vec<(u64, u64, usize, bool, u32, SpanCtx)>,
+            bool,
+        ) = {
             let mut q = sh.inner.lock().unwrap();
             loop {
                 if q.slots[slot].generation != generation {
@@ -1121,7 +1151,7 @@ fn worker_loop(sh: Arc<QueueShared>, slot: usize, generation: u64) {
                 }
                 let budget = sh.depth.saturating_sub(q.inflight);
                 let front_urgent =
-                    q.pending.front().map(|&(_, _, _, u, _)| u);
+                    q.pending.front().map(|&(_, _, _, u, _, _)| u);
                 if let (Some(urgent), true) = (front_urgent, budget > 0) {
                     let cap = if urgent {
                         budget
@@ -1134,9 +1164,9 @@ fn worker_loop(sh: Arc<QueueShared>, slot: usize, generation: u64) {
                     if cap > 0 {
                         let mut take = 0usize;
                         while take < cap
-                            && q.pending
-                                .get(take)
-                                .is_some_and(|&(_, _, _, u, _)| u == urgent)
+                            && q.pending.get(take).is_some_and(
+                                |&(_, _, _, u, _, _)| u == urgent,
+                            )
                         {
                             take += 1;
                         }
@@ -1179,7 +1209,7 @@ fn worker_loop(sh: Arc<QueueShared>, slot: usize, generation: u64) {
         let mut verdicts: Vec<Option<IoError>> = Vec::new();
         if sh.dev.faults_active() {
             let mut extra_ns = 0u64;
-            for &(_, off, len, urgent, _) in &wave {
+            for &(_, off, len, urgent, _, _) in &wave {
                 let (ns, err) = sh.dev.fault_check(off, len, urgent);
                 extra_ns += ns;
                 verdicts.push(err);
@@ -1231,11 +1261,20 @@ fn worker_loop(sh: Arc<QueueShared>, slot: usize, generation: u64) {
             sh.dev.read_batch_into(&reqs, &mut bufs)
         };
         if let (Some(t0), Some(trace)) = (t_io, sh.trace.as_ref()) {
+            // attribute the wave to the first context-carrying read in
+            // it — reads submitted together share a requester, and a
+            // mixed wave is still better pinned to one request than none
+            let ctx = wave
+                .iter()
+                .map(|w| w.5)
+                .find(|c| !c.is_none())
+                .unwrap_or(SpanCtx::NONE);
             trace.push_one(SpanEvent {
                 kind: SpanKind::IoBatch,
                 t0_us: t0,
                 dur_us: trace.now_us().saturating_sub(t0),
                 tid: TID_IO_BASE + slot as u32,
+                ctx,
                 a: wave.len() as u64,
                 b: wave_urgent as u64,
             });
@@ -1301,7 +1340,7 @@ fn worker_loop(sh: Arc<QueueShared>, slot: usize, generation: u64) {
             // permanent faults surface their typed error to the reaper.
             for (i, verdict) in verdicts.into_iter().enumerate() {
                 let Some(err) = verdict else { continue };
-                let (tag, off, len, urgent, attempt) = wave[i];
+                let (tag, off, len, urgent, attempt, ctx) = wave[i];
                 if q.abandoned.remove(&tag) {
                     continue;
                 }
@@ -1309,11 +1348,23 @@ fn worker_loop(sh: Arc<QueueShared>, slot: usize, generation: u64) {
                     backoff_ns += RETRY_BACKOFF_NS << attempt;
                     sh.retries.fetch_add(1, Ordering::Relaxed);
                     if urgent {
-                        q.pending
-                            .push_front((tag, off, len, true, attempt + 1));
+                        q.pending.push_front((
+                            tag,
+                            off,
+                            len,
+                            true,
+                            attempt + 1,
+                            ctx,
+                        ));
                     } else {
-                        q.pending
-                            .push_back((tag, off, len, false, attempt + 1));
+                        q.pending.push_back((
+                            tag,
+                            off,
+                            len,
+                            false,
+                            attempt + 1,
+                            ctx,
+                        ));
                     }
                 } else {
                     q.done.insert(tag, Err(err));

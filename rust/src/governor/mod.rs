@@ -286,6 +286,18 @@ impl DramGovernor {
         self.decisions.last()
     }
 
+    /// Pool targets of the newest **applied** decision — the governor's
+    /// side of the per-wave DRAM ledger sample (all-zero before the
+    /// first applied re-budget).
+    pub fn current_pools(&self) -> PoolLedger {
+        self.decisions
+            .iter()
+            .rev()
+            .find(|d| d.applied)
+            .map(|d| d.new_pools)
+            .unwrap_or_default()
+    }
+
     /// Handle a budget-change event: gate on hysteresis, re-run the §4.1
     /// search under the new `M_max`, and apply `(sp, N, cache)` to the
     /// running engine. Must be called between requests (it takes the

@@ -9,7 +9,7 @@
 //!                     [--pressure-file PATH] [--max-seqs N]
 //!                     [--sched-queue-cap N] [--kv-block-tokens N]
 //!                     [--faults seed=1,transient=0.01:2,bad=OFF+LEN,...]
-//!                     [--trace-out trace.json]
+//!                     [--trace-out trace.json] [--telemetry-interval-ms N]
 //! activeflow search   --device pixel6 --budget-mb 1500 --geometry llama7b
 //! activeflow inspect  devices|artifacts|weights
 //! activeflow bench    <pareto|e2e|ablation|flash|preload-tradeoff|
@@ -254,6 +254,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sched_queue_cap: rc.sched_queue_cap,
         fault_spec: rc.fault_spec.clone(),
         trace_out: args.opt("trace-out").map(PathBuf::from),
+        telemetry_interval_ms: args
+            .opt_usize("telemetry-interval-ms", 500)?
+            .max(1) as u64,
     };
     let served = serve(cfg)?;
     println!("[server] shut down after {served} requests");

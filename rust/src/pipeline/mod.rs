@@ -43,7 +43,7 @@ use anyhow::Result;
 
 use crate::flash::{FlashDevice, IoClass, ReadQueue};
 use crate::layout::{quant, AwgfFile, OpKind};
-use crate::trace::{SpanEvent, SpanKind, TraceHandle, TID_LOADER};
+use crate::trace::{SpanCtx, SpanEvent, SpanKind, TraceHandle, TID_LOADER};
 
 /// Key of a preload part: (monotonic group sequence number, op family).
 pub type PartKey = (u64, OpKind);
@@ -86,6 +86,11 @@ pub struct PreloadBatch {
     /// The runtime group's layers, shared by every part.
     pub layers: Arc<[usize]>,
     pub parts: Vec<PartRequest>,
+    /// Causal context of the decode step that requested the preload:
+    /// carried into the flash submission and onto the batch's
+    /// `preload_part` spans so the trace attributes loader I/O to the
+    /// request that pays for it. [`SpanCtx::NONE`] for untracked work.
+    pub ctx: SpanCtx,
 }
 
 impl PreloadBatch {
@@ -111,6 +116,7 @@ impl PreloadBatch {
                 }],
                 skipped_cached,
             }],
+            ctx: SpanCtx::NONE,
         }
     }
 }
@@ -634,8 +640,9 @@ impl LoaderWorker {
             .iter()
             .map(|part| self.plan_part(&batch.layers, part, &mut reqs))
             .collect();
-        // phase 2: one submission for the whole batch (tags in req order)
-        let tags = self.queue.submit_many(&reqs);
+        // phase 2: one submission for the whole batch (tags in req
+        // order), carrying the requesting step's causal context
+        let tags = self.queue.submit_many_ctx(&reqs, batch.ctx);
         for plan in &mut plans {
             if let PartPlan::Loading { runs, .. } = plan {
                 for run in runs {
@@ -654,6 +661,7 @@ impl LoaderWorker {
                     t0_us: t0,
                     dur_us: trace.now_us().saturating_sub(t0),
                     tid: TID_LOADER,
+                    ctx: batch.ctx,
                     a: batch.seq,
                     b: part.op as u64,
                 });
@@ -1226,6 +1234,7 @@ mod tests {
                     skipped_cached: 0,
                 },
             ],
+            ctx: SpanCtx::NONE,
         });
         assert!(pipe.wait_part((1, OpKind::Wq)));
         assert!(pipe.wait_part((1, OpKind::Wk)));
@@ -1272,6 +1281,7 @@ mod tests {
                 ],
                 skipped_cached: 2, // ch7@layer1 + ch5@layer2 filtered
             }],
+            ctx: SpanCtx::NONE,
         });
         assert!(pipe.wait_part((4, OpKind::Wq)));
         let st = pipe.loader_stats();
@@ -1351,6 +1361,7 @@ mod tests {
                     skipped_cached: 0,
                 },
             ],
+            ctx: SpanCtx::NONE,
         });
         assert!(pipe.wait_part((1, OpKind::Wq)));
         assert!(pipe.wait_part((1, OpKind::Wk)), "throttled part marks done");
@@ -1510,6 +1521,7 @@ mod tests {
                     skipped_cached: 0,
                 },
             ],
+            ctx: SpanCtx::NONE,
         });
         pipe.request(job(6, &[0, 1], &[3]));
         assert!(pipe.wait_part((6, OpKind::Wq))); // FIFO: 5 processed first

@@ -58,7 +58,10 @@ use anyhow::Result;
 
 use crate::engine::{SeqState, SwapEngine};
 use crate::metrics::DecodeMetrics;
-use crate::trace::{Histo, SpanEvent, SpanKind, TraceHandle, TID_SCHED};
+use crate::trace::{
+    Histo, SpanCtx, SpanEvent, SpanKind, TraceHandle, TID_REQUEST,
+    TID_SCHED,
+};
 
 /// What the scheduler needs from a decode engine. One call = one token;
 /// the backend samples internally (deterministically per sequence) and
@@ -134,6 +137,25 @@ pub trait DecodeBackend {
     fn kv_blocks_for(&self, _tokens: usize) -> usize {
         0
     }
+
+    // ---- causal-tracing hooks (defaults = untracked backend)
+
+    /// Attach the scheduler-minted causal context (and originating
+    /// client tag) to a just-begun sequence, so the backend's step/fetch
+    /// spans inherit it. No-op for backends without tracing.
+    fn seq_set_ctx(
+        &mut self,
+        _seq: &mut Self::Seq,
+        _ctx: SpanCtx,
+        _client: Option<&str>,
+    ) {
+    }
+
+    /// Per-sequence I/O attribution accumulated by the backend so far:
+    /// `(io_wait_us, ondemand_rows)`. `(0, 0)` for untracked backends.
+    fn seq_io_stats(&self, _seq: &Self::Seq) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 impl DecodeBackend for SwapEngine {
@@ -196,6 +218,19 @@ impl DecodeBackend for SwapEngine {
     fn kv_total_blocks(&self) -> Option<usize> {
         Some(SwapEngine::kv_capacity_blocks(self))
     }
+
+    fn seq_set_ctx(
+        &mut self,
+        seq: &mut SeqState,
+        ctx: SpanCtx,
+        client: Option<&str>,
+    ) {
+        seq.set_ctx(ctx, client);
+    }
+
+    fn seq_io_stats(&self, seq: &SeqState) -> (u64, u64) {
+        seq.io_attr()
+    }
 }
 
 /// Scheduler knobs.
@@ -235,6 +270,13 @@ pub struct SeqRequest {
     /// retires with its **partial** stream (`timed_out` set) instead of
     /// hanging its client behind slower peers. `None` = no deadline.
     pub deadline_waves: Option<u64>,
+    /// Server-minted request id for causal tracing (0 = none; the
+    /// scheduler then falls back to the sequence id so bench traffic
+    /// still gets request root spans).
+    pub req_id: u64,
+    /// Originating client tag — keys the backend's per-client
+    /// expected-occupancy histograms. `None` = anonymous.
+    pub client: Option<String>,
 }
 
 /// `submit` verdict.
@@ -272,6 +314,15 @@ pub struct FinishedSeq {
     /// tokens; survives preemption/resume cycles). Empty for sequences
     /// that emitted fewer than two tokens.
     pub itl: Histo,
+    /// Causal context minted at submission (request root id + seq id).
+    pub ctx: SpanCtx,
+    /// Trace-clock submission time (µs; 0 when the backend is untraced).
+    pub t_submit_us: u64,
+    /// Engine-class I/O stall attributed to this request, µs (survives
+    /// preemption/resume cycles).
+    pub io_wait_us: u64,
+    /// On-demand rows fetched on this request's behalf.
+    pub ondemand_rows: u64,
 }
 
 /// Cumulative scheduler counters (mirrored into [`DecodeMetrics`] and the
@@ -342,6 +393,15 @@ struct Live<S> {
     /// Inter-token gaps of this request so far (carried across
     /// preemptions via [`Pending`]).
     itl: Histo,
+    /// Causal context minted at submission.
+    ctx: SpanCtx,
+    /// Trace-clock submission time (µs; 0 when untraced).
+    t_submit_us: u64,
+    /// I/O attribution carried over from preempted activations; the
+    /// current activation's share lives in the backend's `Seq` until
+    /// retirement/preemption snapshots it.
+    io_wait_us: u64,
+    ondemand_rows: u64,
 }
 
 /// Verdict of the pre-step KV headroom check (see
@@ -367,6 +427,13 @@ struct Pending {
     waves: u64,
     /// Inter-token gaps recorded before preemption (empty when fresh).
     itl: Histo,
+    /// Causal context minted at submission.
+    ctx: SpanCtx,
+    /// Trace-clock submission time (µs; 0 when untraced).
+    t_submit_us: u64,
+    /// I/O attribution snapshotted across preemptions.
+    io_wait_us: u64,
+    ondemand_rows: u64,
 }
 
 /// The continuous-batching scheduler. Owns the backend; the server worker
@@ -453,6 +520,19 @@ impl<B: DecodeBackend> Scheduler<B> {
         }
         self.next_id += 1;
         let id = self.next_id;
+        // mint the causal context here — admission is where a request
+        // becomes a sequence. Server-minted req ids win; bench/test
+        // traffic (req_id == 0) roots at the sequence id instead so its
+        // I/O spans are still flow-reachable.
+        let ctx = SpanCtx::new(
+            if req.req_id != 0 { req.req_id } else { id },
+            id,
+        );
+        let t_submit_us = self
+            .backend
+            .trace()
+            .map(|t| t.now_us())
+            .unwrap_or(0);
         let pending = Pending {
             id,
             req,
@@ -462,6 +542,10 @@ impl<B: DecodeBackend> Scheduler<B> {
             prior_decode: Duration::ZERO,
             waves: 0,
             itl: Histo::new(),
+            ctx,
+            t_submit_us,
+            io_wait_us: 0,
+            ondemand_rows: 0,
         };
         // fast-path admission only when nobody is already waiting —
         // fresh submissions must not jump queued (or preempted)
@@ -516,8 +600,15 @@ impl<B: DecodeBackend> Scheduler<B> {
                 prior_decode,
                 waves,
                 itl,
+                ctx,
+                t_submit_us,
+                io_wait_us,
+                ondemand_rows,
                 ..
             } = live;
+            // snapshot this activation's I/O attribution before the
+            // backend state is torn down
+            let (w, r) = self.backend.seq_io_stats(&seq);
             // frees the sequence's KV blocks; preempted partial progress
             // stays out of the backend's expected-occupancy stats
             self.backend.end_seq_preempted(seq);
@@ -530,6 +621,10 @@ impl<B: DecodeBackend> Scheduler<B> {
                 prior_decode: prior_decode + started.elapsed(),
                 waves,
                 itl,
+                ctx,
+                t_submit_us,
+                io_wait_us: io_wait_us + w,
+                ondemand_rows: ondemand_rows + r,
             });
             preempted += 1;
         }
@@ -594,6 +689,10 @@ impl<B: DecodeBackend> Scheduler<B> {
                     truncated: false,
                     timed_out: false,
                     itl: p.itl,
+                    ctx: p.ctx,
+                    t_submit_us: p.t_submit_us,
+                    io_wait_us: p.io_wait_us,
+                    ondemand_rows: p.ondemand_rows,
                 });
             }
         }
@@ -659,8 +758,32 @@ impl<B: DecodeBackend> Scheduler<B> {
                     t0_us,
                     dur_us: t.now_us().saturating_sub(t0_us),
                     tid: TID_SCHED,
+                    ctx: SpanCtx::NONE,
                     a: self.run.len() as u64,
                     b: finished.len() as u64,
+                });
+            }
+        }
+        // every retirement path converges here: emit each finished
+        // request's root span, spanning submission → retirement. The
+        // flow pass in `chrome_trace` hangs the request's waves, steps,
+        // and I/O spans off this root.
+        if let Some(t) = self.backend.trace().filter(|t| t.enabled()) {
+            let now = t.now_us();
+            for f in &finished {
+                let toks = f
+                    .outcome
+                    .as_ref()
+                    .map(|v| v.len() as u64)
+                    .unwrap_or(0);
+                t.push_one(SpanEvent {
+                    kind: SpanKind::Request,
+                    t0_us: f.t_submit_us,
+                    dur_us: now.saturating_sub(f.t_submit_us).max(1),
+                    tid: TID_REQUEST,
+                    ctx: f.ctx,
+                    a: toks,
+                    b: f.io_wait_us,
                 });
             }
         }
@@ -731,6 +854,10 @@ impl<B: DecodeBackend> Scheduler<B> {
             truncated: !fresh,
             timed_out: false,
             itl: p.itl,
+            ctx: p.ctx,
+            t_submit_us: p.t_submit_us,
+            io_wait_us: p.io_wait_us,
+            ondemand_rows: p.ondemand_rows,
         }
     }
 
@@ -762,7 +889,9 @@ impl<B: DecodeBackend> Scheduler<B> {
             }
             if self.run.len() == 1 {
                 let mut live = self.run.remove(0).expect("len checked");
-                let f = Self::finish(&mut live, None, true);
+                let (w, r) = self.backend.seq_io_stats(&live.seq);
+                let io = (live.io_wait_us + w, live.ondemand_rows + r);
+                let f = Self::finish(&mut live, None, true, io);
                 self.backend.end_seq(live.seq);
                 self.stats.seqs_completed += 1;
                 self.mirror(|m| m.seqs_completed += 1);
@@ -805,8 +934,13 @@ impl<B: DecodeBackend> Scheduler<B> {
             prior_decode,
             waves,
             itl,
+            ctx,
+            t_submit_us,
+            io_wait_us,
+            ondemand_rows,
             ..
         } = live;
+        let (w, r) = self.backend.seq_io_stats(&seq);
         self.backend.end_seq_preempted(seq);
         self.waitq.push_front(Pending {
             id,
@@ -817,6 +951,10 @@ impl<B: DecodeBackend> Scheduler<B> {
             prior_decode: prior_decode + started.elapsed(),
             waves,
             itl,
+            ctx,
+            t_submit_us,
+            io_wait_us: io_wait_us + w,
+            ondemand_rows: ondemand_rows + r,
         });
         self.stats.seqs_preempted += 1;
         self.stats.kv_preempted_oom += 1;
@@ -840,10 +978,14 @@ impl<B: DecodeBackend> Scheduler<B> {
         &mut self,
         p: Pending,
     ) -> std::result::Result<(), (Pending, &'static str)> {
-        let seq = match self.backend.begin_seq(p.req.temp, p.req.seed) {
+        let mut seq = match self.backend.begin_seq(p.req.temp, p.req.seed) {
             Ok(s) => s,
             Err(_) => return Err((p, "backend begin_seq failed")),
         };
+        // the backend's step/fetch spans for this activation inherit the
+        // request's causal context (re-attached on every resume)
+        self.backend
+            .seq_set_ctx(&mut seq, p.ctx, p.req.client.as_deref());
         let queue_wait = p.queue_wait + p.parked.elapsed();
         self.run.push_back(Live {
             id: p.id,
@@ -857,6 +999,10 @@ impl<B: DecodeBackend> Scheduler<B> {
             waves: p.waves,
             last_token: None,
             itl: p.itl,
+            ctx: p.ctx,
+            t_submit_us: p.t_submit_us,
+            io_wait_us: p.io_wait_us,
+            ondemand_rows: p.ondemand_rows,
         });
         self.stats.seqs_admitted += 1;
         self.mirror(|m| {
@@ -868,6 +1014,13 @@ impl<B: DecodeBackend> Scheduler<B> {
 
     /// Step run-queue entry `i` one token. `Some(finished)` retires it.
     fn step_live(&mut self, i: usize) -> Option<FinishedSeq> {
+        // total I/O attribution up front, while the backend borrow is
+        // free — every retirement path below hands it to `finish`
+        let io = {
+            let live = &self.run[i];
+            let (w, r) = self.backend.seq_io_stats(&live.seq);
+            (live.io_wait_us + w, live.ondemand_rows + r)
+        };
         let live = &mut self.run[i];
         let p = live.req.prompt.len();
 
@@ -876,20 +1029,20 @@ impl<B: DecodeBackend> Scheduler<B> {
         // same step — a sequence never reaches here with a full budget
         // unless it arrived full
         if live.out.len() >= live.req.n_tokens {
-            return Some(Self::finish(live, None, false));
+            return Some(Self::finish(live, None, false, io));
         }
         // per-request deadline: the wave budget ran out — deliver the
         // partial stream instead of letting a slow request hang its
         // client behind faster peers
         if live.req.deadline_waves.is_some_and(|d| live.waves >= d) {
-            let mut f = Self::finish(live, None, false);
+            let mut f = Self::finish(live, None, false, io);
             f.timed_out = true;
             self.stats.seqs_timed_out += 1;
             return Some(f);
         }
         // KV capacity: retire truncated rather than erroring the stream
         if self.backend.seq_pos(&live.seq) >= self.backend.max_seq_len() {
-            return Some(Self::finish(live, None, true));
+            return Some(Self::finish(live, None, true, io));
         }
 
         let token = if live.fed < p {
@@ -921,6 +1074,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                     live,
                     Some(format!("{e:#}")),
                     false,
+                    io,
                 ));
             }
             Err(panic) => {
@@ -934,11 +1088,19 @@ impl<B: DecodeBackend> Scheduler<B> {
                     live,
                     Some(format!("sequence panicked: {msg}")),
                     false,
+                    io,
                 ));
             }
         };
         live.fed += 1;
         live.waves += 1;
+        // re-snapshot attribution: the step just charged its own I/O
+        // wait to the backend sequence (disjoint field borrows: backend
+        // vs. run)
+        let io = {
+            let (w, r) = self.backend.seq_io_stats(&live.seq);
+            (live.io_wait_us + w, live.ondemand_rows + r)
+        };
 
         if live.fed >= p {
             // stepping input index `fed-1` ≥ p-1 produced output index
@@ -960,16 +1122,20 @@ impl<B: DecodeBackend> Scheduler<B> {
             let done_eos = oi + 1 == live.out.len()
                 && live.req.eos == Some(live.out[oi]);
             if done_budget || done_eos {
-                return Some(Self::finish(live, None, false));
+                return Some(Self::finish(live, None, false, io));
             }
         }
         None
     }
 
+    /// `io` is the request's total `(io_wait_us, ondemand_rows)` — the
+    /// carried-over share plus the backend's snapshot for the current
+    /// activation, taken by the caller while the backend borrow was free.
     fn finish(
         live: &mut Live<B::Seq>,
         error: Option<String>,
         truncated: bool,
+        io: (u64, u64),
     ) -> FinishedSeq {
         FinishedSeq {
             id: live.id,
@@ -983,6 +1149,10 @@ impl<B: DecodeBackend> Scheduler<B> {
             truncated,
             timed_out: false,
             itl: std::mem::take(&mut live.itl),
+            ctx: live.ctx,
+            t_submit_us: live.t_submit_us,
+            io_wait_us: io.0,
+            ondemand_rows: io.1,
         }
     }
 }
@@ -1073,6 +1243,8 @@ mod tests {
             seed: prompt.first().copied().unwrap_or(0) as u64,
             eos: None,
             deadline_waves: None,
+            req_id: 0,
+            client: None,
         }
     }
 

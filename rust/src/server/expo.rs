@@ -1,0 +1,225 @@
+//! Prometheus text exposition of the counter registry.
+//!
+//! `{"cmd":"metrics"}` renders every counter pallas-lint's counters pass
+//! audits — [`DecodeMetrics`], [`SchedStats`], [`IoSnapshot`] — plus the
+//! log2-bucket latency histograms, in the Prometheus text format
+//! (`# TYPE` lines, cumulative `le` buckets, `_sum`/`_count`). All series
+//! carry a `pallas_` name prefix; the lint-visible key is the bare name
+//! inside each `("key", value)` tuple below, so the counters pass can
+//! prove every registered counter reaches this exposition (aliases in
+//! `lint.toml [counters].exposition_aliases` cover renames).
+//!
+//! The log2 histograms convert losslessly: bucket `i` of [`Histo`] counts
+//! values in `(2^(i-1)-1, 2^i-1]`, so the Prometheus bucket boundary is
+//! the inclusive upper edge and cumulation is a running sum — the same
+//! conservative quantile semantics `Histo::percentile` reports.
+
+use std::fmt::Write as _;
+
+use crate::flash::IoSnapshot;
+use crate::metrics::DecodeMetrics;
+use crate::sched::SchedStats;
+use crate::trace::Histo;
+
+/// One `counter`-typed series: `# TYPE` line + sample.
+fn counter(out: &mut String, kv: (&str, u64)) {
+    let (name, v) = kv;
+    let _ = writeln!(out, "# TYPE pallas_{name} counter");
+    let _ = writeln!(out, "pallas_{name} {v}");
+}
+
+/// One `gauge`-typed series (peaks and high-water marks are not
+/// monotone counters).
+fn gauge(out: &mut String, kv: (&str, u64)) {
+    let (name, v) = kv;
+    let _ = writeln!(out, "# TYPE pallas_{name} gauge");
+    let _ = writeln!(out, "pallas_{name} {v}");
+}
+
+/// One `histogram`-typed series: the log2 buckets become cumulative
+/// `le` buckets (upper-edge boundaries), closed by `+Inf`, `_sum`, and
+/// `_count`. Empty trailing buckets are elided — `+Inf` carries the
+/// total — to keep the exposition proportional to observed spread.
+fn histogram(out: &mut String, kh: (&str, &Histo)) {
+    let (name, h) = kh;
+    let _ = writeln!(out, "# TYPE pallas_{name} histogram");
+    let mut cum = 0u64;
+    let hi = (0..64).rev().find(|&i| h.bucket_count(i) > 0);
+    if let Some(hi) = hi {
+        for i in 0..=hi.min(62) {
+            cum += h.bucket_count(i);
+            let _ = writeln!(
+                out,
+                "pallas_{name}_bucket{{le=\"{}\"}} {cum}",
+                Histo::bucket_upper_edge(i)
+            );
+        }
+    }
+    let _ = writeln!(
+        out,
+        "pallas_{name}_bucket{{le=\"+Inf\"}} {}",
+        h.count()
+    );
+    let _ = writeln!(out, "pallas_{name}_sum {}", h.sum());
+    let _ = writeln!(out, "pallas_{name}_count {}", h.count());
+}
+
+/// Render the full registry. `h_loader`/`h_engine` are the shared
+/// read-queue wait distributions ([`crate::engine::SwapEngine::
+/// io_wait_histos`]).
+pub fn render(
+    m: &DecodeMetrics,
+    sc: &SchedStats,
+    io: &IoSnapshot,
+    h_loader: &Histo,
+    h_engine: &Histo,
+) -> String {
+    let us = |d: std::time::Duration| d.as_micros() as u64;
+    let mut out = String::with_capacity(8 * 1024);
+
+    // ---- decode engine (DecodeMetrics)
+    counter(&mut out, ("tokens", m.tokens));
+    counter(&mut out, ("wall_us", us(m.wall)));
+    counter(&mut out, ("compute_busy_us", us(m.compute_busy)));
+    counter(&mut out, ("flash_busy_us", us(m.flash_busy)));
+    counter(&mut out, ("flash_bytes", m.flash_bytes));
+    counter(&mut out, ("cache_bytes", m.cache_bytes));
+    counter(&mut out, ("dram_bytes", m.dram_bytes));
+    counter(&mut out, ("cache_hits", m.cache_hits));
+    counter(&mut out, ("cache_misses", m.cache_misses));
+    counter(&mut out, ("preload_hits", m.preload_hits));
+    counter(&mut out, ("preload_total", m.preload_total));
+    counter(&mut out, ("cache_lock_acquires", m.cache_lock_acquires));
+    counter(&mut out, ("cache_locks_avoided", m.cache_locks_avoided));
+    counter(&mut out, ("batched_inserts", m.batched_inserts));
+    counter(&mut out, ("ondemand_rows", m.ondemand_rows));
+    counter(
+        &mut out,
+        ("ondemand_coalesced_runs", m.ondemand_coalesced_runs),
+    );
+    gauge(&mut out, ("slab_bytes_peak", m.slab_bytes_peak));
+    counter(&mut out, ("cross_token_preloads", m.cross_token_preloads));
+    counter(&mut out, ("fallback_rows", m.fallback_rows));
+    counter(&mut out, ("degraded_fallbacks", m.degraded_fallbacks));
+
+    // ---- shared read queue (IoSnapshot; io_-prefixed registry)
+    counter(&mut out, ("io_submitted", io.submitted));
+    counter(&mut out, ("io_batches", io.batches));
+    gauge(&mut out, ("io_inflight_peak", io.inflight_peak));
+    counter(&mut out, ("io_wait_us", io.wait_ns / 1_000));
+    counter(&mut out, ("io_buffers_recycled", io.buffers_recycled));
+    counter(&mut out, ("io_retries", io.retries));
+    counter(&mut out, ("faults_injected", io.faults_injected));
+    counter(&mut out, ("wedged_recoveries", io.wedged_recoveries));
+
+    // ---- governor
+    counter(&mut out, ("rebudgets_applied", m.rebudgets_applied));
+    counter(&mut out, ("rebudgets_skipped", m.rebudgets_skipped));
+    counter(
+        &mut out,
+        ("rebudget_rows_evicted", m.rebudget_rows_evicted),
+    );
+    counter(&mut out, ("level_switches", m.level_switches));
+    counter(&mut out, ("rebudget_settle_us", us(m.rebudget_settle)));
+
+    // ---- continuous-batching scheduler (SchedStats + mirrors)
+    counter(&mut out, ("sched_waves", m.sched_waves));
+    counter(&mut out, ("sched_wave_time_us", us(m.sched_wave_time)));
+    counter(&mut out, ("wave_time_us", us(sc.wave_time)));
+    counter(&mut out, ("tokens_out", sc.tokens_out));
+    counter(&mut out, ("seqs_admitted", sc.seqs_admitted));
+    counter(&mut out, ("seqs_queued", sc.seqs_queued));
+    counter(&mut out, ("seqs_rejected", sc.seqs_rejected));
+    counter(&mut out, ("seqs_preempted", sc.seqs_preempted));
+    counter(&mut out, ("seqs_completed", sc.seqs_completed));
+    counter(&mut out, ("seqs_timed_out", sc.seqs_timed_out));
+    counter(&mut out, ("seqs_panicked", sc.seqs_panicked));
+    counter(&mut out, ("kv_preemptions_oom", sc.kv_preempted_oom));
+    gauge(&mut out, ("peak_active", sc.peak_active));
+    gauge(&mut out, ("kv_blocks_peak", m.kv_blocks_peak));
+
+    // ---- log2 latency histograms (cumulative le buckets)
+    histogram(&mut out, ("itl_us", &m.h_itl_us));
+    histogram(&mut out, ("wave_us", &m.h_wave_us));
+    histogram(&mut out, ("admission_wait_us", &m.h_admission_wait_us));
+    histogram(&mut out, ("ondemand_us", &m.h_ondemand_us));
+    histogram(&mut out, ("io_wait_loader_us", h_loader));
+    histogram(&mut out, ("io_wait_engine_us", h_engine));
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_closed_by_inf() {
+        let mut h = Histo::new();
+        for v in [0, 1, 1, 5, 300] {
+            h.record(v);
+        }
+        let mut out = String::new();
+        histogram(&mut out, ("t_us", &h));
+        // bucket 0 (le="0") holds the one zero; le="1" adds the two 1s
+        assert!(out.contains("pallas_t_us_bucket{le=\"0\"} 1\n"), "{out}");
+        assert!(out.contains("pallas_t_us_bucket{le=\"1\"} 3\n"), "{out}");
+        // 5 lands in (3, 7]; 300 in (255, 511]
+        assert!(out.contains("pallas_t_us_bucket{le=\"7\"} 4\n"), "{out}");
+        assert!(
+            out.contains("pallas_t_us_bucket{le=\"511\"} 5\n"),
+            "{out}"
+        );
+        assert!(
+            out.contains("pallas_t_us_bucket{le=\"+Inf\"} 5\n"),
+            "{out}"
+        );
+        assert!(out.contains("pallas_t_us_sum 307\n"), "{out}");
+        assert!(out.contains("pallas_t_us_count 5\n"), "{out}");
+        // monotone: each bucket line's value never decreases
+        let mut last = 0u64;
+        for line in out.lines().filter(|l| l.contains("_bucket")) {
+            let v: u64 =
+                line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-cumulative: {line}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn empty_histogram_renders_inf_only() {
+        let h = Histo::new();
+        let mut out = String::new();
+        histogram(&mut out, ("empty_us", &h));
+        assert!(
+            out.contains("pallas_empty_us_bucket{le=\"+Inf\"} 0\n"),
+            "{out}"
+        );
+        assert!(out.contains("pallas_empty_us_count 0\n"), "{out}");
+        assert!(!out.contains("le=\"0\""), "{out}");
+    }
+
+    #[test]
+    fn render_covers_registry_counters() {
+        let m = DecodeMetrics::default();
+        let sc = SchedStats::default();
+        let io = IoSnapshot::default();
+        let text =
+            render(&m, &sc, &io, &Histo::new(), &Histo::new());
+        for name in [
+            "pallas_tokens ",
+            "pallas_io_submitted ",
+            "pallas_tokens_out ",
+            "pallas_kv_preemptions_oom ",
+            "pallas_itl_us_count ",
+            "pallas_io_wait_engine_us_count ",
+        ] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        // every sample line is `name value` with the pallas_ prefix
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.starts_with("pallas_"), "bad line: {line}");
+            assert_eq!(line.split(' ').count(), 2, "bad line: {line}");
+        }
+    }
+}

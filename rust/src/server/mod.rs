@@ -32,15 +32,31 @@
 //!         from startup and writes at shutdown). See PERF.md
 //!         §Observability.
 //!   {"cmd": "journal"}          — the governor's re-budget decision log
+//!   {"cmd": "health"}           — recovery-ladder + telemetry-drop verdict
+//!   {"cmd": "metrics"}          — Prometheus text exposition of the full
+//!       counter registry + log2 histograms (cumulative `le` buckets)
+//!   {"cmd": "subscribe", "interval_ms": 250}
+//!       — upgrade this connection into a push stream: sequence-numbered
+//!         frames of span deltas (drained from the flight-recorder ring)
+//!         plus a stats snapshot, one JSON object per line, until the
+//!         client disconnects. A slow reader drops frames (bounded
+//!         per-subscriber queue, counted in `frames_dropped`) — the
+//!         decode hot path never blocks on a subscriber. See PERF.md
+//!         §Live telemetry.
 //!   {"cmd": "shutdown"}
+//!
+//! Decode requests may carry `"client": "<name>"` — the engine keys its
+//! per-client ended-sequence-length histograms (expected-occupancy
+//! signal, surfaced as `client_p90` in `stats` and in the governor's
+//! decision journal) by it, and the reply's span context inherits it.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -55,7 +71,10 @@ use crate::sched::{
     SchedConfig, SchedStats, Scheduler, SeqRequest, SubmitOutcome,
 };
 use crate::tokenizer;
+use crate::trace::{LedgerSample, TraceHandle};
 use crate::util::json::{self, arr, num, obj, s, Value};
+
+mod expo;
 
 pub struct ServerConfig {
     pub addr: String,
@@ -91,6 +110,10 @@ pub struct ServerConfig {
     /// Chrome trace-event JSON to this path at shutdown (`--trace-out`).
     /// `{"cmd":"trace"}` can toggle/export at any time regardless.
     pub trace_out: Option<PathBuf>,
+    /// Default frame interval for `{"cmd":"subscribe"}` streams
+    /// (`--telemetry-interval-ms`); a subscriber may override per
+    /// connection with `"interval_ms"`.
+    pub telemetry_interval_ms: u64,
 }
 
 /// How often the worker re-reads the `--pressure-file` between waves
@@ -104,6 +127,13 @@ struct Request {
     /// Per-request deadline in scheduler waves (`"deadline_waves"`):
     /// expiry returns the partial stream with `"status": "timeout"`.
     deadline_waves: Option<u64>,
+    /// Causal root id minted at connection accept — every span this
+    /// request produces (wave, step, layer fetch, flash I/O) carries it
+    /// in its [`crate::trace::SpanCtx`].
+    req_id: u64,
+    /// Optional `"client"` tag: keys the engine's per-client
+    /// expected-occupancy histogram.
+    client: Option<String>,
     enqueued: Instant,
     resp: Sender<Value>,
 }
@@ -124,6 +154,9 @@ enum Job {
     },
     /// Snapshot the governor's decision journal.
     Journal { resp: Sender<Value> },
+    /// Render the counter registry + histograms in Prometheus text
+    /// exposition format (`{"cmd":"metrics"}` → [`expo::render`]).
+    Metrics { resp: Sender<Value> },
     /// Zero the cumulative counters and histograms (engine metrics,
     /// scheduler stats, queue-wait histograms, request totals). The trace
     /// ring and journal survive — they have their own `trace` control.
@@ -232,6 +265,15 @@ struct ServerStats {
     trace_dropped: AtomicU64,
     journal_entries: AtomicU64,
     journal_dropped: AtomicU64,
+    // live-telemetry plane: push-stream subscribers and their bounded
+    // queues' drop accounting (`health` folds frames_dropped into the
+    // degraded verdict — a starved subscriber is a reported condition)
+    subscribers: AtomicU64,
+    frames_sent: AtomicU64,
+    frames_dropped: AtomicU64,
+    /// Per-client p90 of ended-sequence lengths (expected-occupancy
+    /// signal) — refreshed per wave from the engine's keyed histograms.
+    client_p90s: Mutex<Vec<(String, u64)>>,
 }
 
 impl ServerStats {
@@ -296,6 +338,7 @@ impl ServerStats {
         let (jlen, jdropped) = t.journal_stats();
         st(&self.journal_entries, jlen as u64);
         st(&self.journal_dropped, jdropped);
+        *self.client_p90s.lock().unwrap() = engine.client_p90s();
     }
 
     /// Zero the request totals (`stats_reset`; the per-wave mirrors are
@@ -389,6 +432,12 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
     let (job_tx, job_rx) = channel::<Job>();
     let stats = Arc::new(ServerStats::default());
     let stop = Arc::new(AtomicBool::new(false));
+    // subscriber streams read the flight-recorder ring directly (its own
+    // mutex, never the engine's) — the worker parks a handle here once
+    // the engine is open
+    let trace_slot: Arc<Mutex<Option<TraceHandle>>> =
+        Arc::new(Mutex::new(None));
+    let telemetry_interval_ms = cfg.telemetry_interval_ms.max(1);
 
     // ---- engine worker: owns Scheduler<SwapEngine> + DramGovernor,
     //      alternates job-drain and decode waves.
@@ -408,8 +457,11 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
     let pressure_file = cfg.pressure_file.clone();
     let fault_spec = cfg.fault_spec.clone();
     let trace_out = cfg.trace_out.clone();
+    let trace_slot_w = trace_slot.clone();
     let worker = std::thread::spawn(move || -> Result<()> {
         let mut engine = SwapEngine::open(&artifact_dir, cfg.opts)?;
+        *trace_slot_w.lock().unwrap() =
+            Some(engine.trace_handle().clone());
         if let Some(spec) = &fault_spec {
             engine.inject_fault_spec(spec)?;
             eprintln!("[server] fault injection armed: {spec}");
@@ -526,6 +578,20 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
                         worker_stats.publish_trace(sched.backend());
                         let _ = resp.send(obj(fields));
                     }
+                    Job::Metrics { resp } => {
+                        let engine = sched.backend();
+                        let (h_loader, h_engine) =
+                            engine.io_wait_histos();
+                        let text = expo::render(
+                            &engine.metrics,
+                            &sched.stats(),
+                            &engine.io_snapshot(),
+                            &h_loader,
+                            &h_engine,
+                        );
+                        let _ =
+                            resp.send(obj(vec![("metrics", s(&text))]));
+                    }
                     Job::Journal { resp } => {
                         let h = sched.backend().trace_handle();
                         let (len, dropped) = h.journal_stats();
@@ -585,6 +651,8 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
                             seed: seed_counter,
                             eos: None,
                             deadline_waves: r.deadline_waves,
+                            req_id: r.req_id,
+                            client: r.client,
                         });
                         match outcome {
                             SubmitOutcome::Admitted { id }
@@ -670,6 +738,15 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
                             (
                                 "degraded_fallbacks",
                                 num(degraded_delta as f64),
+                            ),
+                            // causal attribution (span-context plumbed):
+                            // engine-class flash stall time and on-demand
+                            // rows charged to THIS sequence's steps — not
+                            // a lifetime-overlap estimate
+                            ("io_wait_us", num(f.io_wait_us as f64)),
+                            (
+                                "ondemand_rows",
+                                num(f.ondemand_rows as f64),
                             ),
                             (
                                 "toks_per_sec",
@@ -786,6 +863,25 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
             worker_stats
                 .publish_hot(&sched.backend().metrics, last_parts_failed);
             worker_stats.publish_trace(sched.backend());
+            // per-wave DRAM ledger sample: the governor's pool targets
+            // plus the engine-owned KV/slab residency, into the bounded
+            // sampler ring (Chrome counter tracks in the trace export)
+            {
+                let engine = sched.backend();
+                let t = engine.trace_handle();
+                if t.enabled() {
+                    let pools = gov.current_pools();
+                    let (kv_bytes, slab_bytes) = engine.ledger_probe();
+                    t.record_ledger(LedgerSample {
+                        t_us: t.now_us(),
+                        cache_bytes: pools.cache_bytes,
+                        preload_bytes: pools.preload_bytes,
+                        compute_bytes: pools.compute_bytes,
+                        kv_bytes,
+                        slab_bytes,
+                    });
+                }
+            }
             let (active, queued, max_active) =
                 (sched.active(), sched.queued(), sched.max_active());
             worker_stats.publish_sched(
@@ -822,8 +918,16 @@ pub fn serve(cfg: ServerConfig) -> Result<u64> {
         let job_tx = job_tx.clone();
         let stats = stats.clone();
         let stop2 = stop.clone();
+        let trace_slot2 = trace_slot.clone();
         std::thread::spawn(move || {
-            let _ = handle_conn(conn, job_tx, stats, stop2);
+            let _ = handle_conn(
+                conn,
+                job_tx,
+                stats,
+                stop2,
+                trace_slot2,
+                telemetry_interval_ms,
+            );
         });
         if stop.load(Ordering::Relaxed) {
             break;
@@ -905,6 +1009,274 @@ fn write_trace(
     Ok(())
 }
 
+/// The full stats snapshot — one shape for both the `stats` command and
+/// the per-frame `"stats"` field of `subscribe` streams (tooling parses
+/// one schema, not two).
+fn stats_json(stats: &ServerStats) -> Value {
+    let served = stats.served.load(Ordering::Relaxed);
+    let tokens = stats.tokens.load(Ordering::Relaxed);
+    let dec_ns = stats.decode_ns.load(Ordering::Relaxed);
+    let waves = stats.sched_waves.load(Ordering::Relaxed);
+    let g = |a: &AtomicU64| num(a.load(Ordering::Relaxed) as f64);
+    let client_p90 = {
+        let p90s = stats.client_p90s.lock().unwrap();
+        obj(p90s
+            .iter()
+            .map(|(c, p)| (c.as_str(), num(*p as f64)))
+            .collect())
+    };
+    obj(vec![
+        ("served", num(served as f64)),
+        ("tokens", num(tokens as f64)),
+        (
+            "avg_queue_ms",
+            num(stats.queue_ns.load(Ordering::Relaxed) as f64
+                / 1e6
+                / served.max(1) as f64),
+        ),
+        // aggregate generated-token throughput over wave wall time
+        // (sequences overlap — per-request durations must not be summed)
+        (
+            "throughput_toks_per_sec",
+            num(tokens as f64 / (dec_ns as f64 / 1e9).max(1e-9)),
+        ),
+        (
+            "cache_hit_rate",
+            num({
+                let h = stats.cache_hits.load(Ordering::Relaxed) as f64;
+                let mi =
+                    stats.cache_misses.load(Ordering::Relaxed) as f64;
+                if h + mi == 0.0 { 0.0 } else { h / (h + mi) }
+            }),
+        ),
+        ("flash_bytes", g(&stats.flash_bytes)),
+        ("dram_bytes", g(&stats.dram_bytes)),
+        (
+            "preload_precision",
+            num({
+                let h = stats.preload_hits.load(Ordering::Relaxed) as f64;
+                let t =
+                    stats.preload_total.load(Ordering::Relaxed) as f64;
+                if t == 0.0 { 0.0 } else { h / t }
+            }),
+        ),
+        ("cross_token_preloads", g(&stats.cross_token_preloads)),
+        ("cache_lock_acquires", g(&stats.lock_acquires)),
+        ("cache_locks_avoided", g(&stats.locks_avoided)),
+        ("batched_inserts", g(&stats.batched_inserts)),
+        ("ondemand_rows", g(&stats.ondemand_rows)),
+        ("ondemand_coalesced_runs", g(&stats.ondemand_coalesced_runs)),
+        ("slab_bytes_peak", g(&stats.slab_bytes_peak)),
+        // async flash read path (PERF.md): io_wait_us is the legacy
+        // total; the split tells preload reaping from on-demand stalls
+        ("io_batches", g(&stats.io_batches)),
+        ("io_inflight_peak", g(&stats.io_inflight_peak)),
+        (
+            "io_wait_us",
+            num((stats.io_wait_loader_us.load(Ordering::Relaxed)
+                + stats.io_wait_engine_us.load(Ordering::Relaxed))
+                as f64),
+        ),
+        ("io_wait_loader_us", g(&stats.io_wait_loader_us)),
+        ("io_wait_engine_us", g(&stats.io_wait_engine_us)),
+        ("io_buffers_recycled", g(&stats.io_buffers_recycled)),
+        ("parts_failed", g(&stats.parts_failed)),
+        // fault injection & recovery ladder
+        ("faults_injected", g(&stats.faults_injected)),
+        ("io_retries", g(&stats.io_retries)),
+        ("wedged_recoveries", g(&stats.wedged_recoveries)),
+        ("fallback_rows", g(&stats.fallback_rows)),
+        ("degraded_fallbacks", g(&stats.degraded_fallbacks)),
+        ("seqs_timed_out", g(&stats.seqs_timed_out)),
+        ("seqs_panicked", g(&stats.seqs_panicked)),
+        // runtime DRAM governor: budget, pools, decisions
+        ("budget_bytes", g(&stats.budget_bytes)),
+        ("ledger_cache_bytes", g(&stats.ledger_cache_bytes)),
+        ("ledger_preload_bytes", g(&stats.ledger_preload_bytes)),
+        ("ledger_compute_bytes", g(&stats.ledger_compute_bytes)),
+        ("rebudgets_applied", g(&stats.rebudgets_applied)),
+        ("rebudgets_skipped", g(&stats.rebudgets_skipped)),
+        ("rebudget_rows_evicted", g(&stats.rebudget_rows_evicted)),
+        ("level_switches", g(&stats.level_switches)),
+        ("last_settle_us", g(&stats.last_settle_us)),
+        // continuous-batching scheduler
+        ("seqs_active", g(&stats.seqs_active)),
+        ("seqs_waiting", g(&stats.seqs_waiting)),
+        ("seqs_admitted", g(&stats.seqs_admitted)),
+        ("seqs_queued", g(&stats.seqs_queued)),
+        ("seqs_rejected", g(&stats.seqs_rejected)),
+        ("seqs_preempted", g(&stats.seqs_preempted)),
+        ("seqs_completed", g(&stats.seqs_completed)),
+        ("seqs_active_peak", g(&stats.seqs_active_peak)),
+        ("sched_waves", g(&stats.sched_waves)),
+        (
+            "sched_wave_avg_us",
+            num(stats.sched_wave_us.load(Ordering::Relaxed) as f64
+                / waves.max(1) as f64),
+        ),
+        ("max_active_seqs", g(&stats.max_active_seqs)),
+        ("kv_per_seq_bytes", g(&stats.kv_per_seq_bytes)),
+        // per-client expected occupancy: p90 of ended-sequence lengths,
+        // keyed by the request's `"client"` tag (see PERF.md)
+        ("client_p90", client_p90),
+        // paged KV pool (block-granular M_kv)
+        ("kv_block_bytes", g(&stats.kv_block_bytes)),
+        ("kv_blocks_total", g(&stats.kv_blocks_total)),
+        ("kv_blocks_free", g(&stats.kv_blocks_free)),
+        ("kv_blocks_peak", g(&stats.kv_blocks_peak)),
+        ("kv_preemptions_oom", g(&stats.kv_preemptions_oom)),
+        // latency percentiles (log2-bucket, µs) — see PERF.md
+        // §Observability
+        ("itl_p50_us", g(&stats.itl_p50_us)),
+        ("itl_p95_us", g(&stats.itl_p95_us)),
+        ("itl_p99_us", g(&stats.itl_p99_us)),
+        ("wave_p50_us", g(&stats.wave_p50_us)),
+        ("wave_p99_us", g(&stats.wave_p99_us)),
+        ("ondemand_p99_us", g(&stats.ondemand_p99_us)),
+        ("admission_wait_p99_us", g(&stats.admission_wait_p99_us)),
+        ("io_wait_loader_p99_us", g(&stats.io_wait_loader_p99_us)),
+        ("io_wait_engine_p50_us", g(&stats.io_wait_engine_p50_us)),
+        ("io_wait_engine_p95_us", g(&stats.io_wait_engine_p95_us)),
+        ("io_wait_engine_p99_us", g(&stats.io_wait_engine_p99_us)),
+        // flight recorder ring health
+        ("trace_enabled", g(&stats.trace_enabled)),
+        ("trace_events", g(&stats.trace_events)),
+        ("trace_capacity", g(&stats.trace_capacity)),
+        ("trace_dropped", g(&stats.trace_dropped)),
+        ("journal_entries", g(&stats.journal_entries)),
+        ("journal_dropped", g(&stats.journal_dropped)),
+        // live-telemetry plane
+        ("subscribers", g(&stats.subscribers)),
+        ("frames_sent", g(&stats.frames_sent)),
+        ("frames_dropped", g(&stats.frames_dropped)),
+    ])
+}
+
+/// Bounded per-subscriber frame queue: a slow reader drops frames (and
+/// counts them) instead of backing pressure into the worker. 16 frames
+/// of headroom absorbs scheduler jitter at any sane interval.
+const SUB_QUEUE_CAP: usize = 16;
+
+/// Frames queued for one subscriber, between the producer (frame
+/// builder, paced at the subscribe interval) and the connection thread
+/// (socket writer). `closed` is the single teardown signal for both
+/// directions — writer death and producer shutdown.
+struct SubQueue {
+    frames: VecDeque<String>,
+    closed: bool,
+}
+
+/// Drive one `subscribe` stream until the client disconnects (or the
+/// server stops). A paced producer thread drains span deltas from the
+/// flight-recorder ring and enqueues finished frames; the connection
+/// thread pops and writes them. The queue is bounded: when the reader is
+/// slower than the interval, whole frames drop and are counted — but the
+/// frame sequence number still advances, so gaps are visible client-side
+/// (`spans_missed` separately reports ring overwrites between drains).
+/// Nothing here ever touches the decode worker: the producer takes only
+/// the ring's own mutex and the queue's.
+fn run_subscriber(
+    writer: &mut TcpStream,
+    h: TraceHandle,
+    interval_ms: u64,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+) {
+    let q = Arc::new((
+        Mutex::new(SubQueue { frames: VecDeque::new(), closed: false }),
+        Condvar::new(),
+    ));
+    let q_prod = q.clone();
+    let stop_prod = stop.clone();
+    let producer = std::thread::spawn(move || {
+        let mut cursor = 0u64;
+        let mut frame_no = 0u64;
+        let mut dropped = 0u64;
+        loop {
+            std::thread::sleep(Duration::from_millis(interval_ms));
+            if stop_prod.load(Ordering::Relaxed) {
+                break;
+            }
+            let (spans, new_cursor, missed) = h.drain_since(cursor);
+            cursor = new_cursor;
+            frame_no += 1; // dropped frames leave visible gaps
+            let spans_json: Vec<Value> = spans
+                .iter()
+                .map(|e| {
+                    obj(vec![
+                        ("kind", s(e.kind.name())),
+                        ("t0_us", num(e.t0_us as f64)),
+                        ("dur_us", num(e.dur_us as f64)),
+                        ("tid", num(e.tid as f64)),
+                        ("req", num(e.ctx.req as f64)),
+                        ("seq", num(e.ctx.seq as f64)),
+                        ("a", num(e.a as f64)),
+                        ("b", num(e.b as f64)),
+                    ])
+                })
+                .collect();
+            let frame = obj(vec![
+                ("frame", num(frame_no as f64)),
+                ("t_us", num(h.now_us() as f64)),
+                ("spans", arr(spans_json)),
+                ("spans_missed", num(missed as f64)),
+                ("stats", stats_json(&stats)),
+                ("frames_dropped", num(dropped as f64)),
+            ]);
+            let mut line = frame.to_string();
+            line.push('\n');
+            let (lock, cv) = &*q_prod;
+            let mut g = lock.lock().unwrap();
+            if g.closed {
+                break;
+            }
+            if g.frames.len() < SUB_QUEUE_CAP {
+                g.frames.push_back(line);
+                stats.frames_sent.fetch_add(1, Ordering::Relaxed);
+            } else {
+                dropped += 1;
+                stats.frames_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            cv.notify_one();
+        }
+        let (lock, cv) = &*q_prod;
+        lock.lock().unwrap().closed = true;
+        cv.notify_all();
+    });
+    let (lock, cv) = &*q;
+    loop {
+        let frame = {
+            let mut g = lock.lock().unwrap();
+            loop {
+                if let Some(f) = g.frames.pop_front() {
+                    break Some(f);
+                }
+                if g.closed {
+                    break None;
+                }
+                g = cv.wait(g).unwrap();
+            }
+        };
+        let Some(frame) = frame else { break };
+        if writer.write_all(frame.as_bytes()).is_err() {
+            // client went away (or wedged past the OS socket buffer):
+            // mark closed so the producer exits at its next tick
+            break;
+        }
+    }
+    {
+        let mut g = lock.lock().unwrap();
+        g.closed = true;
+        cv.notify_all();
+    }
+    let _ = producer.join();
+}
+
+/// Request-id mint: one per decode request at connection accept — the
+/// root of the request's span-context chain (`SpanCtx.req`). Starts at 1
+/// so 0 stays the "no request attached" sentinel.
+static NEXT_REQ_ID: AtomicU64 = AtomicU64::new(0);
+
 /// Input hardening: a request line larger than this answers with an
 /// error (and the rest of the line is drained in bounded chunks) instead
 /// of buffering unbounded client input.
@@ -915,6 +1287,8 @@ fn handle_conn(
     job_tx: Sender<Job>,
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
+    trace_slot: Arc<Mutex<Option<TraceHandle>>>,
+    telemetry_interval_ms: u64,
 ) -> Result<()> {
     let mut writer = conn.try_clone()?;
     let mut reader = BufReader::new(conn);
@@ -979,185 +1353,7 @@ fn handle_conn(
         };
         match req.get("cmd").and_then(Value::as_str) {
             Some("stats") => {
-                let served = stats.served.load(Ordering::Relaxed);
-                let tokens = stats.tokens.load(Ordering::Relaxed);
-                let dec_ns = stats.decode_ns.load(Ordering::Relaxed);
-                let waves = stats.sched_waves.load(Ordering::Relaxed);
-                let g = |a: &AtomicU64| num(a.load(Ordering::Relaxed) as f64);
-                respond(
-                    &mut writer,
-                    &obj(vec![
-                        ("served", num(served as f64)),
-                        ("tokens", num(tokens as f64)),
-                        (
-                            "avg_queue_ms",
-                            num(stats.queue_ns.load(Ordering::Relaxed) as f64
-                                / 1e6
-                                / served.max(1) as f64),
-                        ),
-                        // aggregate generated-token throughput over wave
-                        // wall time (sequences overlap — per-request
-                        // durations must not be summed)
-                        (
-                            "throughput_toks_per_sec",
-                            num(tokens as f64 / (dec_ns as f64 / 1e9).max(1e-9)),
-                        ),
-                        (
-                            "cache_hit_rate",
-                            num({
-                                let h = stats
-                                    .cache_hits
-                                    .load(Ordering::Relaxed)
-                                    as f64;
-                                let mi = stats
-                                    .cache_misses
-                                    .load(Ordering::Relaxed)
-                                    as f64;
-                                if h + mi == 0.0 { 0.0 } else { h / (h + mi) }
-                            }),
-                        ),
-                        ("flash_bytes", g(&stats.flash_bytes)),
-                        ("dram_bytes", g(&stats.dram_bytes)),
-                        (
-                            "preload_precision",
-                            num({
-                                let h = stats
-                                    .preload_hits
-                                    .load(Ordering::Relaxed)
-                                    as f64;
-                                let t = stats
-                                    .preload_total
-                                    .load(Ordering::Relaxed)
-                                    as f64;
-                                if t == 0.0 { 0.0 } else { h / t }
-                            }),
-                        ),
-                        (
-                            "cross_token_preloads",
-                            g(&stats.cross_token_preloads),
-                        ),
-                        ("cache_lock_acquires", g(&stats.lock_acquires)),
-                        ("cache_locks_avoided", g(&stats.locks_avoided)),
-                        ("batched_inserts", g(&stats.batched_inserts)),
-                        ("ondemand_rows", g(&stats.ondemand_rows)),
-                        (
-                            "ondemand_coalesced_runs",
-                            g(&stats.ondemand_coalesced_runs),
-                        ),
-                        ("slab_bytes_peak", g(&stats.slab_bytes_peak)),
-                        // async flash read path (PERF.md): io_wait_us is
-                        // the legacy total; the split tells preload
-                        // reaping from on-demand miss stalls
-                        ("io_batches", g(&stats.io_batches)),
-                        ("io_inflight_peak", g(&stats.io_inflight_peak)),
-                        (
-                            "io_wait_us",
-                            num((stats
-                                .io_wait_loader_us
-                                .load(Ordering::Relaxed)
-                                + stats
-                                    .io_wait_engine_us
-                                    .load(Ordering::Relaxed))
-                                as f64),
-                        ),
-                        ("io_wait_loader_us", g(&stats.io_wait_loader_us)),
-                        ("io_wait_engine_us", g(&stats.io_wait_engine_us)),
-                        (
-                            "io_buffers_recycled",
-                            g(&stats.io_buffers_recycled),
-                        ),
-                        ("parts_failed", g(&stats.parts_failed)),
-                        // fault injection & recovery ladder
-                        ("faults_injected", g(&stats.faults_injected)),
-                        ("io_retries", g(&stats.io_retries)),
-                        ("wedged_recoveries", g(&stats.wedged_recoveries)),
-                        ("fallback_rows", g(&stats.fallback_rows)),
-                        ("degraded_fallbacks", g(&stats.degraded_fallbacks)),
-                        ("seqs_timed_out", g(&stats.seqs_timed_out)),
-                        ("seqs_panicked", g(&stats.seqs_panicked)),
-                        // runtime DRAM governor: budget, pools, decisions
-                        ("budget_bytes", g(&stats.budget_bytes)),
-                        ("ledger_cache_bytes", g(&stats.ledger_cache_bytes)),
-                        (
-                            "ledger_preload_bytes",
-                            g(&stats.ledger_preload_bytes),
-                        ),
-                        (
-                            "ledger_compute_bytes",
-                            g(&stats.ledger_compute_bytes),
-                        ),
-                        ("rebudgets_applied", g(&stats.rebudgets_applied)),
-                        ("rebudgets_skipped", g(&stats.rebudgets_skipped)),
-                        (
-                            "rebudget_rows_evicted",
-                            g(&stats.rebudget_rows_evicted),
-                        ),
-                        ("level_switches", g(&stats.level_switches)),
-                        ("last_settle_us", g(&stats.last_settle_us)),
-                        // continuous-batching scheduler
-                        ("seqs_active", g(&stats.seqs_active)),
-                        ("seqs_waiting", g(&stats.seqs_waiting)),
-                        ("seqs_admitted", g(&stats.seqs_admitted)),
-                        ("seqs_queued", g(&stats.seqs_queued)),
-                        ("seqs_rejected", g(&stats.seqs_rejected)),
-                        ("seqs_preempted", g(&stats.seqs_preempted)),
-                        ("seqs_completed", g(&stats.seqs_completed)),
-                        ("seqs_active_peak", g(&stats.seqs_active_peak)),
-                        ("sched_waves", g(&stats.sched_waves)),
-                        (
-                            "sched_wave_avg_us",
-                            num(stats.sched_wave_us.load(Ordering::Relaxed)
-                                as f64
-                                / waves.max(1) as f64),
-                        ),
-                        ("max_active_seqs", g(&stats.max_active_seqs)),
-                        ("kv_per_seq_bytes", g(&stats.kv_per_seq_bytes)),
-                        // paged KV pool (block-granular M_kv)
-                        ("kv_block_bytes", g(&stats.kv_block_bytes)),
-                        ("kv_blocks_total", g(&stats.kv_blocks_total)),
-                        ("kv_blocks_free", g(&stats.kv_blocks_free)),
-                        ("kv_blocks_peak", g(&stats.kv_blocks_peak)),
-                        (
-                            "kv_preemptions_oom",
-                            g(&stats.kv_preemptions_oom),
-                        ),
-                        // latency percentiles (log2-bucket, µs) — see
-                        // PERF.md §Observability
-                        ("itl_p50_us", g(&stats.itl_p50_us)),
-                        ("itl_p95_us", g(&stats.itl_p95_us)),
-                        ("itl_p99_us", g(&stats.itl_p99_us)),
-                        ("wave_p50_us", g(&stats.wave_p50_us)),
-                        ("wave_p99_us", g(&stats.wave_p99_us)),
-                        ("ondemand_p99_us", g(&stats.ondemand_p99_us)),
-                        (
-                            "admission_wait_p99_us",
-                            g(&stats.admission_wait_p99_us),
-                        ),
-                        (
-                            "io_wait_loader_p99_us",
-                            g(&stats.io_wait_loader_p99_us),
-                        ),
-                        (
-                            "io_wait_engine_p50_us",
-                            g(&stats.io_wait_engine_p50_us),
-                        ),
-                        (
-                            "io_wait_engine_p95_us",
-                            g(&stats.io_wait_engine_p95_us),
-                        ),
-                        (
-                            "io_wait_engine_p99_us",
-                            g(&stats.io_wait_engine_p99_us),
-                        ),
-                        // flight recorder ring health
-                        ("trace_enabled", g(&stats.trace_enabled)),
-                        ("trace_events", g(&stats.trace_events)),
-                        ("trace_capacity", g(&stats.trace_capacity)),
-                        ("trace_dropped", g(&stats.trace_dropped)),
-                        ("journal_entries", g(&stats.journal_entries)),
-                        ("journal_dropped", g(&stats.journal_dropped)),
-                    ]),
-                )?;
+                respond(&mut writer, &stats_json(&stats))?;
             }
             Some("stats_reset") => {
                 let (tx, rx) = channel();
@@ -1197,17 +1393,73 @@ fn handle_conn(
                     )?,
                 }
             }
+            Some("metrics") => {
+                // Prometheus text exposition, rendered on the worker at
+                // a wave boundary (consistent snapshot of engine + sched
+                // counters), shipped back as one JSON string field
+                let (tx, rx) = channel();
+                let _ = job_tx.send(Job::Metrics { resp: tx });
+                match rx.recv() {
+                    Ok(v) => respond(&mut writer, &v)?,
+                    Err(_) => respond(
+                        &mut writer,
+                        &obj(vec![("error", s("engine gone"))]),
+                    )?,
+                }
+            }
+            Some("subscribe") => {
+                let handle = trace_slot.lock().unwrap().clone();
+                let Some(h) = handle else {
+                    respond(
+                        &mut writer,
+                        &obj(vec![("error", s("engine not ready"))]),
+                    )?;
+                    continue;
+                };
+                let interval_ms = req
+                    .get("interval_ms")
+                    .and_then(Value::as_f64)
+                    .filter(|&v| v >= 1.0)
+                    .map(|v| v as u64)
+                    .unwrap_or(telemetry_interval_ms);
+                respond(
+                    &mut writer,
+                    &obj(vec![
+                        ("ok", Value::Bool(true)),
+                        ("subscribed", Value::Bool(true)),
+                        ("interval_ms", num(interval_ms as f64)),
+                    ]),
+                )?;
+                stats.subscribers.fetch_add(1, Ordering::Relaxed);
+                run_subscriber(
+                    &mut writer,
+                    h,
+                    interval_ms,
+                    stats.clone(),
+                    stop.clone(),
+                );
+                stats.subscribers.fetch_sub(1, Ordering::Relaxed);
+                // the connection is a one-way stream once upgraded —
+                // tear it down rather than re-entering request parsing
+                break;
+            }
             Some("health") => {
                 // recovery-ladder summary: is the engine absorbing
                 // faults, and at what cost? `degraded` flips when any
                 // rung of the ladder has fired — preload parts failed,
-                // a worker was replaced, or the engine served rows via
-                // urgent fallback.
+                // a worker was replaced, the engine served rows via
+                // urgent fallback — or when the telemetry plane itself
+                // is lossy: ring spans, journal entries, or subscriber
+                // frames dropped. Lost observability is a health
+                // condition, not a silent gap.
                 let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
                 let degraded = g(&stats.parts_failed) > 0
                     || g(&stats.wedged_recoveries) > 0
                     || g(&stats.degraded_fallbacks) > 0
-                    || g(&stats.seqs_panicked) > 0;
+                    || g(&stats.seqs_panicked) > 0
+                    || g(&stats.trace_dropped) > 0
+                    || g(&stats.journal_dropped) > 0
+                    || g(&stats.frames_dropped) > 0;
                 let n = |a: &AtomicU64| num(g(a) as f64);
                 respond(
                     &mut writer,
@@ -1224,6 +1476,9 @@ fn handle_conn(
                         ("seqs_panicked", n(&stats.seqs_panicked)),
                         ("seqs_active", n(&stats.seqs_active)),
                         ("seqs_waiting", n(&stats.seqs_waiting)),
+                        ("trace_dropped", n(&stats.trace_dropped)),
+                        ("journal_dropped", n(&stats.journal_dropped)),
+                        ("frames_dropped", n(&stats.frames_dropped)),
                     ]),
                 )?;
             }
@@ -1271,12 +1526,20 @@ fn handle_conn(
                     .and_then(Value::as_f64)
                     .filter(|&d| d >= 1.0)
                     .map(|d| d as u64);
+                let req_id =
+                    NEXT_REQ_ID.fetch_add(1, Ordering::Relaxed) + 1;
+                let client = req
+                    .get("client")
+                    .and_then(Value::as_str)
+                    .map(str::to_string);
                 let (tx, rx) = channel();
                 let _ = job_tx.send(Job::Decode(Request {
                     prompt,
                     n_tokens,
                     temp,
                     deadline_waves,
+                    req_id,
+                    client,
                     enqueued: Instant::now(),
                     resp: tx,
                 }));

@@ -29,6 +29,19 @@
 //!    `{"cmd":"journal"}` and rendered as counter-track (`"C"`) events
 //!    in the same trace. Journaled regardless of span tracing — it is
 //!    tiny and re-budgets are rare.
+//!
+//! Spans carry a [`SpanCtx`] — the request id minted at server accept
+//! and the sequence id minted at scheduler admission — so every
+//! `step`/`layer_fetch`/`preload_part`/`io_batch`/`ondemand_read`
+//! records its causal parent. [`chrome_trace`] turns the contexts into
+//! Chrome **flow events** (`ph:"s"/"f"`) linking each retired
+//! `request` root span through its waves and steps down to the flash
+//! I/O it paid for (PERF.md §Live telemetry). The ring additionally
+//! supports cursor reads ([`TraceShared::drain_since`]) so the server's
+//! streaming subscriber can tail spans without consuming the snapshot
+//! commands' view, and a bounded [`LedgerSample`] ring records the
+//! governor pools + KV + slab bytes per wave as a `dram_pools` counter
+//! track.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -84,6 +97,13 @@ impl Histo {
         } else {
             ((64 - v.leading_zeros()) as usize).min(63)
         }
+    }
+
+    /// Raw count of bucket `i` (Prometheus exposition renders these as
+    /// cumulative `le` buckets).
+    #[inline]
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.counts[i]
     }
 
     /// Inclusive upper edge of bucket `i` (what percentiles report).
@@ -201,6 +221,8 @@ pub enum SpanKind {
     OndemandRead,
     /// One governor re-budget settling against the live engine.
     Rebudget,
+    /// One client request, submit → retirement (the flow-graph root).
+    Request,
 }
 
 impl SpanKind {
@@ -213,12 +235,39 @@ impl SpanKind {
             SpanKind::IoBatch => "io_batch",
             SpanKind::OndemandRead => "ondemand_read",
             SpanKind::Rebudget => "rebudget",
+            SpanKind::Request => "request",
         }
     }
 }
 
+/// The causal context a span was recorded under: the request id minted
+/// at server accept (`req`) and the sequence id minted at scheduler
+/// admission (`seq`). `0` means "none" on both axes — solo decode,
+/// governor re-budgets, and pre-scheduler traffic record
+/// [`SpanCtx::NONE`] and get no flow edges.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpanCtx {
+    pub req: u64,
+    pub seq: u64,
+}
+
+impl SpanCtx {
+    pub const NONE: SpanCtx = SpanCtx { req: 0, seq: 0 };
+
+    pub fn new(req: u64, seq: u64) -> SpanCtx {
+        SpanCtx { req, seq }
+    }
+
+    #[inline]
+    pub fn is_none(&self) -> bool {
+        self.req == 0 && self.seq == 0
+    }
+}
+
 /// One recorded span. `a`/`b` are kind-specific labels (sequence id,
-/// layer index, op, read count …) surfaced as Chrome-trace args.
+/// layer index, op, read count …) surfaced as Chrome-trace args; `ctx`
+/// is the causal parent (request + sequence), surfaced as `req`/`seq`
+/// args and compiled into flow events by [`chrome_trace`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SpanEvent {
     pub kind: SpanKind,
@@ -227,6 +276,7 @@ pub struct SpanEvent {
     pub dur_us: u64,
     /// Thread track (the `TID_*` constants).
     pub tid: u32,
+    pub ctx: SpanCtx,
     pub a: u64,
     pub b: u64,
 }
@@ -235,6 +285,11 @@ pub struct SpanEvent {
 pub const TID_SCHED: u32 = 1;
 pub const TID_ENGINE: u32 = 2;
 pub const TID_LOADER: u32 = 3;
+/// Retired `request` root spans (one fake-nested track; flows bind by
+/// exact begin timestamp, so overlap on the track is cosmetic only).
+pub const TID_REQUEST: u32 = 4;
+/// The `dram_pools` counter track ([`LedgerSample`]s).
+pub const TID_LEDGER: u32 = 8;
 pub const TID_GOVERNOR: u32 = 9;
 /// I/O workers take `TID_IO_BASE + slot`.
 pub const TID_IO_BASE: u32 = 10;
@@ -244,6 +299,8 @@ fn tid_name(tid: u32) -> String {
         TID_SCHED => "scheduler".into(),
         TID_ENGINE => "engine".into(),
         TID_LOADER => "loader".into(),
+        TID_REQUEST => "requests".into(),
+        TID_LEDGER => "dram".into(),
         TID_GOVERNOR => "governor".into(),
         t if t >= TID_IO_BASE => format!("io-{}", t - TID_IO_BASE),
         t => format!("track-{t}"),
@@ -271,6 +328,10 @@ pub struct JournalEntry {
     pub compute_bytes: u64,
     pub max_seqs: usize,
     pub settle_us: u64,
+    /// Per-client expected-occupancy inputs at decision time: p90 ended-
+    /// sequence token length by client tag (empty when no tagged traffic
+    /// has finished — the governor then plans on the global histogram).
+    pub client_p90s: Vec<(String, u64)>,
 }
 
 impl JournalEntry {
@@ -287,8 +348,33 @@ impl JournalEntry {
             ("compute_bytes", num(self.compute_bytes as f64)),
             ("max_seqs", num(self.max_seqs as f64)),
             ("settle_us", num(self.settle_us as f64)),
+            (
+                "client_p90",
+                obj(self
+                    .client_p90s
+                    .iter()
+                    .map(|(c, p)| (c.as_str(), num(*p as f64)))
+                    .collect()),
+            ),
         ])
     }
+}
+
+/// One DRAM occupancy sample (per scheduler wave, recorded only while
+/// tracing is enabled): the governor's three planned pools plus the two
+/// measured consumers the plan prices — KV pool resident bytes and the
+/// loader's preload slab bytes. Exported as the `dram_pools` counter
+/// track so re-budget journal steps line up with the occupancy that
+/// triggered them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LedgerSample {
+    /// µs since the recorder's epoch.
+    pub t_us: u64,
+    pub cache_bytes: u64,
+    pub preload_bytes: u64,
+    pub compute_bytes: u64,
+    pub kv_bytes: u64,
+    pub slab_bytes: u64,
 }
 
 // ----------------------------------------------------------- the recorder
@@ -300,12 +386,20 @@ pub const JOURNAL_CAP: usize = 256;
 /// A producer's local buffer flushes itself past this many spans even
 /// between wave boundaries, bounding per-producer memory.
 const LOCAL_BUF_CAP: usize = 4096;
+/// DRAM ledger sampler capacity (one sample per wave; 4096 waves of
+/// history in ~200 KiB).
+pub const LEDGER_CAP: usize = 4096;
 
 struct TraceInner {
     ring: VecDeque<SpanEvent>,
     dropped: u64,
+    /// Total spans ever pushed — the subscriber cursor space. The ring
+    /// holds positions `[pushed - ring.len(), pushed)`.
+    pushed: u64,
     journal: VecDeque<JournalEntry>,
     journal_dropped: u64,
+    ledger: VecDeque<LedgerSample>,
+    ledger_dropped: u64,
 }
 
 /// The shared recorder. Clone the `Arc` ([`TraceHandle`]) into every
@@ -330,8 +424,11 @@ impl TraceShared {
             inner: Mutex::new(TraceInner {
                 ring: VecDeque::new(),
                 dropped: 0,
+                pushed: 0,
                 journal: VecDeque::new(),
                 journal_dropped: 0,
+                ledger: VecDeque::new(),
+                ledger_dropped: 0,
             }),
         })
     }
@@ -368,6 +465,7 @@ impl TraceShared {
             g.dropped += 1;
         }
         g.ring.push_back(ev);
+        g.pushed += 1;
     }
 
     /// Drain a producer's local buffer into the ring (one lock per
@@ -413,14 +511,69 @@ impl TraceShared {
         g.journal.iter().cloned().collect()
     }
 
+    /// Cursor read for the streaming subscriber: every span pushed since
+    /// `cursor` (a position in the all-time pushed sequence) that the
+    /// ring still holds. Non-destructive — snapshot commands and other
+    /// subscribers see the same ring. Returns
+    /// `(spans, new_cursor, missed)` where `missed` counts spans that
+    /// aged out of the bounded ring before this read (they are gone; the
+    /// count is the honesty signal). Pass `new_cursor` back next time.
+    pub fn drain_since(
+        &self,
+        cursor: u64,
+    ) -> (Vec<SpanEvent>, u64, u64) {
+        let g = self.inner.lock().unwrap();
+        let window_lo = g.pushed - g.ring.len() as u64;
+        let (start, missed) = if cursor < window_lo {
+            (window_lo, window_lo - cursor)
+        } else {
+            (cursor.min(g.pushed), 0)
+        };
+        let spans = g
+            .ring
+            .iter()
+            .skip((start - window_lo) as usize)
+            .copied()
+            .collect();
+        (spans, g.pushed, missed)
+    }
+
+    /// Record one DRAM occupancy sample (per wave; gated on the span
+    /// switch — the ledger is a trace surface, not an always-on one).
+    pub fn record_ledger(&self, sample: LedgerSample) {
+        if !self.enabled() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.ledger.len() >= LEDGER_CAP {
+            g.ledger.pop_front();
+            g.ledger_dropped += 1;
+        }
+        g.ledger.push_back(sample);
+    }
+
+    /// `(samples_held, samples_dropped)`.
+    pub fn ledger_stats(&self) -> (usize, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.ledger.len(), g.ledger_dropped)
+    }
+
+    pub fn snapshot_ledger(&self) -> Vec<LedgerSample> {
+        let g = self.inner.lock().unwrap();
+        g.ledger.iter().copied().collect()
+    }
+
     /// Zero the rings and drop counters (`stats_reset`). Leaves
-    /// `enabled` as is.
+    /// `enabled` — and the subscriber cursor space (`pushed`) — as is,
+    /// so live subscribers see a clear as a quiet window, not a replay.
     pub fn clear(&self) {
         let mut g = self.inner.lock().unwrap();
         g.ring.clear();
         g.dropped = 0;
         g.journal.clear();
         g.journal_dropped = 0;
+        g.ledger.clear();
+        g.ledger_dropped = 0;
     }
 }
 
@@ -462,12 +615,19 @@ impl TraceBuf {
     /// Record a span ending now. No-op (no allocation) when disabled.
     // pallas-lint: hot-path
     #[inline]
-    pub fn span(&mut self, kind: SpanKind, t0_us: u64, a: u64, b: u64) {
+    pub fn span(
+        &mut self,
+        kind: SpanKind,
+        t0_us: u64,
+        ctx: SpanCtx,
+        a: u64,
+        b: u64,
+    ) {
         if !self.enabled() {
             return;
         }
         let now = self.shared.now_us();
-        self.span_at(kind, t0_us, now.saturating_sub(t0_us), a, b);
+        self.span_at(kind, t0_us, now.saturating_sub(t0_us), ctx, a, b);
     }
 
     /// Record a span with an explicit duration.
@@ -478,6 +638,7 @@ impl TraceBuf {
         kind: SpanKind,
         t0_us: u64,
         dur_us: u64,
+        ctx: SpanCtx,
         a: u64,
         b: u64,
     ) {
@@ -492,6 +653,7 @@ impl TraceBuf {
             t0_us,
             dur_us,
             tid: self.tid,
+            ctx,
             a,
             b,
         });
@@ -512,12 +674,25 @@ impl TraceBuf {
 /// (`{"traceEvents": [...], "otherData": {...}}`) — loadable in Perfetto
 /// or `chrome://tracing`. Spans become balanced `B`/`E` duration-event
 /// pairs per thread track (per-tid sort by start, longest-first at ties,
-/// children clamped into their parents so the nesting is always valid);
-/// journal entries become `"C"` counter events on the governor track;
-/// thread names ride as `"M"` metadata events.
+/// children clamped into their parents so the nesting is always valid),
+/// each carrying its `req`/`seq` context as args; the contexts then
+/// compile into flow events (`ph:"s"/"f"`, one integer id per edge)
+/// linking request → wave → step → flash I/O; journal entries become
+/// `"C"` counter events on the governor track and [`LedgerSample`]s a
+/// `dram_pools` counter track; thread names ride as `"M"` metadata
+/// events.
+///
+/// Flow endpoints bind to slices by **exact begin timestamp** on the
+/// endpoint's track (`s.ts` = parent's `B.ts`, `f.ts` = child's
+/// `B.ts`), the contract `scripts/check_trace.py --require-flows`
+/// validates. Edges are emitted only for spans whose `ctx.req` is
+/// nonzero **and** whose request root span is still in the ring; an
+/// I/O-class span whose parent step aged out of the ring falls back to
+/// a direct request → span edge, so reachability survives ring drops.
 pub fn chrome_trace(h: &TraceHandle) -> Value {
     let spans = h.snapshot_spans();
     let journal = h.snapshot_journal();
+    let ledger = h.snapshot_ledger();
     let (_, cap, dropped) = h.ring_stats();
 
     let mut events: Vec<Value> = Vec::new();
@@ -526,6 +701,9 @@ pub fn chrome_trace(h: &TraceHandle) -> Value {
     let mut tids: Vec<u32> = spans.iter().map(|e| e.tid).collect();
     if !journal.is_empty() {
         tids.push(TID_GOVERNOR);
+    }
+    if !ledger.is_empty() {
+        tids.push(TID_LEDGER);
     }
     tids.sort_unstable();
     tids.dedup();
@@ -591,6 +769,8 @@ pub fn chrome_trace(h: &TraceHandle) -> Value {
                     obj(vec![
                         ("a", num(ev.a as f64)),
                         ("b", num(ev.b as f64)),
+                        ("req", num(ev.ctx.req as f64)),
+                        ("seq", num(ev.ctx.seq as f64)),
                     ]),
                 ),
             ]));
@@ -599,6 +779,128 @@ pub fn chrome_trace(h: &TraceHandle) -> Value {
         while let Some((end, name)) = stack.pop() {
             emit_e(&mut events, end, name);
         }
+    }
+
+    // ---- causal flow edges, compiled from span contexts.
+    // Parent resolution: a step binds into its containing wave (time
+    // containment on the scheduler track) with a deduplicated
+    // request → wave edge above it; an I/O-class span binds to the
+    // latest step of its (req, seq) that began at or before it. Either
+    // falls back to a direct request → span edge when the intermediate
+    // span is missing from the ring. Edges where the clock would run
+    // backwards (parent begin after child begin) are dropped rather
+    // than emitted invalid — `s.ts ≤ f.ts` is structural.
+    use std::collections::{HashMap, HashSet};
+    let mut req_roots: HashMap<u64, (u32, u64)> = HashMap::new();
+    for e in &spans {
+        if e.kind == SpanKind::Request && e.ctx.req != 0 {
+            req_roots.entry(e.ctx.req).or_insert((e.tid, e.t0_us));
+        }
+    }
+    let mut waves: Vec<&SpanEvent> =
+        spans.iter().filter(|e| e.kind == SpanKind::Wave).collect();
+    waves.sort_by_key(|e| e.t0_us);
+    let mut steps: HashMap<(u64, u64), Vec<u64>> = HashMap::new();
+    for e in &spans {
+        if e.kind == SpanKind::Step && e.ctx.req != 0 {
+            steps
+                .entry((e.ctx.req, e.ctx.seq))
+                .or_default()
+                .push(e.t0_us);
+        }
+    }
+    for v in steps.values_mut() {
+        v.sort_unstable();
+    }
+    // (parent (tid, ts), child (tid, ts)) pairs, in emission order
+    let mut edges: Vec<((u32, u64), (u32, u64))> = Vec::new();
+    let mut req_wave_seen: HashSet<(u64, u64)> = HashSet::new();
+    for e in &spans {
+        if e.ctx.req == 0 {
+            continue;
+        }
+        let root = match req_roots.get(&e.ctx.req) {
+            Some(r) => *r,
+            None => continue,
+        };
+        let child = (e.tid, e.t0_us);
+        match e.kind {
+            SpanKind::Request | SpanKind::Wave | SpanKind::Rebudget => {}
+            SpanKind::Step => {
+                let i = waves.partition_point(|w| w.t0_us <= e.t0_us);
+                let wave = i.checked_sub(1).map(|i| waves[i]).filter(|w| {
+                    w.t0_us.saturating_add(w.dur_us) >= e.t0_us
+                });
+                if let Some(w) = wave {
+                    if req_wave_seen.insert((e.ctx.req, w.t0_us))
+                        && root.1 <= w.t0_us
+                    {
+                        edges.push((root, (w.tid, w.t0_us)));
+                    }
+                    edges.push(((w.tid, w.t0_us), child));
+                } else if root.1 <= e.t0_us {
+                    edges.push((root, child));
+                }
+            }
+            SpanKind::LayerFetch
+            | SpanKind::PreloadPart
+            | SpanKind::IoBatch
+            | SpanKind::OndemandRead => {
+                let step_t0 =
+                    steps.get(&(e.ctx.req, e.ctx.seq)).and_then(|v| {
+                        let i = v.partition_point(|&t| t <= e.t0_us);
+                        i.checked_sub(1).map(|i| v[i])
+                    });
+                if let Some(t) = step_t0 {
+                    edges.push(((TID_ENGINE, t), child));
+                } else if root.1 <= e.t0_us {
+                    edges.push((root, child));
+                }
+            }
+        }
+    }
+    for (i, ((ptid, pts), (ctid, cts))) in edges.iter().enumerate() {
+        let id = num((i + 1) as f64);
+        events.push(obj(vec![
+            ("ph", s("s")),
+            ("cat", s("causal")),
+            ("name", s("causal")),
+            ("id", id.clone()),
+            ("pid", num(1.0)),
+            ("tid", num(*ptid as f64)),
+            ("ts", num(*pts as f64)),
+        ]));
+        events.push(obj(vec![
+            ("ph", s("f")),
+            ("bp", s("e")),
+            ("cat", s("causal")),
+            ("name", s("causal")),
+            ("id", id),
+            ("pid", num(1.0)),
+            ("tid", num(*ctid as f64)),
+            ("ts", num(*cts as f64)),
+        ]));
+    }
+
+    // DRAM occupancy counter track from the ledger sampler
+    for sm in &ledger {
+        events.push(obj(vec![
+            ("ph", s("C")),
+            ("name", s("dram_pools")),
+            ("pid", num(1.0)),
+            ("tid", num(TID_LEDGER as f64)),
+            ("ts", num(sm.t_us as f64)),
+            (
+                "args",
+                obj(vec![
+                    ("cache", num(sm.cache_bytes as f64)),
+                    ("preload", num(sm.preload_bytes as f64)),
+                    ("compute", num(sm.compute_bytes as f64)),
+                    ("kv", num(sm.kv_bytes as f64)),
+                    ("slab", num(sm.slab_bytes as f64)),
+                ]),
+            ),
+        ]));
     }
 
     // governor counter track from the journal
@@ -753,6 +1055,7 @@ mod tests {
             t0_us: t0,
             dur_us: dur,
             tid,
+            ctx: SpanCtx::NONE,
             a: 0,
             b: 0,
         }
@@ -764,7 +1067,7 @@ mod tests {
         h.set_enabled(true);
         let mut buf = TraceBuf::new(h.clone(), TID_ENGINE);
         for i in 0..24u64 {
-            buf.span_at(SpanKind::Step, i * 10, 5, i, 0);
+            buf.span_at(SpanKind::Step, i * 10, 5, SpanCtx::NONE, i, 0);
         }
         buf.flush();
         let (len, cap, dropped) = h.ring_stats();
@@ -781,7 +1084,7 @@ mod tests {
     fn disabled_recorder_stores_nothing() {
         let h = TraceShared::new(64);
         let mut buf = TraceBuf::new(h.clone(), TID_ENGINE);
-        buf.span_at(SpanKind::Step, 0, 5, 0, 0);
+        buf.span_at(SpanKind::Step, 0, 5, SpanCtx::NONE, 0, 0);
         buf.flush();
         h.push_one(ev(0, 1, TID_SCHED));
         let (len, _, dropped) = h.ring_stats();
@@ -807,22 +1110,97 @@ mod tests {
             compute_bytes: 0,
             max_seqs: 4,
             settle_us: 10,
+            client_p90s: vec![],
+        });
+        h.record_ledger(LedgerSample {
+            t_us: 2,
+            cache_bytes: 1,
+            preload_bytes: 1,
+            compute_bytes: 1,
+            kv_bytes: 1,
+            slab_bytes: 1,
         });
         h.clear();
         assert_eq!(h.ring_stats(), (0, 4, 0));
         assert_eq!(h.journal_stats(), (0, 0));
+        assert_eq!(h.ledger_stats(), (0, 0));
         assert!(h.enabled(), "clear must not flip the enable switch");
+        // the cursor space is NOT reset: a subscriber's cursor stays
+        // valid across stats_reset (it sees a quiet window, no replay)
+        let (spans, cursor, missed) = h.drain_since(0);
+        assert!(spans.is_empty());
+        assert_eq!(cursor, 9);
+        assert_eq!(missed, 9);
+    }
+
+    #[test]
+    fn drain_since_cursor_and_missed_accounting() {
+        let h = TraceShared::new(4);
+        h.set_enabled(true);
+        for i in 0..3u64 {
+            h.push_one(ev(i, 1, TID_SCHED));
+        }
+        // first read from zero: everything, no misses
+        let (spans, cur, missed) = h.drain_since(0);
+        assert_eq!(spans.len(), 3);
+        assert_eq!((cur, missed), (3, 0));
+        // nothing new: empty, cursor stable
+        let (spans, cur2, missed) = h.drain_since(cur);
+        assert!(spans.is_empty());
+        assert_eq!((cur2, missed), (3, 0));
+        // push 6 more into a cap-4 ring: positions 3..9, ring holds 5..9
+        for i in 3..9u64 {
+            h.push_one(ev(i, 1, TID_SCHED));
+        }
+        let (spans, cur3, missed) = h.drain_since(cur2);
+        assert_eq!(cur3, 9);
+        assert_eq!(missed, 2, "positions 3 and 4 aged out");
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans.first().unwrap().t0_us, 5);
+        assert_eq!(spans.last().unwrap().t0_us, 8);
+        // snapshot reads are unaffected by cursor reads
+        assert_eq!(h.snapshot_spans().len(), 4);
+    }
+
+    #[test]
+    fn ledger_ring_bounded_and_gated() {
+        let h = TraceShared::new(16);
+        let mk = |i: u64| LedgerSample {
+            t_us: i,
+            cache_bytes: i,
+            preload_bytes: 0,
+            compute_bytes: 0,
+            kv_bytes: 0,
+            slab_bytes: 0,
+        };
+        // disabled: samples are dropped silently (trace surface)
+        h.record_ledger(mk(0));
+        assert_eq!(h.ledger_stats(), (0, 0));
+        h.set_enabled(true);
+        for i in 0..(LEDGER_CAP as u64 + 10) {
+            h.record_ledger(mk(i));
+        }
+        let (len, dropped) = h.ledger_stats();
+        assert_eq!(len, LEDGER_CAP);
+        assert_eq!(dropped, 10);
+        assert_eq!(h.snapshot_ledger().first().unwrap().t_us, 10);
     }
 
     // ----------------------------------------------------------- export
 
     /// Walk exported events checking balance + per-tid ts monotonicity
-    /// (the Rust-side mirror of scripts/check_trace.py).
+    /// + flow-event s/f pairing (the Rust-side mirror of
+    /// scripts/check_trace.py). Flow events are exempt from the per-tid
+    /// monotonicity walk — they are appended after the duration events
+    /// and bind across tracks — but every flow id must carry exactly
+    /// one `s` and one `f`, with `f.ts ≥ s.ts`.
     fn check_exported(v: &Value) {
         let events = v.get("traceEvents").unwrap().as_arr().unwrap();
         use std::collections::HashMap;
         let mut stacks: HashMap<u64, Vec<String>> = HashMap::new();
         let mut last_ts: HashMap<u64, f64> = HashMap::new();
+        let mut flow_s: HashMap<u64, f64> = HashMap::new();
+        let mut flow_f: HashMap<u64, f64> = HashMap::new();
         for e in events {
             let ph = e.get("ph").unwrap().as_str().unwrap();
             if ph == "M" {
@@ -830,6 +1208,15 @@ mod tests {
             }
             let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
             let ts = e.get("ts").unwrap().as_f64().unwrap();
+            if ph == "s" || ph == "f" {
+                let id = e.get("id").unwrap().as_f64().unwrap() as u64;
+                let side = if ph == "s" { &mut flow_s } else { &mut flow_f };
+                assert!(
+                    side.insert(id, ts).is_none(),
+                    "duplicate flow {ph} for id {id}"
+                );
+                continue;
+            }
             let prev = last_ts.entry(tid).or_insert(f64::MIN);
             assert!(ts >= *prev, "ts must be monotone per tid");
             *prev = ts;
@@ -853,6 +1240,41 @@ mod tests {
         for (tid, st) in stacks {
             assert!(st.is_empty(), "unclosed B events on tid {tid}");
         }
+        assert_eq!(
+            flow_s.keys().collect::<std::collections::HashSet<_>>(),
+            flow_f.keys().collect::<std::collections::HashSet<_>>(),
+            "every flow id needs one s and one f"
+        );
+        for (id, s_ts) in &flow_s {
+            assert!(
+                flow_f[id] >= *s_ts,
+                "flow {id} runs backwards (f.ts < s.ts)"
+            );
+        }
+    }
+
+    /// Flow edges out of an export, as (s_ts, f_ts) pairs keyed by id.
+    fn flow_edges(v: &Value) -> Vec<(f64, f64)> {
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        use std::collections::HashMap;
+        let mut s_ts: HashMap<u64, f64> = HashMap::new();
+        let mut f_ts: HashMap<u64, f64> = HashMap::new();
+        for e in events {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            if ph != "s" && ph != "f" {
+                continue;
+            }
+            let id = e.get("id").unwrap().as_f64().unwrap() as u64;
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            if ph == "s" {
+                s_ts.insert(id, ts);
+            } else {
+                f_ts.insert(id, ts);
+            }
+        }
+        let mut ids: Vec<u64> = s_ts.keys().copied().collect();
+        ids.sort_unstable();
+        ids.iter().map(|i| (s_ts[i], f_ts[i])).collect()
     }
 
     #[test]
@@ -862,11 +1284,12 @@ mod tests {
         let mut eng = TraceBuf::new(h.clone(), TID_ENGINE);
         let mut load = TraceBuf::new(h.clone(), TID_LOADER);
         // nested: step containing two layer fetches, one overrunning
-        eng.span_at(SpanKind::Step, 100, 100, 1, 0);
-        eng.span_at(SpanKind::LayerFetch, 110, 20, 0, 0);
-        eng.span_at(SpanKind::LayerFetch, 150, 80, 1, 0); // overruns parent
+        eng.span_at(SpanKind::Step, 100, 100, SpanCtx::NONE, 1, 0);
+        eng.span_at(SpanKind::LayerFetch, 110, 20, SpanCtx::NONE, 0, 0);
+        // overruns parent
+        eng.span_at(SpanKind::LayerFetch, 150, 80, SpanCtx::NONE, 1, 0);
         // loader: preload part overlapping the step in wall time
-        load.span_at(SpanKind::PreloadPart, 120, 60, 7, 2);
+        load.span_at(SpanKind::PreloadPart, 120, 60, SpanCtx::NONE, 7, 2);
         eng.flush();
         load.flush();
         h.push_one(SpanEvent {
@@ -874,6 +1297,7 @@ mod tests {
             t0_us: 90,
             dur_us: 130,
             tid: TID_SCHED,
+            ctx: SpanCtx::NONE,
             a: 1,
             b: 0,
         });
@@ -889,6 +1313,15 @@ mod tests {
             compute_bytes: 20,
             max_seqs: 2,
             settle_us: 300,
+            client_p90s: vec![("tenant-a".into(), 64)],
+        });
+        h.record_ledger(LedgerSample {
+            t_us: 220,
+            cache_bytes: 40,
+            preload_bytes: 20,
+            compute_bytes: 20,
+            kv_bytes: 8,
+            slab_bytes: 4,
         });
         let v = chrome_trace(&h);
         check_exported(&v);
@@ -898,15 +1331,162 @@ mod tests {
             other.get("ring_capacity").unwrap().as_f64().unwrap(),
             256.0
         );
-        // the journal produced a counter event
+        // the journal and ledger both produced counter events
         let events = v.get("traceEvents").unwrap().as_arr().unwrap();
-        assert!(events.iter().any(|e| e
-            .get("ph")
-            .map(|p| p.as_str() == Some("C"))
-            .unwrap_or(false)));
+        for name in ["governor_ledger", "dram_pools"] {
+            assert!(
+                events.iter().any(|e| e
+                    .get("ph")
+                    .map(|p| p.as_str() == Some("C"))
+                    .unwrap_or(false)
+                    && e.get("name").map(|n| n.as_str() == Some(name))
+                        == Some(true)),
+                "missing C track {name}"
+            );
+        }
+        // ctx-less spans compile into zero flow events
+        assert!(flow_edges(&v).is_empty());
         // and the trace round-trips through the json module
         let parsed = crate::util::json::parse(&v.to_string()).unwrap();
         check_exported(&parsed);
+    }
+
+    /// The causal contract across all seven pre-existing span kinds
+    /// under one request root: every ctx-carrying span reaches the
+    /// export with `req`/`seq` args, flows pair s/f with matching
+    /// begin-timestamps, and every I/O-class span has an inbound edge
+    /// from its step (or the request root when the step is gone).
+    #[test]
+    fn flows_link_request_to_io_across_all_kinds() {
+        let h = TraceShared::new(256);
+        h.set_enabled(true);
+        let ctx = SpanCtx::new(41, 7);
+        let mut eng = TraceBuf::new(h.clone(), TID_ENGINE);
+        let mut load = TraceBuf::new(h.clone(), TID_LOADER);
+        let mut io = TraceBuf::new(h.clone(), TID_IO_BASE);
+
+        // request root: submit at t=50, retired at t=400
+        h.push_one(SpanEvent {
+            kind: SpanKind::Request,
+            t0_us: 50,
+            dur_us: 350,
+            tid: TID_REQUEST,
+            ctx,
+            a: 3,
+            b: 120,
+        });
+        // wave (ctx-less by design) containing the steps
+        h.push_one(SpanEvent {
+            kind: SpanKind::Wave,
+            t0_us: 90,
+            dur_us: 200,
+            tid: TID_SCHED,
+            ctx: SpanCtx::NONE,
+            a: 1,
+            b: 0,
+        });
+        // two steps of the request inside the wave
+        eng.span_at(SpanKind::Step, 100, 60, ctx, 7, 0);
+        eng.span_at(SpanKind::Step, 200, 60, ctx, 7, 1);
+        // io-class children: bind to the LATEST step at-or-before them
+        eng.span_at(SpanKind::LayerFetch, 110, 20, ctx, 0, 0);
+        eng.span_at(SpanKind::OndemandRead, 130, 10, ctx, 0, 4);
+        load.span_at(SpanKind::PreloadPart, 210, 30, ctx, 7, 2);
+        io.span_at(SpanKind::IoBatch, 220, 15, ctx, 4, 0);
+        // a rebudget records NONE and never joins the flow graph
+        h.push_one(SpanEvent {
+            kind: SpanKind::Rebudget,
+            t0_us: 300,
+            dur_us: 10,
+            tid: TID_GOVERNOR,
+            ctx: SpanCtx::NONE,
+            a: 0,
+            b: 0,
+        });
+        eng.flush();
+        load.flush();
+        io.flush();
+
+        let v = chrome_trace(&h);
+        check_exported(&v);
+
+        // every ctx-carrying B event exports req/seq args
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        for e in events {
+            if e.get("ph").unwrap().as_str() != Some("B") {
+                continue;
+            }
+            let name = e.get("name").unwrap().as_str().unwrap();
+            let req = e
+                .get("args")
+                .unwrap()
+                .get("req")
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            match name {
+                "wave" | "rebudget" => assert_eq!(req, 0.0),
+                _ => assert_eq!(req, 41.0, "span {name} lost its ctx"),
+            }
+        }
+
+        // edges: request->wave (dedup'd to ONE despite two steps),
+        // wave->step x2, step->io x4
+        let edges = flow_edges(&v);
+        assert_eq!(edges.len(), 7, "edges: {edges:?}");
+        let count = |s: f64, f: f64| {
+            edges.iter().filter(|(a, b)| (*a, *b) == (s, f)).count()
+        };
+        assert_eq!(count(50.0, 90.0), 1, "request->wave, deduplicated");
+        assert_eq!(count(90.0, 100.0), 1, "wave->step1");
+        assert_eq!(count(90.0, 200.0), 1, "wave->step2");
+        assert_eq!(count(100.0, 110.0), 1, "step1->layer_fetch");
+        assert_eq!(count(100.0, 130.0), 1, "step1->ondemand_read");
+        assert_eq!(count(200.0, 210.0), 1, "step2->preload_part");
+        assert_eq!(count(200.0, 220.0), 1, "step2->io_batch");
+    }
+
+    /// Ring drops must not orphan I/O spans: with the parent step aged
+    /// out, the edge falls back to request -> io directly; with the
+    /// request root itself gone, no edge is emitted at all.
+    #[test]
+    fn flow_fallbacks_survive_ring_drops() {
+        let h = TraceShared::new(256);
+        h.set_enabled(true);
+        let ctx = SpanCtx::new(9, 2);
+        // request root + io span, NO step/wave in the ring
+        h.push_one(SpanEvent {
+            kind: SpanKind::Request,
+            t0_us: 10,
+            dur_us: 100,
+            tid: TID_REQUEST,
+            ctx,
+            a: 1,
+            b: 0,
+        });
+        h.push_one(SpanEvent {
+            kind: SpanKind::IoBatch,
+            t0_us: 40,
+            dur_us: 5,
+            tid: TID_IO_BASE,
+            ctx,
+            a: 2,
+            b: 0,
+        });
+        // an io span whose request root is NOT in the ring
+        h.push_one(SpanEvent {
+            kind: SpanKind::OndemandRead,
+            t0_us: 60,
+            dur_us: 5,
+            tid: TID_ENGINE,
+            ctx: SpanCtx::new(777, 3),
+            a: 0,
+            b: 1,
+        });
+        let v = chrome_trace(&h);
+        check_exported(&v);
+        let edges = flow_edges(&v);
+        assert_eq!(edges, vec![(10.0, 40.0)], "request->io fallback only");
     }
 
     #[test]
@@ -925,6 +1505,7 @@ mod tests {
                 compute_bytes: 0,
                 max_seqs: 1,
                 settle_us: 0,
+                client_p90s: vec![],
             });
         }
         let (len, dropped) = h.journal_stats();

@@ -146,6 +146,7 @@ fn server_survives_permanent_faults_with_zero_failed_requests() {
         sched_queue_cap: 16,
         fault_spec: Some(format!("seed={seed},bad=0+1048576")),
         trace_out: None,
+        telemetry_interval_ms: 500,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![
@@ -235,6 +236,7 @@ fn deadline_returns_partial_with_timeout_status() {
         sched_queue_cap: 16,
         fault_spec: None,
         trace_out: None,
+        telemetry_interval_ms: 500,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let warm = obj(vec![

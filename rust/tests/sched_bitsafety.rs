@@ -141,6 +141,8 @@ fn interleaved_sequence_matches_solo_across_level_switch() {
         seed: 7,
         eos: None,
         deadline_waves: None,
+        req_id: 0,
+        client: None,
     };
     assert!(matches!(
         sched.submit(mk(&prompt_a)),

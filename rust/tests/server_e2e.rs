@@ -49,6 +49,7 @@ fn serve_generate_stats_shutdown() {
         sched_queue_cap: 16,
         fault_spec: None,
         trace_out: None,
+        telemetry_interval_ms: 500,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     // wait for bind
@@ -254,6 +255,7 @@ fn stats_reset_zeroes_windows_and_trace_captures_spans() {
         sched_queue_cap: 16,
         fault_spec: None,
         trace_out: None,
+        telemetry_interval_ms: 500,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![
@@ -371,6 +373,7 @@ fn two_concurrent_clients_decode_interleaved() {
         sched_queue_cap: 16,
         fault_spec: None,
         trace_out: None,
+        telemetry_interval_ms: 500,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![
@@ -471,6 +474,7 @@ fn set_budget_is_not_starved_behind_a_long_generation() {
         sched_queue_cap: 16,
         fault_spec: None,
         trace_out: None,
+        telemetry_interval_ms: 500,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let warm = obj(vec![
@@ -567,6 +571,7 @@ fn set_budget_rebudgets_live_engine_mid_session() {
         sched_queue_cap: 16,
         fault_spec: None,
         trace_out: None,
+        telemetry_interval_ms: 500,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![
@@ -683,6 +688,7 @@ fn hostile_input_leaves_the_worker_serving() {
         sched_queue_cap: 16,
         fault_spec: None,
         trace_out: None,
+        telemetry_interval_ms: 500,
     };
     let server = std::thread::spawn(move || serve(cfg).unwrap());
     let req = obj(vec![
@@ -777,6 +783,322 @@ fn hostile_input_leaves_the_worker_serving() {
     assert_eq!(h.get("degraded"), Some(&Value::Bool(false)), "{h:?}");
     assert_eq!(h.get("faults_injected").unwrap().as_f64().unwrap(), 0.0);
     assert_eq!(h.get("wedged_recoveries").unwrap().as_f64().unwrap(), 0.0);
+
+    let bye =
+        client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();
+    assert_eq!(bye.get("ok"), Some(&Value::Bool(true)));
+    server.join().unwrap();
+}
+
+// ---------------------------------------------------- live telemetry plane
+
+/// Open a `subscribe` stream: returns the raw connection (kept alive so
+/// the stream stays up) and a reader positioned after the ack line.
+fn subscribe(
+    addr: &str,
+    interval_ms: f64,
+) -> (std::net::TcpStream, std::io::BufReader<std::net::TcpStream>) {
+    use std::io::{BufRead, BufReader, Write};
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    let mut line = obj(vec![
+        ("cmd", s("subscribe")),
+        ("interval_ms", num(interval_ms)),
+    ])
+    .to_string();
+    line.push('\n');
+    conn.write_all(line.as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut ack = String::new();
+    reader.read_line(&mut ack).unwrap();
+    let v = activeflow::util::json::parse(ack.trim()).unwrap();
+    assert_eq!(
+        v.get("subscribed"),
+        Some(&Value::Bool(true)),
+        "subscribe ack: {v:?}"
+    );
+    (conn, reader)
+}
+
+/// Read and parse one telemetry frame off a subscriber stream.
+fn read_frame(
+    reader: &mut std::io::BufReader<std::net::TcpStream>,
+) -> Value {
+    use std::io::BufRead;
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(!line.trim().is_empty(), "stream ended mid-subscription");
+    activeflow::util::json::parse(line.trim()).unwrap()
+}
+
+fn telemetry_cfg(addr: &str, dir: PathBuf, interval_ms: u64) -> ServerConfig {
+    ServerConfig {
+        addr: addr.into(),
+        artifact_dir: dir,
+        opts: EngineOptions {
+            sparsity: 0.6,
+            group_size: 4,
+            swap_mode: SwapMode::Preload,
+            cache_bytes: 256 * 1024,
+            cache_policy: CachePolicy::Contextual,
+            device: &PIXEL6,
+            clock: ClockMode::Modeled,
+            bw_scale: 1.0,
+            trigger: PreloadTrigger::FirstLayer,
+            io_queue_depth: 0,
+            kv_block_tokens: 16,
+        },
+        governor: GovernorConfig::default(),
+        initial_budget: None,
+        pressure_schedule: None,
+        pressure_file: None,
+        max_seqs: 2,
+        sched_queue_cap: 16,
+        fault_spec: None,
+        trace_out: None,
+        telemetry_interval_ms: interval_ms,
+    }
+}
+
+#[test]
+fn slow_subscriber_drops_frames_without_stalling_decode() {
+    // Backpressure policy end-to-end: a subscriber that never reads must
+    // cost frames (bounded queue, drop-and-count), never decode
+    // throughput. The worker and the frame producer share nothing but
+    // the ring's own mutex.
+    let Some(dir) = artifacts() else { return };
+    let addr = "127.0.0.1:17077";
+    let cfg = telemetry_cfg(addr, dir, 1);
+    let server = std::thread::spawn(move || serve(cfg).unwrap());
+    let req = obj(vec![
+        ("prompt", s("the sparse model ")),
+        ("n_tokens", num(8.0)),
+        ("temp", num(0.0)),
+    ]);
+    let mut up = false;
+    for _ in 0..60 {
+        if client_roundtrip(addr, &req).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    assert!(up, "server never came up");
+
+    // subscribe at a 1ms interval and then never read a single frame:
+    // the socket buffers fill, the writer wedges, the 16-frame queue
+    // tops out, and every further frame drops
+    let (_sub_conn, _sub_reader) = subscribe(addr, 1.0);
+    let stats0 =
+        client_roundtrip(addr, &obj(vec![("cmd", s("stats"))])).unwrap();
+    assert_eq!(
+        stats0.get("subscribers").unwrap().as_f64().unwrap(),
+        1.0,
+        "{stats0:?}"
+    );
+    let tokens0 = stats0.get("tokens").unwrap().as_f64().unwrap();
+
+    // decodes must keep completing while the subscriber is wedged
+    for _ in 0..3 {
+        let r = client_roundtrip(addr, &req).unwrap();
+        assert!(r.get("error").is_none(), "decode under stall: {r:?}");
+        assert_eq!(r.get("tokens").unwrap().as_arr().unwrap().len(), 8);
+    }
+
+    // drops must start once the buffers are full (bounded queue — the
+    // alternative failure mode is unbounded growth, which this loop
+    // would time out on)
+    let mut dropped = 0.0;
+    for _ in 0..120 {
+        let st = client_roundtrip(addr, &obj(vec![("cmd", s("stats"))]))
+            .unwrap();
+        dropped = st.get("frames_dropped").unwrap().as_f64().unwrap();
+        if dropped > 0.0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    assert!(
+        dropped > 0.0,
+        "a never-reading subscriber must shed frames, not queue them \
+         unboundedly"
+    );
+
+    // and decode throughput advanced the whole time
+    let r = client_roundtrip(addr, &req).unwrap();
+    assert!(r.get("error").is_none(), "{r:?}");
+    let stats1 =
+        client_roundtrip(addr, &obj(vec![("cmd", s("stats"))])).unwrap();
+    assert!(
+        stats1.get("tokens").unwrap().as_f64().unwrap()
+            >= tokens0 + 4.0 * 8.0,
+        "decode throughput must advance under subscriber stall: \
+         {stats1:?}"
+    );
+    // a lossy telemetry plane is a health condition, not a silent gap
+    let h =
+        client_roundtrip(addr, &obj(vec![("cmd", s("health"))])).unwrap();
+    assert_eq!(h.get("degraded"), Some(&Value::Bool(true)), "{h:?}");
+    assert!(
+        h.get("frames_dropped").unwrap().as_f64().unwrap() > 0.0,
+        "{h:?}"
+    );
+
+    let bye =
+        client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();
+    assert_eq!(bye.get("ok"), Some(&Value::Bool(true)));
+    server.join().unwrap();
+}
+
+#[test]
+fn subscriber_frames_monotone_and_gaps_equal_drops() {
+    // Frame accounting: sequence numbers strictly increase, and over any
+    // received window [first, last], minted == received + dropped — a
+    // gap in the numbering is always explained by the drop counter
+    // embedded in the frames themselves.
+    let Some(dir) = artifacts() else { return };
+    let addr = "127.0.0.1:17078";
+    let cfg = telemetry_cfg(addr, dir, 500);
+    let server = std::thread::spawn(move || serve(cfg).unwrap());
+    let req = obj(vec![
+        ("prompt", s("the sparse model ")),
+        ("n_tokens", num(8.0)),
+        ("temp", num(0.0)),
+    ]);
+    let mut up = false;
+    for _ in 0..60 {
+        if client_roundtrip(addr, &req).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    assert!(up, "server never came up");
+
+    let (_sub_conn, mut reader) = subscribe(addr, 2.0);
+    let mut frames = Vec::new();
+    for _ in 0..5 {
+        frames.push(read_frame(&mut reader));
+    }
+    // stall long enough that the producer may outrun the reader (drops
+    // are environment-dependent; the accounting below holds either way)
+    std::thread::sleep(std::time::Duration::from_millis(1200));
+    for _ in 0..40 {
+        frames.push(read_frame(&mut reader));
+    }
+
+    let no = |f: &Value| f.get("frame").unwrap().as_f64().unwrap() as u64;
+    let dr = |f: &Value| {
+        f.get("frames_dropped").unwrap().as_f64().unwrap() as u64
+    };
+    for w in frames.windows(2) {
+        assert!(
+            no(&w[1]) > no(&w[0]),
+            "frame numbers must strictly increase: {} then {}",
+            no(&w[0]),
+            no(&w[1])
+        );
+        assert!(
+            dr(&w[1]) >= dr(&w[0]),
+            "drop counter must be monotone"
+        );
+    }
+    let (first, last) = (&frames[0], &frames[frames.len() - 1]);
+    let minted = no(last) - no(first) + 1;
+    let received = frames.len() as u64;
+    let dropped = dr(last) - dr(first);
+    assert_eq!(
+        minted,
+        received + dropped,
+        "every minted frame must be received or counted dropped \
+         (first={} last={} received={} dropped={})",
+        no(first),
+        no(last),
+        received,
+        dropped
+    );
+    // frames carry the stats snapshot and the span-delta envelope
+    for key in ["t_us", "spans", "spans_missed", "stats"] {
+        assert!(last.get(key).is_some(), "frame missing {key}");
+    }
+    assert!(
+        last.get("stats").unwrap().get("sched_waves").is_some(),
+        "frame stats must be the full stats schema"
+    );
+
+    let bye =
+        client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();
+    assert_eq!(bye.get("ok"), Some(&Value::Bool(true)));
+    server.join().unwrap();
+}
+
+#[test]
+fn subscriber_disconnect_mid_stream_unsubscribes_cleanly() {
+    // Teardown path: dropping the socket mid-stream must retire the
+    // producer thread and decrement the subscriber gauge — no leaked
+    // stream, and the server keeps serving.
+    let Some(dir) = artifacts() else { return };
+    let addr = "127.0.0.1:17079";
+    let cfg = telemetry_cfg(addr, dir, 500);
+    let server = std::thread::spawn(move || serve(cfg).unwrap());
+    let req = obj(vec![
+        ("prompt", s("the sparse model ")),
+        ("n_tokens", num(4.0)),
+        ("temp", num(0.0)),
+    ]);
+    let mut up = false;
+    for _ in 0..60 {
+        if client_roundtrip(addr, &req).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    assert!(up, "server never came up");
+
+    {
+        let (conn, mut reader) = subscribe(addr, 2.0);
+        let f = read_frame(&mut reader);
+        assert!(f.get("frame").is_some(), "{f:?}");
+        let st = client_roundtrip(addr, &obj(vec![("cmd", s("stats"))]))
+            .unwrap();
+        assert_eq!(
+            st.get("subscribers").unwrap().as_f64().unwrap(),
+            1.0,
+            "{st:?}"
+        );
+        drop(reader);
+        drop(conn); // vanish mid-stream, frames still in flight
+    }
+    // the writer hits a send error and the stream unwinds
+    let mut subs = 1.0;
+    for _ in 0..60 {
+        let st = client_roundtrip(addr, &obj(vec![("cmd", s("stats"))]))
+            .unwrap();
+        subs = st.get("subscribers").unwrap().as_f64().unwrap();
+        if subs == 0.0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    assert_eq!(subs, 0.0, "disconnect must retire the subscription");
+
+    // serving is unaffected
+    let r = client_roundtrip(addr, &req).unwrap();
+    assert!(r.get("error").is_none(), "post-disconnect decode: {r:?}");
+    // the reply carries the causal io-wait attribution keys
+    assert!(r.get("io_wait_us").is_some(), "{r:?}");
+    assert!(r.get("ondemand_rows").is_some(), "{r:?}");
+
+    // metrics exposition answers over the same protocol
+    let m =
+        client_roundtrip(addr, &obj(vec![("cmd", s("metrics"))])).unwrap();
+    let text = m.get("metrics").unwrap().as_str().unwrap();
+    assert!(
+        text.contains("# TYPE pallas_tokens counter"),
+        "exposition must carry typed series: {text:.200}"
+    );
+    assert!(text.contains("pallas_itl_us_bucket{le=\"+Inf\"}"));
+    assert!(text.contains("pallas_sched_waves "));
 
     let bye =
         client_roundtrip(addr, &obj(vec![("cmd", s("shutdown"))])).unwrap();

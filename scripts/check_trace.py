@@ -6,11 +6,15 @@ sched_interleave bench) without needing the Rust toolchain.
 Checks:
   * top level is either a bare event array or
     {"traceEvents": [...], "otherData": {...}};
-  * every event's "ph" is one of B/E/C/M/X and carries pid/tid
+  * every event's "ph" is one of B/E/C/M/X/s/f and carries pid/tid
     (metadata "M" events are exempt from ts checks);
   * per (pid, tid) track: "B"/"E" pairs balance as a stack and each
     "E" closes a "B" of the same name;
-  * per (pid, tid) track: "ts" is monotone non-decreasing;
+  * per (pid, tid) track: "ts" is monotone non-decreasing (flow
+    events are exempt — they are emitted after the duration stream
+    and point back into it);
+  * flow events pair: every "s" id has exactly one "f" and vice
+    versa, with f.ts >= s.ts (causality cannot run backwards);
   * the ring drop counter in otherData is reported (a dropped-events
     trace is still *valid* — the ring is bounded by design — but the
     count must be surfaced, and --max-dropped can gate it).
@@ -20,7 +24,17 @@ With --require-overlap the trace must additionally contain at least one
 `layer_fetch`) in wall time — the observable form of the paper's
 I/O-under-compute pipeline (PERF.md §Observability).
 
-Usage: check_trace.py TRACE.json [--require-overlap] [--max-dropped N]
+With --require-flows the trace must carry the causal span-context
+chain: at least one `request` root span, at least one attributed flash
+I/O span (`io_batch`/`ondemand_read` with `args.req != 0`), and every
+attributed flash I/O span must be reachable from a request root by
+walking flow edges (s -> f, endpoints bound to slices by exact begin
+timestamp on the endpoint's track) plus same-track slice nesting.
+Unattributed I/O (args.req == 0 — warmup, bench traffic without
+request ids) is exempt.
+
+Usage: check_trace.py TRACE.json [--require-overlap] [--require-flows]
+                      [--max-dropped N]
        check_trace.py --self-test
 
 Exit codes: 0 = valid, 1 = invalid trace, 2 = unreadable/malformed input.
@@ -35,8 +49,9 @@ sys.path.insert(
 )
 from jsonutil import load_trace_events as load_events  # noqa: E402
 
-PHASES = {"B", "E", "C", "M", "X"}
+PHASES = {"B", "E", "C", "M", "X", "s", "f"}
 COMPUTE_NAMES = {"step", "layer_fetch"}
+IO_NAMES = {"io_batch", "ondemand_read"}
 
 
 def fail(msg):
@@ -44,7 +59,34 @@ def fail(msg):
     return 1
 
 
-def validate(path, require_overlap=False, max_dropped=None):
+def bind_endpoint(by_track, track, ts):
+    """Bind one flow endpoint to a slice index: exact begin-timestamp
+    match on the endpoint's track (first in file order on ties — the
+    emitter's contract), falling back to the innermost slice containing
+    ts. Returns a slice index or None."""
+    slices = by_track.get(track, [])
+    for idx, sl in slices:
+        if sl["t0"] == ts:
+            return idx
+    best = None
+    for idx, sl in slices:
+        if sl["t1"] is None:
+            continue
+        if sl["t0"] <= ts <= sl["t1"]:
+            if best is None or sl["t0"] >= by_track_t0(best, slices):
+                best = idx
+    return best
+
+
+def by_track_t0(idx, slices):
+    for i, sl in slices:
+        if i == idx:
+            return sl["t0"]
+    return -1
+
+
+def validate(path, require_overlap=False, require_flows=False,
+             max_dropped=None):
     """Validate one trace file. Returns an exit code."""
     try:
         events, other = load_events(path)
@@ -52,9 +94,12 @@ def validate(path, require_overlap=False, max_dropped=None):
         print(f"check-trace: cannot read {path}: {e}")
         return 2
 
-    stacks = {}   # (pid, tid) -> [(name, ts)]
+    stacks = {}   # (pid, tid) -> [(name, ts, slice_idx)]
     last_ts = {}  # (pid, tid) -> ts
-    spans = []    # (name, t0, t1) closed durations, all tracks
+    # closed slices, file order: {track, name, t0, t1, args, parent}
+    slices = []
+    flow_s = {}   # id -> (track, ts)
+    flow_f = {}
     counters = 0
 
     for i, e in enumerate(events):
@@ -71,6 +116,17 @@ def validate(path, require_overlap=False, max_dropped=None):
         ts = e.get("ts")
         if not isinstance(ts, (int, float)) or ts < 0:
             return fail(f"event #{i} ({ph}): bad ts {ts!r}")
+        if ph in ("s", "f"):
+            # flow endpoints point back into the duration stream; they
+            # are exempt from per-track monotonicity but must pair up
+            fid = e.get("id")
+            if fid is None:
+                return fail(f"event #{i} ({ph}): flow event without id")
+            side = flow_s if ph == "s" else flow_f
+            if fid in side:
+                return fail(f"event #{i} ({ph}): duplicate flow id {fid!r}")
+            side[fid] = (track, ts)
+            continue
         prev = last_ts.get(track)
         if prev is not None and ts < prev:
             return fail(
@@ -80,38 +136,62 @@ def validate(path, require_overlap=False, max_dropped=None):
 
         name = e.get("name")
         if ph == "B":
-            stacks.setdefault(track, []).append((name, ts))
+            stack = stacks.setdefault(track, [])
+            parent = stack[-1][2] if stack else None
+            slices.append({
+                "track": track, "name": name, "t0": ts, "t1": None,
+                "args": e.get("args") or {}, "parent": parent,
+            })
+            stack.append((name, ts, len(slices) - 1))
         elif ph == "E":
             stack = stacks.get(track) or []
             if not stack:
                 return fail(
                     f"event #{i}: E {name!r} on track {track} without "
                     "an open B")
-            open_name, t0 = stack.pop()
+            open_name, t0, idx = stack.pop()
             if name is not None and name != open_name:
                 return fail(
                     f"event #{i}: E {name!r} closes B {open_name!r} on "
                     f"track {track}")
-            spans.append((open_name, t0, ts))
+            slices[idx]["t1"] = ts
         elif ph == "X":
             dur = e.get("dur", 0)
             if not isinstance(dur, (int, float)) or dur < 0:
                 return fail(f"event #{i} (X): bad dur {dur!r}")
-            spans.append((name, ts, ts + dur))
+            stack = stacks.get(track) or []
+            slices.append({
+                "track": track, "name": name, "t0": ts, "t1": ts + dur,
+                "args": e.get("args") or {},
+                "parent": stack[-1][2] if stack else None,
+            })
         elif ph == "C":
             counters += 1
 
     for track, stack in stacks.items():
         if stack:
-            names = [n for n, _ in stack]
+            names = [n for n, _, _ in stack]
             return fail(f"unclosed B events on track {track}: {names}")
+
+    # flow pairing: one s + one f per id, causally ordered
+    for fid, (_, ts_s) in flow_s.items():
+        if fid not in flow_f:
+            return fail(f"flow id {fid!r} has an 's' but no 'f'")
+        if flow_f[fid][1] < ts_s:
+            return fail(
+                f"flow id {fid!r}: f.ts {flow_f[fid][1]} before s.ts "
+                f"{ts_s} — causality runs backwards")
+    for fid in flow_f:
+        if fid not in flow_s:
+            return fail(f"flow id {fid!r} has an 'f' but no 's'")
 
     dropped = other.get("dropped", 0)
     if not isinstance(dropped, (int, float)) or dropped < 0:
         return fail(f"otherData.dropped must be a non-negative number, "
                     f"got {dropped!r}")
-    print(f"check-trace: {path}: {len(events)} events, {len(spans)} "
-          f"spans, {counters} counter samples, {int(dropped)} dropped")
+    print(f"check-trace: {path}: {len(events)} events, {len(slices)} "
+          f"spans, {len(flow_s)} flow edges, {counters} counter "
+          f"samples, {int(dropped)} dropped")
     if dropped:
         print(f"check-trace: note — the ring dropped {int(dropped)} "
               "events (bounded buffer); raise the capacity or shorten "
@@ -119,6 +199,9 @@ def validate(path, require_overlap=False, max_dropped=None):
     if max_dropped is not None and dropped > max_dropped:
         return fail(f"{int(dropped)} dropped events exceeds the "
                     f"--max-dropped {max_dropped} gate")
+
+    spans = [(sl["name"], sl["t0"], sl["t1"]) for sl in slices
+             if sl["t1"] is not None]
 
     if require_overlap:
         preloads = [sp for sp in spans if sp[0] == "preload_part"]
@@ -138,23 +221,92 @@ def validate(path, require_overlap=False, max_dropped=None):
         print(f"check-trace: overlap ok ({len(preloads)} preload_part, "
               f"{len(computes)} compute spans)")
 
+    if require_flows:
+        return check_flows(slices, flow_s, flow_f)
+
+    return 0
+
+
+def check_flows(slices, flow_s, flow_f):
+    """Every attributed flash I/O slice must be reachable from a
+    `request` root over flow edges + same-track nesting. Returns an
+    exit code."""
+    by_track = {}
+    for idx, sl in enumerate(slices):
+        by_track.setdefault(sl["track"], []).append((idx, sl))
+
+    roots = [i for i, sl in enumerate(slices) if sl["name"] == "request"]
+    if not roots:
+        return fail("--require-flows: no request root spans in the "
+                    "trace (is the scheduler emitting retirement "
+                    "roots?)")
+    targets = [
+        i for i, sl in enumerate(slices)
+        if sl["name"] in IO_NAMES and sl["args"].get("req", 0) != 0
+    ]
+    if not targets:
+        return fail("--require-flows: no attributed flash I/O spans "
+                    "(io_batch/ondemand_read with args.req != 0) — the "
+                    "span-context chain is not reaching the read queue")
+
+    # adjacency: flow edges (s -> f) + nesting (parent -> child)
+    adj = {}
+    for fid, (track_s, ts_s) in flow_s.items():
+        a = bind_endpoint(by_track, track_s, ts_s)
+        track_f, ts_f = flow_f[fid]
+        b = bind_endpoint(by_track, track_f, ts_f)
+        if a is None or b is None:
+            return fail(
+                f"--require-flows: flow id {fid!r} endpoint binds to no "
+                f"slice (s@{track_s}:{ts_s} -> f@{track_f}:{ts_f})")
+        adj.setdefault(a, []).append(b)
+    for idx, sl in enumerate(slices):
+        if sl["parent"] is not None:
+            adj.setdefault(sl["parent"], []).append(idx)
+
+    seen = set(roots)
+    frontier = list(roots)
+    while frontier:
+        n = frontier.pop()
+        for m in adj.get(n, ()):
+            if m not in seen:
+                seen.add(m)
+                frontier.append(m)
+
+    orphans = [i for i in targets if i not in seen]
+    if orphans:
+        detail = ", ".join(
+            f"{slices[i]['name']}@{slices[i]['track']}:{slices[i]['t0']}"
+            for i in orphans[:8])
+        return fail(
+            f"--require-flows: {len(orphans)}/{len(targets)} attributed "
+            f"flash I/O spans unreachable from any request root "
+            f"({detail}) — a span lost its causal parent")
+    print(f"check-trace: flows ok ({len(roots)} request roots, "
+          f"{len(targets)} attributed I/O spans all reachable, "
+          f"{len(flow_s)} edges)")
     return 0
 
 
 def self_test():
-    """Validate the committed fixtures: the valid one must pass (with
-    --require-overlap), the two invalid ones must be rejected."""
+    """Validate the committed fixtures: the valid ones must pass (with
+    their gate flags), the invalid ones must be rejected."""
     fixtures = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "fixtures")
     cases = [
-        ("trace_valid.json", True, 0),
-        ("trace_invalid_unbalanced.json", False, 1),
-        ("trace_invalid_ts.json", False, 1),
+        # (name, require_overlap, require_flows, want)
+        ("trace_valid.json", True, False, 0),
+        ("trace_invalid_unbalanced.json", False, False, 1),
+        ("trace_invalid_ts.json", False, False, 1),
+        ("trace_valid_flows.json", False, True, 0),
+        ("trace_invalid_flow_unreachable.json", False, True, 1),
+        ("trace_invalid_flow_pairing.json", False, False, 1),
     ]
     rc = 0
-    for name, overlap, want in cases:
+    for name, overlap, flows, want in cases:
         path = os.path.join(fixtures, name)
-        got = validate(path, require_overlap=overlap)
+        got = validate(path, require_overlap=overlap,
+                       require_flows=flows)
         if got != want:
             print(f"check-trace: SELF-TEST FAIL — {name}: exit {got}, "
                   f"wanted {want}")
@@ -171,7 +323,9 @@ def main(argv):
     if "--self-test" in argv:
         return self_test()
     require_overlap = "--require-overlap" in argv
-    argv = [a for a in argv if a != "--require-overlap"]
+    require_flows = "--require-flows" in argv
+    argv = [a for a in argv
+            if a not in ("--require-overlap", "--require-flows")]
     max_dropped = None
     if "--max-dropped" in argv:
         i = argv.index("--max-dropped")
@@ -185,7 +339,7 @@ def main(argv):
         print(__doc__.strip())
         return 2
     return validate(argv[0], require_overlap=require_overlap,
-                    max_dropped=max_dropped)
+                    require_flows=require_flows, max_dropped=max_dropped)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,1 @@
+WATCHED = ["tokens", "flash_bytes", "sched_waves"]

@@ -1,0 +1,9 @@
+// Prometheus exposition: flash_bytes is deliberately missing so the
+// self-test exercises counter-unexposed; waves reaches it only through
+// the sched_waves exposition alias.
+pub fn render(m: &Metrics) -> String {
+    let mut out = String::new();
+    counter(&mut out, ("tokens", m.tokens));
+    counter(&mut out, ("sched_waves", m.waves));
+    out
+}

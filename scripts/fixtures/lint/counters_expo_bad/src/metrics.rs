@@ -1,0 +1,5 @@
+pub struct Metrics {
+    pub tokens: u64,
+    pub flash_bytes: u64,
+    pub waves: u64,
+}

@@ -19,6 +19,10 @@ reaches figures.rs or WATCHED, so the perf gate is blind to it.
                        `field` is not a field or method of that struct —
                        the toolchain-free stand-in for type-checking
                        counter renames at their emission sites
+  counter-unexposed    registry field never reaches the Prometheus
+                       exposition (lint.toml exposition_files) — the
+                       `metrics` endpoint silently under-reports; only
+                       checked when exposition_files is configured
 
 Key normalization: strip an `h_` prefix, a trailing `_ns`/`_us`/`_ms`
 unit, and `_pNN` percentile segments; IoSnapshot fields also try an
@@ -174,6 +178,23 @@ def run(project: Project) -> List[Finding]:
             continue
         server_keys.update(emitted_keys(sf))
 
+    # --- exposition key set (Prometheus `metrics` endpoint); the check
+    # only arms when lint.toml names exposition files, so trees without
+    # a metrics endpoint stay green
+    expo_aliases: Dict[str, List[str]] = {}
+    for ent in cfg.get("exposition_aliases", []):
+        field_name, _, key = ent.partition("=")
+        expo_aliases.setdefault(field_name.strip(), []).append(key.strip())
+    expo_files = cfg.get("exposition_files", [])
+    expo_norm: Set[str] = set()
+    for relpath in expo_files:
+        sf = project.files.get(relpath)
+        if sf is None:
+            out.append(Finding(NAME, "registry-missing", relpath, 0,
+                               "exposition file missing from lint tree"))
+            continue
+        expo_norm |= {normalize(k) for k in emitted_keys(sf)}
+
     bench_markers = cfg.get(
         "bench_markers", ["rust/benches/", "bench/figures.rs"]
     )
@@ -226,6 +247,20 @@ def run(project: Project) -> List[Finding]:
                         "trajectory is blind to it",
                     )
                 )
+            if expo_files:
+                evariants = set(variants)
+                for alias in expo_aliases.get(field_name, []):
+                    evariants.add(normalize(alias))
+                if not evariants & expo_norm:
+                    out.append(
+                        Finding(
+                            NAME, "counter-unexposed", relpath, decl_line,
+                            f"{sname}.{field_name} never reaches the "
+                            "Prometheus exposition (exposition_files) — "
+                            "the metrics endpoint under-reports the "
+                            "registry",
+                        )
+                    )
 
     # --- R3/R5: the gate's keys are real
     all_fields_norm: Set[str] = set()
