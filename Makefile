@@ -2,7 +2,8 @@
 # python side (L2/L1) only runs at artifact-build time.
 
 .PHONY: build test artifacts bench-smoke bench-governor bench-sched \
-        bench-kv check-perf trace-smoke chaos lint lint-self-test ci
+        bench-kv bench-kernels check-perf trace-smoke chaos lint \
+        lint-self-test ci
 
 build:
 	cd rust && cargo build --release
@@ -69,16 +70,34 @@ bench-kv:
 	else \
 		echo "bench-kv: no point written (artifacts missing?)"; fi
 
+# Kernel hot-path trajectory point (PERF.md "Kernel hot paths"): dequant
+# block-kernel speedup vs the scalar reference plus the bucketed
+# attention host-copy reduction. Self-asserting (≥1.5× dequant, strictly
+# fewer host bytes than the monolithic gather); the dequant half needs
+# no artifacts, the attention half self-skips without them (keys written
+# as 0, gate inert). Rotates .prev like the other points.
+bench-kernels:
+	cd rust && cargo bench --bench kernels -- \
+		--out ../BENCH_kernels.new.json
+	@if [ -f BENCH_kernels.new.json ]; then \
+		if [ -f BENCH_kernels.json ]; then \
+			cp BENCH_kernels.json BENCH_kernels.prev.json; fi; \
+		mv BENCH_kernels.new.json BENCH_kernels.json; \
+	else \
+		echo "bench-kernels: no point written"; fi
+
 # Diff the decode perf point against the previous run; fails on a >5%
 # tokens/sec regression, on a >5% governor settle-time regression, on a
-# >5% scheduler aggregate-throughput regression, and on a >5% paged-KV
-# admitted-concurrency or aggregate-throughput regression when the
+# >5% scheduler aggregate-throughput regression, on a >5% paged-KV
+# admitted-concurrency or aggregate-throughput regression, and on a >5%
+# kernel dequant-speedup or host-copy-reduction regression when the
 # respective points exist (ROADMAP perf-trajectory gate).
 check-perf:
 	@python3 scripts/check_perf.py BENCH_decode.prev.json BENCH_decode.json \
 		--governor BENCH_governor.prev.json BENCH_governor.json \
 		--sched BENCH_sched.prev.json BENCH_sched.json \
-		--kv BENCH_kv.prev.json BENCH_kv.json
+		--kv BENCH_kv.prev.json BENCH_kv.json \
+		--kernels BENCH_kernels.prev.json BENCH_kernels.json
 
 # Flight-recorder smoke (PERF.md §Observability): validate the committed
 # trace fixtures (no toolchain needed), then produce a real Chrome trace
@@ -128,4 +147,4 @@ lint-self-test:
 # artifacts, leaving the gates inert. Runs on GitHub Actions via
 # .github/workflows/ci.yml.
 ci: lint lint-self-test build test chaos bench-smoke bench-sched \
-    bench-kv check-perf trace-smoke
+    bench-kv bench-kernels check-perf trace-smoke

@@ -30,6 +30,10 @@ from . import model as M
 F32 = jnp.float32
 I32 = jnp.int32
 
+# Smallest bucketed attention window to compile (== the runtime's default
+# --kv-block-tokens; buckets below one KV block can never be selected).
+ATTN_BUCKET_FLOOR = 16
+
 
 def to_hlo_text(lowered) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -65,6 +69,21 @@ def artifact_specs(cfg: ModelConfig):
         ("attn_core", functools.partial(M.attn_core_step, cfg),
          [S(1, qd), S(1, dkv), S(1, dkv), S(cfg.max_seq, dkv),
           S(cfg.max_seq, dkv), jax.ShapeDtypeStruct((), I32)], 3),
+    ]
+    # Length-bucketed attention windows: power-of-two caps from the
+    # default KV block size up to (excl.) max_seq — the full window stays
+    # plain "attn_core". The rust engine gathers only ceil-to-bucket rows
+    # per step instead of the whole [max_seq, d_kv] window; artifact count
+    # is bounded by log2(max_seq). Same traced function — any cap >=
+    # pos+1 is bit-identical (see model.attn_core_step).
+    cap = ATTN_BUCKET_FLOOR
+    while cap < cfg.max_seq:
+        specs.append(
+            (f"attn_core_{cap}", functools.partial(M.attn_core_step, cfg),
+             [S(1, qd), S(1, dkv), S(1, dkv), S(cap, dkv), S(cap, dkv),
+              jax.ShapeDtypeStruct((), I32)], 3))
+        cap *= 2
+    specs += [
         ("logits", M.logits_step, [S(1, d), S(d, V)], 1),
         ("dense_layer", functools.partial(M.dense_layer_step, cfg),
          [S(1, d), S(d, qd), S(d, dkv), S(d, dkv), S(qd, d), S(d, dff),

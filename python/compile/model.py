@@ -200,11 +200,17 @@ def qkv_step(xs, wq, wk, wv):
 def attn_core_step(cfg: ModelConfig, q, k_new, v_new, kv_k, kv_v, pos):
     """Single-token attention with a static-shape KV cache.
 
-    q [1,q_dim], k_new/v_new [1,d_kv], kv_k/kv_v [max_seq,d_kv], pos scalar
+    q [1,q_dim], k_new/v_new [1,d_kv], kv_k/kv_v [cap,d_kv], pos scalar
     i32 -> (attn_out [1,q_dim], kv_k', kv_v'). RoPE applied to q and k_new at
     `pos`; causal mask is `iota <= pos`.
+
+    The window length is read off the cache operand, so one function lowers
+    both the full `max_seq` artifact and the length-bucketed
+    ``attn_core_<cap>`` family: any cap >= pos+1 is bit-identical to the
+    full window, because masked lanes get -1e30 whose softmax weight
+    underflows to exactly 0.0 in f32.
     """
-    S = cfg.max_seq
+    S = kv_k.shape[0]
     angles = rope_freqs(cfg, pos[None].astype(jnp.float32))  # [1, hd/2]
     qh = apply_rope(q.reshape(1, cfg.n_heads, cfg.head_dim), angles)
     kh = apply_rope(k_new.reshape(1, cfg.n_kv_heads, cfg.head_dim), angles)

@@ -67,6 +67,7 @@ fn main() {
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
         kv_block_tokens: 16,
+        attn_buckets: true,
     })
     .unwrap();
     // serial single-sequence bench: a KV pool sized for one sequence, so

@@ -1,0 +1,224 @@
+//! Kernel hot-path bench (PERF.md "Kernel hot paths"): the two rewrites
+//! from the bucketed-attention PR, each self-asserting.
+//!
+//! (a) **Dequant:** the block-kernel `dequantize_row` (fixed 32-lane
+//! loops, hoisted scale, bounds-check-free zips — written to
+//! autovectorize) must beat the retained value-by-value
+//! `dequantize_row_scalar` reference by ≥1.5× wall clock on both q8_0
+//! and q4_0, decoding the same bytes bit-identically. Pure `layout::
+//! quant` — needs no artifacts, so this half always gates.
+//!
+//! (b) **Bucketed attention:** a short decode through the smallest
+//! compiled `attn_core_<cap>` windows must move strictly fewer host
+//! bytes (`host_copy_bytes`) than the same decode through the monolithic
+//! `[max_seq, d_kv]` gather, with a token-identical stream. Self-skips
+//! without artifacts (keys written as 0 → the `--kernels` gate skips).
+//!
+//! Writes `BENCH_kernels.json` (`--out`) for the `check-perf --kernels`
+//! trajectory gate; the four kernel counters land here so the counters
+//! pass's watched-unemitted rule sees a bench emitter for each.
+
+mod support;
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use activeflow::cache::CachePolicy;
+use activeflow::device;
+use activeflow::engine::{
+    EngineOptions, PreloadTrigger, SwapEngine, SwapMode,
+};
+use activeflow::flash::ClockMode;
+use activeflow::layout::quant::{
+    dequantize_row, dequantize_row_scalar, quantize_row, Quant,
+};
+use activeflow::tokenizer;
+use activeflow::util::json::{num, obj, s};
+use activeflow::util::rng::Xorshift;
+
+/// Row width for the dequant microbench — a realistic FFN row, a
+/// multiple of QBLOCK.
+const DOUT: usize = 1024;
+const N_ROWS: usize = 256;
+/// Decode passes per timing sample; best-of-TRIALS wall clock on each
+/// side keeps scheduler noise out of the ratio.
+const PASSES: usize = 40;
+const TRIALS: usize = 5;
+const MIN_SPEEDUP: f64 = 1.5;
+const N_GEN: usize = 10;
+
+fn opts() -> EngineOptions {
+    EngineOptions {
+        sparsity: 0.6,
+        group_size: 4,
+        swap_mode: SwapMode::Preload,
+        cache_bytes: 256 * 1024,
+        cache_policy: CachePolicy::Contextual,
+        device: &device::PIXEL6,
+        clock: ClockMode::Modeled,
+        bw_scale: 1.0,
+        trigger: PreloadTrigger::FirstLayer,
+        io_queue_depth: 0,
+        kv_block_tokens: 16,
+        attn_buckets: true,
+    }
+}
+
+fn out_path() -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "../BENCH_kernels.json".into())
+}
+
+/// Best-of-`TRIALS` wall time (µs) for `PASSES` full decodes of every
+/// packed row through `f`.
+fn time_decode<F: FnMut(&[u8], &mut [f32])>(
+    rows: &[Vec<u8>],
+    scratch: &mut [f32],
+    mut f: F,
+) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..TRIALS {
+        let t0 = Instant::now();
+        for _ in 0..PASSES {
+            for r in rows {
+                f(black_box(r), scratch);
+            }
+            black_box(&scratch);
+        }
+        best = best.min(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    best
+}
+
+/// Dequant half: speedup (block kernels / scalar reference) for one
+/// quant kind, with a bit-exactness cross-check on every row.
+fn bench_dequant(q: Quant) -> f64 {
+    let mut rng = Xorshift::new(0x9e3779b97f4a7c15);
+    let rows: Vec<Vec<u8>> = (0..N_ROWS)
+        .map(|_| {
+            let row: Vec<f32> =
+                (0..DOUT).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+            quantize_row(&row, q)
+        })
+        .collect();
+    let mut a = vec![0f32; DOUT];
+    let mut b = vec![0f32; DOUT];
+    for r in &rows {
+        dequantize_row(r, q, &mut a);
+        dequantize_row_scalar(r, q, &mut b);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{}: block kernel diverged from scalar reference",
+            q.name()
+        );
+    }
+    // warm both paths once before timing
+    let scalar_us =
+        time_decode(&rows, &mut b, |r, d| dequantize_row_scalar(r, q, d));
+    let vector_us =
+        time_decode(&rows, &mut a, |r, d| dequantize_row(r, q, d));
+    let speedup = scalar_us / vector_us;
+    let rows_total = (N_ROWS * PASSES) as f64;
+    println!(
+        "kernels::dequant_{}  scalar {:>9.1} us  block {:>9.1} us  \
+         ({speedup:.2}x, {:.1} Mrow/s)",
+        q.name(),
+        scalar_us,
+        vector_us,
+        rows_total / vector_us
+    );
+    assert!(
+        speedup >= MIN_SPEEDUP,
+        "{} block kernel is only {speedup:.2}x the scalar reference \
+         (acceptance floor {MIN_SPEEDUP}x)",
+        q.name()
+    );
+    speedup
+}
+
+/// Attention half: decode the same short sequence bucketed and
+/// monolithic; returns the kernel counters, or zeros when the artifact
+/// set has no `attn_core_<cap>` programs.
+fn bench_attention(
+    dir: &std::path::Path,
+) -> (u64, u64, u64, u64, u64, f64) {
+    let prompt = tokenizer::encode("the sparse model swaps ");
+    let mut bucketed = SwapEngine::open(dir, opts()).unwrap();
+    let mut mono_opts = opts();
+    mono_opts.attn_buckets = false;
+    let mut mono = SwapEngine::open(dir, mono_opts).unwrap();
+    let tb = bucketed.generate(&prompt, N_GEN, 0.0).unwrap();
+    let tm = mono.generate(&prompt, N_GEN, 0.0).unwrap();
+    assert_eq!(
+        tb, tm,
+        "bucketed attention changed the decoded stream — bit-safety \
+         broken, not a perf question"
+    );
+    let mb = &bucketed.metrics;
+    if mb.attn_bucket_cap == 0 {
+        println!(
+            "kernels::attention  [skip] no attn_core_<cap> artifacts — \
+             monolithic fallback ran (rebuild with `make artifacts`)"
+        );
+        return (0, 0, 0, 0, 0, 0.0);
+    }
+    let mono_bytes = mono.metrics.host_copy_bytes;
+    assert!(
+        mb.host_copy_bytes < mono_bytes,
+        "bucketed host_copy_bytes {} must be strictly below the \
+         monolithic gather baseline {mono_bytes} for short sequences",
+        mb.host_copy_bytes
+    );
+    let reduction = mono_bytes as f64 / mb.host_copy_bytes as f64;
+    println!(
+        "kernels::attention  host_copy {} -> {} bytes ({reduction:.2}x \
+         less), peak bucket cap {} (max_seq {})",
+        mono_bytes,
+        mb.host_copy_bytes,
+        mb.attn_bucket_cap,
+        bucketed.model().max_seq
+    );
+    (
+        mb.host_copy_bytes,
+        mono_bytes,
+        mb.attn_bucket_cap,
+        mb.dequant_rows_vectorized,
+        mb.subslab_waste_bytes,
+        reduction,
+    )
+}
+
+fn main() {
+    println!("\n== bench: kernels ==");
+    let sp_q8 = bench_dequant(Quant::Q8_0);
+    let sp_q4 = bench_dequant(Quant::Q4_0);
+
+    let (copy, copy_mono, cap, rows_vec, waste, reduction) =
+        match support::artifacts_dir() {
+            Some(dir) => bench_attention(&dir),
+            None => (0, 0, 0, 0, 0, 0.0),
+        };
+
+    let v = obj(vec![
+        ("bench", s("kernels")),
+        ("device", s(device::PIXEL6.name)),
+        ("dequant_rows", num((N_ROWS * PASSES) as f64)),
+        ("dequant_speedup_q8_0", num(sp_q8)),
+        ("dequant_speedup_q4_0", num(sp_q4)),
+        ("host_copy_bytes", num(copy as f64)),
+        ("host_copy_bytes_monolithic", num(copy_mono as f64)),
+        ("host_copy_reduction", num(reduction)),
+        ("attn_bucket_cap", num(cap as f64)),
+        ("dequant_rows_vectorized", num(rows_vec as f64)),
+        ("subslab_waste_bytes", num(waste as f64)),
+    ]);
+    let out = out_path();
+    let mut text = v.to_string();
+    text.push('\n');
+    std::fs::write(&out, &text).unwrap();
+    println!("wrote {out}");
+}

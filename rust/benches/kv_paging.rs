@@ -50,6 +50,7 @@ fn opts() -> EngineOptions {
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
         kv_block_tokens: KV_BLOCK_TOKENS,
+        attn_buckets: true,
     }
 }
 

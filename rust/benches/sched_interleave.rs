@@ -65,6 +65,7 @@ fn opts() -> EngineOptions {
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
         kv_block_tokens: 16,
+        attn_buckets: true,
     }
 }
 

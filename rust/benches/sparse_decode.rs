@@ -32,6 +32,7 @@ fn main() {
                 trigger: PreloadTrigger::FirstLayer,
                 io_queue_depth: 0,
                 kv_block_tokens: 16,
+                attn_buckets: true,
             },
         )
         .unwrap();

@@ -52,6 +52,7 @@ pub fn activeflow_options(
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
         kv_block_tokens: 16,
+        attn_buckets: true,
     }
 }
 
@@ -75,6 +76,7 @@ pub fn teal_options(
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
         kv_block_tokens: 16,
+        attn_buckets: true,
     }
 }
 
@@ -99,6 +101,7 @@ pub fn llm_in_flash_options(
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
         kv_block_tokens: 16,
+        attn_buckets: true,
     }
 }
 
@@ -121,6 +124,7 @@ pub fn serial_options(
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
         kv_block_tokens: 16,
+        attn_buckets: true,
     }
 }
 

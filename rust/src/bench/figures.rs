@@ -45,6 +45,7 @@ fn opts(
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
         kv_block_tokens: 16,
+        attn_buckets: true,
     }
 }
 

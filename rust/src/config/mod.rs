@@ -197,6 +197,12 @@ pub struct RuntimeConfig {
     /// [`crate::flash::FaultPlan::parse`]) armed on the flash device —
     /// drives the chaos suite's transient/permanent/stall schedules.
     pub fault_spec: Option<String>,
+    /// Length-bucketed attention windows (`--attn-buckets`): run each step
+    /// through the smallest compiled `attn_core_<cap>` artifact covering
+    /// `pos + 1` instead of the monolithic `[max_seq, d_kv]` window.
+    /// Bit-identical output; falls back to monolithic automatically when
+    /// the artifact dir predates bucketed compilation.
+    pub attn_buckets: bool,
 }
 
 impl Default for RuntimeConfig {
@@ -217,6 +223,7 @@ impl Default for RuntimeConfig {
             kv_block_tokens: 16,
             pressure_file: None,
             fault_spec: None,
+            attn_buckets: true,
         }
     }
 }
@@ -264,6 +271,7 @@ mod tests {
         assert_eq!(rc.kv_block_tokens, 16);
         assert!(rc.pressure_file.is_none());
         assert!(rc.fault_spec.is_none(), "faults are strictly opt-in");
+        assert!(rc.attn_buckets, "bucketed attention is the default path");
     }
 
     #[test]

@@ -105,6 +105,14 @@ pub struct EngineOptions {
     /// a sequence holds `ceil(pos / kv_block_tokens)` blocks instead of a
     /// whole `max_seq` window.
     pub kv_block_tokens: usize,
+    /// Length-bucketed attention (`--attn-buckets`): run `attn_core_<cap>`
+    /// artifacts on the smallest compiled power-of-two window covering
+    /// `pos + 1` instead of always materializing the full
+    /// `[max_seq, d_kv]` gather. Bit-identical to the monolithic window
+    /// (masked lanes softmax to exactly 0.0); falls back to it
+    /// automatically when the artifact dir predates the bucketed
+    /// compile. Default on.
+    pub attn_buckets: bool,
 }
 
 impl EngineOptions {
@@ -125,6 +133,7 @@ impl EngineOptions {
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: rc.io_queue_depth,
             kv_block_tokens: rc.kv_block_tokens,
+            attn_buckets: rc.attn_buckets,
         }
     }
 }
@@ -335,10 +344,28 @@ pub struct SwapEngine {
     ondemand: Vec<(usize, usize, usize)>, // (op slot in family, row slot, channel)
     staged: Vec<(usize, usize, usize)>,   // slab hits awaiting batched insert
     rowf32: Vec<f32>,
-    /// Contiguous `[max_seq, d_kv]` K/V windows the block table is
-    /// gathered into for the attn_core call (and scattered back from).
+    /// K/V windows the block table is gathered into for the attn_core
+    /// call (and scattered back from). Monolithic mode keeps them at
+    /// `[max_seq, d_kv]`; bucketed mode sizes them to the selected
+    /// `attn_core_<cap>` window each step.
     kv_k: Vec<f32>,
     kv_v: Vec<f32>,
+    /// High-water mark (rows) of the K/V scratch: every scratch row at
+    /// index `>= kv_dirty` is zero. Bucketed attention gathers only the
+    /// written prefix and zeroes just the `pos..kv_dirty` stale band, so
+    /// the zero-tail memset the monolithic gather paid every step happens
+    /// only on bucket growth / sequence interleave.
+    kv_dirty: usize,
+    /// Compiled attention windows, ascending by cap, always ending with
+    /// `(max_seq, "attn_core")`. Empty = bucketed attention off (option
+    /// disabled, or the artifact dir has no `attn_core_<cap>` files) —
+    /// the step falls back to the monolithic gather path.
+    attn_wins: Vec<(usize, String)>,
+    /// Loader cumulative counters already folded into [`DecodeMetrics`]
+    /// (`rows_dequantized`, `subslab_waste_bytes`) — step-end mirroring
+    /// adds deltas, same scheme as the io_* counters.
+    loader_rows_seen: u64,
+    loader_waste_seen: u64,
 }
 
 impl SwapEngine {
@@ -381,6 +408,28 @@ impl SwapEngine {
             "logits".to_string(),
         ] {
             rt.load(&name)?;
+        }
+        // Length-bucketed attention windows: probe the artifact dir for
+        // `attn_core_<cap>` files at every power-of-two cap below
+        // max_seq. Missing files (an artifact dir from before the
+        // bucketed compile) leave the list empty and the step on the
+        // monolithic path — graceful degradation, never an error. The
+        // full window rides last so bucket selection is one
+        // partition_point over a (cap, name) list with no fallback case.
+        let mut attn_wins: Vec<(usize, String)> = Vec::new();
+        if opts.attn_buckets {
+            let mut cap = 2usize;
+            while cap < m.max_seq {
+                let name = format!("attn_core_{cap}");
+                if artifact_dir.join(format!("{name}.hlo.txt")).exists() {
+                    rt.load(&name)?;
+                    attn_wins.push((cap, name));
+                }
+                cap *= 2;
+            }
+            if !attn_wins.is_empty() {
+                attn_wins.push((m.max_seq, "attn_core".to_string()));
+            }
         }
 
         // one flight recorder for the whole decode stack: the loader and
@@ -437,6 +486,10 @@ impl SwapEngine {
             rowf32: vec![0.0; dff.max(cfg.model.vocab_size)],
             kv_k: vec![0.0; kv_scr],
             kv_v: vec![0.0; kv_scr],
+            kv_dirty: 0,
+            attn_wins,
+            loader_rows_seen: 0,
+            loader_waste_seen: 0,
             cfg,
             opts,
             rt,
@@ -933,33 +986,87 @@ impl SwapEngine {
                         as u64
                         * 4;
 
-                // materialize this layer's contiguous [max_seq, d_kv]
-                // window out of the block table (written rows + zero
-                // tail — bit-identical to the old monolithic buffer),
-                // run the artifact, then scatter the written prefix back
-                seq.kv.gather_layer(
-                    &self.kvpool,
-                    l,
-                    pos,
-                    &mut self.kv_k,
-                    &mut self.kv_v,
-                );
-                let s = m.max_seq as i64;
-                let dkv = m.d_kv() as i64;
+                // materialize this layer's attention window out of the
+                // block table. Bucketed mode picks the smallest compiled
+                // `attn_core_<cap>` covering pos+1, gathers only the
+                // written prefix, and zeroes just the `pos..kv_dirty`
+                // stale band (rows >= kv_dirty are zero by invariant) —
+                // bit-identical to the monolithic [max_seq, d_kv] window
+                // because masked lanes softmax to exactly 0.0. With no
+                // bucket artifacts the old full gather + zero tail runs.
+                let dkv = m.d_kv();
+                let (cap, win) = if self.attn_wins.is_empty() {
+                    (m.max_seq, None)
+                } else {
+                    let i = self
+                        .attn_wins
+                        .partition_point(|(c, _)| *c < pos + 1);
+                    (self.attn_wins[i].0, Some(i))
+                };
+                if win.is_some() {
+                    if self.kv_k.len() < cap * dkv {
+                        // bucket growth: the only full-tail memset left
+                        self.kv_k.resize(cap * dkv, 0.0);
+                        self.kv_v.resize(cap * dkv, 0.0);
+                    }
+                    seq.kv.gather_layer_prefix(
+                        &self.kvpool,
+                        l,
+                        pos,
+                        &mut self.kv_k,
+                        &mut self.kv_v,
+                    );
+                    let hi = (self.kv_dirty * dkv).min(self.kv_k.len());
+                    if hi > pos * dkv {
+                        self.kv_k[pos * dkv..hi].fill(0.0);
+                        self.kv_v[pos * dkv..hi].fill(0.0);
+                        self.metrics.host_copy_bytes +=
+                            2 * 4 * (hi - pos * dkv) as u64;
+                    }
+                } else {
+                    seq.kv.gather_layer(
+                        &self.kvpool,
+                        l,
+                        pos,
+                        &mut self.kv_k,
+                        &mut self.kv_v,
+                    );
+                    // the per-step zero tail the bucketed path retires
+                    self.metrics.host_copy_bytes +=
+                        2 * 4 * ((m.max_seq - pos) * dkv) as u64;
+                }
+                // window traffic: gathered prefix + literal upload and
+                // download of both sides + the one-row scatter-back
+                self.metrics.host_copy_bytes += 2 * 4 * (pos * dkv) as u64
+                    + 4 * 4 * (cap * dkv) as u64
+                    + 2 * 4 * dkv as u64;
+                self.metrics.attn_bucket_cap =
+                    self.metrics.attn_bucket_cap.max(cap as u64);
+                let s = cap as i64;
+                let dkv64 = dkv as i64;
                 let core = self.rt.exec(
-                    "attn_core",
+                    match win {
+                        Some(i) => self.attn_wins[i].1.as_str(),
+                        None => "attn_core",
+                    },
                     &[
                         qkv[0].clone(),
                         qkv[1].clone(),
                         qkv[2].clone(),
-                        lit_f32(&self.kv_k, &[s, dkv])?,
-                        lit_f32(&self.kv_v, &[s, dkv])?,
+                        lit_f32(&self.kv_k[..cap * dkv], &[s, dkv64])?,
+                        lit_f32(&self.kv_v[..cap * dkv], &[s, dkv64])?,
                         lit_i32_scalar(pos as i32),
                     ],
                 )?;
                 lit_to_f32(&core[0], &mut self.tmp)?; // attn out [q_dim]
                 lit_to_f32(&core[1], &mut self.kv_k)?;
                 lit_to_f32(&core[2], &mut self.kv_v)?;
+                if win.is_some() {
+                    // the artifact passed rows pos+1..cap through as the
+                    // zeros they came in as; the scratch is now exactly
+                    // the [cap, d_kv] window
+                    self.kv_dirty = pos + 1;
+                }
                 // only row `pos` is new — rows 0..pos came out of the
                 // table via the gather and pass through attn_core
                 // unchanged, so one row write keeps the table exact
@@ -1161,6 +1268,14 @@ impl SwapEngine {
             self.metrics.slab_bytes_peak.max(loader.slab_bytes_peak);
         self.peak_preload_bytes =
             self.peak_preload_bytes.max(loader.slab_bytes_peak);
+        // loader-side cumulative counters → per-engine deltas (the loader
+        // thread outlives individual steps; fold only what's new)
+        self.metrics.dequant_rows_vectorized +=
+            loader.rows_dequantized - self.loader_rows_seen;
+        self.loader_rows_seen = loader.rows_dequantized;
+        self.metrics.subslab_waste_bytes +=
+            loader.subslab_waste_bytes - self.loader_waste_seen;
+        self.loader_waste_seen = loader.subslab_waste_bytes;
         self.metrics.kv_blocks_peak = self
             .metrics
             .kv_blocks_peak
@@ -1862,6 +1977,7 @@ fn fetch_ondemand_rows(
                     m.flash_bytes += span as u64;
                     m.ondemand_coalesced_runs += 1;
                     m.ondemand_rows += run.len as u64;
+                    m.dequant_rows_vectorized += run.len as u64;
                     for r in 0..run.len {
                         let (_, slot, _) = ondemand[run.i + r];
                         quant::dequantize_row(
@@ -1901,6 +2017,7 @@ fn fetch_ondemand_rows(
                 continue;
             }
             m.ondemand_rows += run.len as u64;
+            m.dequant_rows_vectorized += run.len as u64;
         }
         let tc = cache.tensor_mut(TensorId::new(layer, op));
         let rows: &[f32] = &bufs[oi];

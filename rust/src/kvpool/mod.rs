@@ -338,6 +338,41 @@ impl SeqKv {
         v_out[pos * d..].fill(0.0);
     }
 
+    /// Prefix-only gather for the length-bucketed attention path: copy
+    /// rows `0..pos` of one layer out of the block table and touch
+    /// **nothing else** — no zero tail. The caller (the engine's bucketed
+    /// attention) owns tail hygiene via its scratch high-water mark, so
+    /// the O(max_seq·d_kv) per-step memset [`SeqKv::gather_layer`] pays
+    /// becomes a once-per-bucket-growth cost. Blocks are zeroed by
+    /// [`KvPool::alloc`] on (re)materialization, so rows `0..pos` can
+    /// never read another sequence's stale data (property-tested below).
+    // pallas-lint: hot-path
+    pub fn gather_layer_prefix(
+        &self,
+        pool: &KvPool,
+        layer: usize,
+        pos: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let d = pool.d_kv;
+        let bt = pool.block_tokens;
+        debug_assert!(self.table.len() >= pool.blocks_for(pos));
+        debug_assert!(k_out.len() >= pos * d && v_out.len() >= pos * d);
+        let mut t = 0usize;
+        for &id in &self.table {
+            if t >= pos {
+                break;
+            }
+            let n = bt.min(pos - t);
+            k_out[t * d..(t + n) * d]
+                .copy_from_slice(pool.k_rows(id, layer, 0, n));
+            v_out[t * d..(t + n) * d]
+                .copy_from_slice(pool.v_rows(id, layer, 0, n));
+            t += n;
+        }
+    }
+
     /// Scatter the single row the attention artifact wrote — position
     /// `pos` of one layer — back into its owning block. Rows `0..pos`
     /// were *sourced from the table* by the preceding gather and pass
@@ -545,6 +580,83 @@ mod tests {
             s2.gather_layer(&pool, 0, 0, &mut k_scr, &mut v_scr);
             if k_scr.iter().any(|&x| x != 0.0) {
                 return Err("gather of an unwritten seq must be zeros".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prefix_gather_with_highwater_tail_never_leaks_stale_rows() {
+        // Satellite: the bucketed attention path replaces gather_layer's
+        // per-step O(max_seq·d) zero tail with caller-side hygiene — the
+        // engine keeps a scratch high-water mark `dirty` (rows >= dirty
+        // are zero) and zeroes only `pos..dirty` before a step. Drive
+        // random decode traffic through that exact discipline, across
+        // `release`/re-`alloc` of the same blocks by later sequences,
+        // and require every [cap, d] window handed to the "artifact" to
+        // be bit-identical to the monolithic zero-tailed gather.
+        check("kvpool-prefix-gather", |g| {
+            let bt = g.usize_in(1, 5);
+            let d = g.usize_in(1, 6);
+            let max_seq = g.usize_in(4, 16);
+            let mut pool = KvPool::new(bt, 1, d);
+            // shared engine scratch + its high-water mark, persisting
+            // across sequences (that is where stale data would leak from)
+            let mut k_scr: Vec<f32> = Vec::new();
+            let mut v_scr: Vec<f32> = Vec::new();
+            let mut dirty = 0usize;
+            let mut ref_k = vec![0f32; max_seq * d];
+            let mut ref_v = vec![0f32; max_seq * d];
+            for s in 0..g.usize_in(2, 4) {
+                let mut seq = SeqKv::new();
+                let steps = g.usize_in(1, max_seq);
+                for pos in 0..steps {
+                    if !seq.ensure_tokens(&mut pool, pos + 1) {
+                        return Err("unbounded pool refused a block".into());
+                    }
+                    let cap = (pos + 1).next_power_of_two().min(max_seq);
+                    // engine discipline: grow scratch zero-filled, prefix
+                    // gather, zero only the pos..dirty stale band
+                    if k_scr.len() < cap * d {
+                        k_scr.resize(cap * d, 0.0);
+                        v_scr.resize(cap * d, 0.0);
+                    }
+                    seq.gather_layer_prefix(
+                        &pool, 0, pos, &mut k_scr, &mut v_scr,
+                    );
+                    if dirty > pos {
+                        let hi = (dirty * d).min(k_scr.len());
+                        k_scr[pos * d..hi].fill(0.0);
+                        v_scr[pos * d..hi].fill(0.0);
+                    }
+                    // reference: the monolithic zero-tailed gather
+                    seq.gather_layer(&pool, 0, pos, &mut ref_k, &mut ref_v);
+                    if k_scr[..cap * d] != ref_k[..cap * d]
+                        || v_scr[..cap * d] != ref_v[..cap * d]
+                    {
+                        return Err(format!(
+                            "seq {s} pos {pos} cap {cap}: bucketed window \
+                             diverged from monolithic gather"
+                        ));
+                    }
+                    // "artifact" writes row pos; everything past cap is
+                    // dropped (lit_to_f32 resizes scratch to the window)
+                    for j in 0..d {
+                        let kv = (s * 977 + pos * 131 + j) as f32 + 1.0;
+                        k_scr[pos * d + j] = kv;
+                        v_scr[pos * d + j] = -kv;
+                    }
+                    k_scr.truncate(cap * d);
+                    v_scr.truncate(cap * d);
+                    dirty = pos + 1;
+                    seq.scatter_row(&mut pool, 0, pos, &k_scr, &v_scr);
+                    seq.pos = pos + 1;
+                }
+                // release -> the next sequence re-allocs the same blocks
+                seq.release(&mut pool);
+                if pool.in_use_blocks() != 0 {
+                    return Err("release leaked blocks".into());
+                }
             }
             Ok(())
         });

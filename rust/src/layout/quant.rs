@@ -3,10 +3,26 @@
 //! Bit-exact mirror of `python/compile/export.py`: blocks of 32 values along
 //! the output dim; q8_0 = f32 scale + 32×i8, q4_0 = f32 scale + 16 packed
 //! nibbles (value = (nibble − 8) · scale).
+//!
+//! Decode is structured as fixed 32-lane **block kernels**
+//! ([`dequant_block_q8_0`] / [`dequant_block_q4_0`]): the scale load is
+//! hoisted out of the lane loop, and the loop itself runs over exact-size
+//! subslices via iterator zips so rustc sees no bounds checks and
+//! autovectorizes the convert-and-scale on stable (the destination is
+//! contiguous f32 — the loader slab fill and the engine's on-demand fetch
+//! both decode straight into their target rows). [`dequantize_row_scalar`]
+//! keeps the original value-by-value formulation as the bit-exactness
+//! reference for the property tests and `benches/kernels.rs`. An explicit
+//! `std::simd` formulation lives behind the `portable-simd` feature
+//! (nightly-only; the autovectorized kernels are the shipping path).
 
 use anyhow::{bail, Result};
 
 pub const QBLOCK: usize = 32;
+/// Packed bytes of one q8_0 block: f32 scale + 32 i8 lanes.
+pub const Q8_BLOCK_BYTES: usize = 4 + QBLOCK;
+/// Packed bytes of one q4_0 block: f32 scale + 16 nibble pairs.
+pub const Q4_BLOCK_BYTES: usize = 4 + QBLOCK / 2;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Quant {
@@ -40,18 +56,94 @@ pub fn row_bytes(quant: Quant, dout: usize) -> usize {
         Quant::F32 => 4 * dout,
         Quant::Q8_0 => {
             assert_eq!(dout % QBLOCK, 0);
-            (dout / QBLOCK) * (4 + QBLOCK)
+            (dout / QBLOCK) * Q8_BLOCK_BYTES
         }
         Quant::Q4_0 => {
             assert_eq!(dout % QBLOCK, 0);
-            (dout / QBLOCK) * (4 + QBLOCK / 2)
+            (dout / QBLOCK) * Q4_BLOCK_BYTES
         }
     }
 }
 
-/// Dequantize one packed row into `out` (len == dout). Hot path: no
-/// allocation, used by both the cache fill and the packed-weight gather.
+/// Decode one 32-lane q8_0 block: `src` is one packed block
+/// ([`Q8_BLOCK_BYTES`]), `dst` receives exactly [`QBLOCK`] values. The
+/// exact-size zip over `lanes` compiles to a single widening convert +
+/// splat-multiply vector loop.
+// pallas-lint: hot-path
+#[inline(always)]
+pub fn dequant_block_q8_0(src: &[u8], dst: &mut [f32]) {
+    debug_assert!(src.len() >= Q8_BLOCK_BYTES && dst.len() >= QBLOCK);
+    let scale = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+    let lanes = &src[4..Q8_BLOCK_BYTES];
+    for (d, &q) in dst[..QBLOCK].iter_mut().zip(lanes) {
+        *d = q as i8 as f32 * scale;
+    }
+}
+
+/// Decode one 32-lane q4_0 block: 16 packed nibble pairs, low nibble is
+/// the even lane. Same arithmetic as the scalar reference per lane
+/// (`(nibble − 8)` in i32, then one f32 convert and one multiply), so the
+/// restructuring is bit-exact by construction.
+// pallas-lint: hot-path
+#[inline(always)]
+pub fn dequant_block_q4_0(src: &[u8], dst: &mut [f32]) {
+    debug_assert!(src.len() >= Q4_BLOCK_BYTES && dst.len() >= QBLOCK);
+    let scale = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+    let packed = &src[4..Q4_BLOCK_BYTES];
+    for (pair, &p) in dst[..QBLOCK].chunks_exact_mut(2).zip(packed) {
+        pair[0] = ((p & 0xF) as i32 - 8) as f32 * scale;
+        pair[1] = ((p >> 4) as i32 - 8) as f32 * scale;
+    }
+}
+
+/// Dequantize one packed row into `out` (len == dout; a multiple of
+/// [`QBLOCK`] for the quantized kinds). Hot path: no allocation, used by
+/// both the loader slab fill and the engine's on-demand fetch; decodes
+/// block-by-block through the vectorizable kernels above.
+// pallas-lint: hot-path
 pub fn dequantize_row(data: &[u8], quant: Quant, out: &mut [f32]) {
+    let dout = out.len();
+    match quant {
+        Quant::F32 => {
+            debug_assert_eq!(data.len(), 4 * dout);
+            for (o, b) in out.iter_mut().zip(data.chunks_exact(4)) {
+                *o = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+        }
+        Quant::Q8_0 => {
+            debug_assert_eq!(dout % QBLOCK, 0);
+            debug_assert_eq!(data.len(), (dout / QBLOCK) * Q8_BLOCK_BYTES);
+            for (src, dst) in data
+                .chunks_exact(Q8_BLOCK_BYTES)
+                .zip(out.chunks_exact_mut(QBLOCK))
+            {
+                #[cfg(feature = "portable-simd")]
+                simd::dequant_block_q8_0(src, dst);
+                #[cfg(not(feature = "portable-simd"))]
+                dequant_block_q8_0(src, dst);
+            }
+        }
+        Quant::Q4_0 => {
+            debug_assert_eq!(dout % QBLOCK, 0);
+            debug_assert_eq!(data.len(), (dout / QBLOCK) * Q4_BLOCK_BYTES);
+            for (src, dst) in data
+                .chunks_exact(Q4_BLOCK_BYTES)
+                .zip(out.chunks_exact_mut(QBLOCK))
+            {
+                #[cfg(feature = "portable-simd")]
+                simd::dequant_block_q4_0(src, dst);
+                #[cfg(not(feature = "portable-simd"))]
+                dequant_block_q4_0(src, dst);
+            }
+        }
+    }
+}
+
+/// The original value-by-value decode, retained as the bit-exactness
+/// reference: the block kernels must agree with this on every byte
+/// pattern (property-tested below, self-asserted in `benches/kernels.rs`
+/// which also times the two against each other).
+pub fn dequantize_row_scalar(data: &[u8], quant: Quant, out: &mut [f32]) {
     let dout = out.len();
     match quant {
         Quant::F32 => {
@@ -86,6 +178,51 @@ pub fn dequantize_row(data: &[u8], quant: Quant, out: &mut [f32]) {
                 off += QBLOCK / 2;
             }
         }
+    }
+}
+
+/// Explicit `std::simd` block kernels (nightly; `--features portable-simd`
+/// plus `#![feature(portable_simd)]`, see lib.rs). Same lane arithmetic as
+/// the autovectorized kernels: widen to i32, convert once to f32, one
+/// splat multiply — bit-exact with the scalar reference.
+#[cfg(feature = "portable-simd")]
+pub mod simd {
+    use super::{QBLOCK, Q4_BLOCK_BYTES, Q8_BLOCK_BYTES};
+    use std::simd::prelude::*;
+
+    // pallas-lint: hot-path
+    #[inline(always)]
+    pub fn dequant_block_q8_0(src: &[u8], dst: &mut [f32]) {
+        debug_assert!(src.len() >= Q8_BLOCK_BYTES && dst.len() >= QBLOCK);
+        let scale = Simd::<f32, QBLOCK>::splat(f32::from_le_bytes([
+            src[0], src[1], src[2], src[3],
+        ]));
+        let lanes = Simd::<i8, QBLOCK>::from_slice(&src[4..Q8_BLOCK_BYTES]);
+        let v = lanes.cast::<f32>() * scale;
+        v.copy_to_slice(&mut dst[..QBLOCK]);
+    }
+
+    // pallas-lint: hot-path
+    #[inline(always)]
+    pub fn dequant_block_q4_0(src: &[u8], dst: &mut [f32]) {
+        debug_assert!(src.len() >= Q4_BLOCK_BYTES && dst.len() >= QBLOCK);
+        let scale = Simd::<f32, QBLOCK>::splat(f32::from_le_bytes([
+            src[0], src[1], src[2], src[3],
+        ]));
+        let packed = Simd::<u8, { QBLOCK / 2 }>::from_slice(
+            &src[4..Q4_BLOCK_BYTES],
+        );
+        let lo = (packed & Simd::splat(0xF)).cast::<i32>()
+            - Simd::splat(8i32);
+        let hi = (packed >> Simd::splat(4u8)).cast::<i32>()
+            - Simd::splat(8i32);
+        // even lanes = low nibble, odd lanes = high nibble
+        let (a, b) = lo.interleave(hi);
+        let mut wide = [0i32; QBLOCK];
+        a.copy_to_slice(&mut wide[..QBLOCK / 2]);
+        b.copy_to_slice(&mut wide[QBLOCK / 2..]);
+        let v = Simd::<i32, QBLOCK>::from_array(wide).cast::<f32>() * scale;
+        v.copy_to_slice(&mut dst[..QBLOCK]);
     }
 }
 
@@ -160,6 +297,68 @@ mod tests {
                             ));
                         }
                     }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The tentpole bit-safety property: the block kernels must agree
+    /// with the retained scalar reference on every byte, across all
+    /// quants, row lengths (1..8 blocks — covers every 32-lane tail the
+    /// vectorizer can split), and raw lane patterns the quantizer never
+    /// emits (full i8 range incl. -128, all 16 nibble values, denormal
+    /// and huge finite scales).
+    #[test]
+    fn block_kernels_bit_exact_vs_scalar_reference() {
+        check("dequant-vec-vs-scalar", |g| {
+            let blocks = g.usize_in(1, 8);
+            let dout = QBLOCK * blocks;
+            // adversarial packed bytes: random lanes, finite random scale
+            for (quant, body) in
+                [(Quant::Q8_0, QBLOCK), (Quant::Q4_0, QBLOCK / 2)]
+            {
+                let mut packed = Vec::new();
+                for _ in 0..blocks {
+                    let scale = match g.usize_in(0, 3) {
+                        0 => g.f32_range(-4.0, 4.0),
+                        1 => 1.0e-38,             // near-denormal
+                        2 => 3.0e38,              // near-overflow product
+                        _ => -0.0,
+                    };
+                    packed.extend_from_slice(&scale.to_le_bytes());
+                    for _ in 0..body {
+                        packed.push(g.usize_in(0, 255) as u8);
+                    }
+                }
+                let mut fast = vec![f32::NAN; dout];
+                let mut refr = vec![f32::NAN; dout];
+                dequantize_row(&packed, quant, &mut fast);
+                dequantize_row_scalar(&packed, quant, &mut refr);
+                for i in 0..dout {
+                    if fast[i].to_bits() != refr[i].to_bits() {
+                        return Err(format!(
+                            "{quant:?} lane {i}: {} != {} (bits {:#x} vs \
+                             {:#x})",
+                            fast[i],
+                            refr[i],
+                            fast[i].to_bits(),
+                            refr[i].to_bits()
+                        ));
+                    }
+                }
+            }
+            // f32 passthrough at non-block lengths (1..97 values)
+            let n = g.usize_in(1, 97);
+            let row = g.vec_f32(n, -1e6, 1e6);
+            let packed = quantize_row(&row, Quant::F32);
+            let mut fast = vec![f32::NAN; n];
+            let mut refr = vec![f32::NAN; n];
+            dequantize_row(&packed, Quant::F32, &mut fast);
+            dequantize_row_scalar(&packed, Quant::F32, &mut refr);
+            for i in 0..n {
+                if fast[i].to_bits() != refr[i].to_bits() {
+                    return Err(format!("f32 lane {i} diverged"));
                 }
             }
             Ok(())

@@ -1,3 +1,7 @@
+// `portable-simd` opts the quant block kernels into explicit `std::simd`
+// lanes (nightly only); the default build ships the autovectorized scalar
+// formulation in `layout::quant`.
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
 //! # ActiveFlow
 //!
 //! Reproduction of *"Scaling Up On-Device LLMs via Active-Weight Swapping

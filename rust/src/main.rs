@@ -90,6 +90,9 @@ pub fn engine_options(args: &Args) -> Result<EngineOptions> {
         // paged KV: tokens per block (a sequence holds ceil(pos/bt)
         // blocks instead of a whole max_seq window)
         kv_block_tokens: args.opt_usize("kv-block-tokens", 16)?.max(1),
+        // length-bucketed attention windows; "off" forces the monolithic
+        // [max_seq, d_kv] gather (bit-identical either way)
+        attn_buckets: args.opt_or("attn-buckets", "on") != "off",
     })
 }
 
@@ -237,6 +240,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     rc.sched_queue_cap =
         args.opt_usize("sched-queue-cap", rc.sched_queue_cap)?;
     rc.kv_block_tokens = opts.kv_block_tokens;
+    rc.attn_buckets = opts.attn_buckets;
     rc.fault_spec = args.opt("faults").map(String::from);
     if let Some(spec) = &rc.fault_spec {
         // fail fast on a bad spec — before the engine worker spawns

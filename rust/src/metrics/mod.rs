@@ -118,6 +118,25 @@ pub struct DecodeMetrics {
     /// (newest-first; distinct from budget-ceiling preemptions, which
     /// count only under `seqs_preempted`).
     pub kv_preemptions_oom: u64,
+    // ---- kernel hot-path counters (bucketed attention + block-kernel
+    //      dequant, PERF.md "Kernel hot paths")
+    /// Host-side bytes moved per attention window: gathered prefix rows,
+    /// stale-band/tail zeroing, literal upload + download of both cache
+    /// sides, and the one-row scatter-back. Bucketing exists to shrink
+    /// this — the monolithic path pays the full `[max_seq, d_kv]` window
+    /// every step.
+    pub host_copy_bytes: u64,
+    /// Largest attention window cap executed (`attn_core_<cap>` bucket,
+    /// or `max_seq` on the monolithic path). A peak, merged as a max.
+    pub attn_bucket_cap: u64,
+    /// Rows dequantized through the vectorized block kernels
+    /// (`layout::quant::dequantize_row`): loader slab fills + on-demand
+    /// engine fetches.
+    pub dequant_rows_vectorized: u64,
+    /// Union-allocation bytes avoided by the loader's per-span sub-slab
+    /// split on straddling layout partitions (delta-folded from
+    /// `LoaderStats::subslab_waste_bytes`).
+    pub subslab_waste_bytes: u64,
     // ---- latency histograms (trace module; always on — fixed-size,
     //      allocation-free, so the hot path records unconditionally)
     /// Inter-token latency in µs: per-step wall time on the solo path,
@@ -203,6 +222,10 @@ impl DecodeMetrics {
         self.cross_token_preloads += other.cross_token_preloads;
         self.kv_blocks_peak = self.kv_blocks_peak.max(other.kv_blocks_peak);
         self.kv_preemptions_oom += other.kv_preemptions_oom;
+        self.host_copy_bytes += other.host_copy_bytes;
+        self.attn_bucket_cap = self.attn_bucket_cap.max(other.attn_bucket_cap);
+        self.dequant_rows_vectorized += other.dequant_rows_vectorized;
+        self.subslab_waste_bytes += other.subslab_waste_bytes;
         self.h_itl_us.merge(&other.h_itl_us);
         self.h_wave_us.merge(&other.h_wave_us);
         self.h_admission_wait_us.merge(&other.h_admission_wait_us);
@@ -349,6 +372,13 @@ mod tests {
         a.kv_blocks_peak = 7;
         b.kv_blocks_peak = 5;
         b.kv_preemptions_oom = 2;
+        a.host_copy_bytes = 1000;
+        a.attn_bucket_cap = 64;
+        a.dequant_rows_vectorized = 11;
+        b.host_copy_bytes = 500;
+        b.attn_bucket_cap = 32;
+        b.dequant_rows_vectorized = 4;
+        b.subslab_waste_bytes = 2048;
         a.merge(&b);
         assert_eq!(a.cache_lock_acquires, 10);
         assert_eq!(a.cache_locks_avoided, 15);
@@ -381,6 +411,10 @@ mod tests {
         assert_eq!(a.rebudget_settle, Duration::from_millis(3));
         assert_eq!(a.kv_blocks_peak, 7, "block peak is a max, not a sum");
         assert_eq!(a.kv_preemptions_oom, 2);
+        assert_eq!(a.host_copy_bytes, 1500);
+        assert_eq!(a.attn_bucket_cap, 64, "bucket cap is a max, not a sum");
+        assert_eq!(a.dequant_rows_vectorized, 15);
+        assert_eq!(a.subslab_waste_bytes, 2048);
     }
 
     #[test]

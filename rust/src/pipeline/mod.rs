@@ -138,13 +138,33 @@ enum Msg {
 /// pre-filtered list, or a failed read) stay unfilled and `row()` returns
 /// `None` for them, which sends the engine down its on-demand path exactly
 /// like a store miss did under the old per-row `HashMap`.
+///
+/// When a straddling runtime group's partitions filter to *different*
+/// channel lists, the slab is built from per-span **sub-slabs** (`segs`)
+/// instead of one union layout: each span gets exactly its own
+/// `channels × layers[lo..hi]` rows, packed back to back. The old union
+/// allocation materialized every (union channel, layer) row and left the
+/// out-of-span ones permanently unfilled — pure DRAM waste the governor
+/// ledger still had to carry (`LoaderStats::subslab_waste_bytes` counts
+/// what the split saves). `segs` empty = classic single-segment union
+/// layout (single-span parts, identical lists — the common case).
 pub struct PartSlab {
     pub op: OpKind,
     layers: Arc<[usize]>,
     channels: Vec<usize>,
+    segs: Vec<SlabSeg>,
     d_out: usize,
     filled: Vec<bool>,
     data: Vec<f32>,
+}
+
+/// One per-span sub-slab of a split [`PartSlab`]: rows for
+/// `channels × layers[lo..hi]`, channel-major, starting at row `base`.
+struct SlabSeg {
+    lo: usize,
+    hi: usize,
+    channels: Vec<usize>,
+    base: usize,
 }
 
 impl PartSlab {
@@ -175,6 +195,56 @@ impl PartSlab {
             op,
             layers,
             channels,
+            segs: Vec::new(),
+            d_out,
+            filled: vec![false; rows],
+            data: vec![0f32; rows * d_out],
+        }
+    }
+
+    /// Lay out per-span sub-slabs: one row block per span, packed back to
+    /// back. `span_chs[i]` is span i's sorted + deduplicated channel
+    /// list; spans are clamped to the layer range so a malformed
+    /// hand-built span degrades to empty rather than panicking.
+    fn build_segs(
+        layers_len: usize,
+        spans: &[PartSpan],
+        span_chs: Vec<Vec<usize>>,
+    ) -> (Vec<SlabSeg>, usize) {
+        let mut segs = Vec::with_capacity(spans.len());
+        let mut rows = 0usize;
+        for (span, chs) in spans.iter().zip(span_chs) {
+            let hi = span.hi.min(layers_len);
+            let lo = span.lo.min(hi);
+            let n = chs.len() * (hi - lo);
+            segs.push(SlabSeg {
+                lo,
+                hi,
+                channels: chs,
+                base: rows,
+            });
+            rows += n;
+        }
+        (segs, rows)
+    }
+
+    /// Construct a **split** slab: one sub-slab per span (see `segs` on
+    /// the struct doc). `union` stays the public `channels()` index;
+    /// `span_chs` must be sorted + deduplicated per span.
+    pub fn from_spans(
+        op: OpKind,
+        layers: Arc<[usize]>,
+        spans: &[PartSpan],
+        span_chs: Vec<Vec<usize>>,
+        union: Vec<usize>,
+        d_out: usize,
+    ) -> PartSlab {
+        let (segs, rows) = Self::build_segs(layers.len(), spans, span_chs);
+        PartSlab {
+            op,
+            layers,
+            channels: union,
+            segs,
             d_out,
             filled: vec![false; rows],
             data: vec![0f32; rows * d_out],
@@ -182,9 +252,21 @@ impl PartSlab {
     }
 
     fn slot(&self, layer: usize, channel: usize) -> Option<usize> {
-        let ci = self.channels.binary_search(&channel).ok()?;
         let li = self.layers.iter().position(|&l| l == layer)?;
-        Some(ci * self.layers.len() + li)
+        if self.segs.is_empty() {
+            let ci = self.channels.binary_search(&channel).ok()?;
+            return Some(ci * self.layers.len() + li);
+        }
+        for seg in &self.segs {
+            if li >= seg.lo && li < seg.hi {
+                if let Ok(ci) = seg.channels.binary_search(&channel) {
+                    return Some(
+                        seg.base + ci * (seg.hi - seg.lo) + (li - seg.lo),
+                    );
+                }
+            }
+        }
+        None
     }
 
     /// Borrow one dequantized row (engine consumption, lock-free through
@@ -241,6 +323,27 @@ impl PartSlab {
         let rows = channels.len() * layers.len();
         self.layers = layers;
         self.channels = channels;
+        self.segs.clear();
+        self.rearm(rows);
+    }
+
+    /// [`PartSlab::reset`] for a **split** request: re-arms the retired
+    /// slab with per-span sub-slabs instead of the union layout.
+    pub fn reset_spans(
+        &mut self,
+        layers: Arc<[usize]>,
+        spans: &[PartSpan],
+        span_chs: Vec<Vec<usize>>,
+        union: Vec<usize>,
+    ) {
+        let (segs, rows) = Self::build_segs(layers.len(), spans, span_chs);
+        self.layers = layers;
+        self.channels = union;
+        self.segs = segs;
+        self.rearm(rows);
+    }
+
+    fn rearm(&mut self, rows: usize) {
         self.filled.clear();
         self.filled.resize(rows, false);
         self.data.clear();
@@ -388,6 +491,17 @@ pub struct LoaderStats {
     /// published, waiters fell back to on-demand. Surfaced by the server
     /// as `parts_failed` so loader trouble is visible beyond stderr.
     pub parts_failed: u64,
+    /// Rows dequantized into slabs through the vectorized block kernels
+    /// (`layout::quant::dequantize_row`). The engine delta-folds this
+    /// into `DecodeMetrics::dequant_rows_vectorized` alongside its own
+    /// on-demand rows.
+    pub rows_dequantized: u64,
+    /// Union-allocation bytes the per-span sub-slab split avoided:
+    /// admitted parts whose span channel lists diverge allocate exactly
+    /// `Σ span_channels × span_layers` rows instead of
+    /// `union_channels × all_layers`. Delta-folded into
+    /// `DecodeMetrics::subslab_waste_bytes`.
+    pub subslab_waste_bytes: u64,
     /// Modeled flash busy time.
     pub busy: Duration,
 }
@@ -679,12 +793,12 @@ impl LoaderWorker {
         reqs: &mut Vec<(u64, usize)>,
     ) -> PartPlan {
         let cap = self.shared.slab_cap.load(Ordering::Relaxed);
-        // The slab's size is fully determined before any I/O (union of
-        // span channels × layers × d_out); a part that would overflow the
-        // governor's ceiling is dropped *before* reading flash — paying
-        // the reads and then discarding the slab would make preload
-        // strictly worse than disabled under a tight cap. The union is
-        // normalized once here and handed to the slab allocation.
+        // The slab's size is fully determined before any I/O; a part that
+        // would overflow the governor's ceiling is dropped *before*
+        // reading flash — paying the reads and then discarding the slab
+        // would make preload strictly worse than disabled under a tight
+        // cap. The union is normalized once here and handed to the slab
+        // allocation.
         let mut union: Vec<usize> = part
             .spans
             .iter()
@@ -692,10 +806,38 @@ impl LoaderWorker {
             .collect();
         union.sort_unstable();
         union.dedup();
-        let prospective = (union.len()
-            * layers.len()
-            * self.awgf.op(part.op).d_out
-            * 4) as u64;
+        // Per-span normalized lists. When a straddling group's partitions
+        // filtered to different lists, the slab is split into per-span
+        // sub-slabs sized exactly Σ span_channels × span_layers instead
+        // of the union allocation — the avoided bytes are counted below.
+        let span_chs: Vec<Vec<usize>> = part
+            .spans
+            .iter()
+            .map(|s| {
+                let mut c = s.channels.to_vec();
+                c.sort_unstable();
+                c.dedup();
+                c
+            })
+            .collect();
+        let diverged = span_chs.len() > 1
+            && span_chs.windows(2).any(|w| w[0] != w[1]);
+        let union_rows = union.len() * layers.len();
+        let rows = if diverged {
+            part.spans
+                .iter()
+                .zip(&span_chs)
+                .map(|(s, c)| {
+                    let hi = s.hi.min(layers.len());
+                    c.len() * (hi - s.lo.min(hi))
+                })
+                .sum()
+        } else {
+            union_rows
+        };
+        let d_out = self.awgf.op(part.op).d_out;
+        let prospective = (rows * d_out * 4) as u64;
+        let waste_avoided = ((union_rows - rows) * d_out * 4) as u64;
         {
             // One guard covers the issuer skip accounting (channel lists
             // arrive pre-filtered), the throttle check, AND the byte
@@ -722,8 +864,11 @@ impl LoaderWorker {
             }
             st.slab_bytes += prospective;
             st.slab_bytes_peak = st.slab_bytes_peak.max(st.slab_bytes);
+            // counted at admission: this part WILL allocate `rows` rows
+            // where the union layout would have allocated `union_rows`
+            st.subslab_waste_bytes += waste_avoided;
         }
-        match self.plan_runs(layers, part, union) {
+        match self.plan_runs(layers, part, union, span_chs, diverged) {
             Ok((slab, mut runs, part_reqs)) => {
                 let base = reqs.len() as u64;
                 for run in &mut runs {
@@ -755,21 +900,24 @@ impl LoaderWorker {
         layers: &Arc<[usize]>,
         part: &PartRequest,
         union: Vec<usize>,
+        span_chs: Vec<Vec<usize>>,
+        diverged: bool,
     ) -> Result<(PartSlab, Vec<PlannedRun>, Vec<(u64, usize)>)> {
         let info = self.awgf.op(part.op);
         let dout = info.d_out;
         let rb = info.row_bytes;
 
-        // The part's slab, allocated once over the caller's sorted union
-        // of the spans' channel lists; every completion dequantizes
+        // The part's slab, allocated once; every completion dequantizes
         // straight into its final slot (no per-row scratch, no per-row
         // Vec). A (layer, channel) row outside its layer's span stays
         // unfilled — the engine finds those channels in the cache (that
         // is why they were filtered). When span channel lists diverge
-        // (straddling group AND residency differing per partition — rare)
-        // the union over-allocates the unfilled rows; bytes() reports the
-        // real allocation, so the governor ledger stays truthful.
-        // Per-span sub-slabs would remove the waste (ROADMAP).
+        // (straddling group AND residency differing per partition) the
+        // slab is **split** into per-span sub-slabs sized exactly to
+        // their own channels × layers — the union layout would have
+        // carried the cross-partition rows as permanently unfilled DRAM
+        // (`LoaderStats::subslab_waste_bytes`). Single-span or identical
+        // lists keep the classic union layout.
         //
         // A retired same-op slab from the reuse pool is reset in place
         // when one is available — steady-state preload traffic cycles
@@ -792,27 +940,41 @@ impl LoaderWorker {
                 None => None,
             }
         };
-        let slab = match recycled {
-            Some(mut s) => {
+        let slab = match (recycled, diverged) {
+            (Some(mut s), false) => {
                 s.reset(layers.clone(), union);
                 s
             }
-            None => {
+            (Some(mut s), true) => {
+                s.reset_spans(
+                    layers.clone(),
+                    &part.spans,
+                    span_chs.clone(),
+                    union,
+                );
+                s
+            }
+            (None, false) => {
                 PartSlab::from_sorted(part.op, layers.clone(), union, dout)
             }
+            (None, true) => PartSlab::from_spans(
+                part.op,
+                layers.clone(),
+                &part.spans,
+                span_chs.clone(),
+                union,
+                dout,
+            ),
         };
         let mut runs: Vec<PlannedRun> = Vec::new();
         let mut reqs: Vec<(u64, usize)> = Vec::new();
 
-        for span in &part.spans {
-            let span_layers = &layers[span.lo..span.hi];
-            if span_layers.is_empty() || span.channels.is_empty() {
+        for (span, chs) in part.spans.iter().zip(&span_chs) {
+            let hi = span.hi.min(layers.len());
+            let span_layers = &layers[span.lo.min(hi)..hi];
+            if span_layers.is_empty() || chs.is_empty() {
                 continue;
             }
-            // sorted channel list of this span for run coalescing
-            let mut chs: Vec<usize> = span.channels.to_vec();
-            chs.sort_unstable();
-            chs.dedup();
 
             // Partition by on-flash layout group; within a layout group
             // the requested layers occupy consecutive row slots of every
@@ -851,7 +1013,7 @@ impl LoaderWorker {
                 // valid when the sub-span is the whole chunk (otherwise
                 // reads have gaps).
                 let mut ch_runs: Vec<(usize, usize)> = Vec::new();
-                for &ch in &chs {
+                for &ch in chs {
                     match ch_runs.last_mut() {
                         Some((s, l)) if full_chunk && *s + *l == ch => {
                             *l += 1
@@ -970,6 +1132,9 @@ impl LoaderWorker {
                     st.chunks_read += chunks;
                     st.bytes_read += bytes;
                     st.channels_loaded += channels;
+                    // every landed (layer, channel) row went through the
+                    // vectorized block-kernel dequant into its slab slot
+                    st.rows_dequantized += channels;
                 }
                 // Publish + mark done under the `retired` guard: if the
                 // engine retired this group while we were loading (its
@@ -1295,6 +1460,75 @@ mod tests {
         // the filtered (layer, channel) combinations stay store misses
         assert!(slab.row(2, 5).is_none(), "ch5 not read for layer 2");
         assert!(slab.row(1, 7).is_none(), "ch7 not read for layer 1");
+        // diverged partitions allocate per-span sub-slabs: one row per
+        // partition, not the 2ch × 2-layer union
+        assert_eq!(slab.bytes(), (2 * 128 * 4) as u64);
+        assert_eq!(st.subslab_waste_bytes, (2 * 128 * 4) as u64);
+    }
+
+    #[test]
+    fn split_slab_is_bit_identical_and_counts_avoided_waste() {
+        // Per-span sub-slabs must change ONLY the allocation: every
+        // loaded row equals the per-row reference read+dequant exactly,
+        // out-of-span rows stay misses, the avoided union bytes are
+        // counted, and a retired split slab recycles like a union one.
+        let (awgf, flash, _p) = setup();
+        let pipe = Pipeline::spawn(awgf.clone(), flash.clone());
+        let layers: Arc<[usize]> = Arc::from(&[1usize, 2][..]);
+        let mk = |seq| PreloadBatch {
+            seq,
+            layers: layers.clone(),
+            parts: vec![PartRequest {
+                op: OpKind::Wq,
+                spans: vec![
+                    PartSpan {
+                        lo: 0,
+                        hi: 1,
+                        channels: Arc::from(&[3usize, 4, 9][..]),
+                    },
+                    PartSpan {
+                        lo: 1,
+                        hi: 2,
+                        channels: Arc::from(&[4usize, 7][..]),
+                    },
+                ],
+                skipped_cached: 0,
+            }],
+            ctx: SpanCtx::NONE,
+        };
+        pipe.request(mk(1));
+        assert!(pipe.wait_part((1, OpKind::Wq)));
+        let slab = pipe.part((1, OpKind::Wq)).unwrap();
+        // 3 + 2 rows allocated; the union layout held 4ch × 2 layers
+        assert_eq!(slab.bytes(), (5 * 128 * 4) as u64);
+        assert_eq!(
+            pipe.loader_stats().subslab_waste_bytes,
+            (3 * 128 * 4) as u64
+        );
+        for (l, chs) in [(1usize, &[3usize, 4, 9][..]), (2, &[4, 7][..])] {
+            for &ch in chs {
+                let (off, len) = awgf.row_span(OpKind::Wq, l, ch);
+                let buf = flash.read(off, len).unwrap();
+                let mut want = vec![0f32; 128];
+                quant::dequantize_row(&buf, awgf.quant, &mut want);
+                assert_eq!(
+                    slab.row(l, ch).unwrap(),
+                    want.as_slice(),
+                    "split row l{l} ch{ch} must be bit-identical"
+                );
+            }
+        }
+        assert!(slab.row(1, 7).is_none() && slab.row(2, 3).is_none());
+        drop(slab);
+        pipe.retire_group(1);
+        pipe.request(mk(2));
+        assert!(pipe.wait_part((2, OpKind::Wq)));
+        let st = pipe.loader_stats();
+        assert_eq!(st.slabs_recycled, 1, "split slabs recycle too");
+        assert_eq!(st.subslab_waste_bytes, (6 * 128 * 4) as u64);
+        let slab2 = pipe.part((2, OpKind::Wq)).unwrap();
+        assert!(slab2.row(2, 7).is_some() && slab2.row(1, 9).is_some());
+        assert!(slab2.row(1, 7).is_none(), "reset clears old segments");
     }
 
     #[test]

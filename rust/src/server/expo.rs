@@ -98,6 +98,14 @@ pub fn render(
         ("ondemand_coalesced_runs", m.ondemand_coalesced_runs),
     );
     gauge(&mut out, ("slab_bytes_peak", m.slab_bytes_peak));
+    // kernel hot paths (PERF.md "Kernel hot paths")
+    counter(&mut out, ("host_copy_bytes", m.host_copy_bytes));
+    gauge(&mut out, ("attn_bucket_cap", m.attn_bucket_cap));
+    counter(
+        &mut out,
+        ("dequant_rows_vectorized", m.dequant_rows_vectorized),
+    );
+    counter(&mut out, ("subslab_waste_bytes", m.subslab_waste_bytes));
     counter(&mut out, ("cross_token_preloads", m.cross_token_preloads));
     counter(&mut out, ("fallback_rows", m.fallback_rows));
     counter(&mut out, ("degraded_fallbacks", m.degraded_fallbacks));
@@ -211,6 +219,10 @@ mod tests {
             "pallas_io_submitted ",
             "pallas_tokens_out ",
             "pallas_kv_preemptions_oom ",
+            "pallas_host_copy_bytes ",
+            "pallas_attn_bucket_cap ",
+            "pallas_dequant_rows_vectorized ",
+            "pallas_subslab_waste_bytes ",
             "pallas_itl_us_count ",
             "pallas_io_wait_engine_us_count ",
         ] {

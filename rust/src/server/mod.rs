@@ -193,6 +193,12 @@ struct ServerStats {
     ondemand_rows: AtomicU64,
     ondemand_coalesced_runs: AtomicU64,
     slab_bytes_peak: AtomicU64,
+    // kernel hot-path mirror (bucketed attention + block-kernel dequant,
+    // PERF.md "Kernel hot paths")
+    host_copy_bytes: AtomicU64,
+    attn_bucket_cap: AtomicU64,
+    dequant_rows_vectorized: AtomicU64,
+    subslab_waste_bytes: AtomicU64,
     // async read-queue mirror (shared ReadQueue, PERF.md)
     io_batches: AtomicU64,
     io_inflight_peak: AtomicU64,
@@ -294,6 +300,10 @@ impl ServerStats {
         st(&self.ondemand_rows, m.ondemand_rows);
         st(&self.ondemand_coalesced_runs, m.ondemand_coalesced_runs);
         st(&self.slab_bytes_peak, m.slab_bytes_peak);
+        st(&self.host_copy_bytes, m.host_copy_bytes);
+        st(&self.attn_bucket_cap, m.attn_bucket_cap);
+        st(&self.dequant_rows_vectorized, m.dequant_rows_vectorized);
+        st(&self.subslab_waste_bytes, m.subslab_waste_bytes);
         st(&self.io_batches, m.io_batches);
         st(&self.io_inflight_peak, m.io_inflight_peak);
         st(
@@ -1067,6 +1077,12 @@ fn stats_json(stats: &ServerStats) -> Value {
         ("ondemand_rows", g(&stats.ondemand_rows)),
         ("ondemand_coalesced_runs", g(&stats.ondemand_coalesced_runs)),
         ("slab_bytes_peak", g(&stats.slab_bytes_peak)),
+        // kernel hot paths: bucketed attention window traffic and
+        // block-kernel dequant throughput (PERF.md "Kernel hot paths")
+        ("host_copy_bytes", g(&stats.host_copy_bytes)),
+        ("attn_bucket_cap", g(&stats.attn_bucket_cap)),
+        ("dequant_rows_vectorized", g(&stats.dequant_rows_vectorized)),
+        ("subslab_waste_bytes", g(&stats.subslab_waste_bytes)),
         // async flash read path (PERF.md): io_wait_us is the legacy
         // total; the split tells preload reaping from on-demand stalls
         ("io_batches", g(&stats.io_batches)),

@@ -76,6 +76,7 @@ fn opts(sp: f64, mode: SwapMode, cache_kb: u64) -> EngineOptions {
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
         kv_block_tokens: 16,
+        attn_buckets: true,
     }
 }
 
@@ -161,6 +162,58 @@ fn preload_and_ondemand_agree_exactly() {
     for (x, y) in la.iter().zip(&lb) {
         assert_close(x, y, 1e-5, "preload vs ondemand");
     }
+}
+
+#[test]
+fn bucketed_attention_is_token_identical_to_monolithic() {
+    // The tentpole bit-safety claim: running each step through the
+    // smallest compiled `attn_core_<cap>` window (gathering only the
+    // written prefix, zero-tail memset once per bucket growth) must be
+    // BIT-identical to the monolithic [max_seq, d_kv] window — masked
+    // lanes softmax to exactly 0.0, so the window size never reaches the
+    // numerics. 40 generated tokens cross several bucket-growth
+    // boundaries (16→32→64 with the default floor) with a prompt long
+    // enough to start above the smallest cap.
+    let Some(dir) = artifacts() else { return };
+    let g = goldens(&dir);
+    let prompt = prompt_tokens(&g);
+    let mut bucketed =
+        SwapEngine::open(&dir, opts(0.6, SwapMode::Preload, 256)).unwrap();
+    let mut mono_opts = opts(0.6, SwapMode::Preload, 256);
+    mono_opts.attn_buckets = false;
+    let mut mono = SwapEngine::open(&dir, mono_opts).unwrap();
+    let lb = bucketed.forced_logits(&prompt).unwrap();
+    let lm = mono.forced_logits(&prompt).unwrap();
+    for (i, (x, y)) in lb.iter().zip(&lm).enumerate() {
+        assert_eq!(
+            x, y,
+            "prompt step {i}: bucketed logits must be bit-identical"
+        );
+    }
+    let tb = bucketed.generate(&prompt, 40, 0.0).unwrap();
+    let tm = mono.generate(&prompt, 40, 0.0).unwrap();
+    assert_eq!(tb, tm, "bucketed greedy stream diverged from monolithic");
+    // the bucketed run actually took the bucketed path (smaller caps than
+    // the full window) and moved strictly fewer host bytes per step
+    let max_seq = bucketed.model().max_seq as u64;
+    let mb = &bucketed.metrics;
+    if mb.attn_bucket_cap == 0 {
+        // artifact dir predates bucketed compilation — fallback path ran;
+        // the identity above still holds, nothing more to assert
+        eprintln!("[skip-part] no attn_core_<cap> artifacts; fallback ran");
+        return;
+    }
+    assert!(
+        mb.attn_bucket_cap < max_seq,
+        "short sequence never needed the full window"
+    );
+    assert_eq!(mono.metrics.attn_bucket_cap, max_seq);
+    assert!(
+        mb.host_copy_bytes < mono.metrics.host_copy_bytes,
+        "bucketing must shrink host window traffic: {} !< {}",
+        mb.host_copy_bytes,
+        mono.metrics.host_copy_bytes
+    );
 }
 
 #[test]

@@ -47,6 +47,7 @@ fn opts() -> EngineOptions {
         trigger: PreloadTrigger::FirstLayer,
         io_queue_depth: 0,
         kv_block_tokens: 16,
+        attn_buckets: true,
     }
 }
 
@@ -203,6 +204,70 @@ fn block_tabled_decode_matches_monolithic_whole_window_blocks() {
              bit-safety"
         );
     }
+}
+
+#[test]
+fn bucketed_attention_interleaved_matches_monolithic_solo() {
+    // Bucketed attention shares ONE [cap, d_kv] scratch across
+    // interleaved sequences: every step gathers only its own written
+    // prefix and zeroes the `pos..kv_dirty` stale band left by the OTHER
+    // sequence (or by its own previous, larger window). Any leaked row
+    // reaches the softmax — so interleaved decode with buckets ON must
+    // stay token-identical to each sequence's solo run with buckets OFF
+    // (the monolithic gather + zero tail reference). The generated span
+    // crosses bucket-growth boundaries (16→32 with the default floor)
+    // mid-sequence.
+    let Some(dir) = artifacts() else { return };
+    let prompt_a = tokenizer::encode("the sparse model swaps ");
+    let prompt_b = tokenizer::encode("active weights move to ");
+    let mono = || EngineOptions {
+        attn_buckets: false,
+        ..opts()
+    };
+    let want_a = run_solo_with(&dir, &prompt_a, None, mono());
+    let want_b = run_solo_with(&dir, &prompt_b, None, mono());
+
+    let mut engine = SwapEngine::open(&dir, opts()).unwrap();
+    engine.set_cross_token_preload(true);
+    let mut sched = Scheduler::new(engine, SchedConfig {
+        max_seqs: 2,
+        queue_cap: 4,
+    });
+    let mk = |p: &[u32]| SeqRequest {
+        prompt: p.to_vec(),
+        n_tokens: N_GEN,
+        temp: 0.0,
+        seed: 7,
+        eos: None,
+        deadline_waves: None,
+        req_id: 0,
+        client: None,
+    };
+    assert!(matches!(
+        sched.submit(mk(&prompt_a)),
+        SubmitOutcome::Admitted { id: 1 }
+    ));
+    assert!(matches!(
+        sched.submit(mk(&prompt_b)),
+        SubmitOutcome::Admitted { id: 2 }
+    ));
+    let mut finished = Vec::new();
+    while sched.has_work() {
+        finished.extend(sched.wave());
+    }
+    assert_eq!(finished.len(), 2);
+    finished.sort_by_key(|f| f.id);
+    assert_eq!(
+        finished[0].outcome.as_ref().unwrap(),
+        &want_a,
+        "bucketed interleaved sequence A diverged from monolithic solo — \
+         stale-band zeroing or prefix gather broke bit-safety"
+    );
+    assert_eq!(
+        finished[1].outcome.as_ref().unwrap(),
+        &want_b,
+        "bucketed interleaved sequence B diverged from monolithic solo"
+    );
 }
 
 #[test]

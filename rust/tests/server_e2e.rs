@@ -40,6 +40,7 @@ fn serve_generate_stats_shutdown() {
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
             kv_block_tokens: 16,
+            attn_buckets: true,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
@@ -246,6 +247,7 @@ fn stats_reset_zeroes_windows_and_trace_captures_spans() {
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
             kv_block_tokens: 16,
+            attn_buckets: true,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
@@ -364,6 +366,7 @@ fn two_concurrent_clients_decode_interleaved() {
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
             kv_block_tokens: 16,
+            attn_buckets: true,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
@@ -465,6 +468,7 @@ fn set_budget_is_not_starved_behind_a_long_generation() {
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
             kv_block_tokens: 16,
+            attn_buckets: true,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
@@ -562,6 +566,7 @@ fn set_budget_rebudgets_live_engine_mid_session() {
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
             kv_block_tokens: 16,
+            attn_buckets: true,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
@@ -679,6 +684,7 @@ fn hostile_input_leaves_the_worker_serving() {
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
             kv_block_tokens: 16,
+            attn_buckets: true,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,
@@ -846,6 +852,7 @@ fn telemetry_cfg(addr: &str, dir: PathBuf, interval_ms: u64) -> ServerConfig {
             trigger: PreloadTrigger::FirstLayer,
             io_queue_depth: 0,
             kv_block_tokens: 16,
+            attn_buckets: true,
         },
         governor: GovernorConfig::default(),
         initial_budget: None,

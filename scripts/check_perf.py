@@ -8,12 +8,15 @@ points (fail on a >5% settle-time regression), two BENCH_sched.json
 points (fail on a >5% aggregate interleaved tokens/sec regression), and
 two BENCH_kv.json points (fail on a >5% regression of either admitted
 concurrency or aggregate tokens/sec for the paged-KV mixed-length
-workload) (ROADMAP items; see PERF.md methodology).
+workload), and two BENCH_kernels.json points (fail on a >5% regression
+of the dequant block-kernel speedup or the bucketed-attention
+host-copy reduction) (ROADMAP items; see PERF.md methodology).
 
 Usage: check_perf.py PREV.json CURR.json [--threshold 0.05]
                      [--governor GOV_PREV.json GOV_CURR.json]
                      [--sched SCHED_PREV.json SCHED_CURR.json]
                      [--kv KV_PREV.json KV_CURR.json]
+                     [--kernels KERN_PREV.json KERN_CURR.json]
 
 Exit codes: 0 = ok (or no previous point to compare), 1 = regression,
 2 = malformed input.
@@ -52,6 +55,10 @@ WATCHED = [
     "itl_p95_us",
     "ondemand_p99_us",
     "io_wait_engine_p99_us",
+    "host_copy_bytes",
+    "attn_bucket_cap",
+    "dequant_rows_vectorized",
+    "subslab_waste_bytes",
 ]
 
 
@@ -208,6 +215,52 @@ def check_kv(prev_path, curr_path, threshold):
     return rc
 
 
+def check_kernels(prev_path, curr_path, threshold):
+    """Kernel hot-path gate over BENCH_kernels.json: the dequant
+    block-kernel speedups (vs the scalar reference) and the bucketed
+    attention host-copy reduction must not regress >5%. The attention
+    keys are 0 when the bench ran without attn_core_<cap> artifacts —
+    those diffs skip, matching the bench's self-skip."""
+    if not os.path.exists(curr_path):
+        print(f"check-perf: {curr_path} missing — run `make bench-kernels`"
+              " (kernels gate skipped)")
+        return 0
+    try:
+        pair = load_pair(prev_path, curr_path, "kernels")
+        if pair is None:
+            return 0
+        prev, curr = pair
+        gated = [(key, float(prev[key]), float(curr[key]))
+                 for key in ("dequant_speedup_q8_0",
+                             "dequant_speedup_q4_0",
+                             "host_copy_reduction")]
+    except (json.JSONDecodeError, KeyError, ValueError) as e:
+        print(f"check-perf: malformed kernels bench point: {e}")
+        return 2
+
+    rc = 0
+    for key, p, c in gated:
+        if p <= 0:
+            print(f"check-perf: previous kernels {key} is 0 — skipping "
+                  "diff")
+            continue
+        delta = (c - p) / p
+        print(f"check-perf: kernels {key} {p:.2f}x -> {c:.2f}x "
+              f"({delta:+.1%}, threshold -{threshold:.0%})")
+        if delta < -threshold:
+            print(f"check-perf: FAIL — kernel {key} regressed past "
+                  f"the {threshold:.0%} gate")
+            rc = 1
+    for key in ("host_copy_bytes", "attn_bucket_cap",
+                "dequant_rows_vectorized", "subslab_waste_bytes"):
+        if key in prev and key in curr and float(prev[key]) > 0:
+            d = (float(curr[key]) - float(prev[key])) / float(prev[key])
+            if abs(d) >= threshold:
+                print(f"check-perf:   note: {key} {prev[key]} -> "
+                      f"{curr[key]} ({d:+.1%})")
+    return rc
+
+
 def main(argv):
     argv = list(argv)
     governor = None
@@ -235,6 +288,15 @@ def main(argv):
             kv = (argv[i + 1], argv[i + 2])
         except IndexError:
             print("check-perf: --kv expects PREV.json CURR.json")
+            return 2
+        del argv[i:i + 3]
+    kernels = None
+    if "--kernels" in argv:
+        i = argv.index("--kernels")
+        try:
+            kernels = (argv[i + 1], argv[i + 2])
+        except IndexError:
+            print("check-perf: --kernels expects PREV.json CURR.json")
             return 2
         del argv[i:i + 3]
     threshold = THRESHOLD
@@ -296,6 +358,10 @@ def main(argv):
     if kv is not None:
         krc = check_kv(kv[0], kv[1], threshold)
         rc = max(rc, krc)
+
+    if kernels is not None:
+        knrc = check_kernels(kernels[0], kernels[1], threshold)
+        rc = max(rc, knrc)
 
     if rc == 0:
         print("check-perf: ok")
